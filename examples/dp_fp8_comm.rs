@@ -1,0 +1,59 @@
+//! Data-parallel simulation with FP8 gradient communication (§4.1 /
+//! FP8-LM): 4 workers on disjoint corpus shards, gradients byte-encoded
+//! to E4M3 on the wire, averaged, applied via the `apply` artifact.
+//! Compares the loss trajectory and wire bytes against f32 communication.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example dp_fp8_comm
+//! ```
+
+use std::sync::Arc;
+
+use fp4train::coordinator::dp::{CommPrecision, DpSim};
+use fp4train::data::corpus::{Corpus, CorpusKind};
+use fp4train::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(48);
+    let workers = 4;
+    let engine = Arc::new(Engine::load("artifacts")?);
+    let corpus = Corpus::generate(CorpusKind::Mix, 1234, 2_000_000, 64 * 1024);
+
+    let mut results = Vec::new();
+    for comm in [CommPrecision::Fp8, CommPrecision::F32] {
+        let mut sim =
+            DpSim::new(engine.clone(), "nano", "bf16", &corpus, workers, 0, comm)?;
+        println!("\n=== {} ===", sim.context_label());
+        let t0 = std::time::Instant::now();
+        for step in 0..steps {
+            let loss = sim.dp_step()?;
+            if step % 8 == 0 || step + 1 == steps {
+                println!("step {step:>3}  mean worker loss {loss:.4}");
+            }
+        }
+        println!(
+            "{} steps in {:.1}s — wire {:.2} MB (f32-equiv {:.2} MB, {:.2}x compression)",
+            steps,
+            t0.elapsed().as_secs_f64(),
+            sim.stats.bytes_sent as f64 / 1e6,
+            sim.stats.bytes_f32_equiv as f64 / 1e6,
+            sim.compression()
+        );
+        results.push((comm, *sim.losses.last().unwrap(), sim.stats.bytes_sent));
+    }
+
+    let (c0, l0, b0) = results[0];
+    let (c1, l1, b1) = results[1];
+    println!(
+        "\nfinal loss {c0:?}: {l0:.4} vs {c1:?}: {l1:.4} (gap {:+.4}); \
+         bytes {b0} vs {b1} ({:.2}x saved) — the paper's FP8 gradient \
+         communication preserves training while ~4x-ing bandwidth",
+        l0 - l1,
+        b1 as f64 / b0 as f64
+    );
+    Ok(())
+}

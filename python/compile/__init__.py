@@ -1,0 +1,5 @@
+"""Build-time Python package: JAX model + Pallas kernels + AOT lowering.
+
+Never imported at runtime — the Rust binary consumes only the HLO-text
+artifacts this package emits (see aot.py and DESIGN.md §7).
+"""

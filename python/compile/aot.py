@@ -1,0 +1,510 @@
+"""AOT lowering: JAX → HLO *text* artifacts + manifest for the Rust runtime.
+
+Every (preset × policy × step-kind) the experiments need is lowered once,
+here, at build time; the Rust coordinator (`rust/src/runtime`) loads the
+HLO text via `HloModuleProto::from_text_file`, compiles it on the PJRT CPU
+client and drives training with device-resident buffers. Python never runs
+on the training path.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids. Outputs are
+lowered *untupled* (`return_tuple=False`) so PJRT hands back one buffer
+per output and the Rust side can feed them straight into the next
+`execute_b` call — training state never leaves the device.
+
+Step kinds (DESIGN.md §7):
+  init    (seed:i32)                          -> params..., m..., v...
+  train   (params..., m..., v..., step:f32, tokens:i32[B,S])
+                                              -> params', m', v', loss, gnorm, lr
+  grad    (params..., tokens)                 -> grads..., loss
+  apply   (params..., m..., v..., grads..., step) -> params', m', v', lr, gnorm
+  eval    (params..., tokens)                 -> mean-NLL
+  nll     (params..., tokens)                 -> per-sequence summed NLL (B,)
+  logits  (params..., tokens)                 -> last-position logits (B,V)
+  probe   (params..., tokens)                 -> named pre-quant activations
+  qdq     (x:f32[R,C])                        -> fp4 qdq (kernel microbench)
+  qgemm   (a, w)                              -> fused FP4 GeMM (microbench)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile import optimizer as O
+from compile.kernels.fp4_quant import fp4_qdq_pallas
+from compile.kernels.fp4_gemm import fp4_qgemm_pallas
+from compile.precision import get_policy
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _names(cfg) -> List[str]:
+    return sorted(M.param_specs(cfg))
+
+
+def _flatten(d: Dict[str, jnp.ndarray], names):
+    return [d[n] for n in names]
+
+
+def _unflatten(vals, names):
+    return dict(zip(names, vals))
+
+
+def _io(name, shape, dtype, role):
+    return {"name": name, "shape": list(shape), "dtype": dtype, "role": role}
+
+
+class Builder:
+    """Builds + lowers all step kinds for one (preset, policy, steps)."""
+
+    def __init__(self, preset: str, policy: str, total_steps: int,
+                 occ_alpha=None, dge_k=None, burst_k: int = 16):
+        self.burst_k = burst_k
+        self.cfg = M.PRESETS[preset]
+        pol = get_policy(policy)
+        # Optional per-experiment overrides (ablation sweeps reuse a base
+        # policy name with a different alpha/k — keep the registry small).
+        if occ_alpha is not None:
+            pol = pol.__class__(**{**pol.to_dict(), "occ_alpha": occ_alpha})
+        if dge_k is not None:
+            pol = pol.__class__(**{**pol.to_dict(), "dge_k": dge_k})
+        self.policy = pol
+        self.oc = O.OptConfig(total_steps=total_steps)
+        self.names = _names(self.cfg)
+        self.pspecs = {
+            n: _spec(s) for n, s in M.param_specs(self.cfg).items()
+        }
+
+    # ---- functional steps -------------------------------------------------
+
+    def init_fn(self, seed):
+        params = M.init_params(self.cfg, seed)
+        m, v = O.init_state(params)
+        return tuple(
+            _flatten(params, self.names)
+            + _flatten(m, self.names)
+            + _flatten(v, self.names)
+        )
+
+    def _loss(self, params, tokens):
+        return M.loss_fn(self.cfg, self.policy, params, tokens)
+
+    def train_fn(self, *args):
+        n = len(self.names)
+        params = _unflatten(args[:n], self.names)
+        m = _unflatten(args[n:2 * n], self.names)
+        v = _unflatten(args[2 * n:3 * n], self.names)
+        step, tokens = args[3 * n], args[3 * n + 1]
+        loss, grads = jax.value_and_grad(self._loss)(params, tokens)
+        p2, m2, v2, lr, gnorm = O.apply_updates(
+            params, grads, m, v, step, self.oc,
+            self.policy.low_precision_moments)
+        return tuple(
+            _flatten(p2, self.names) + _flatten(m2, self.names)
+            + _flatten(v2, self.names) + [loss, gnorm, lr]
+        )
+
+    def grad_fn(self, *args):
+        n = len(self.names)
+        params = _unflatten(args[:n], self.names)
+        tokens = args[n]
+        loss, grads = jax.value_and_grad(self._loss)(params, tokens)
+        return tuple(_flatten(grads, self.names) + [loss])
+
+    def apply_fn(self, *args):
+        n = len(self.names)
+        params = _unflatten(args[:n], self.names)
+        m = _unflatten(args[n:2 * n], self.names)
+        v = _unflatten(args[2 * n:3 * n], self.names)
+        grads = _unflatten(args[3 * n:4 * n], self.names)
+        step = args[4 * n]
+        p2, m2, v2, lr, gnorm = O.apply_updates(
+            params, grads, m, v, step, self.oc,
+            self.policy.low_precision_moments)
+        return tuple(
+            _flatten(p2, self.names) + _flatten(m2, self.names)
+            + _flatten(v2, self.names) + [lr, gnorm]
+        )
+
+    def burst_fn(self, *args):
+        """K fused optimizer steps via lax.scan: the optimized hot path.
+
+        The PJRT wrapper on this image cannot untuple executable outputs,
+        so single-step training pays a host round-trip of the full state
+        every step. Bursting K steps inside one executable keeps the state
+        on device for K-1 of them — DESIGN.md §8 (L2) / EXPERIMENTS.md
+        §Perf quantify the win.
+        """
+        n = len(self.names)
+        state = args[:3 * n]
+        step0, toks = args[3 * n], args[3 * n + 1]  # toks: (K, B, S)
+
+        def body(carry, tok):
+            st, step = carry
+            out = self.train_fn(*st, step, tok)
+            return (out[:3 * n], step + 1.0), (out[-3], out[-2])
+
+        (st, _), (losses, gnorms) = jax.lax.scan(
+            body, (tuple(state), step0), toks
+        )
+        return tuple(st) + (losses, gnorms)
+
+    def eval_fn(self, *args):
+        n = len(self.names)
+        params = _unflatten(args[:n], self.names)
+        return (self._loss(params, args[n]),)
+
+    def nll_fn(self, *args):
+        n = len(self.names)
+        params = _unflatten(args[:n], self.names)
+        return (M.token_nll(self.cfg, self.policy, params, args[n]),)
+
+    def logits_fn(self, *args):
+        n = len(self.names)
+        params = _unflatten(args[:n], self.names)
+        return (M.last_logits(self.cfg, self.policy, params, args[n]),)
+
+    def probe_fn(self, *args):
+        n = len(self.names)
+        params = _unflatten(args[:n], self.names)
+        _, probes = M.forward(self.cfg, self.policy, params, args[n],
+                              return_probes=True)
+        return tuple(probes[k] for k in sorted(probes))
+
+    # ---- lowering ---------------------------------------------------------
+
+    def _param_io(self, role_prefix=""):
+        return [
+            _io(n, self.pspecs[n].shape, "f32", f"{role_prefix}param")
+            for n in self.names
+        ]
+
+    def _state_specs(self):
+        ps = [self.pspecs[n] for n in self.names]
+        return ps + ps + ps  # params, m, v
+
+    def lower(self, kind: str):
+        cfg = self.cfg
+        tok = _spec((cfg.batch, cfg.seq_len), I32)
+        scalar = _spec((), F32)
+        state_io = (
+            self._param_io()
+            + [_io(f"m.{n}", self.pspecs[n].shape, "f32", "opt_m")
+               for n in self.names]
+            + [_io(f"v.{n}", self.pspecs[n].shape, "f32", "opt_v")
+               for n in self.names]
+        )
+        tok_io = _io("tokens", tok.shape, "i32", "tokens")
+        step_io = _io("step", (), "f32", "scalar_step")
+
+        if kind == "init":
+            fn, specs = self.init_fn, [_spec((), I32)]
+            ins = [_io("seed", (), "i32", "seed")]
+            outs = state_io
+        elif kind == "train":
+            fn = self.train_fn
+            specs = self._state_specs() + [scalar, tok]
+            ins = state_io + [step_io, tok_io]
+            outs = state_io + [
+                _io("loss", (), "f32", "loss"),
+                _io("gnorm", (), "f32", "gnorm"),
+                _io("lr", (), "f32", "lr"),
+            ]
+        elif kind == "grad":
+            fn = self.grad_fn
+            specs = [self.pspecs[n] for n in self.names] + [tok]
+            ins = self._param_io() + [tok_io]
+            outs = [
+                _io(f"g.{n}", self.pspecs[n].shape, "f32", "grad")
+                for n in self.names
+            ] + [_io("loss", (), "f32", "loss")]
+        elif kind == "apply":
+            fn = self.apply_fn
+            specs = (self._state_specs()
+                     + [self.pspecs[n] for n in self.names] + [scalar])
+            ins = state_io + [
+                _io(f"g.{n}", self.pspecs[n].shape, "f32", "grad")
+                for n in self.names
+            ] + [step_io]
+            outs = state_io + [
+                _io("lr", (), "f32", "lr"),
+                _io("gnorm", (), "f32", "gnorm"),
+            ]
+        elif kind == "burst":
+            fn = self.burst_fn
+            k = self.burst_k
+            btok = _spec((k, cfg.batch, cfg.seq_len), I32)
+            specs = self._state_specs() + [scalar, btok]
+            ins = state_io + [
+                step_io,
+                _io("tokens", btok.shape, "i32", "tokens"),
+            ]
+            outs = state_io + [
+                _io("losses", (k,), "f32", "loss"),
+                _io("gnorms", (k,), "f32", "gnorm"),
+            ]
+        elif kind in ("eval", "nll", "logits", "probe"):
+            fn = {"eval": self.eval_fn, "nll": self.nll_fn,
+                  "logits": self.logits_fn, "probe": self.probe_fn}[kind]
+            specs = [self.pspecs[n] for n in self.names] + [tok]
+            ins = self._param_io() + [tok_io]
+            if kind == "eval":
+                outs = [_io("loss", (), "f32", "loss")]
+            elif kind == "nll":
+                outs = [_io("nll", (cfg.batch,), "f32", "nll")]
+            elif kind == "logits":
+                outs = [_io("logits", (cfg.batch, cfg.vocab), "f32",
+                            "logits")]
+            else:
+                # shapes resolved below after tracing
+                outs = None
+        else:
+            raise ValueError(f"unknown step kind {kind!r}")
+
+        lowered = jax.jit(fn).lower(*specs)
+        if outs is None:  # probe: recover output names/shapes from eval_shape
+            shaped = jax.eval_shape(fn, *specs)
+            pnames = sorted(
+                ["final_hidden", "layer0_mlp_norm_out", "layer0_output",
+                 "layer0_swiglu_act"]
+            )
+            outs = [
+                _io(pn, s.shape, "f32", "probe")
+                for pn, s in zip(pnames, shaped)
+            ]
+        return lowered, ins, outs
+
+
+def lower_kernel_microbench(rows: int, cols: int, out: int):
+    """Standalone L1 artifacts: qdq + fused qgemm for the Rust benches."""
+    a = _spec((rows, cols))
+    w = _spec((cols, out))
+    qdq = jax.jit(lambda x: (fp4_qdq_pallas(x, "e2m1", -1),)).lower(a)
+    gem = jax.jit(lambda x, y: (fp4_qgemm_pallas(x, y),)).lower(a, w)
+    return qdq, gem
+
+
+# ---------------------------------------------------------------------------
+# Artifact plans
+# ---------------------------------------------------------------------------
+
+# Core set: what `make artifacts` builds — enough for cargo tests, the
+# quickstart example and the fastest experiments.
+CORE_PLAN = [
+    # (preset, policy, total_steps, kinds)
+    ("nano", "bf16", 300, ["init", "train", "grad", "apply", "eval",
+                           "burst"]),
+    ("nano", "fp4", 300, ["init", "train", "eval", "nll", "logits",
+                          "probe", "burst"]),
+    ("nano", "fp4_direct", 300, ["init", "train"]),
+]
+
+# Full experiment set: `make artifacts-repro`.
+REPRO_PLAN = [
+    ("micro", "bf16", 400, ["init", "train", "burst", "eval", "nll"]),
+    ("micro", "fp8", 400, ["init", "burst"]),
+    ("micro", "fp4", 400, ["init", "train", "burst", "eval", "nll", "probe"]),
+    ("micro", "fp4_direct", 400, ["init", "burst"]),
+    ("micro", "w4a8_ste", 400, ["init", "burst"]),
+    ("micro", "w4a8_dge_k3", 400, ["init", "burst"]),
+    ("micro", "w4a8_dge_k5", 400, ["init", "burst"]),
+    ("micro", "w4a8_dge_k10", 400, ["init", "burst"]),
+    ("micro", "w8a4_direct", 400, ["init", "burst"]),
+    ("micro", "w8a4_occ_a999", 400, ["init", "burst"]),
+    ("micro", "w8a4_occ_a99", 400, ["init", "burst"]),
+    ("micro", "w8a4_occ_a97", 400, ["init", "burst"]),
+    ("micro", "fp4_tensorwise", 400, ["init", "burst"]),
+    ("micro", "fp4_act_tensorwise", 400, ["init", "burst"]),
+    ("micro", "fp4_weight_tensorwise", 400, ["init", "burst"]),
+    # Fig 5 / Tables 2-3 scaling trio (bf16 vs fp4 at three sizes)
+    ("tiny", "bf16", 400, ["init", "burst", "eval", "nll"]),
+    ("tiny", "fp4", 400, ["init", "burst", "eval", "nll"]),
+    ("small", "bf16", 400, ["init", "burst", "eval", "nll", "probe"]),
+    ("small", "fp4", 400, ["init", "burst", "eval", "nll"]),
+    ("med", "bf16", 300, ["init", "burst", "eval", "nll"]),
+    ("med", "fp4", 300, ["init", "burst", "eval", "nll"]),
+]
+
+# End-to-end 100M driver (`make artifacts-e2e`).
+E2E_PLAN = [
+    ("m100", "fp4", 300, ["init", "burst", "eval", "logits"]),
+]
+
+
+def emit(builder: Builder, kind: str, out_dir: str, manifest: dict,
+         key_steps: int):
+    lowered, ins, outs = builder.lower(kind)
+    name = f"{builder.cfg.name}__{builder.policy.name}__{kind}"
+    if kind in ("train", "apply", "burst"):
+        name += f"_s{key_steps}"
+    path = os.path.join(out_dir, name + ".hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    entry_key = f"{builder.cfg.name}/{builder.policy.name}"
+    entry = manifest["configs"].setdefault(
+        entry_key,
+        {
+            "preset": builder.cfg.name,
+            "policy": builder.policy.to_dict(),
+            "model": {
+                "dim": builder.cfg.dim,
+                "n_layers": builder.cfg.n_layers,
+                "n_heads": builder.cfg.n_heads,
+                "ffn_dim": builder.cfg.ffn_dim,
+                "seq_len": builder.cfg.seq_len,
+                "batch": builder.cfg.batch,
+                "vocab": builder.cfg.vocab,
+                "param_count": builder.cfg.param_count(),
+            },
+            "steps": {},
+        },
+    )
+    skey = (kind if kind not in ("train", "apply", "burst")
+            else f"{kind}@{key_steps}")
+    entry["steps"][skey] = {
+        "file": os.path.basename(path),
+        "total_steps": key_steps,
+        "burst_k": builder.burst_k if kind == "burst" else 0,
+        "inputs": ins,
+        "outputs": outs,
+    }
+    print(f"  wrote {path}")
+
+
+def run_plan(plan, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    mpath = os.path.join(out_dir, "manifest.json")
+    manifest = {"configs": {}, "kernels": {}}
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+        manifest.setdefault("configs", {})
+        manifest.setdefault("kernels", {})
+    for preset, policy, steps, kinds in plan:
+        b = Builder(preset, policy, steps)
+        print(f"[aot] {preset}/{policy} (total_steps={steps}) -> {kinds}")
+        for kind in kinds:
+            emit(b, kind, out_dir, manifest, steps)
+    # kernel microbench artifacts (always refreshed; cheap)
+    rows, cols, out = 256, 512, 512
+    qdq, gem = lower_kernel_microbench(rows, cols, out)
+    for nm, low, io in [
+        ("kernel_qdq", qdq,
+         {"inputs": [_io("x", (rows, cols), "f32", "input")],
+          "outputs": [_io("y", (rows, cols), "f32", "output")]}),
+        ("kernel_qgemm", gem,
+         {"inputs": [_io("a", (rows, cols), "f32", "input"),
+                     _io("w", (cols, out), "f32", "input")],
+          "outputs": [_io("y", (rows, out), "f32", "output")]}),
+    ]:
+        path = os.path.join(out_dir, nm + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(low))
+        manifest["kernels"][nm] = {"file": nm + ".hlo.txt", **io}
+        print(f"  wrote {path}")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    write_manifest_txt(manifest, os.path.join(out_dir, "manifest.txt"))
+    print(f"[aot] manifest -> {mpath} (+ manifest.txt)")
+
+
+def write_manifest_txt(manifest: dict, path: str):
+    """Line-oriented manifest for the Rust loader (the image has no JSON
+    crate available offline; manifest.json stays for humans/tools)."""
+    lines = []
+    for key in sorted(manifest["configs"]):
+        cfg = manifest["configs"][key]
+        lines.append(f"#CONFIG {key}")
+        mdl = cfg["model"]
+        lines.append(
+            "#MODEL " + " ".join(f"{k}={mdl[k]}" for k in sorted(mdl))
+        )
+        pol = cfg["policy"]
+        lines.append(
+            "#POLICY " + " ".join(
+                f"{k}={pol[k] if pol[k] is not None else 'none'}"
+                for k in sorted(pol)
+            )
+        )
+        for skey in sorted(cfg["steps"]):
+            st = cfg["steps"][skey]
+            lines.append(
+                f"#STEP {skey} file={st['file']} "
+                f"total_steps={st['total_steps']} "
+                f"burst_k={st.get('burst_k', 0)}"
+            )
+            for io_list, tag in ((st["inputs"], "IN"),
+                                 (st["outputs"], "OUT")):
+                for io in io_list:
+                    shape = ("-" if not io["shape"]
+                             else "x".join(str(d) for d in io["shape"]))
+                    lines.append(
+                        f"#{tag} {io['name']} {io['dtype']} {shape} "
+                        f"{io['role']}"
+                    )
+        lines.append("#END")
+    for kname in sorted(manifest.get("kernels", {})):
+        k = manifest["kernels"][kname]
+        lines.append(f"#KERNEL {kname} file={k['file']}")
+        for io_list, tag in ((k["inputs"], "IN"), (k["outputs"], "OUT")):
+            for io in io_list:
+                shape = ("-" if not io["shape"]
+                         else "x".join(str(d) for d in io["shape"]))
+                lines.append(
+                    f"#{tag} {io['name']} {io['dtype']} {shape} "
+                    f"{io['role']}"
+                )
+    lines.append("#END")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--plan", choices=["core", "repro", "e2e", "all"],
+                    default="core")
+    ap.add_argument("--preset")
+    ap.add_argument("--policy")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--kinds", default="init,train")
+    args = ap.parse_args()
+
+    if args.preset and args.policy:
+        plan = [(args.preset, args.policy, args.steps,
+                 args.kinds.split(","))]
+    elif args.plan == "core":
+        plan = CORE_PLAN
+    elif args.plan == "repro":
+        plan = REPRO_PLAN
+    elif args.plan == "e2e":
+        plan = E2E_PLAN
+    else:
+        plan = CORE_PLAN + REPRO_PLAN + E2E_PLAN
+    run_plan(plan, args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Numeric-format tables for ultra-low-precision training.
+
+Defines the FP4 family (E2M1 primary, plus E1M2 / E3M0 from Appendix A,
+Table 4 of the paper) as explicit value tables, and the rounding rule used
+by the paper's CUDA look-up-table kernel: *round-to-nearest with ties
+toward the value of larger magnitude in the upward direction* — i.e. a
+boundary exactly at a midpoint maps to the upper representable value,
+matching the strict `<` comparison chain in the paper's Appendix A kernel.
+
+These tables are the single source of truth on the Python side; the Rust
+`formats` module mirrors them bit-exactly and the cross-check lives in
+`python/tests/test_formats.py` + `rust/src/formats/tests`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# FP4 value tables (Appendix A, Table 4). Positive halves; negatives mirror.
+# ---------------------------------------------------------------------------
+
+_E2M1_POS = (0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0)
+_E1M2_POS = (0.0, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5)
+_E3M0_POS = (0.0, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Fp4Format:
+    """A 4-bit floating-point format given by its representable values."""
+
+    name: str
+    exponent_bits: int
+    mantissa_bits: int
+    values: tuple  # all representable values, ascending, including ±0 as 0.0
+
+    @property
+    def max_value(self) -> float:
+        return self.values[-1]
+
+    @property
+    def thresholds(self) -> tuple:
+        """Decision boundaries (midpoints) for the comparison-chain kernel.
+
+        ``len(thresholds) == len(values) - 1``; an input ``x`` maps to
+        ``values[i]`` where ``i`` is the number of thresholds strictly
+        below-or-equal ``x`` (ties go up, matching the paper's kernel).
+        """
+        v = self.values
+        return tuple((v[i] + v[i + 1]) / 2.0 for i in range(len(v) - 1))
+
+
+def _mk(name: str, e: int, m: int, pos: Sequence[float]) -> Fp4Format:
+    neg = tuple(-x for x in reversed(pos[1:]))
+    return Fp4Format(name, e, m, neg + tuple(pos))
+
+
+E2M1 = _mk("e2m1", 2, 1, _E2M1_POS)
+E1M2 = _mk("e1m2", 1, 2, _E1M2_POS)
+E3M0 = _mk("e3m0", 3, 0, _E3M0_POS)
+
+FP4_FORMATS = {f.name: f for f in (E2M1, E1M2, E3M0)}
+
+# FP8 maxima (used by absmax scaling for the FP8 baseline and the
+# mixed-precision optimizer states; the qdq itself uses ml_dtypes casts).
+E4M3_MAX = 448.0
+E5M2_MAX = 57344.0
+
+
+def lut_round_np(x: np.ndarray, fmt: Fp4Format) -> np.ndarray:
+    """Numpy reference of the paper's LUT kernel (ties-up comparison chain)."""
+    values = np.asarray(fmt.values, dtype=x.dtype)
+    thresholds = np.asarray(fmt.thresholds, dtype=x.dtype)
+    # index = count of thresholds <= x  (x < t  -> stay below)
+    idx = np.searchsorted(thresholds, x, side="right")
+    return values[idx]
+
+
+def absmax_scale_np(x: np.ndarray, fmt: Fp4Format, axis=None) -> np.ndarray:
+    """absmax scaling factor gamma = MAX_fp4 / max|x| (Eq. 1), safe on zeros."""
+    amax = np.max(np.abs(x), axis=axis, keepdims=axis is not None)
+    amax = np.where(amax == 0.0, 1.0, amax)
+    return fmt.max_value / amax
+
+
+def quant_dequant_np(x: np.ndarray, fmt: Fp4Format, axis=None) -> np.ndarray:
+    """Reference absmax quantize→dequantize round trip (simulated FP4)."""
+    gamma = absmax_scale_np(x, fmt, axis=axis)
+    return lut_round_np(x * gamma, fmt) / gamma

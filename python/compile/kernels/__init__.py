@@ -1,0 +1,1 @@
+"""Layer-1 kernels: Pallas implementations + the pure-jnp oracle (ref.py)."""

@@ -1,0 +1,114 @@
+"""Differentiable Gradient Estimator (§3.1) and STE as custom_vjp wrappers.
+
+Forward passes always use the *hard* LUT quantization (hardware-shaped);
+only the backward rule differs:
+
+  * STE:  dL/dW = dL/dWq                      (f' ≡ 1)
+  * DGE:  dL/dW = dL/dWq ⊙ f'(W_scaled)       (Eq. 6 / Eq. 22, App. C.2)
+
+Per Appendix C.2 the correction term is evaluated on the *scaled* weights
+(W ⊙ sf) and the scale/unscale pair cancels, so the backward here saves
+the scaling factor from the forward pass and feeds `W*gamma` to f'.
+f' (Eq. 8) is clipped at `policy.dge_clip` (3.0), the Appendix-C.3
+equivalent of the epsilon-smoothed derivative.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile import formats
+from compile.kernels import ref
+from compile.kernels.fp4_quant import fp4_qdq_pallas, fp4_qdq_tensorwise_pallas
+
+
+def _axis_for(granularity: str, kind: str):
+    """Map (granularity, operand kind) to the reduction axis of Eq. 1."""
+    if granularity == "tensor":
+        return None
+    # vector-wise: token-wise for activations (per row of (tokens, C)),
+    # channel-wise for weights (per output column of (C_in, C_out)).
+    return -1 if kind == "act" else 0
+
+
+def hard_qdq(x, fmt_name: str, axis, use_pallas: bool):
+    """Dispatch the hard quantize-dequantize to Pallas (L1) or the oracle."""
+    fmt = formats.FP4_FORMATS[fmt_name]
+    if use_pallas and x.ndim == 2:
+        if axis is None:
+            return fp4_qdq_tensorwise_pallas(x, fmt_name)
+        return fp4_qdq_pallas(x, fmt_name, axis)
+    return ref.fp4_qdq(x, fmt, axis=axis)
+
+
+# --- weight branch ---------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
+def quant_weight_fp4(w, fmt_name, granularity, dge_k, dge_clip, use_pallas,
+                     _tag="w"):
+    """Hard FP4 qdq of a weight tensor with DGE (dge_k set) or STE backward."""
+    return hard_qdq(w, fmt_name, _axis_for(granularity, "weight"), use_pallas)
+
+
+def _qw_fwd(w, fmt_name, granularity, dge_k, dge_clip, use_pallas, _tag):
+    y = quant_weight_fp4(w, fmt_name, granularity, dge_k, dge_clip,
+                         use_pallas, _tag)
+    if dge_k is None:
+        return y, None
+    fmt = formats.FP4_FORMATS[fmt_name]
+    gamma = ref.absmax_scale(w, fmt, axis=_axis_for(granularity, "weight"))
+    return y, (w * gamma,)
+
+
+def _qw_bwd(fmt_name, granularity, dge_k, dge_clip, use_pallas, _tag, res, g):
+    if dge_k is None:  # STE: pass-through
+        return (g,)
+    (w_scaled,) = res
+    fmt = formats.FP4_FORMATS[fmt_name]
+    corr = ref.dge_prime(w_scaled, fmt, dge_k, clip=dge_clip)
+    return (g * corr,)
+
+
+quant_weight_fp4.defvjp(_qw_fwd, _qw_bwd)
+
+
+# --- activation branch (STE through the hard rounding) ---------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def qdq_ste_fp4(x, fmt_name, granularity, use_pallas):
+    """Hard FP4 qdq with straight-through backward (activation rounding)."""
+    return hard_qdq(x, fmt_name, _axis_for(granularity, "act"), use_pallas)
+
+
+qdq_ste_fp4.defvjp(
+    lambda x, f, g_, p: (qdq_ste_fp4(x, f, g_, p), None),
+    lambda f, g_, p, res, g: (g,),
+)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def qdq_ste_fp8(x, granularity, kind):
+    """FP8 (E4M3) absmax qdq with straight-through backward."""
+    return ref.fp8_qdq(x, axis=_axis_for(granularity, kind))
+
+
+qdq_ste_fp8.defvjp(
+    lambda x, g_, k: (qdq_ste_fp8(x, g_, k), None),
+    lambda g_, k, res, g: (g,),
+)
+
+
+def dge_series(xs, fmt_name: str = "e2m1", k: float = 5.0, clip: float = 3.0):
+    """(f(x), f'(x), hard(x)) series for Figure 3; consumed by `repro fig3`."""
+    fmt = formats.FP4_FORMATS[fmt_name]
+    x = jnp.asarray(xs, dtype=jnp.float32)
+    return (
+        ref.dge_forward(x, fmt, k),
+        ref.dge_prime(x, fmt, k, clip=clip),
+        ref.lut_round(x, fmt),
+    )

@@ -1,0 +1,64 @@
+"""Layer-1 Pallas kernel: fused FP4 GeMM (Figure 2 of the paper).
+
+Computes Y = A·W with both operands quantized to FP4 on the fly:
+A (s × c) token-wise, W (c × o) channel-wise, the two rank-1 scale vectors
+applied to the output tile (the "two scaling factors" of Figure 2).
+
+TPU mapping (DESIGN.md §5): the grid tiles the *output* (s × o); each grid
+step loads an A row-panel `(bs, c)` and a W column-panel `(c, bo)` into
+VMEM, computes the per-row / per-column absmax locally (the reduction
+dimension is fully resident, so no cross-tile reduction is needed),
+applies the branch-free E2M1 select chain on the VPU, feeds the quantized
+tiles to the MXU matmul with f32 accumulation, and rescales the output
+tile. interpret=True on this image; checked against ref.qgemm.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import formats
+from compile.kernels.fp4_quant import _lut_round_block, _pick_block
+
+
+def _qgemm_kernel(a_ref, w_ref, o_ref, *, fmt: formats.Fp4Format):
+    a = a_ref[...]  # (bs, c)
+    w = w_ref[...]  # (c, bo)
+    a_amax = jnp.max(jnp.abs(a), axis=-1, keepdims=True)
+    w_amax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    a_amax = jnp.where(a_amax == 0.0, 1.0, a_amax)
+    w_amax = jnp.where(w_amax == 0.0, 1.0, w_amax)
+    ga = fmt.max_value / a_amax  # (bs, 1)
+    gw = fmt.max_value / w_amax  # (1, bo)
+    aq = _lut_round_block(a * ga, fmt)
+    wq = _lut_round_block(w * gw, fmt)
+    acc = jnp.dot(aq, wq, preferred_element_type=jnp.float32)
+    o_ref[...] = (acc / (ga * gw)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name",))
+def fp4_qgemm_pallas(a, w, fmt_name: str = "e2m1"):
+    """Fused quantized GeMM: a (s, c) @ w (c, o) with FP4 operands."""
+    if a.ndim != 2 or w.ndim != 2 or a.shape[1] != w.shape[0]:
+        raise ValueError(f"bad qgemm shapes: {a.shape} @ {w.shape}")
+    fmt = formats.FP4_FORMATS[fmt_name]
+    s, c = a.shape
+    _, o = w.shape
+    bs = _pick_block(s, c)
+    bo = _pick_block(o, c)
+    grid = (s // bs, o // bo)
+    return pl.pallas_call(
+        functools.partial(_qgemm_kernel, fmt=fmt),
+        out_shape=jax.ShapeDtypeStruct((s, o), a.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((c, bo), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bs, bo), lambda i, j: (i, j)),
+        interpret=True,
+    )(a, w)

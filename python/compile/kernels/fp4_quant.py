@@ -1,0 +1,131 @@
+"""Layer-1 Pallas kernel: vector-wise absmax FP4 quantize-dequantize.
+
+This is the TPU rethink of the paper's CUDA LUT kernel (Appendix A). The
+CUDA version is thread-per-element over a flat array with a 15-way ternary
+chain; on TPU the same LUT semantics become a vectorized select chain on
+the VPU, with `BlockSpec` expressing the HBM↔VMEM schedule the CUDA grid
+expressed with threadblocks:
+
+  * token-wise (activations): each grid step owns a `(block_rows, C)` tile
+    so the per-token absmax reduction is local to the tile;
+  * channel-wise (weights): each grid step owns a `(R, block_cols)` tile so
+    the per-output-channel reduction is local.
+
+Tiles are chosen to keep the working set well under VMEM (~16 MiB/core on
+TPUv4; we budget ≤4 MiB per operand tile) and the compare chain is
+branch-free. `interpret=True` is mandatory on this image (CPU PJRT cannot
+execute Mosaic custom-calls); correctness is asserted against
+`ref.fp4_qdq` in `python/tests/test_kernels.py`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import formats
+
+# VMEM budget per operand tile, in f32 elements (≈4 MiB).
+_VMEM_TILE_ELEMS = 1 << 20
+
+
+def _lut_round_block(x, fmt: formats.Fp4Format):
+    """Branch-free comparison chain (ties-up) on a VMEM-resident tile."""
+    out = jnp.full_like(x, fmt.values[-1])
+    for value, thr in zip(reversed(fmt.values[:-1]), reversed(fmt.thresholds)):
+        out = jnp.where(x < thr, value, out)
+    return out
+
+
+def _qdq_rows_kernel(x_ref, o_ref, *, fmt: formats.Fp4Format):
+    """Token-wise tile kernel: scale/round/unscale per row of the tile."""
+    x = x_ref[...]
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    amax = jnp.where(amax == 0.0, 1.0, amax)
+    gamma = fmt.max_value / amax
+    o_ref[...] = _lut_round_block(x * gamma, fmt) / gamma
+
+
+def _qdq_cols_kernel(x_ref, o_ref, *, fmt: formats.Fp4Format):
+    """Channel-wise tile kernel: scale/round/unscale per column of the tile."""
+    x = x_ref[...]
+    amax = jnp.max(jnp.abs(x), axis=0, keepdims=True)
+    amax = jnp.where(amax == 0.0, 1.0, amax)
+    gamma = fmt.max_value / amax
+    o_ref[...] = _lut_round_block(x * gamma, fmt) / gamma
+
+
+def _pick_block(n_free: int, n_fixed: int) -> int:
+    """Largest divisor block of `n_free` keeping tile ≤ the VMEM budget."""
+    target = max(1, _VMEM_TILE_ELEMS // max(n_fixed, 1))
+    if n_free <= target:
+        return n_free
+    for b in range(min(target, n_free), 0, -1):
+        if n_free % b == 0:
+            return b
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name", "axis"))
+def fp4_qdq_pallas(x, fmt_name: str = "e2m1", axis: int = -1):
+    """Vector-wise FP4 quantize-dequantize of a 2-D tensor via Pallas.
+
+    axis=-1: per-row scales (token-wise activations, x is (tokens, C));
+    axis=0 : per-column scales (channel-wise weights, x is (C_in, C_out)).
+    """
+    if x.ndim != 2:
+        raise ValueError(f"fp4_qdq_pallas expects 2-D input, got {x.shape}")
+    fmt = formats.FP4_FORMATS[fmt_name]
+    rows, cols = x.shape
+    if axis in (-1, 1):
+        kernel = functools.partial(_qdq_rows_kernel, fmt=fmt)
+        br = _pick_block(rows, cols)
+        grid = (rows // br,)
+        spec = pl.BlockSpec((br, cols), lambda i: (i, 0))
+    elif axis == 0:
+        kernel = functools.partial(_qdq_cols_kernel, fmt=fmt)
+        bc = _pick_block(cols, rows)
+        grid = (cols // bc,)
+        spec = pl.BlockSpec((rows, bc), lambda i: (0, i))
+    else:
+        raise ValueError(f"axis must be 0 or -1, got {axis}")
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name",))
+def fp4_qdq_tensorwise_pallas(x, fmt_name: str = "e2m1"):
+    """Tensor-wise FP4 qdq: scalar absmax on host graph, LUT tile kernel.
+
+    The global reduction is a cheap XLA op; only the element-wise LUT pass
+    (the actual hot-spot) runs in the Pallas kernel.
+    """
+    fmt = formats.FP4_FORMATS[fmt_name]
+    amax = jnp.max(jnp.abs(x))
+    amax = jnp.where(amax == 0.0, 1.0, amax)
+    gamma = fmt.max_value / amax
+    rows, cols = x.shape
+    br = _pick_block(rows, cols)
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = _lut_round_block(x_ref[...], fmt)
+
+    spec = pl.BlockSpec((br, cols), lambda i: (i, 0))
+    rounded = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(rows // br,),
+        in_specs=[spec],
+        out_specs=spec,
+        interpret=True,
+    )(x * gamma)
+    return rounded / gamma

@@ -1,0 +1,186 @@
+"""Pure-jnp correctness oracle for every Layer-1 kernel.
+
+Everything here is straight-line jnp with no Pallas, serving two purposes:
+  1. the pytest ground truth the Pallas kernels are checked against
+     (``python/tests/test_kernels.py``, hypothesis shape/dtype sweeps);
+  2. the fallback implementation the model uses when a policy sets
+     ``use_pallas=False`` (and for ops that are cheap enough not to kernel).
+
+Quantization semantics (Eq. 1 + Appendix A of the paper):
+  absmax scaling  gamma = MAX_fmt / max|x|   (per tensor / per vector)
+  LUT rounding    comparison chain with ties rounded *up* (the paper's CUDA
+                  kernel uses strict ``<`` thresholds at interval midpoints)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile import formats
+
+# ---------------------------------------------------------------------------
+# FP4 LUT rounding + absmax scaling
+# ---------------------------------------------------------------------------
+
+
+def lut_round(x, fmt: formats.Fp4Format):
+    """Round each element of ``x`` (assumed within dynamic range) to the
+    nearest representable value of ``fmt`` via the paper's comparison chain.
+
+    Ties at interval midpoints round toward the upper value, exactly like
+    the strict-``<`` chain in Appendix A.
+    """
+    out = jnp.full_like(x, fmt.values[-1])
+    # Walk thresholds from the top: x < t_i => value_i.
+    for value, thr in zip(reversed(fmt.values[:-1]), reversed(fmt.thresholds)):
+        out = jnp.where(x < thr, value, out)
+    return out
+
+
+def absmax_scale(x, fmt: formats.Fp4Format, axis=None):
+    """Scaling factor gamma of Eq. 1. ``axis=None`` => tensor-wise scalar;
+    otherwise a keepdims vector along ``axis`` (vector-wise scaling)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    amax = jnp.where(amax == 0.0, 1.0, amax)
+    return fmt.max_value / amax
+
+
+def fp4_qdq(x, fmt: formats.Fp4Format = formats.E2M1, axis=None):
+    """absmax quantize→dequantize round trip: the simulated-FP4 tensor.
+
+    This is the numerical identity the paper itself uses on H100s: values
+    are constrained to the 15-point E2M1 grid (scaled), while storage stays
+    high precision. ``axis`` selects granularity: None = tensor-wise,
+    -1 = token-wise (activations), 0 = channel-wise (weights, per out-col
+    when applied to a (c_in, c_out) tensor).
+    """
+    gamma = absmax_scale(x, fmt, axis=axis)
+    return lut_round(x * gamma, fmt) / gamma
+
+
+def fp8_qdq(x, axis=None):
+    """FP8 (E4M3) absmax quantize→dequantize using the hardware dtype."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    amax = jnp.where(amax == 0.0, 1.0, amax)
+    gamma = formats.E4M3_MAX / amax
+    q = (x * gamma).astype(jnp.float8_e4m3fn).astype(x.dtype)
+    return q / gamma
+
+
+def fp16_qdq(x):
+    """FP16 storage round trip (second Adam moment in the FP8-LM scheme).
+
+    Like the FP8 path this carries a per-tensor scaling factor: early in
+    training the second moment is ~grad², far below the FP16 subnormal
+    floor (6e-8); unscaled storage would flush it to zero and blow up the
+    Adam update (v_hat→0). FP8-LM's "auto-scaling" keeps tensor absmax
+    pinned near the top of the representable range.
+    """
+    amax = jnp.max(jnp.abs(x))
+    amax = jnp.where(amax == 0.0, 1.0, amax)
+    gamma = 32768.0 / amax  # half of FP16 max: headroom, no overflow
+    return ((x * gamma).astype(jnp.float16).astype(x.dtype)) / gamma
+
+
+# ---------------------------------------------------------------------------
+# DGE math (Eqs. 7-8 + Appendix C) — used by the custom_vjp backward and by
+# the fig3 series generator; the Rust quant::dge module mirrors it.
+# ---------------------------------------------------------------------------
+
+
+def dge_forward(x, fmt: formats.Fp4Format, k: float):
+    """The differentiable surrogate f(x) of Eq. 7, pieced over the format's
+    quantization intervals (assumes x within [-MAX, MAX])."""
+    values = jnp.asarray(fmt.values, dtype=x.dtype)
+    # interval index: i such that values[i] <= x < values[i+1]
+    idx = jnp.clip(
+        jnp.searchsorted(values, x, side="right") - 1, 0, len(fmt.values) - 2
+    )
+    lo = values[idx]
+    hi = values[idx + 1]
+    delta = hi - lo
+    t = x - lo
+    u = 2.0 * t / delta - 1.0
+    return lo + delta / 2.0 * (1.0 + jnp.sign(u) * jnp.abs(u) ** (1.0 / k))
+
+
+def dge_prime(x, fmt: formats.Fp4Format, k: float, clip: float = 3.0):
+    """f'(x) of Eq. 8 with the Appendix-C clip at ``clip`` (default 3.0).
+
+    Implemented as a branch-free where-chain over the interval table (the
+    same idiom as the forward LUT) rather than searchsorted+gather: the
+    gather lowering mis-executes after the HLO-text round trip through
+    xla_extension 0.5.1, collapsing the interval to zero width and the
+    correction to exactly 0 (frozen weight gradients — see EXPERIMENTS.md
+    §Perf/bugs). The chain lowers to selects only, which round-trip fine.
+    """
+    values = fmt.values
+    # lo = largest grid value <= x; hi = smallest grid value > x.
+    lo = jnp.full_like(x, values[0])
+    for v in values[1:]:
+        lo = jnp.where(x >= v, v, lo)
+    hi = jnp.full_like(x, values[-1])
+    for v in reversed(values[1:]):
+        hi = jnp.where(v > x, v, hi)
+    # x at the top grid point (absmax scaling guarantees some element is
+    # exactly MAX): degenerate interval -> treat as edge: u = 1, f' = 1/k.
+    delta = jnp.maximum(hi - lo, 1e-6)
+    u = jnp.abs(2.0 * (x - lo) / delta - 1.0)
+    u = jnp.clip(u, 1e-12, 1.0)
+    d = (1.0 / k) * u ** (1.0 / k - 1.0)
+    return jnp.minimum(d, clip)
+
+
+# ---------------------------------------------------------------------------
+# OCC: outlier clamping + compensation (Eq. 9, §3.2)
+# ---------------------------------------------------------------------------
+
+
+def occ_clamp(y, alpha: float):
+    """Clamp ``y`` to its signed (alpha, 1-alpha) quantiles (per tensor).
+
+    Returns ``(y_c, delta)`` with ``y == y_c + delta`` exactly; ``delta`` is
+    the sparse outlier residual (dense storage here — see DESIGN.md §4 on
+    the sparse-GeMM substitution).
+    """
+    hi = jnp.quantile(y, alpha)
+    lo = jnp.quantile(y, 1.0 - alpha)
+    y_c = jnp.clip(y, lo, hi)
+    return y_c, y - y_c
+
+
+# ---------------------------------------------------------------------------
+# Quantized GeMM reference (Figure 2): scale → LUT → GeMM → unscale
+# ---------------------------------------------------------------------------
+
+
+def qgemm(a, w, fmt: formats.Fp4Format = formats.E2M1):
+    """Reference FP4 GeMM: token-wise quantized A (s,c) @ channel-wise
+    quantized W (c,o), with both scale vectors applied to the output."""
+    ga = absmax_scale(a, fmt, axis=-1)  # (s, 1)
+    gw = absmax_scale(w, fmt, axis=0)  # (1, o)
+    aq = lut_round(a * ga, fmt)
+    wq = lut_round(w * gw, fmt)
+    return (aq @ wq) / (ga * gw)
+
+
+# ---------------------------------------------------------------------------
+# Fidelity metrics (Table 1)
+# ---------------------------------------------------------------------------
+
+
+def cosine_sim(x, y):
+    num = jnp.sum(x * y)
+    den = jnp.linalg.norm(x.ravel()) * jnp.linalg.norm(y.ravel())
+    return num / jnp.maximum(den, 1e-12)
+
+
+def mse(x, y):
+    return jnp.mean((x - y) ** 2)
+
+
+def snr_db(x, y):
+    """Signal-to-noise ratio in dB between original x and distorted y."""
+    sig = jnp.mean(x**2)
+    noise = jnp.mean((x - y) ** 2)
+    return 10.0 * jnp.log10(sig / jnp.maximum(noise, 1e-20))

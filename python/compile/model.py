@@ -1,0 +1,270 @@
+"""Layer-2: LLaMA-2-style decoder with precision-policy-routed GeMMs.
+
+Architecture matches the paper's setup (§4.1): pre-norm transformer with
+RMSNorm, rotary position embeddings, SwiGLU MLP, untied-from-bias linear
+layers, byte-level vocab. Every linear layer inside the blocks routes its
+two GeMM operands through the policy's quantizers:
+
+  activations → OCC clamp/compensate + FP4 LUT qdq (STE backward)   [§3.2]
+  weights     → FP4 LUT qdq with DGE backward correction            [§3.1]
+
+The embedding table and the (tied) LM head stay high precision, as is
+standard for FP4/FP8 training schemes (the paper quantizes the GeMMs of
+the transformer blocks; §4.1 "we focus on 4-bit quantization for GeMM
+operations").
+
+Layers are stacked and scanned (`lax.scan`) so the lowered HLO stays
+O(1) in depth — this is the L2 "scan vs unroll" perf choice of
+DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.dge import quant_weight_fp4, qdq_ste_fp8
+from compile.kernels.occ import quant_act
+from compile.precision import PrecisionPolicy
+
+VOCAB = 256  # byte-level
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    dim: int
+    n_layers: int
+    n_heads: int
+    ffn_dim: int
+    seq_len: int
+    batch: int
+    vocab: int = VOCAB
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.n_heads == 0
+        return self.dim // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, l, v = self.dim, self.ffn_dim, self.n_layers, self.vocab
+        per_layer = 4 * d * d + 3 * d * f + 2 * d
+        return v * d + l * per_layer + d
+
+
+# Presets: stand-ins for the paper's 400M / 1.3B / 7B / 13B (DESIGN.md §4).
+# `m100` is the end-to-end ~100M-parameter driver model.
+PRESETS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        ModelConfig("nano", dim=64, n_layers=2, n_heads=2, ffn_dim=192,
+                    seq_len=128, batch=8),
+        ModelConfig("micro", dim=128, n_layers=3, n_heads=4, ffn_dim=384,
+                    seq_len=128, batch=8),
+        ModelConfig("tiny", dim=192, n_layers=4, n_heads=6, ffn_dim=512,
+                    seq_len=128, batch=8),
+        ModelConfig("small", dim=256, n_layers=6, n_heads=8, ffn_dim=704,
+                    seq_len=128, batch=8),
+        ModelConfig("med", dim=384, n_layers=8, n_heads=8, ffn_dim=1024,
+                    seq_len=128, batch=8),
+        ModelConfig("m100", dim=768, n_layers=12, n_heads=12, ffn_dim=2048,
+                    seq_len=128, batch=4),
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters. Flat, name-ordered dict of arrays; per-layer tensors are
+# stacked on a leading layer axis for lax.scan. The ordering contract
+# (sorted names) is shared with the Rust manifest loader.
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig):
+    d, f, l, v = cfg.dim, cfg.ffn_dim, cfg.n_layers, cfg.vocab
+    return {
+        "embed": (v, d),
+        "final_norm": (d,),
+        "layers.attn_norm": (l, d),
+        "layers.mlp_norm": (l, d),
+        "layers.wq": (l, d, d),
+        "layers.wk": (l, d, d),
+        "layers.wv": (l, d, d),
+        "layers.wo": (l, d, d),
+        "layers.wgate": (l, d, f),
+        "layers.wup": (l, d, f),
+        "layers.wdown": (l, f, d),
+    }
+
+
+def init_params(cfg: ModelConfig, seed):
+    """Initialize parameters from an int32 seed (AOT-lowered as `init`)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+    specs = param_specs(cfg)
+    params = {}
+    for i, (name, shape) in enumerate(sorted(specs.items())):
+        k = jax.random.fold_in(key, i)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "embed":
+            params[name] = jax.random.normal(k, shape, jnp.float32) * 0.02
+        else:
+            # fan-in scaled init; wo/wdown get the depth-scaled variant.
+            fan_in = shape[-2]
+            scale = 1.0 / jnp.sqrt(fan_in)
+            if name in ("layers.wo", "layers.wdown"):
+                scale = scale / jnp.sqrt(2.0 * cfg.n_layers)
+            params[name] = jax.random.normal(k, shape, jnp.float32) * scale
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear (Figure 2): both GeMM operands through the policy.
+# ---------------------------------------------------------------------------
+
+def quant_weight(w, policy: PrecisionPolicy):
+    if policy.weight_bits >= 16:
+        return w
+    if policy.weight_bits == 8:
+        return qdq_ste_fp8(w, policy.weight_granularity, "weight")
+    return quant_weight_fp4(w, policy.fp4_format, policy.weight_granularity,
+                            policy.dge_k, policy.dge_clip, policy.use_pallas)
+
+
+def qlinear(x, w, policy: PrecisionPolicy):
+    """y = quant_act(x) @ quant_weight(w); x: (tokens, c_in), w: (c_in, c_out)."""
+    return quant_act(x, policy) @ quant_weight(w, policy)
+
+
+# ---------------------------------------------------------------------------
+# Transformer forward
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, g, eps: float = 1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def _rope_tables(cfg: ModelConfig):
+    hd = cfg.head_dim
+    pos = jnp.arange(cfg.seq_len, dtype=jnp.float32)[:, None]
+    inv = cfg.rope_theta ** (
+        -jnp.arange(0, hd, 2, dtype=jnp.float32) / hd
+    )[None, :]
+    ang = pos * inv  # (S, hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply_rope(x, cos, sin):
+    # x: (B, H, S, hd) with hd split into even/odd interleave-free halves.
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    )
+
+
+def _block(cfg: ModelConfig, policy: PrecisionPolicy, x, layer, cos, sin):
+    """One pre-norm transformer block. x: (B, S, D)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def lin(t, w):
+        return qlinear(t.reshape(b * s, -1), w, policy).reshape(b, s, -1)
+
+    # --- attention ---
+    xn = rms_norm(x, layer["attn_norm"])
+    q = lin(xn, layer["wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = lin(xn, layer["wk"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = lin(xn, layer["wv"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    q = _apply_rope(q, cos, sin)
+    k = _apply_rope(k, cos, sin)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + lin(o, layer["wo"])
+
+    # --- SwiGLU MLP ---
+    xn = rms_norm(x, layer["mlp_norm"])
+    gate = lin(xn, layer["wgate"])
+    up = lin(xn, layer["wup"])
+    act = jax.nn.silu(gate) * up
+    x = x + lin(act, layer["wdown"])
+    return x
+
+
+_LAYER_KEYS = ("attn_norm", "mlp_norm", "wq", "wk", "wv", "wo",
+               "wgate", "wup", "wdown")
+
+
+def forward(cfg: ModelConfig, policy: PrecisionPolicy, params, tokens,
+            return_probes: bool = False):
+    """tokens (B, S) int32 → logits (B, S, V). Optionally returns the probe
+    activations used by Table 1 / Figure 4 / Appendix-D reproductions."""
+    x = params["embed"][tokens]  # (B, S, D)
+    cos, sin = _rope_tables(cfg)
+    cos, sin = cos[: tokens.shape[1]], sin[: tokens.shape[1]]
+    stacked = {k: params[f"layers.{k}"] for k in _LAYER_KEYS}
+
+    probes = {}
+    if return_probes:
+        # Probes want per-layer visibility => unrolled loop (probe artifact
+        # only; the training artifacts use the scan below).
+        for i in range(cfg.n_layers):
+            layer = {k: stacked[k][i] for k in _LAYER_KEYS}
+            x = _block(cfg, policy, x, layer, cos, sin)
+            if i == 0:
+                probes["layer0_output"] = x
+                xn = rms_norm(x, layer["mlp_norm"])
+                probes["layer0_mlp_norm_out"] = xn
+                gate = qlinear(
+                    xn.reshape(-1, cfg.dim), layer["wgate"], policy
+                )
+                up = qlinear(xn.reshape(-1, cfg.dim), layer["wup"], policy)
+                probes["layer0_swiglu_act"] = (
+                    jax.nn.silu(gate) * up
+                ).reshape(x.shape[0], x.shape[1], -1)
+    else:
+        def body(x, layer):
+            return _block(cfg, policy, x, layer, cos, sin), None
+
+        x, _ = jax.lax.scan(body, x, stacked)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["embed"].T  # tied head, high precision
+    if return_probes:
+        probes["final_hidden"] = x
+        return logits, probes
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, policy: PrecisionPolicy, params, tokens):
+    """Mean next-token cross-entropy over (B, S-1) positions."""
+    logits = forward(cfg, policy, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, targets[..., None], axis=-1
+    ).squeeze(-1)
+    return jnp.mean(logz - gold)
+
+
+def last_logits(cfg: ModelConfig, policy: PrecisionPolicy, params, tokens):
+    """Logits at the last position (generation artifact)."""
+    return forward(cfg, policy, params, tokens)[:, -1, :]
+
+
+def token_nll(cfg: ModelConfig, policy: PrecisionPolicy, params, tokens):
+    """Per-sequence summed NLL (B,) — the zero-shot MC scoring primitive."""
+    logits = forward(cfg, policy, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, targets[..., None], axis=-1
+    ).squeeze(-1)
+    return jnp.sum(logz - gold, axis=-1)

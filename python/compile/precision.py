@@ -1,0 +1,112 @@
+"""Precision policies: the single knob set that defines every experiment arm.
+
+A :class:`PrecisionPolicy` describes how the two GeMM operands of every
+linear layer are quantized (bits, format, granularity), which gradient
+estimator the weight branch uses (STE vs the paper's DGE, §3.1), how
+activation outliers are treated (OCC, §3.2), and how the mixed-precision
+Adam moments are stored (FP8-LM scheme, §4.1).
+
+The named registry at the bottom covers every arm of the paper's main
+results and ablations (Figures 1, 5, 6a–d; Tables 1–3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# Granularities (§4.1): "vector" means token-wise for activations
+# (reduce over channels per token) and channel-wise for weights
+# (reduce over input channels per output channel), matching GeMM rules.
+TENSOR = "tensor"
+VECTOR = "vector"
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    name: str
+    # GeMM operand quantization. bits: 16 = no quantization (BF16 baseline),
+    # 8 = FP8 (E4M3) absmax qdq, 4 = FP4 (fp4_format) LUT qdq.
+    weight_bits: int = 16
+    act_bits: int = 16
+    fp4_format: str = "e2m1"
+    weight_granularity: str = VECTOR
+    act_granularity: str = VECTOR
+    # Differentiable Gradient Estimator (§3.1). None => STE. Applied only to
+    # the weight branch (the paper's Eq. 6 correction).
+    dge_k: Optional[float] = None
+    dge_clip: float = 3.0
+    # Outlier Clamping & Compensation (§3.2). None => no clamping. Applied
+    # only to activations. occ_compensate toggles the sparse residual path.
+    occ_alpha: Optional[float] = None
+    occ_compensate: bool = True
+    # Mixed-precision Adam storage (FP8-LM scheme): first moment FP8-E4M3,
+    # second moment FP16. False => full-precision moments.
+    low_precision_moments: bool = True
+    # Route the quantize-dequantize hot-spot through the Pallas kernel
+    # (L1) instead of the pure-jnp reference implementation.
+    use_pallas: bool = True
+
+    @property
+    def quantizes_weights(self) -> bool:
+        return self.weight_bits < 16
+
+    @property
+    def quantizes_acts(self) -> bool:
+        return self.act_bits < 16
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _p(name: str, **kw) -> PrecisionPolicy:
+    return PrecisionPolicy(name=name, **kw)
+
+
+POLICIES = {
+    p.name: p
+    for p in [
+        # --- main arms (Fig. 1, Fig. 5, Fig. 6a) -------------------------
+        _p("bf16"),
+        _p("fp8", weight_bits=8, act_bits=8, weight_granularity=TENSOR,
+           act_granularity=TENSOR),
+        _p("fp4_direct", weight_bits=4, act_bits=4),  # W4A4, STE, no OCC
+        _p("fp4", weight_bits=4, act_bits=4, dge_k=5.0, occ_alpha=0.99),
+        # --- DGE ablation, W4A8 (Fig. 6b) --------------------------------
+        _p("w4a8_ste", weight_bits=4, act_bits=8),
+        _p("w4a8_dge_k3", weight_bits=4, act_bits=8, dge_k=3.0),
+        _p("w4a8_dge_k5", weight_bits=4, act_bits=8, dge_k=5.0),
+        _p("w4a8_dge_k10", weight_bits=4, act_bits=8, dge_k=10.0),
+        # --- OCC ablation, W8A4 (Fig. 6c) --------------------------------
+        _p("w8a4_direct", weight_bits=8, act_bits=4),
+        _p("w8a4_occ_a999", weight_bits=8, act_bits=4, occ_alpha=0.999),
+        _p("w8a4_occ_a99", weight_bits=8, act_bits=4, occ_alpha=0.99),
+        _p("w8a4_occ_a97", weight_bits=8, act_bits=4, occ_alpha=0.97),
+        _p("w8a4_clamp_only_a999", weight_bits=8, act_bits=4,
+           occ_alpha=0.999, occ_compensate=False),
+        # --- granularity ablation (Fig. 6d) ------------------------------
+        _p("fp4_tensorwise", weight_bits=4, act_bits=4, dge_k=5.0,
+           occ_alpha=0.99, weight_granularity=TENSOR, act_granularity=TENSOR),
+        _p("fp4_act_tensorwise", weight_bits=4, act_bits=4, dge_k=5.0,
+           occ_alpha=0.99, act_granularity=TENSOR),
+        _p("fp4_weight_tensorwise", weight_bits=4, act_bits=4, dge_k=5.0,
+           occ_alpha=0.99, weight_granularity=TENSOR),
+        # --- alpha sweep for the full method -----------------------------
+        _p("fp4_a999", weight_bits=4, act_bits=4, dge_k=5.0, occ_alpha=0.999),
+        _p("fp4_a97", weight_bits=4, act_bits=4, dge_k=5.0, occ_alpha=0.97),
+        # --- alternative FP4 formats (Appendix A) ------------------------
+        _p("fp4_e1m2", weight_bits=4, act_bits=4, dge_k=5.0, occ_alpha=0.99,
+           fp4_format="e1m2"),
+        _p("fp4_e3m0", weight_bits=4, act_bits=4, dge_k=5.0, occ_alpha=0.99,
+           fp4_format="e3m0"),
+    ]
+}
+
+
+def get_policy(name: str) -> PrecisionPolicy:
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown precision policy {name!r}; known: {sorted(POLICIES)}"
+        ) from None

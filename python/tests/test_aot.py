@@ -1,0 +1,143 @@
+"""AOT lowering contract: HLO text validity, manifest structure, and the
+numerical equivalence of train vs burst stepping."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import Builder, to_hlo_text, write_manifest_txt
+
+
+@pytest.fixture(scope="module")
+def nano_builder():
+    return Builder("nano", "fp4", 300, burst_k=4)
+
+
+def test_hlo_text_is_parseable_hlo(nano_builder):
+    low, _, _ = nano_builder.lower("eval")
+    txt = to_hlo_text(low)
+    assert txt.startswith("HloModule")
+    assert "ENTRY" in txt
+
+
+def test_io_descriptors_match_lowering(nano_builder):
+    _, ins, outs = nano_builder.lower("train")
+    n = len(nano_builder.names)
+    assert len(ins) == 3 * n + 2  # state + step + tokens
+    assert len(outs) == 3 * n + 3  # state + loss + gnorm + lr
+    assert ins[-1]["role"] == "tokens"
+    assert [o["role"] for o in outs[-3:]] == ["loss", "gnorm", "lr"]
+
+
+def test_every_param_has_m_and_v(nano_builder):
+    _, ins, _ = nano_builder.lower("train")
+    params = [i["name"] for i in ins if i["role"] == "param"]
+    ms = [i["name"] for i in ins if i["role"] == "opt_m"]
+    vs = [i["name"] for i in ins if i["role"] == "opt_v"]
+    assert [f"m.{p}" for p in params] == ms
+    assert [f"v.{p}" for p in params] == vs
+
+
+def test_burst_equals_k_single_steps(nano_builder):
+    """burst(K) must reproduce K sequential train() steps exactly (same
+    math, same artifacts contract) — the §Perf optimization cannot change
+    the trajectory."""
+    b = nano_builder
+    k = b.burst_k
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(
+        rng.integers(0, 256, (k, b.cfg.batch, b.cfg.seq_len)), jnp.int32)
+    init = jax.jit(b.init_fn)(jnp.int32(7))
+
+    # K single steps
+    cur = list(init)
+    losses_single = []
+    tfn = jax.jit(b.train_fn)
+    for s in range(k):
+        out = tfn(*cur, jnp.float32(s), toks[s])
+        cur = list(out[:-3])
+        losses_single.append(float(out[-3]))
+
+    # one burst
+    bfn = jax.jit(b.burst_fn)
+    bout = bfn(*init, jnp.float32(0), toks)
+    state_b = bout[:-2]
+    losses_b = np.asarray(bout[-2])
+
+    np.testing.assert_allclose(losses_b, losses_single, rtol=1e-5)
+    for single, burst in zip(cur, state_b):
+        np.testing.assert_allclose(np.asarray(single), np.asarray(burst),
+                                   rtol=2e-4, atol=1e-6)
+
+
+def test_grad_apply_composition_matches_train(nano_builder):
+    """grad + apply (the dp-sim path) == fused train step."""
+    b = nano_builder
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(
+        rng.integers(0, 256, (b.cfg.batch, b.cfg.seq_len)), jnp.int32)
+    init = list(jax.jit(b.init_fn)(jnp.int32(3)))
+    n = len(b.names)
+
+    tout = jax.jit(b.train_fn)(*init, jnp.float32(0), toks)
+
+    gout = jax.jit(b.grad_fn)(*init[:n], toks)
+    grads, loss_g = list(gout[:-1]), float(gout[-1])
+    aout = jax.jit(b.apply_fn)(*init, *grads, jnp.float32(0))
+
+    assert abs(loss_g - float(tout[-3])) < 1e-5
+    for a, t in zip(aout[: 3 * n], tout[: 3 * n]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(t), atol=1e-7)
+
+
+def test_manifest_txt_round_trip_structure(tmp_path):
+    manifest = {
+        "configs": {
+            "nano/fp4": {
+                "preset": "nano",
+                "policy": {"name": "fp4", "dge_k": 5.0, "occ_alpha": None},
+                "model": {"dim": 64, "batch": 8},
+                "steps": {
+                    "train@300": {
+                        "file": "x.hlo.txt",
+                        "total_steps": 300,
+                        "burst_k": 0,
+                        "inputs": [{"name": "embed", "shape": [256, 64],
+                                    "dtype": "f32", "role": "param"}],
+                        "outputs": [{"name": "loss", "shape": [],
+                                     "dtype": "f32", "role": "loss"}],
+                    }
+                },
+            }
+        },
+        "kernels": {},
+    }
+    path = os.path.join(tmp_path, "manifest.txt")
+    write_manifest_txt(manifest, path)
+    lines = open(path).read().splitlines()
+    assert lines[0] == "#CONFIG nano/fp4"
+    assert any(l.startswith("#POLICY") and "dge_k=5.0" in l for l in lines)
+    assert any(l.startswith("#POLICY") and "occ_alpha=none" in l
+               for l in lines)
+    assert "#IN embed f32 256x64 param" in lines
+    assert "#OUT loss f32 - loss" in lines
+    assert lines[-1] == "#END"
+
+
+def test_artifacts_dir_has_core_set():
+    """`make artifacts` contract used by cargo tests and the quickstart."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.exists(os.path.join(art, "manifest.txt")):
+        pytest.skip("run `make artifacts` first")
+    need = [
+        "nano__bf16__init.hlo.txt",
+        "nano__bf16__train_s300.hlo.txt",
+        "nano__fp4__train_s300.hlo.txt",
+        "kernel_qdq.hlo.txt",
+        "kernel_qgemm.hlo.txt",
+    ]
+    for f in need:
+        assert os.path.exists(os.path.join(art, f)), f

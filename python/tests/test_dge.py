@@ -1,0 +1,143 @@
+"""DGE math (Eqs. 7-8, Appendix C) and the custom_vjp gradient rules."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import formats
+from compile.kernels import ref
+from compile.kernels.dge import quant_weight_fp4, qdq_ste_fp4, dge_series
+
+F = formats.E2M1
+
+
+def test_dge_forward_interpolates_grid_points():
+    """f must hit every representable value exactly at the grid points."""
+    for k in (3.0, 5.0, 10.0):
+        v = jnp.asarray(F.values[:-1], jnp.float32)
+        got = np.asarray(ref.dge_forward(v, F, k))
+        np.testing.assert_allclose(got, np.asarray(v), atol=1e-5)
+
+
+def test_dge_forward_is_monotone():
+    x = jnp.linspace(-6.0, 6.0, 4001)
+    y = np.asarray(ref.dge_forward(x, F, 5.0))
+    assert np.all(np.diff(y) >= -1e-6)
+
+
+def test_dge_forward_midpoint_jump():
+    """At the interval midpoint f crosses the step center (Fig. 3a)."""
+    # interval [0, 0.5], midpoint 0.25 -> f = 0.25
+    got = float(ref.dge_forward(jnp.float32(0.25), F, 5.0))
+    assert abs(got - 0.25) < 1e-6
+
+
+def test_dge_prime_clip_at_3():
+    """§3.1: "the magnitude of f'(x) is capped at 3.0"."""
+    x = jnp.linspace(-6.0, 6.0, 100001)
+    d = np.asarray(ref.dge_prime(x, F, 5.0, clip=3.0))
+    assert d.max() <= 3.0 + 1e-6
+    # the cap must actually bind near interval midpoints
+    assert d.max() >= 3.0 - 1e-3
+
+
+def test_dge_prime_at_interval_ends_is_one_over_k():
+    """Eq. 8 at u=1 (interval edges): f' = 1/k."""
+    for k in (3.0, 5.0):
+        d = float(ref.dge_prime(jnp.float32(0.5), F, k))  # x=0.5: edge
+        assert abs(d - 1.0 / k) < 1e-4
+
+
+def test_dge_prime_positive_everywhere():
+    x = jnp.linspace(-5.99, 5.99, 999)
+    d = np.asarray(ref.dge_prime(x, F, 5.0))
+    assert np.all(d > 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.sampled_from([2.0, 5.0, 20.0]), seed=st.integers(0, 2**16))
+def test_dge_forward_approaches_hard_quant_for_large_k(k, seed):
+    """As k grows the surrogate converges to the hard LUT (§3.1)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-6, 6, 512).astype(np.float32))
+    hard = np.asarray(ref.lut_round(x, F))
+    soft = np.asarray(ref.dge_forward(x, F, k))
+    err_k = np.mean(np.abs(soft - hard))
+    soft_low = np.asarray(ref.dge_forward(x, F, 1.5))
+    err_low = np.mean(np.abs(soft_low - hard))
+    assert err_k <= err_low + 1e-6
+
+
+def test_weight_grad_is_g_times_fprime():
+    """Eq. 6: dL/dW = dL/dWq ⊙ f'(W_scaled), checked through jax.grad."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(24, 16)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(24, 16)).astype(np.float32))
+
+    def f(w_):
+        y = quant_weight_fp4(w_, "e2m1", "vector", 5.0, 3.0, False, "w")
+        return jnp.sum(y * g)
+
+    got = np.asarray(jax.grad(f)(w))
+    gamma = np.asarray(ref.absmax_scale(w, F, axis=0))
+    corr = np.asarray(ref.dge_prime(jnp.asarray(np.asarray(w) * gamma), F,
+                                    5.0, clip=3.0))
+    np.testing.assert_allclose(got, np.asarray(g) * corr, rtol=1e-5)
+
+
+def test_ste_weight_grad_is_identity():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+
+    def f(w_):
+        y = quant_weight_fp4(w_, "e2m1", "vector", None, 3.0, False, "w")
+        return jnp.sum(y * g)
+
+    np.testing.assert_allclose(np.asarray(jax.grad(f)(w)), np.asarray(g),
+                               rtol=1e-6)
+
+
+def test_ste_activation_grad_is_identity():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+
+    def f(x_):
+        return jnp.sum(qdq_ste_fp4(x_, "e2m1", "vector", False) ** 1)
+
+    np.testing.assert_allclose(np.asarray(jax.grad(f)(x)),
+                               np.ones((8, 8), np.float32))
+
+
+def test_scaling_cancellation_appendix_c2():
+    """App. C.2: the vector-wise sf and 1/sf cancel; the correction only
+    depends on the scaled weights. Scaling one output channel of W by a
+    constant must leave the DGE correction factor unchanged."""
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(16, 4)).astype(np.float32)
+    g = jnp.asarray(rng.normal(size=(16, 4)).astype(np.float32))
+
+    def corr_of(w_np):
+        w_ = jnp.asarray(w_np)
+
+        def f(t):
+            return jnp.sum(
+                quant_weight_fp4(t, "e2m1", "vector", 5.0, 3.0, False, "w")
+                * g
+            )
+
+        return np.asarray(jax.grad(f)(w_)) / np.asarray(g)
+
+    c1 = corr_of(w)
+    w2 = w.copy()
+    w2[:, 1] *= 7.5  # channel-wise rescale: absmax scaling absorbs it
+    c2 = corr_of(w2)
+    np.testing.assert_allclose(c1, c2, rtol=1e-4)
+
+
+def test_dge_series_shapes_for_fig3():
+    xs = np.linspace(-6, 6, 101)
+    f, fp, hard = dge_series(xs, "e2m1", 5.0)
+    assert f.shape == fp.shape == hard.shape == (101,)

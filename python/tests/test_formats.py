@@ -1,0 +1,94 @@
+"""Format tables (Appendix A, Table 4) and LUT rounding semantics."""
+
+import numpy as np
+import pytest
+
+from compile import formats
+
+# Appendix A Table 4, verbatim.
+E2M1_TABLE = [-6, -4, -3, -2, -1.5, -1, -0.5, 0, 0.5, 1, 1.5, 2, 3, 4, 6]
+E1M2_TABLE = [-3.5, -3, -2.5, -2, -1.5, -1, -0.5, 0,
+              0.5, 1, 1.5, 2, 2.5, 3, 3.5]
+E3M0_TABLE = [-16, -8, -4, -2, -1, -0.5, -0.25, 0,
+              0.25, 0.5, 1, 2, 4, 8, 16]
+
+
+@pytest.mark.parametrize(
+    "fmt,table",
+    [(formats.E2M1, E2M1_TABLE), (formats.E1M2, E1M2_TABLE),
+     (formats.E3M0, E3M0_TABLE)],
+)
+def test_value_tables_match_paper(fmt, table):
+    assert list(fmt.values) == table
+    assert len(fmt.values) == 15  # 16 codes, ±0 collapse
+
+
+def test_e2m1_max_is_six():
+    # §2: "For the E2M1 configuration, MAX_fp4 is calculated to be 6.0."
+    assert formats.E2M1.max_value == 6.0
+
+
+def test_e2m1_has_14_intervals():
+    # §3.1: "This framework consists of 14 distinct quantization intervals."
+    assert len(formats.E2M1.thresholds) == 14
+
+
+PAPER_KERNEL_CASES = [
+    # (input, expected) pairs straight from the Appendix-A CUDA chain.
+    (-7.0, -6.0), (-5.01, -6.0), (-5.0, -4.0), (-3.51, -4.0), (-3.5, -3.0),
+    (-2.51, -3.0), (-2.5, -2.0), (-1.76, -2.0), (-1.75, -1.5), (-1.3, -1.5),
+    (-1.25, -1.0), (-0.76, -1.0), (-0.75, -0.5), (-0.3, -0.5), (-0.25, 0.0),
+    (0.0, 0.0), (0.2, 0.0), (0.25, 0.5), (0.5, 0.5), (0.75, 1.0),
+    (1.2, 1.0), (1.25, 1.5), (1.7, 1.5), (1.75, 2.0), (2.4, 2.0),
+    (2.5, 3.0), (3.4, 3.0), (3.5, 4.0), (4.9, 4.0), (5.0, 6.0), (8.0, 6.0),
+]
+
+
+def test_lut_round_matches_paper_cuda_kernel():
+    x = np.array([c[0] for c in PAPER_KERNEL_CASES], dtype=np.float32)
+    want = np.array([c[1] for c in PAPER_KERNEL_CASES], dtype=np.float32)
+    got = formats.lut_round_np(x, formats.E2M1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_jnp_ref_matches_numpy_reference():
+    import jax.numpy as jnp
+    from compile.kernels import ref
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(256,)).astype(np.float32) * 2.5
+    got = np.asarray(ref.lut_round(jnp.asarray(x), formats.E2M1))
+    want = formats.lut_round_np(x, formats.E2M1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_absmax_scale_maps_max_to_format_max():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(64, 32)).astype(np.float32)
+    g = formats.absmax_scale_np(x, formats.E2M1)
+    assert np.isclose(np.max(np.abs(x * g)), 6.0)
+
+
+def test_absmax_scale_zero_tensor_is_safe():
+    x = np.zeros((8, 8), dtype=np.float32)
+    out = formats.quant_dequant_np(x, formats.E2M1)
+    np.testing.assert_array_equal(out, x)
+
+
+def test_qdq_idempotent():
+    # Quantizing an already-quantized tensor must be a fixed point.
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(128,)).astype(np.float32)
+    q1 = formats.quant_dequant_np(x, formats.E2M1)
+    q2 = formats.quant_dequant_np(q1, formats.E2M1)
+    np.testing.assert_allclose(q1, q2, rtol=1e-6)
+
+
+def test_vectorwise_beats_tensorwise_mse_with_outlier():
+    """The Fig. 6d mechanism: one hot row blows up tensor-wise scaling."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(64, 64)).astype(np.float32)
+    x[0] *= 100.0  # outlier row
+    tw = formats.quant_dequant_np(x, formats.E2M1, axis=None)
+    vw = formats.quant_dequant_np(x, formats.E2M1, axis=1)
+    assert np.mean((vw - x) ** 2) < np.mean((tw - x) ** 2)

@@ -1,0 +1,123 @@
+"""Model-level tests: shapes, causality, probes, param accounting."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.precision import get_policy
+
+CFG = M.PRESETS["nano"]
+
+
+def _params(seed=0):
+    return M.init_params(CFG, jnp.int32(seed))
+
+
+def _toks(seed=0, batch=None, seq=None):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.integers(0, CFG.vocab, (batch or CFG.batch, seq or CFG.seq_len)),
+        jnp.int32,
+    )
+
+
+def test_param_specs_cover_init_exactly():
+    p = _params()
+    specs = M.param_specs(CFG)
+    assert set(p) == set(specs)
+    for k, shape in specs.items():
+        assert p[k].shape == shape, k
+
+
+def test_param_count_formula_matches_tensors():
+    p = _params()
+    total = sum(int(np.prod(v.shape)) for v in p.values())
+    assert total == CFG.param_count()
+
+
+def test_m100_preset_is_about_100m_params():
+    assert 80e6 <= M.PRESETS["m100"].param_count() <= 130e6
+
+
+def test_forward_shapes():
+    logits = M.forward(CFG, get_policy("bf16"), _params(), _toks())
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+
+
+def test_initial_loss_near_uniform():
+    for pol in ("bf16", "fp4"):
+        loss = float(M.loss_fn(CFG, get_policy(pol), _params(), _toks()))
+        assert abs(loss - np.log(CFG.vocab)) < 0.5, (pol, loss)
+
+
+def test_causality():
+    """Changing future tokens must not change past logits."""
+    pol = get_policy("bf16")
+    p = _params()
+    t1 = _toks(1)
+    t2 = np.asarray(t1).copy()
+    t2[:, -1] = (t2[:, -1] + 7) % CFG.vocab
+    l1 = np.asarray(M.forward(CFG, pol, p, t1))
+    l2 = np.asarray(M.forward(CFG, pol, p, jnp.asarray(t2)))
+    np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], atol=1e-5)
+    assert np.abs(l1[:, -1] - l2[:, -1]).max() > 1e-4
+
+
+def test_scan_equals_unrolled_forward():
+    """The probe (unrolled) path and the scan path are the same network."""
+    pol = get_policy("fp4")
+    p = _params()
+    t = _toks(2)
+    l_scan = np.asarray(M.forward(CFG, pol, p, t))
+    l_unroll, probes = M.forward(CFG, pol, p, t, return_probes=True)
+    np.testing.assert_allclose(l_scan, np.asarray(l_unroll), atol=2e-4)
+    assert set(probes) == {
+        "layer0_output", "layer0_mlp_norm_out", "layer0_swiglu_act",
+        "final_hidden",
+    }
+
+
+def test_quantized_forward_differs_from_bf16_but_is_close():
+    p = _params()
+    t = _toks(3)
+    lb = np.asarray(M.forward(CFG, get_policy("bf16"), p, t))
+    lq = np.asarray(M.forward(CFG, get_policy("fp4"), p, t))
+    diff = np.abs(lb - lq).max()
+    assert diff > 1e-6  # quantization must actually do something
+    assert diff < 2.0  # ...but not destroy the network at init
+
+
+def test_grad_flows_to_all_params():
+    pol = get_policy("fp4")
+    t = _toks(4)
+    g = jax.grad(lambda p: M.loss_fn(CFG, pol, p, t))(_params())
+    for k, v in g.items():
+        assert float(jnp.abs(v).max()) > 0.0, f"zero grad for {k}"
+
+
+def test_token_nll_matches_loss():
+    pol = get_policy("bf16")
+    p = _params()
+    t = _toks(5)
+    nll = np.asarray(M.token_nll(CFG, pol, p, t))
+    assert nll.shape == (CFG.batch,)
+    mean_from_nll = nll.sum() / (CFG.batch * (CFG.seq_len - 1))
+    loss = float(M.loss_fn(CFG, pol, p, t))
+    assert abs(mean_from_nll - loss) < 1e-4
+
+
+def test_last_logits_matches_forward():
+    pol = get_policy("bf16")
+    p = _params()
+    t = _toks(6)
+    ll = np.asarray(M.last_logits(CFG, pol, p, t))
+    full = np.asarray(M.forward(CFG, pol, p, t))
+    np.testing.assert_allclose(ll, full[:, -1], atol=1e-5)
+
+
+@pytest.mark.parametrize("preset", list(M.PRESETS))
+def test_all_presets_head_dim_even(preset):
+    # RoPE needs an even head_dim.
+    assert M.PRESETS[preset].head_dim % 2 == 0

@@ -1,0 +1,123 @@
+"""Mixed-precision AdamW and the warmup-cosine schedule (§4.1)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import optimizer as O
+
+
+def _oc(total=1000):
+    return O.OptConfig(total_steps=total)
+
+
+def test_lr_warmup_is_linear():
+    oc = _oc(1000)  # warmup = 50 steps
+    lrs = [float(O.lr_at(oc, jnp.float32(s))) for s in range(50)]
+    diffs = np.diff(lrs)
+    np.testing.assert_allclose(diffs, diffs[0], rtol=1e-4)
+    assert abs(lrs[-1] - oc.peak_lr) < 1e-9
+
+
+def test_lr_decays_to_ten_percent_of_peak():
+    oc = _oc(1000)
+    end = float(O.lr_at(oc, jnp.float32(999)))
+    assert abs(end - 0.1 * oc.peak_lr) < 0.02 * oc.peak_lr
+
+
+def test_lr_peak_at_end_of_warmup():
+    oc = _oc(2000)
+    peak = max(float(O.lr_at(oc, jnp.float32(s))) for s in range(0, 2000, 10))
+    assert peak <= oc.peak_lr + 1e-9
+    assert peak >= 0.99 * oc.peak_lr
+
+
+def _rand_tree(seed, shape=(32, 16)):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=shape).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=shape[1:]).astype(np.float32)),
+    }
+
+
+def test_adam_matches_reference_full_precision():
+    """Against a hand-rolled numpy AdamW (decoupled decay, bias corr.)."""
+    oc = _oc(100)
+    params = _rand_tree(0)
+    grads = _rand_tree(1)
+    m, v = O.init_state(params)
+    p2, m2, v2, lr, gnorm = O.apply_updates(
+        params, grads, m, v, jnp.float32(0), oc, False)
+
+    gn = np.sqrt(sum(np.sum(np.asarray(g) ** 2) for g in grads.values()))
+    clip = min(1.0, oc.grad_clip / gn)
+    for k in params:
+        g = np.asarray(grads[k]) * clip
+        mm = (1 - oc.beta1) * g
+        vv = (1 - oc.beta2) * g * g
+        mh = mm / (1 - oc.beta1)
+        vh = vv / (1 - oc.beta2)
+        wd = oc.weight_decay if np.asarray(params[k]).ndim > 1 else 0.0
+        want = np.asarray(params[k]) - float(lr) * (
+            mh / (np.sqrt(vh) + oc.eps) + wd * np.asarray(params[k]))
+        np.testing.assert_allclose(np.asarray(p2[k]), want, rtol=1e-5,
+                                   atol=1e-7)
+
+
+def test_grad_clipping_engages():
+    oc = _oc(100)
+    params = _rand_tree(2)
+    grads = {k: v * 1e3 for k, v in _rand_tree(3).items()}
+    m, v = O.init_state(params)
+    _, _, _, _, gnorm = O.apply_updates(params, grads, m, v,
+                                        jnp.float32(0), oc, False)
+    assert float(gnorm) > oc.grad_clip  # raw norm reported
+
+
+def test_low_precision_moments_are_quantized():
+    oc = _oc(100)
+    params = _rand_tree(4)
+    grads = _rand_tree(5)
+    m, v = O.init_state(params)
+    _, m_lp, v_lp = O.apply_updates(params, grads, m, v, jnp.float32(0),
+                                    oc, True)[:3]
+    _, m_fp, v_fp = O.apply_updates(params, grads, m, v, jnp.float32(0),
+                                    oc, False)[:3]
+    # quantized state differs from full precision but is close
+    dm = np.abs(np.asarray(m_lp["w"]) - np.asarray(m_fp["w"])).max()
+    rel = dm / np.abs(np.asarray(m_fp["w"])).max()
+    assert 0 < rel < 0.1
+
+
+def test_second_moment_survives_tiny_gradients():
+    """Regression: v ~ grad^2 ~ 1e-10 must not flush to zero in FP16
+    storage (the scaled-qdq fix; unscaled fp16 would zero it and blow up
+    the next update)."""
+    oc = _oc(100)
+    params = {"w": jnp.ones((8, 8), jnp.float32)}
+    grads = {"w": jnp.full((8, 8), 1e-5, jnp.float32)}
+    m, v = O.init_state(params)
+    _, _, v2 = O.apply_updates(params, grads, m, v, jnp.float32(0),
+                               oc, True)[:3]
+    assert float(jnp.abs(v2["w"]).min()) > 0.0
+
+
+def test_update_trajectory_low_precision_tracks_full_precision():
+    """20 steps on a quadratic: the FP8/FP16-state run must stay close to
+    the full-precision run (the paper's Fig. 5 premise at optimizer level)."""
+    oc = O.OptConfig(total_steps=20, weight_decay=0.0)
+    target = jnp.asarray(np.random.default_rng(6).normal(size=(16, 16)),
+                         jnp.float32)
+
+    def run(lp):
+        params = {"w": jnp.zeros((16, 16), jnp.float32)}
+        m, v = O.init_state(params)
+        for s in range(20):
+            g = {"w": params["w"] - target}
+            params, m, v, _, _ = O.apply_updates(
+                params, g, m, v, jnp.float32(s), oc, lp)
+        return np.asarray(params["w"])
+
+    w_lp, w_fp = run(True), run(False)
+    denom = np.abs(w_fp).max()
+    assert np.abs(w_lp - w_fp).max() / denom < 0.2

@@ -1,0 +1,105 @@
+"""Precision-policy registry: every experiment arm of the paper exists,
+is internally consistent, and actually changes the compute it claims to."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import formats
+from compile.kernels import ref
+from compile.kernels.occ import quant_act
+from compile.model import quant_weight
+from compile.precision import POLICIES, get_policy, TENSOR, VECTOR
+
+
+PAPER_ARMS = [
+    # fig 1 / 5 / 6a
+    "bf16", "fp8", "fp4_direct", "fp4",
+    # fig 6b (DGE, W4A8)
+    "w4a8_ste", "w4a8_dge_k3", "w4a8_dge_k5", "w4a8_dge_k10",
+    # fig 6c (OCC, W8A4)
+    "w8a4_direct", "w8a4_occ_a999", "w8a4_occ_a99", "w8a4_occ_a97",
+    # fig 6d (granularity)
+    "fp4_tensorwise", "fp4_act_tensorwise", "fp4_weight_tensorwise",
+]
+
+
+@pytest.mark.parametrize("name", PAPER_ARMS)
+def test_every_paper_arm_exists(name):
+    get_policy(name)
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(KeyError):
+        get_policy("fp3_wishful")
+
+
+def test_the_papers_hyperparameters():
+    """§4.1: k=5 and alpha=0.99 for the headline FP4 method."""
+    p = get_policy("fp4")
+    assert p.dge_k == 5.0
+    assert p.occ_alpha == 0.99
+    assert p.occ_compensate
+    assert p.weight_bits == 4 and p.act_bits == 4
+    assert p.weight_granularity == VECTOR and p.act_granularity == VECTOR
+    assert p.dge_clip == 3.0  # §3.1 cap
+
+
+def test_direct_cast_has_no_mitigations():
+    p = get_policy("fp4_direct")
+    assert p.dge_k is None and p.occ_alpha is None
+
+
+def test_granularity_arms_differ_only_in_granularity():
+    base = get_policy("fp4")
+    tw = get_policy("fp4_tensorwise")
+    assert tw.weight_granularity == TENSOR and tw.act_granularity == TENSOR
+    assert (tw.dge_k, tw.occ_alpha) == (base.dge_k, base.occ_alpha)
+    at = get_policy("fp4_act_tensorwise")
+    assert at.act_granularity == TENSOR and at.weight_granularity == VECTOR
+
+
+def test_w4a8_arms_quantize_only_weights_to_4bit():
+    for name in ["w4a8_ste", "w4a8_dge_k5"]:
+        p = get_policy(name)
+        assert p.weight_bits == 4 and p.act_bits == 8
+
+
+def test_policy_changes_compute_weights():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    out_bf16 = quant_weight(w, get_policy("bf16"))
+    out_fp4 = quant_weight(w, get_policy("fp4"))
+    out_fp8 = quant_weight(w, get_policy("fp8"))
+    np.testing.assert_array_equal(np.asarray(out_bf16), np.asarray(w))
+    assert np.abs(np.asarray(out_fp4) - np.asarray(w)).max() > 1e-4
+    # fp8 is strictly finer than fp4
+    e4 = np.abs(np.asarray(out_fp4) - np.asarray(w)).mean()
+    e8 = np.abs(np.asarray(out_fp8) - np.asarray(w)).mean()
+    assert e8 < e4
+
+
+def test_alternative_fp4_formats_use_their_grid():
+    """Weight path (no OCC residual) must land exactly on the format's
+    grid after undoing the channel-wise scale."""
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+    for name, fmt in [("fp4_e1m2", formats.E1M2), ("fp4_e3m0", formats.E3M0)]:
+        p = get_policy(name)
+        q = np.asarray(quant_weight(w, p))
+        gamma = np.asarray(ref.absmax_scale(w, fmt, axis=0))  # channel-wise
+        scaled = q * gamma
+        grid = np.asarray(fmt.values, np.float32)
+        dist = np.min(np.abs(scaled[..., None] - grid), axis=-1)
+        assert dist.max() < 1e-5, name
+
+
+def test_registry_is_frozen_dataclasses():
+    for p in POLICIES.values():
+        with pytest.raises(Exception):
+            p.weight_bits = 2  # type: ignore[misc]
+
+
+def test_registry_names_match_keys():
+    for key, p in POLICIES.items():
+        assert key == p.name

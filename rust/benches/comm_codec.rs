@@ -1,0 +1,77 @@
+//! Bench: the dp-sim gradient wire codec — FP8 encode/decode + averaging
+//! vs a plain f32 all-reduce (memcpy-bound baseline).
+
+use fp4train::formats::fp8::{pack_fp8, unpack_fp8, E4M3};
+use fp4train::util::Rng;
+
+fn timed<F: FnMut() -> usize>(mut f: F) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..5 {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let n = 1 << 22; // one 16 MiB gradient tensor
+    let grads: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(n, 1e-3)).collect();
+    let mb = (n * 4) as f64 / 1e6;
+
+    // fp8 wire: encode 4 workers, decode + average
+    let t = timed(|| {
+        let mut acc = vec![0.0f32; n];
+        let mut wire = 0usize;
+        for g in &grads {
+            let p = pack_fp8(g, E4M3);
+            wire += p.data.len();
+            let d = unpack_fp8(&p);
+            for (a, v) in acc.iter_mut().zip(&d) {
+                *a += v / 4.0;
+            }
+        }
+        wire + acc.len()
+    });
+    println!(
+        "fp8 all-reduce (4 workers, 16MB each): {:>8.2} ms  ({:.0} MB/s per stream)",
+        t * 1e3,
+        4.0 * mb / t
+    );
+
+    // f32 baseline: straight averaging
+    let t32 = timed(|| {
+        let mut acc = vec![0.0f32; n];
+        for g in &grads {
+            for (a, v) in acc.iter_mut().zip(g) {
+                *a += v / 4.0;
+            }
+        }
+        acc.len()
+    });
+    println!(
+        "f32 all-reduce (4 workers, 16MB each): {:>8.2} ms  ({:.0} MB/s per stream)",
+        t32 * 1e3,
+        4.0 * mb / t32
+    );
+    println!(
+        "fp8 wire bytes per worker: {} ({}x smaller than f32)",
+        n + 4,
+        (n * 4) / (n + 4)
+    );
+
+    // accumulated rounding error of the fp8 path
+    let mut acc8 = vec![0.0f32; n];
+    let mut acc32 = vec![0.0f32; n];
+    for g in &grads {
+        let d = unpack_fp8(&pack_fp8(g, E4M3));
+        for i in 0..n {
+            acc8[i] += d[i] / 4.0;
+            acc32[i] += g[i] / 4.0;
+        }
+    }
+    let sim = fp4train::quant::cosine_sim(&acc32, &acc8);
+    println!("fp8-averaged gradient cosine sim vs f32: {sim:.6}");
+}

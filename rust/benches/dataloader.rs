@@ -1,0 +1,51 @@
+//! Bench: corpus generation + batch pipeline throughput (L3 must never be
+//! the training bottleneck — target: ≥100x the model's token consumption).
+
+use fp4train::data::corpus::{Corpus, CorpusKind};
+use fp4train::data::loader::{BatchLoader, LoaderConfig, Sampler};
+
+fn main() {
+    // corpus generation rates
+    for kind in CorpusKind::ALL {
+        let t0 = std::time::Instant::now();
+        let c = Corpus::generate(kind, 0, 8_000_000, 0);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "corpus {:<8} {:>8.1} MB/s generation",
+            kind.name(),
+            c.train.len() as f64 / dt / 1e6
+        );
+    }
+
+    let c = Corpus::generate(CorpusKind::Mix, 0, 8_000_000, 0);
+
+    // synchronous sampling
+    let mut s = Sampler::new(&c, LoaderConfig { batch: 8, seq_len: 128, ..Default::default() });
+    let t0 = std::time::Instant::now();
+    let n = 20_000;
+    for _ in 0..n {
+        std::hint::black_box(s.next_batch());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "sampler  sync     {:>8.2} Mtok/s ({:.0} batches/s)",
+        (n * 8 * 128) as f64 / dt / 1e6,
+        n as f64 / dt
+    );
+
+    // prefetching loader (consumer-side view)
+    let loader = BatchLoader::new(
+        &c,
+        LoaderConfig { batch: 8, seq_len: 128, prefetch: 16, ..Default::default() },
+    );
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        std::hint::black_box(loader.next());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "loader   prefetch {:>8.2} Mtok/s ({:.0} batches/s)",
+        (n * 8 * 128) as f64 / dt / 1e6,
+        n as f64 / dt
+    );
+}

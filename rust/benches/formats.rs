@@ -1,0 +1,56 @@
+//! Bench: FP4/FP8/FP16 codec hot loops (plain timing harness — criterion
+//! is unavailable offline; methodology: warm-up + best-of-5 timed reps).
+
+use fp4train::formats::{self, fp16, fp8, Fp4Kind};
+use fp4train::util::Rng;
+
+fn bench<F: FnMut() -> usize>(name: &str, bytes_per_iter: usize, mut f: F) {
+    f(); // warm-up
+    let mut best = f64::INFINITY;
+    for _ in 0..5 {
+        let t0 = std::time::Instant::now();
+        let sink = f();
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(sink);
+        best = best.min(dt);
+    }
+    println!(
+        "{name:<44} {:>9.2} ms   {:>9.1} MB/s",
+        best * 1e3,
+        bytes_per_iter as f64 / best / 1e6
+    );
+}
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let n = 1 << 22; // 4M elements, 16 MiB f32
+    let xs = rng.normal_vec(n, 2.0);
+    let bytes = n * 4;
+
+    bench("fp4 e2m1 lut_round", bytes, || {
+        let mut acc = 0usize;
+        for &x in &xs {
+            acc = acc.wrapping_add(Fp4Kind::E2M1.lut_round(x) as usize);
+        }
+        acc
+    });
+    bench("fp4 e2m1 qdq_tensor", bytes, || {
+        formats::qdq_tensor(&xs, Fp4Kind::E2M1).len()
+    });
+    bench("fp4 e2m1 qdq_vector row (4096x1024)", bytes, || {
+        formats::qdq_vector(&xs, 4096, 1024, Fp4Kind::E2M1, formats::Granularity::Row).len()
+    });
+    bench("fp4 pack (4-bit wire)", bytes, || {
+        formats::pack_fp4(&xs, Fp4Kind::E2M1).data.len()
+    });
+    let packed4 = formats::pack_fp4(&xs, Fp4Kind::E2M1);
+    bench("fp4 unpack", bytes, || formats::unpack_fp4(&packed4).len());
+
+    bench("fp8 e4m3 encode", bytes, || {
+        fp8::pack_fp8(&xs, fp8::E4M3).data.len()
+    });
+    let packed8 = fp8::pack_fp8(&xs, fp8::E4M3);
+    bench("fp8 e4m3 decode", bytes, || fp8::unpack_fp8(&packed8).len());
+
+    bench("fp16 scaled qdq", bytes, || fp16::qdq_f16_scaled(&xs).len());
+}

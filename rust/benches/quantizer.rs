@@ -1,0 +1,39 @@
+//! Bench: quantization-quality pipeline (clamping, quantiles, metrics) —
+//! the offline-analysis hot path behind `repro tab1`/`fig4`/`dists`.
+
+use fp4train::formats::Fp4Kind;
+use fp4train::quant::{self, occ};
+use fp4train::util::Rng;
+
+fn bench<F: FnMut() -> f64>(name: &str, mut f: F) {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..5 {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    println!("{name:<44} {:>9.2} ms", best * 1e3);
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let rows = 1024;
+    let cols = 1024;
+    let xs = rng.normal_vec(rows * cols, 1.5);
+
+    bench("quantile (sort-based, 1M)", || occ::quantile(&xs, 0.99) as f64);
+    bench("clamp_tensor alpha=.99 (1M)", || {
+        occ::clamp_tensor(&xs, 0.99).0.len() as f64
+    });
+    bench("residual_sparsity (1M)", || occ::residual_sparsity(&xs, 0.99));
+    bench("table1_arm clamp+comp (1M)", || {
+        quant::table1_arm(&xs, rows, cols, Some(0.99), true, Fp4Kind::E2M1).0.snr_db
+    });
+    let q = fp4train::formats::qdq_tensor(&xs, Fp4Kind::E2M1);
+    bench("cosine_sim (1M)", || quant::cosine_sim(&xs, &q));
+    bench("mse+snr (1M)", || quant::snr_db(&xs, &q));
+    bench("dge_prime series (120k)", || {
+        fp4train::quant::dge::fig3_series(Fp4Kind::E2M1, 5.0, 3.0, 120_001).len() as f64
+    });
+}

@@ -1,0 +1,72 @@
+//! Bench: end-to-end train-step latency through PJRT per preset/policy,
+//! single-step vs burst (the §Perf headline numbers). Needs artifacts.
+
+use std::sync::Arc;
+
+use fp4train::coordinator::Trainer;
+use fp4train::data::corpus::{Corpus, CorpusKind};
+use fp4train::data::loader::{BatchLoader, LoaderConfig};
+use fp4train::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        println!("skipping step_latency bench: run `make artifacts` first");
+        return Ok(());
+    }
+    let engine = Arc::new(Engine::load(&dir)?);
+    let corpus = Corpus::generate(CorpusKind::Mix, 7, 1_000_000, 0);
+
+    let mut combos: Vec<(String, String)> = Vec::new();
+    for key in engine.manifest.configs.keys() {
+        let (preset, policy) = key.split_once('/').unwrap();
+        if ["nano", "micro"].contains(&preset)
+            && ["bf16", "fp4", "fp4_direct", "fp8"].contains(&policy)
+        {
+            combos.push((preset.to_string(), policy.to_string()));
+        }
+    }
+
+    println!(
+        "{:<22} {:>14} {:>14} {:>10}",
+        "config", "single ms/step", "burst ms/step", "tok/s"
+    );
+    for (preset, policy) in combos {
+        let entry = engine.manifest.config(&preset, &policy)?.clone();
+        let model = entry.model.clone();
+        let loader = BatchLoader::new(
+            &corpus,
+            LoaderConfig { batch: model.batch, seq_len: model.seq_len, ..Default::default() },
+        );
+        let single_ms = if entry.step("train").is_ok() {
+            let mut tr = Trainer::new(engine.clone(), &preset, &policy, 0)?;
+            tr.force_single_step = true;
+            tr.run(&loader, 2)?;
+            let t0 = std::time::Instant::now();
+            tr.run(&loader, 8)?;
+            Some(t0.elapsed().as_secs_f64() * 1e3 / 8.0)
+        } else {
+            None
+        };
+        let burst_ms = if entry.train_step().map(|(_, b)| b).unwrap_or(false) {
+            let mut tr = Trainer::new(engine.clone(), &preset, &policy, 0)?;
+            let k = entry.train_step().unwrap().0.burst_k;
+            tr.run(&loader, k)?;
+            let t0 = std::time::Instant::now();
+            tr.run(&loader, 2 * k)?;
+            Some(t0.elapsed().as_secs_f64() * 1e3 / (2 * k) as f64)
+        } else {
+            None
+        };
+        let best = burst_ms.or(single_ms).unwrap_or(f64::NAN);
+        let tok_s = (model.batch * model.seq_len) as f64 / (best / 1e3);
+        println!(
+            "{:<22} {:>14} {:>14} {:>10.0}",
+            format!("{preset}/{policy}"),
+            single_ms.map(|v| format!("{v:.1}")).unwrap_or_else(|| "-".into()),
+            burst_ms.map(|v| format!("{v:.1}")).unwrap_or_else(|| "-".into()),
+            tok_s
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Minimal CLI argument parsing (the image has no `clap` offline).
+//!
+//! Grammar: `fp4train <command> [positional...] [-o key=value]... [--flag]`
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub overrides: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> anyhow::Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter();
+        out.command = it.next().unwrap_or_else(|| "help".to_string());
+        while let Some(a) = it.next() {
+            if a == "-o" {
+                let kv = it.next().ok_or_else(|| anyhow::anyhow!("-o needs key=value"))?;
+                let (k, v) =
+                    kv.split_once('=').ok_or_else(|| anyhow::anyhow!("-o needs key=value"))?;
+                out.overrides.insert(k.to_string(), v.to_string());
+            } else if let Some(flag) = a.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.overrides.insert(k.to_string(), v.to_string());
+                } else {
+                    out.flags.push(flag.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.overrides.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_positionals() {
+        let a = parse("repro fig5");
+        assert_eq!(a.command, "repro");
+        assert_eq!(a.positional, vec!["fig5"]);
+    }
+
+    #[test]
+    fn parses_overrides_and_flags() {
+        let a = parse("train -o preset=small --steps=200 --fresh");
+        assert_eq!(a.get("preset"), Some("small"));
+        assert_eq!(a.get("steps"), Some("200"));
+        assert!(a.flag("fresh"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 200);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let a = Args::parse(std::iter::empty()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

@@ -1,0 +1,79 @@
+//! Run configuration: what the CLI / examples feed the coordinator.
+//!
+//! Model geometry and precision policy live in the artifact manifest (the
+//! single source of truth, written at lowering time); this module only
+//! configures the *run*: which artifacts, how many steps, which corpus,
+//! where outputs go.
+
+use std::path::PathBuf;
+
+use crate::data::corpus::CorpusKind;
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub artifacts_dir: PathBuf,
+    pub preset: String,
+    pub policy: String,
+    pub steps: usize,
+    pub seed: i32,
+    pub corpus: CorpusKind,
+    pub corpus_len: usize,
+    pub heldout_len: usize,
+    pub eval_every: usize,
+    pub out_dir: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            preset: "nano".into(),
+            policy: "fp4".into(),
+            steps: 100,
+            seed: 0,
+            corpus: CorpusKind::Mix,
+            corpus_len: 2_000_000,
+            heldout_len: 64 * 1024,
+            eval_every: 50,
+            out_dir: PathBuf::from("runs"),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply `key=value` overrides (the CLI's `-o key=value` flags).
+    pub fn set(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        match key {
+            "artifacts" => self.artifacts_dir = value.into(),
+            "preset" => self.preset = value.into(),
+            "policy" => self.policy = value.into(),
+            "steps" => self.steps = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "corpus" => self.corpus = CorpusKind::from_name(value)?,
+            "corpus_len" => self.corpus_len = value.parse()?,
+            "heldout_len" => self.heldout_len = value.parse()?,
+            "eval_every" => self.eval_every = value.parse()?,
+            "out" => self.out_dir = value.into(),
+            other => anyhow::bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_parse() {
+        let mut c = RunConfig::default();
+        c.set("preset", "small").unwrap();
+        c.set("steps", "400").unwrap();
+        c.set("corpus", "markov").unwrap();
+        assert_eq!(c.preset, "small");
+        assert_eq!(c.steps, 400);
+        assert_eq!(c.corpus, CorpusKind::Markov);
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("steps", "xyz").is_err());
+    }
+}

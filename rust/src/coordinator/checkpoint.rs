@@ -1,0 +1,191 @@
+//! Self-contained binary checkpoints for trainer state.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic  b"FP4TCKPT"          8 bytes
+//! version u32                 (1)
+//! step    u64
+//! count   u32                 number of tensors
+//! per tensor:
+//!   name_len u16, name bytes (utf-8)
+//!   ndims    u8,  dims u64 × ndims
+//!   data     f32 × prod(dims)
+//! ```
+//! Tensor names come from the manifest IO descriptors, so a checkpoint
+//! written by one process can re-seed a Trainer in another (restore
+//! validates name/shape agreement).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::runtime::{Engine, IoDesc};
+
+const MAGIC: &[u8; 8] = b"FP4TCKPT";
+
+pub struct Checkpoint {
+    pub step: u64,
+    pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+pub fn save(
+    path: impl AsRef<Path>,
+    step: u64,
+    ios: &[IoDesc],
+    literals: &[Literal],
+) -> Result<()> {
+    if ios.len() != literals.len() {
+        bail!("checkpoint arity mismatch: {} ios vs {} tensors", ios.len(), literals.len());
+    }
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&1u32.to_le_bytes())?;
+    f.write_all(&step.to_le_bytes())?;
+    f.write_all(&(ios.len() as u32).to_le_bytes())?;
+    for (io, lit) in ios.iter().zip(literals) {
+        let name = io.name.as_bytes();
+        f.write_all(&(name.len() as u16).to_le_bytes())?;
+        f.write_all(name)?;
+        f.write_all(&[io.shape.len() as u8])?;
+        for &d in &io.shape {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        let data = Engine::to_f32_vec(lit)?;
+        if data.len() != io.elements() {
+            bail!("{}: literal has {} elems, manifest says {}", io.name, data.len(), io.elements());
+        }
+        for v in data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(&path).with_context(|| format!("opening {:?}", path.as_ref()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a fp4train checkpoint");
+    }
+    let version = read_u32(&mut f)?;
+    if version != 1 {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let step = read_u64(&mut f)?;
+    let count = read_u32(&mut f)? as usize;
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u16(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let mut ndims = [0u8; 1];
+        f.read_exact(&mut ndims)?;
+        let mut shape = Vec::with_capacity(ndims[0] as usize);
+        for _ in 0..ndims[0] {
+            shape.push(read_u64(&mut f)? as usize);
+        }
+        let n: usize = shape.iter().product::<usize>().max(1);
+        let mut data = vec![0f32; n];
+        let mut buf = [0u8; 4];
+        for v in data.iter_mut() {
+            f.read_exact(&mut buf)?;
+            *v = f32::from_le_bytes(buf);
+        }
+        tensors.push((name, shape, data));
+    }
+    Ok(Checkpoint { step, tensors })
+}
+
+/// Rebuild literals in the order required by `ios`, validating shapes.
+pub fn to_literals(ckpt: &Checkpoint, ios: &[IoDesc]) -> Result<Vec<Literal>> {
+    let mut out = Vec::with_capacity(ios.len());
+    for io in ios {
+        let (_, shape, data) = ckpt
+            .tensors
+            .iter()
+            .find(|(n, _, _)| n == &io.name)
+            .with_context(|| format!("checkpoint missing tensor {:?}", io.name))?;
+        if shape != &io.shape {
+            bail!("{}: checkpoint shape {:?} != manifest {:?}", io.name, shape, io.shape);
+        }
+        out.push(Engine::f32_literal(io, data)?);
+    }
+    Ok(out)
+}
+
+fn read_u16(f: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    f.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Dtype;
+
+    fn io(name: &str, shape: Vec<usize>) -> IoDesc {
+        IoDesc { name: name.into(), dtype: Dtype::F32, shape, role: "param".into() }
+    }
+
+    #[test]
+    fn round_trip() {
+        let dir = std::env::temp_dir().join("fp4train_ckpt_test");
+        let path = dir.join("t.ckpt");
+        let ios = vec![io("a", vec![2, 3]), io("b", vec![4])];
+        let lits = vec![
+            Engine::f32_literal(&ios[0], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap(),
+            Engine::f32_literal(&ios[1], &[-1.0, 0.5, 0.0, 9.25]).unwrap(),
+        ];
+        save(&path, 42, &ios, &lits).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.step, 42);
+        assert_eq!(ck.tensors.len(), 2);
+        assert_eq!(ck.tensors[0].2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let back = to_literals(&ck, &ios).unwrap();
+        assert_eq!(Engine::to_f32_vec(&back[1]).unwrap(), vec![-1.0, 0.5, 0.0, 9.25]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let dir = std::env::temp_dir().join("fp4train_ckpt_test2");
+        let path = dir.join("t.ckpt");
+        let ios = vec![io("a", vec![4])];
+        let lits = vec![Engine::f32_literal(&ios[0], &[1.0; 4]).unwrap()];
+        save(&path, 0, &ios, &lits).unwrap();
+        let ck = load(&path).unwrap();
+        let bad = vec![io("a", vec![2, 2])];
+        assert!(to_literals(&ck, &bad).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("fp4train_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,18 @@
+//! Layer-3 coordinator: the training orchestrator.
+//!
+//! * [`trainer`] — single-process training loop over the fused `train` /
+//!   `burst` artifacts with background batch prefetch, periodic held-out
+//!   eval, CSV metrics and checkpointing.
+//! * [`dp`] — simulated data-parallel training over the `grad` + `apply`
+//!   artifacts: N workers with disjoint shards, per-worker gradients
+//!   byte-encoded to real FP8 (E4M3 + per-tensor scale) before the
+//!   all-reduce (the paper adopts FP8-LM's FP8 gradient communication,
+//!   §4.1), with measured wire bytes.
+//! * [`checkpoint`] — self-contained binary tensor snapshots.
+
+pub mod checkpoint;
+pub mod dp;
+pub mod trainer;
+
+pub use dp::DpSim;
+pub use trainer::{TrainRecord, Trainer};

@@ -1,0 +1,185 @@
+//! Single-process trainer over the fused AOT train/burst artifacts.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::data::loader::{Batch, BatchLoader};
+use crate::runtime::{ConfigEntry, Engine, StepSpec};
+use crate::util::Csv;
+
+/// One logged training step.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub gnorm: f32,
+}
+
+/// Training orchestrator for one (preset, policy) artifact config.
+///
+/// Holds the full optimizer state (params + Adam moments) as host
+/// literals between executions. The burst artifact keeps the state on
+/// device for `burst_k` consecutive optimizer steps per execution, paying
+/// the host round-trip once per K steps instead of every step
+/// (EXPERIMENTS.md §Perf quantifies the win over single-stepping).
+pub struct Trainer {
+    engine: Arc<Engine>,
+    pub entry: ConfigEntry,
+    state: Vec<Literal>, // params..., m..., v... (3n tensors)
+    pub step: usize,
+    pub history: Vec<TrainRecord>,
+    /// force single-step execution even if a burst artifact exists
+    pub force_single_step: bool,
+}
+
+impl Trainer {
+    /// Initialize optimizer state from the `init` artifact with a seed.
+    pub fn new(engine: Arc<Engine>, preset: &str, policy: &str, seed: i32) -> Result<Self> {
+        let entry = engine.manifest.config(preset, policy)?.clone();
+        let init = entry.step("init")?;
+        let state = engine.run(init, &[Literal::scalar(seed)])?;
+        Ok(Self {
+            engine,
+            entry,
+            state,
+            step: 0,
+            history: Vec::new(),
+            force_single_step: false,
+        })
+    }
+
+    /// Number of parameter tensors (state is 3n: params, m, v).
+    pub fn n_params(&self) -> usize {
+        self.state.len() / 3
+    }
+
+    pub fn params(&self) -> &[Literal] {
+        &self.state[..self.n_params()]
+    }
+
+    pub fn state(&self) -> &[Literal] {
+        &self.state
+    }
+
+    pub fn replace_state(&mut self, state: Vec<Literal>) -> Result<()> {
+        if state.len() != self.state.len() {
+            bail!("state arity mismatch: {} vs {}", state.len(), self.state.len());
+        }
+        self.state = state;
+        Ok(())
+    }
+
+    /// Run `steps` optimizer steps. Prefers the burst artifact unless
+    /// `force_single_step` is set; `steps` not divisible by `burst_k`
+    /// rounds *up* to whole bursts (the LR schedule is step-indexed inside
+    /// the artifact, so extra steps are real training steps).
+    pub fn run(&mut self, loader: &BatchLoader, steps: usize) -> Result<Vec<TrainRecord>> {
+        let (spec, is_burst) =
+            self.entry.train_step().context("config has no train/burst artifact")?;
+        let spec = spec.clone();
+        let mut out = Vec::with_capacity(steps);
+        if is_burst && !self.force_single_step {
+            while out.len() < steps {
+                out.extend(self.burst_once(&spec, loader)?);
+            }
+        } else {
+            let single = if is_burst { self.entry.step("train")?.clone() } else { spec };
+            for _ in 0..steps {
+                let b = loader.next();
+                out.push(self.single_step(&single, &b)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// One fused fwd+bwd+Adam step.
+    pub fn single_step(&mut self, spec: &StepSpec, batch: &Batch) -> Result<TrainRecord> {
+        let n3 = self.state.len();
+        let tok_io = spec.inputs.last().context("train step has no tokens input")?;
+        let tokens = Engine::tokens_literal(tok_io, &batch.tokens)?;
+        let step_lit = Literal::scalar(self.step as f32);
+        let mut args: Vec<&Literal> = self.state.iter().collect();
+        args.push(&step_lit);
+        args.push(&tokens);
+        let mut outs = self.engine.run(spec, &args)?;
+        // outputs: state(3n), loss, gnorm, lr
+        let _lr = outs.pop().unwrap();
+        let gnorm = Engine::to_f32_scalar(&outs.pop().unwrap())?;
+        let loss = Engine::to_f32_scalar(&outs.pop().unwrap())?;
+        if outs.len() != n3 {
+            bail!("train step returned {} state tensors, expected {n3}", outs.len());
+        }
+        self.state = outs;
+        let rec = TrainRecord { step: self.step, loss, gnorm };
+        self.history.push(rec);
+        self.step += 1;
+        Ok(rec)
+    }
+
+    /// One K-step burst: state crosses the host boundary once.
+    fn burst_once(&mut self, spec: &StepSpec, loader: &BatchLoader) -> Result<Vec<TrainRecord>> {
+        let n3 = self.state.len();
+        let k = spec.burst_k.max(1);
+        let tok_io = spec.inputs.last().context("burst step has no tokens input")?;
+        let mut toks = Vec::with_capacity(tok_io.elements());
+        for _ in 0..k {
+            toks.extend(loader.next().tokens);
+        }
+        let tokens = Engine::tokens_literal(tok_io, &toks)?;
+        let step_lit = Literal::scalar(self.step as f32);
+        let mut args: Vec<&Literal> = self.state.iter().collect();
+        args.push(&step_lit);
+        args.push(&tokens);
+        let mut outs = self.engine.run(spec, &args)?;
+        let gnorms = Engine::to_f32_vec(&outs.pop().unwrap())?;
+        let losses = Engine::to_f32_vec(&outs.pop().unwrap())?;
+        if outs.len() != n3 {
+            bail!("burst returned {} state tensors, expected {n3}", outs.len());
+        }
+        self.state = outs;
+        let mut recs = Vec::with_capacity(k);
+        for (loss, gnorm) in losses.into_iter().zip(gnorms) {
+            let rec = TrainRecord { step: self.step, loss, gnorm };
+            self.history.push(rec);
+            recs.push(rec);
+            self.step += 1;
+        }
+        Ok(recs)
+    }
+
+    /// Mean NLL over held-out windows via the `eval` artifact.
+    pub fn eval_loss(&self, windows: &[Vec<i32>]) -> Result<f32> {
+        let spec = self.entry.step("eval")?.clone();
+        let tok_io = spec.inputs.last().unwrap();
+        let (b, s) = (tok_io.shape[0], tok_io.shape[1]);
+        let mut losses = Vec::new();
+        for chunk in windows.chunks(b) {
+            if chunk.len() < b {
+                break; // fixed-shape artifact: drop ragged tail
+            }
+            let mut toks = Vec::with_capacity(b * s);
+            for w in chunk {
+                anyhow::ensure!(w.len() == s, "eval window length {} != {s}", w.len());
+                toks.extend_from_slice(w);
+            }
+            let tokens = Engine::tokens_literal(tok_io, &toks)?;
+            let mut args: Vec<&Literal> = self.params().iter().collect();
+            args.push(&tokens);
+            let outs = self.engine.run(&spec, &args)?;
+            losses.push(Engine::to_f32_scalar(&outs[0])?);
+        }
+        anyhow::ensure!(!losses.is_empty(), "no full eval batches");
+        Ok((losses.iter().map(|&x| x as f64).sum::<f64>() / losses.len() as f64) as f32)
+    }
+
+    /// Write the loss history as CSV (step,loss,gnorm).
+    pub fn write_history_csv(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let mut csv = Csv::new(&["step", "loss", "gnorm"]);
+        for r in &self.history {
+            csv.rowf(&[r.step as f64, r.loss as f64, r.gnorm as f64]);
+        }
+        csv.write(path)
+    }
+}

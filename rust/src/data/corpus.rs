@@ -1,0 +1,252 @@
+//! Seeded synthetic corpora (the DCLM stand-in, DESIGN.md §4).
+//!
+//! Four families with different statistics, used both for pretraining and
+//! as the held-out suites behind the Table-2 (zero-shot) and Table-3
+//! (perplexity) analogs:
+//!
+//!  * `Zipf`   — unigram Zipf over a 64-symbol working set: tests that the
+//!    model learns marginal statistics (easiest).
+//!  * `Markov` — order-2 chain with a deterministic skeleton + noise:
+//!    tests short-range conditional structure.
+//!  * `Code`   — bracket-matched key=value blocks with indentation and a
+//!    small keyword inventory: long-range syntactic constraints.
+//!  * `Mix`    — interleaved spans of the above plus verbatim repetition
+//!    spans (induction-head food).
+
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CorpusKind {
+    Zipf,
+    Markov,
+    Code,
+    Mix,
+}
+
+impl CorpusKind {
+    pub const ALL: [CorpusKind; 4] =
+        [CorpusKind::Zipf, CorpusKind::Markov, CorpusKind::Code, CorpusKind::Mix];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CorpusKind::Zipf => "zipf",
+            CorpusKind::Markov => "markov",
+            CorpusKind::Code => "code",
+            CorpusKind::Mix => "mix",
+        }
+    }
+
+    pub fn from_name(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "zipf" => CorpusKind::Zipf,
+            "markov" => CorpusKind::Markov,
+            "code" => CorpusKind::Code,
+            "mix" => CorpusKind::Mix,
+            other => anyhow::bail!("unknown corpus {other:?}"),
+        })
+    }
+}
+
+/// A generated corpus with train / held-out splits.
+#[derive(Clone)]
+pub struct Corpus {
+    pub kind: CorpusKind,
+    pub train: Vec<u8>,
+    pub heldout: Vec<u8>,
+}
+
+impl Corpus {
+    /// Generate `train_len + heldout_len` bytes deterministically.
+    pub fn generate(kind: CorpusKind, seed: u64, train_len: usize, heldout_len: usize) -> Self {
+        let mut rng = Rng::new(seed ^ (kind as u64) << 32);
+        let data = gen_bytes(kind, &mut rng, train_len + heldout_len);
+        let (train, heldout) = data.split_at(train_len);
+        Corpus { kind, train: train.to_vec(), heldout: heldout.to_vec() }
+    }
+}
+
+fn gen_bytes(kind: CorpusKind, rng: &mut Rng, n: usize) -> Vec<u8> {
+    match kind {
+        CorpusKind::Zipf => gen_zipf(rng, n),
+        CorpusKind::Markov => gen_markov(rng, n),
+        CorpusKind::Code => gen_code(rng, n),
+        CorpusKind::Mix => gen_mix(rng, n),
+    }
+}
+
+/// Zipf(s=1.3) over bytes 32..96 with space separators.
+fn gen_zipf(rng: &mut Rng, n: usize) -> Vec<u8> {
+    let vocab = 64u64;
+    // precompute cdf of p(i) ∝ 1/(i+1)^1.3
+    let weights: Vec<f64> = (0..vocab).map(|i| 1.0 / ((i + 1) as f64).powf(1.3)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut cdf = Vec::with_capacity(vocab as usize);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w / total;
+        cdf.push(acc);
+    }
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let u = rng.unit_f32() as f64;
+        let idx = cdf.iter().position(|&c| u <= c).unwrap_or(vocab as usize - 1);
+        out.push(32 + idx as u8);
+        if rng.below(6) == 0 {
+            out.push(b' ');
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+/// Order-2 Markov chain over 96 symbols: deterministic skeleton
+/// next = 17*a + 31*b (mod 96) taken w.p. 0.8, else uniform noise.
+fn gen_markov(rng: &mut Rng, n: usize) -> Vec<u8> {
+    let span = 96u64;
+    let mut a = rng.below(span);
+    let mut b = rng.below(span);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let next = if rng.unit_f32() < 0.8 {
+            (17 * a + 31 * b + 7) % span
+        } else {
+            rng.below(span)
+        };
+        out.push((128 + next) as u8);
+        a = b;
+        b = next;
+    }
+    out
+}
+
+/// Bracket-matched key=value blocks:
+/// `name { key = val; key = val; ... }` with nesting and indentation.
+fn gen_code(rng: &mut Rng, n: usize) -> Vec<u8> {
+    const KEYWORDS: [&[u8]; 8] = [
+        b"let", b"fn", b"mod", b"use", b"pub", b"if", b"for", b"ret",
+    ];
+    let mut out = Vec::with_capacity(n + 64);
+    let mut depth: usize = 0;
+    while out.len() < n {
+        if depth > 0 && rng.below(4) == 0 {
+            depth -= 1;
+            out.extend(std::iter::repeat(b' ').take(2 * depth));
+            out.extend_from_slice(b"}\n");
+            continue;
+        }
+        out.extend(std::iter::repeat(b' ').take(2 * depth));
+        let kw = KEYWORDS[rng.below(KEYWORDS.len() as u64) as usize];
+        out.extend_from_slice(kw);
+        out.push(b' ');
+        // identifier: 3-6 lowercase letters, zipf-ish first letter
+        let id_len = 3 + rng.below(4) as usize;
+        for _ in 0..id_len {
+            out.push(b'a' + rng.below(16) as u8);
+        }
+        if depth < 3 && rng.below(3) == 0 {
+            out.extend_from_slice(b" {\n");
+            depth += 1;
+        } else {
+            out.extend_from_slice(b" = ");
+            let val = rng.below(1000);
+            out.extend_from_slice(val.to_string().as_bytes());
+            out.extend_from_slice(b";\n");
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+/// Interleaved spans of the other three + verbatim repeats of recent spans.
+fn gen_mix(rng: &mut Rng, n: usize) -> Vec<u8> {
+    let mut out: Vec<u8> = Vec::with_capacity(n + 256);
+    while out.len() < n {
+        let span = 64 + rng.below(129) as usize;
+        match rng.below(4) {
+            0 => out.extend(gen_zipf(rng, span)),
+            1 => out.extend(gen_markov(rng, span)),
+            2 => out.extend(gen_code(rng, span)),
+            _ => {
+                // repetition: copy a recent window verbatim
+                if out.len() > span + 1 {
+                    let start = out.len() - span - 1 - (rng.below(64) as usize).min(out.len() - span - 1);
+                    let copy: Vec<u8> = out[start..start + span].to_vec();
+                    out.extend(copy);
+                } else {
+                    out.extend(gen_zipf(rng, span));
+                }
+            }
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        for kind in CorpusKind::ALL {
+            let a = Corpus::generate(kind, 42, 1000, 100);
+            let b = Corpus::generate(kind, 42, 1000, 100);
+            assert_eq!(a.train, b.train, "{kind:?}");
+            assert_eq!(a.heldout, b.heldout);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = Corpus::generate(CorpusKind::Mix, 1, 1000, 0);
+        let b = Corpus::generate(CorpusKind::Mix, 2, 1000, 0);
+        assert_ne!(a.train, b.train);
+    }
+
+    #[test]
+    fn exact_lengths() {
+        let c = Corpus::generate(CorpusKind::Code, 7, 12345, 678);
+        assert_eq!(c.train.len(), 12345);
+        assert_eq!(c.heldout.len(), 678);
+    }
+
+    #[test]
+    fn markov_is_predictable() {
+        // the deterministic skeleton must dominate: measure how often
+        // next == 17a+31b+7 (mod 96)
+        let c = Corpus::generate(CorpusKind::Markov, 3, 50_000, 0);
+        let syms: Vec<u64> = c.train.iter().map(|&b| (b - 128) as u64).collect();
+        let hits = syms
+            .windows(3)
+            .filter(|w| w[2] == (17 * w[0] + 31 * w[1] + 7) % 96)
+            .count();
+        let rate = hits as f64 / (syms.len() - 2) as f64;
+        assert!(rate > 0.75, "skeleton rate {rate}");
+    }
+
+    #[test]
+    fn code_brackets_balance_approximately() {
+        let c = Corpus::generate(CorpusKind::Code, 5, 100_000, 0);
+        let open = c.train.iter().filter(|&&b| b == b'{').count() as i64;
+        let close = c.train.iter().filter(|&&b| b == b'}').count() as i64;
+        // truncation can leave a few unclosed blocks
+        assert!((open - close).abs() <= 8, "open={open} close={close}");
+        assert!(open > 100);
+    }
+
+    #[test]
+    fn zipf_head_dominates() {
+        let c = Corpus::generate(CorpusKind::Zipf, 9, 100_000, 0);
+        let top = c.train.iter().filter(|&&b| b == 32).count() as f64;
+        let rare = c.train.iter().filter(|&&b| b == 32 + 60).count() as f64;
+        assert!(top > 20.0 * (rare + 1.0));
+    }
+
+    #[test]
+    fn byte_ranges_stay_in_vocab() {
+        for kind in CorpusKind::ALL {
+            let c = Corpus::generate(kind, 11, 10_000, 0);
+            assert!(c.train.iter().all(|&b| b > 0), "{kind:?} has NULs");
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Batch pipeline: sharded random-window sampling with a background
+//! prefetch thread and a bounded channel (backpressure) so batch
+//! construction overlaps PJRT execution on the training path.
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::data::corpus::Corpus;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct LoaderConfig {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub seed: u64,
+    /// number of pre-built batches the channel may hold
+    pub prefetch: usize,
+    /// logical shard id / count: each shard samples a disjoint region,
+    /// the unit of data parallelism in the dp-sim coordinator.
+    pub shard: usize,
+    pub num_shards: usize,
+}
+
+impl Default for LoaderConfig {
+    fn default() -> Self {
+        Self { batch: 8, seq_len: 128, seed: 0, prefetch: 4, shard: 0, num_shards: 1 }
+    }
+}
+
+/// One training batch: row-major (batch × seq_len) i32 tokens.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+/// Synchronous sampler (used directly by evals and by the prefetcher).
+pub struct Sampler {
+    data: Vec<u8>,
+    cfg: LoaderConfig,
+    rng: Rng,
+    lo: usize,
+    hi: usize,
+}
+
+impl Sampler {
+    pub fn new(corpus: &Corpus, cfg: LoaderConfig) -> Self {
+        let n = corpus.train.len();
+        assert!(cfg.num_shards >= 1 && cfg.shard < cfg.num_shards);
+        let per = n / cfg.num_shards;
+        let lo = cfg.shard * per;
+        let hi = if cfg.shard + 1 == cfg.num_shards { n } else { lo + per };
+        assert!(
+            hi - lo > cfg.seq_len + 1,
+            "shard too small: {} bytes for seq_len {}",
+            hi - lo,
+            cfg.seq_len
+        );
+        let rng = Rng::new(cfg.seed ^ ((cfg.shard as u64) << 17));
+        Self { data: corpus.train.clone(), cfg, rng, lo, hi }
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let (b, s) = (self.cfg.batch, self.cfg.seq_len);
+        let mut tokens = Vec::with_capacity(b * s);
+        for _ in 0..b {
+            let span = self.hi - self.lo - s;
+            let start = self.lo + self.rng.below(span as u64) as usize;
+            tokens.extend(self.data[start..start + s].iter().map(|&x| x as i32));
+        }
+        Batch { tokens, batch: b, seq_len: s }
+    }
+
+    /// Sequential non-overlapping windows over the held-out split (evals).
+    pub fn heldout_windows(corpus: &Corpus, seq_len: usize) -> Vec<Vec<i32>> {
+        corpus
+            .heldout
+            .chunks_exact(seq_len)
+            .map(|w| w.iter().map(|&x| x as i32).collect())
+            .collect()
+    }
+}
+
+/// Background prefetching loader: a worker thread keeps up to
+/// `cfg.prefetch` batches ready; `next()` blocks only when the trainer
+/// outruns generation.
+pub struct BatchLoader {
+    rx: mpsc::Receiver<Batch>,
+    _handle: thread::JoinHandle<()>,
+}
+
+impl BatchLoader {
+    pub fn new(corpus: &Corpus, cfg: LoaderConfig) -> Self {
+        let (tx, rx) = mpsc::sync_channel(cfg.prefetch.max(1));
+        let mut sampler = Sampler::new(corpus, cfg);
+        let handle = thread::spawn(move || {
+            loop {
+                let batch = sampler.next_batch();
+                if tx.send(batch).is_err() {
+                    return; // receiver dropped: trainer finished
+                }
+            }
+        });
+        Self { rx, _handle: handle }
+    }
+
+    pub fn next(&self) -> Batch {
+        self.rx.recv().expect("prefetch thread died")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusKind;
+
+    fn corpus() -> Corpus {
+        Corpus::generate(CorpusKind::Mix, 0, 100_000, 10_000)
+    }
+
+    #[test]
+    fn batches_have_right_shape_and_range() {
+        let c = corpus();
+        let mut s = Sampler::new(&c, LoaderConfig::default());
+        for _ in 0..10 {
+            let b = s.next_batch();
+            assert_eq!(b.tokens.len(), 8 * 128);
+            assert!(b.tokens.iter().all(|&t| (0..256).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let c = corpus();
+        let mut s1 = Sampler::new(&c, LoaderConfig { seed: 5, ..Default::default() });
+        let mut s2 = Sampler::new(&c, LoaderConfig { seed: 5, ..Default::default() });
+        assert_eq!(s1.next_batch().tokens, s2.next_batch().tokens);
+    }
+
+    #[test]
+    fn shards_are_disjoint() {
+        let c = corpus();
+        let n = c.train.len();
+        let mk = |shard| {
+            Sampler::new(
+                &c,
+                LoaderConfig { shard, num_shards: 4, seed: 9, ..Default::default() },
+            )
+        };
+        let (s0, s3) = (mk(0), mk(3));
+        assert!(s0.hi <= n / 4 + 1);
+        assert!(s3.lo >= 3 * (n / 4));
+    }
+
+    #[test]
+    fn batches_are_real_substrings() {
+        let c = corpus();
+        let mut s = Sampler::new(&c, LoaderConfig { batch: 2, seq_len: 32, ..Default::default() });
+        let b = s.next_batch();
+        for row in b.tokens.chunks(32) {
+            let bytes: Vec<u8> = row.iter().map(|&t| t as u8).collect();
+            assert!(
+                c.train.windows(32).any(|w| w == &bytes[..]),
+                "batch row not found in corpus"
+            );
+        }
+    }
+
+    #[test]
+    fn prefetch_loader_streams() {
+        let c = corpus();
+        let loader = BatchLoader::new(&c, LoaderConfig { prefetch: 2, ..Default::default() });
+        for _ in 0..5 {
+            let b = loader.next();
+            assert_eq!(b.batch * b.seq_len, b.tokens.len());
+        }
+    }
+
+    #[test]
+    fn heldout_windows_cover_split() {
+        let c = corpus();
+        let w = Sampler::heldout_windows(&c, 128);
+        assert_eq!(w.len(), 10_000 / 128);
+        assert!(w.iter().all(|x| x.len() == 128));
+    }
+}

@@ -1,0 +1,44 @@
+//! Data substrate: synthetic corpora, tokenization, sharding, batching.
+//!
+//! The paper pretrains on DCLM; offline we substitute a deterministic
+//! family of byte-level synthetic corpora with enough learnable structure
+//! for the model scales we train (DESIGN.md §4). Every corpus is seeded,
+//! so train/held-out splits and all downstream evals are reproducible.
+
+pub mod corpus;
+pub mod loader;
+
+pub use corpus::{Corpus, CorpusKind};
+pub use loader::{BatchLoader, LoaderConfig};
+
+/// Byte-level "tokenizer": identity over u8, matching the model's
+/// vocab=256. Kept as an explicit type so a subword tokenizer could slot
+/// in without touching the loader.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn encode(&self, text: &[u8]) -> Vec<i32> {
+        text.iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, toks: &[i32]) -> Vec<u8> {
+        toks.iter().map(|&t| (t.rem_euclid(256)) as u8).collect()
+    }
+
+    pub fn vocab(&self) -> usize {
+        256
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_tokenizer_round_trips() {
+        let t = ByteTokenizer;
+        let text: Vec<u8> = (0..=255).collect();
+        assert_eq!(t.decode(&t.encode(&text)), text);
+    }
+}

@@ -1,0 +1,198 @@
+//! Evaluation harness: held-out perplexity (Table-3 analog) and zero-shot
+//! multiple-choice scoring (Table-2 analog).
+//!
+//! The MC tasks follow lm-evaluation-harness mechanics: each item is one
+//! context with 4 candidate continuations (1 true + 3 corpus distractors);
+//! every (context ‖ continuation) row is scored by total sequence NLL via
+//! the `nll` artifact and the lowest-NLL row wins. Because all four rows
+//! share the context, ranking by total NLL equals ranking by continuation
+//! NLL. Chance = 25%.
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use crate::data::corpus::Corpus;
+use crate::data::loader::Sampler;
+use crate::runtime::{ConfigEntry, Engine};
+use crate::util::Rng;
+
+/// Held-out perplexity through the `eval` artifact (mean NLL per token).
+pub fn heldout_ppl(
+    engine: &Engine,
+    entry: &ConfigEntry,
+    params: &[Literal],
+    corpus: &Corpus,
+) -> Result<f64> {
+    let spec = entry.step("eval")?.clone();
+    let tok_io = spec.inputs.last().unwrap();
+    let (b, s) = (tok_io.shape[0], tok_io.shape[1]);
+    let windows = Sampler::heldout_windows(corpus, s);
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for chunk in windows.chunks(b) {
+        if chunk.len() < b {
+            break;
+        }
+        let mut toks = Vec::with_capacity(b * s);
+        for w in chunk {
+            toks.extend_from_slice(w);
+        }
+        let tokens = Engine::tokens_literal(tok_io, &toks)?;
+        let mut args: Vec<&Literal> = params.iter().collect();
+        args.push(&tokens);
+        let outs = engine.run(&spec, &args)?;
+        total += Engine::to_f32_scalar(&outs[0])? as f64;
+        count += 1;
+    }
+    anyhow::ensure!(count > 0, "held-out split too small for one eval batch");
+    Ok((total / count as f64).exp())
+}
+
+/// One zero-shot item: `rows[answer]` is the true continuation row.
+#[derive(Clone, Debug)]
+pub struct McItem {
+    pub rows: Vec<Vec<i32>>, // 4 rows, each seq_len tokens
+    pub answer: usize,
+}
+
+pub const MC_OPTIONS: usize = 4;
+
+/// Build continuation-choice items from a corpus's held-out split.
+pub fn build_mc_items(
+    corpus: &Corpus,
+    n_items: usize,
+    seq_len: usize,
+    cont_len: usize,
+    seed: u64,
+) -> Vec<McItem> {
+    assert!(cont_len < seq_len);
+    let ctx_len = seq_len - cont_len;
+    let h = &corpus.heldout;
+    assert!(h.len() > seq_len * 4, "held-out split too small");
+    let mut rng = Rng::new(seed ^ 0x2e5);
+    let mut items = Vec::with_capacity(n_items);
+    let pick = |rng: &mut Rng, len: usize| rng.below((h.len() - len) as u64) as usize;
+    for _ in 0..n_items {
+        let p = pick(&mut rng, seq_len);
+        let context: Vec<i32> = h[p..p + ctx_len].iter().map(|&b| b as i32).collect();
+        let truth: Vec<i32> =
+            h[p + ctx_len..p + seq_len].iter().map(|&b| b as i32).collect();
+        let answer = rng.below(MC_OPTIONS as u64) as usize;
+        let mut rows = Vec::with_capacity(MC_OPTIONS);
+        for opt in 0..MC_OPTIONS {
+            let cont: Vec<i32> = if opt == answer {
+                truth.clone()
+            } else {
+                // distractor: a continuation-length span from elsewhere
+                let q = pick(&mut rng, cont_len);
+                h[q..q + cont_len].iter().map(|&b| b as i32).collect()
+            };
+            let mut row = context.clone();
+            row.extend(cont);
+            rows.push(row);
+        }
+        items.push(McItem { rows, answer });
+    }
+    items
+}
+
+/// Score items through the `nll` artifact; returns accuracy in [0, 1].
+pub fn mc_accuracy(
+    engine: &Engine,
+    entry: &ConfigEntry,
+    params: &[Literal],
+    items: &[McItem],
+) -> Result<f64> {
+    let spec = entry
+        .step("nll")
+        .context("zero-shot eval needs the `nll` artifact (make artifacts-repro)")?
+        .clone();
+    let tok_io = spec.inputs.last().unwrap();
+    let (b, s) = (tok_io.shape[0], tok_io.shape[1]);
+    assert_eq!(b % MC_OPTIONS, 0, "artifact batch must pack whole items");
+    let items_per_batch = b / MC_OPTIONS;
+
+    let mut correct = 0usize;
+    let mut scored = 0usize;
+    for chunk in items.chunks(items_per_batch) {
+        if chunk.len() < items_per_batch {
+            break;
+        }
+        let mut toks = Vec::with_capacity(b * s);
+        for item in chunk {
+            for row in &item.rows {
+                anyhow::ensure!(row.len() == s, "row len {} != seq {s}", row.len());
+                toks.extend_from_slice(row);
+            }
+        }
+        let tokens = Engine::tokens_literal(tok_io, &toks)?;
+        let mut args: Vec<&Literal> = params.iter().collect();
+        args.push(&tokens);
+        let outs = engine.run(&spec, &args)?;
+        let nll = Engine::to_f32_vec(&outs[0])?;
+        for (i, item) in chunk.iter().enumerate() {
+            let slice = &nll[i * MC_OPTIONS..(i + 1) * MC_OPTIONS];
+            let pred = slice
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == item.answer {
+                correct += 1;
+            }
+            scored += 1;
+        }
+    }
+    anyhow::ensure!(scored > 0, "no items scored");
+    Ok(correct as f64 / scored as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusKind;
+
+    #[test]
+    fn mc_items_shapes_and_answers() {
+        let c = Corpus::generate(CorpusKind::Mix, 0, 1000, 50_000);
+        let items = build_mc_items(&c, 20, 128, 32, 7);
+        assert_eq!(items.len(), 20);
+        for it in &items {
+            assert_eq!(it.rows.len(), 4);
+            assert!(it.answer < 4);
+            for r in &it.rows {
+                assert_eq!(r.len(), 128);
+            }
+            // all rows share the context
+            for r in &it.rows[1..] {
+                assert_eq!(&r[..96], &it.rows[0][..96]);
+            }
+        }
+    }
+
+    #[test]
+    fn mc_items_deterministic() {
+        let c = Corpus::generate(CorpusKind::Code, 1, 1000, 50_000);
+        let a = build_mc_items(&c, 5, 128, 32, 3);
+        let b = build_mc_items(&c, 5, 128, 32, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.answer, y.answer);
+            assert_eq!(x.rows, y.rows);
+        }
+    }
+
+    #[test]
+    fn true_row_differs_from_distractors_usually() {
+        let c = Corpus::generate(CorpusKind::Zipf, 2, 1000, 50_000);
+        let items = build_mc_items(&c, 50, 128, 32, 9);
+        let distinct = items
+            .iter()
+            .filter(|it| {
+                let truth = &it.rows[it.answer];
+                it.rows.iter().enumerate().all(|(i, r)| i == it.answer || r != truth)
+            })
+            .count();
+        assert!(distinct > 40, "{distinct}/50 items have distinct truth");
+    }
+}

@@ -1,0 +1,192 @@
+//! Paper-experiment drivers: `fp4train repro <id>` regenerates every table
+//! and figure of the evaluation (DESIGN.md §3 maps ids to paper items).
+//!
+//! Outputs: an ASCII table on stdout (paper layout) + CSV series under
+//! `results/<id>/`. Trained arms are cached as checkpoints + loss CSVs
+//! under `runs/`, so drivers that share arms (fig5 / tab2 / tab3) train
+//! each (preset, policy) pair once.
+
+pub mod figs;
+pub mod perf;
+pub mod tabs;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{checkpoint, Trainer, TrainRecord};
+use crate::data::corpus::{Corpus, CorpusKind};
+use crate::data::loader::{BatchLoader, LoaderConfig};
+use crate::runtime::Engine;
+use crate::util::Csv;
+
+/// Shared driver context.
+pub struct Ctx {
+    pub engine: Arc<Engine>,
+    pub results: PathBuf,
+    pub runs: PathBuf,
+    pub corpus_len: usize,
+    pub heldout_len: usize,
+    pub seed: i32,
+    corpora: HashMap<CorpusKind, Corpus>,
+}
+
+impl Ctx {
+    pub fn new(artifacts: &Path) -> Result<Self> {
+        Ok(Self {
+            engine: Arc::new(Engine::load(artifacts)?),
+            results: PathBuf::from("results"),
+            runs: PathBuf::from("runs"),
+            corpus_len: 4_000_000,
+            heldout_len: 128 * 1024,
+            seed: 0,
+            corpora: HashMap::new(),
+        })
+    }
+
+    pub fn corpus(&mut self, kind: CorpusKind) -> &Corpus {
+        let (len, hlen, _seed) = (self.corpus_len, self.heldout_len, self.seed);
+        self.corpora
+            .entry(kind)
+            .or_insert_with(|| Corpus::generate(kind, 1234, len, hlen))
+    }
+
+    /// Train (or restore from cache) one experiment arm on the Mix corpus.
+    /// Returns the trainer holding the final state plus per-step records.
+    pub fn train_arm(
+        &mut self,
+        preset: &str,
+        policy: &str,
+        steps: usize,
+    ) -> Result<(Trainer, Vec<TrainRecord>)> {
+        let tag = format!("{preset}_{policy}_s{steps}_seed{}", self.seed);
+        let ckpt_path = self.runs.join(format!("{tag}.ckpt"));
+        let csv_path = self.runs.join(format!("{tag}_loss.csv"));
+        let corpus = self.corpus(CorpusKind::Mix).clone();
+        let seed = self.seed;
+
+        let mut trainer = Trainer::new(self.engine.clone(), preset, policy, seed)?;
+
+        if ckpt_path.exists() && csv_path.exists() {
+            let ck = checkpoint::load(&ckpt_path)?;
+            let spec = trainer.entry.step("init")?.clone();
+            let state = checkpoint::to_literals(&ck, &spec.outputs)?;
+            trainer.replace_state(state)?;
+            trainer.step = ck.step as usize;
+            let records = read_loss_csv(&csv_path)?;
+            println!("[arm {tag}] restored from cache ({} steps)", records.len());
+            return Ok((trainer, records));
+        }
+
+        let model = trainer.entry.model.clone();
+        let loader = BatchLoader::new(
+            &corpus,
+            LoaderConfig {
+                batch: model.batch,
+                seq_len: model.seq_len,
+                seed: seed as u64,
+                ..Default::default()
+            },
+        );
+        let t0 = std::time::Instant::now();
+        let records = trainer.run(&loader, steps)?;
+        println!(
+            "[arm {tag}] trained {} steps in {:.1}s (final loss {:.4})",
+            records.len(),
+            t0.elapsed().as_secs_f64(),
+            records.last().map(|r| r.loss).unwrap_or(f32::NAN)
+        );
+
+        // cache
+        let spec = trainer.entry.step("init")?.clone();
+        checkpoint::save(&ckpt_path, trainer.step as u64, &spec.outputs, trainer.state())?;
+        let mut csv = Csv::new(&["step", "loss", "gnorm"]);
+        for r in &records {
+            csv.rowf(&[r.step as f64, r.loss as f64, r.gnorm as f64]);
+        }
+        csv.write(&csv_path)?;
+        Ok((trainer, records))
+    }
+
+    /// Write multi-arm loss curves as a single wide CSV.
+    pub fn write_curves(
+        &self,
+        id: &str,
+        arms: &[(String, Vec<TrainRecord>)],
+    ) -> Result<PathBuf> {
+        let mut header = vec!["step".to_string()];
+        header.extend(arms.iter().map(|(n, _)| n.clone()));
+        let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut csv = Csv::new(&href);
+        let max_len = arms.iter().map(|(_, r)| r.len()).max().unwrap_or(0);
+        for i in 0..max_len {
+            let mut row = vec![format!("{i}")];
+            for (_, recs) in arms {
+                row.push(
+                    recs.get(i).map(|r| format!("{}", r.loss)).unwrap_or_default(),
+                );
+            }
+            csv.row(&row);
+        }
+        let path = self.results.join(id).join("curves.csv");
+        csv.write(&path)?;
+        Ok(path)
+    }
+}
+
+fn read_loss_csv(path: &Path) -> Result<Vec<TrainRecord>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    for line in text.lines().skip(1) {
+        let mut f = line.split(',');
+        let step: usize = f.next().context("csv step")?.parse()?;
+        let loss: f32 = f.next().context("csv loss")?.parse()?;
+        let gnorm: f32 = f.next().context("csv gnorm")?.parse()?;
+        out.push(TrainRecord { step, loss, gnorm });
+    }
+    Ok(out)
+}
+
+/// Mean loss over the last `n` records (the "final loss" of a curve).
+pub fn tail_loss(records: &[TrainRecord], n: usize) -> f64 {
+    let tail: Vec<f32> =
+        records.iter().rev().take(n).map(|r| r.loss).collect();
+    crate::util::mean(&tail)
+}
+
+/// Dispatch an experiment id.
+pub fn run(id: &str, ctx: &mut Ctx, quick: bool) -> Result<()> {
+    match id {
+        "fig1" => figs::fig1(ctx, quick),
+        "fig3" => figs::fig3(ctx),
+        "fig4" => figs::fig4(ctx, quick),
+        "fig5" => figs::fig5(ctx, quick),
+        "fig6a" => figs::fig6a(ctx, quick),
+        "fig6b" => figs::fig6b(ctx, quick),
+        "fig6c" => figs::fig6c(ctx, quick),
+        "fig6d" => figs::fig6d(ctx, quick),
+        "tab1" => tabs::tab1(ctx, quick),
+        "tab2" => tabs::tab2(ctx, quick),
+        "tab3" => tabs::tab3(ctx, quick),
+        "tab4" | "fig7" => tabs::tab4(),
+        "tab5" => tabs::tab5(),
+        "dists" => tabs::dists(ctx, quick),
+        "perf" => perf::perf(ctx),
+        "all" => {
+            for id in [
+                "tab4", "tab5", "fig3", "fig1", "fig6a", "fig6b", "fig6c", "fig6d",
+                "fig5", "tab2", "tab3", "tab1", "fig4", "dists",
+            ] {
+                println!("\n================ repro {id} ================");
+                run(id, ctx, quick)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other:?}; ids: fig1 fig3 fig4 fig5 fig6a-d \
+             tab1-5 fig7 dists perf all"
+        ),
+    }
+}

@@ -1,0 +1,93 @@
+//! §Perf driver: measures the L3 hot paths and the burst-vs-single-step
+//! optimization; feeds EXPERIMENTS.md §Perf.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::data::corpus::CorpusKind;
+use crate::data::loader::{BatchLoader, LoaderConfig};
+use crate::coordinator::Trainer;
+use crate::report::{f2, Table};
+use crate::util::Timer;
+
+pub fn perf(ctx: &mut Ctx) -> Result<()> {
+    let corpus = ctx.corpus(CorpusKind::Mix).clone();
+    let mut t = Table::new(&["metric", "value", "unit"]);
+
+    // --- train-step latency: single vs burst (the L2/L3 optimization) ---
+    for preset in ["nano", "micro"] {
+        if ctx.engine.manifest.config(preset, "fp4").is_err() {
+            continue;
+        }
+        let entry = ctx.engine.manifest.config(preset, "fp4")?.clone();
+        let model = entry.model.clone();
+        let loader = BatchLoader::new(
+            &corpus,
+            LoaderConfig { batch: model.batch, seq_len: model.seq_len, ..Default::default() },
+        );
+        // single-step
+        if entry.step("train").is_ok() {
+            let mut tr = Trainer::new(ctx.engine.clone(), preset, "fp4", 0)?;
+            tr.force_single_step = true;
+            tr.run(&loader, 2)?; // warm-up + compile
+            let timer = Timer::start();
+            let n = 8;
+            tr.run(&loader, n)?;
+            t.row(&[
+                format!("{preset}/fp4 single-step latency"),
+                f2(timer.ms() / n as f64),
+                "ms/step".into(),
+            ]);
+        }
+        // burst
+        if entry.train_step().map(|(_, b)| b).unwrap_or(false) {
+            let mut tr = Trainer::new(ctx.engine.clone(), preset, "fp4", 0)?;
+            let k = entry.train_step().unwrap().0.burst_k.max(1);
+            tr.run(&loader, k)?; // warm-up
+            let timer = Timer::start();
+            tr.run(&loader, 2 * k)?;
+            t.row(&[
+                format!("{preset}/fp4 burst-step latency (k={k})"),
+                f2(timer.ms() / (2 * k) as f64),
+                "ms/step".into(),
+            ]);
+        }
+    }
+
+    // --- codec throughput (the comm hot path) ---
+    let mut rng = crate::util::Rng::new(0);
+    let xs = rng.normal_vec(4 << 20, 1.0); // 16 MiB of f32
+    let timer = Timer::start();
+    let packed = crate::formats::fp8::pack_fp8(&xs, crate::formats::fp8::E4M3);
+    let enc_s = timer.secs();
+    let timer = Timer::start();
+    let back = crate::formats::fp8::unpack_fp8(&packed);
+    let dec_s = timer.secs();
+    assert_eq!(back.len(), xs.len());
+    let mb = (xs.len() * 4) as f64 / 1e6;
+    t.row(&["fp8 encode throughput".into(), f2(mb / enc_s), "MB/s (f32 in)".into()]);
+    t.row(&["fp8 decode throughput".into(), f2(mb / dec_s), "MB/s (f32 out)".into()]);
+
+    let timer = Timer::start();
+    let p4 = crate::formats::pack_fp4(&xs, crate::formats::Fp4Kind::E2M1);
+    let enc4 = timer.secs();
+    t.row(&["fp4 pack throughput".into(), f2(mb / enc4), "MB/s (f32 in)".into()]);
+    t.row(&["fp4 wire ratio".into(), f2(xs.len() as f64 * 4.0 / p4.data.len() as f64), "x".into()]);
+
+    // --- data pipeline ---
+    let loader = BatchLoader::new(
+        &corpus,
+        LoaderConfig { batch: 8, seq_len: 128, prefetch: 8, ..Default::default() },
+    );
+    let timer = Timer::start();
+    let n = 2000;
+    for _ in 0..n {
+        let b = loader.next();
+        std::hint::black_box(&b.tokens);
+    }
+    let tok_per_s = (n * 8 * 128) as f64 / timer.secs();
+    t.row(&["dataloader throughput".into(), f2(tok_per_s / 1e6), "Mtok/s".into()]);
+
+    println!("{}", t.render());
+    Ok(())
+}

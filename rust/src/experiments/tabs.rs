@@ -1,0 +1,337 @@
+//! Table reproductions (Tables 1-5) + the Appendix-D distribution study.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::data::corpus::CorpusKind;
+use crate::eval;
+use crate::formats::Fp4Kind;
+use crate::quant;
+use crate::report::{f2, f4, pct, Table};
+use crate::runtime::Engine;
+use crate::stats;
+use crate::util::Csv;
+
+/// Run the probe artifact on a trained micro/fp4 arm: returns the named
+/// pre-quantization activation tensors (flattened to tokens × channels).
+pub fn probe_activations(
+    ctx: &mut Ctx,
+    quick: bool,
+) -> Result<Vec<(String, usize, usize, Vec<f32>)>> {
+    let steps = if quick { 48 } else { 400 };
+    let corpus = ctx.corpus(CorpusKind::Mix).clone();
+    let (trainer, _) = ctx.train_arm("micro", "fp4", steps)?;
+    let spec = trainer.entry.step("probe")?.clone();
+    let tok_io = spec.inputs.last().unwrap();
+    let (b, s) = (tok_io.shape[0], tok_io.shape[1]);
+    let windows = crate::data::loader::Sampler::heldout_windows(&corpus, s);
+    let mut toks = Vec::with_capacity(b * s);
+    for w in windows.iter().take(b) {
+        toks.extend_from_slice(w);
+    }
+    anyhow::ensure!(toks.len() == b * s, "not enough held-out windows");
+    let tokens = Engine::tokens_literal(tok_io, &toks)?;
+    let mut args: Vec<&xla::Literal> = trainer.params().iter().collect();
+    args.push(&tokens);
+    let outs = ctx.engine.run(&spec, &args)?;
+    let mut tensors = Vec::new();
+    for (io, lit) in spec.outputs.iter().zip(&outs) {
+        let data = Engine::to_f32_vec(lit)?;
+        // flatten (B, S, C) -> (B*S, C)
+        let cols = *io.shape.last().unwrap();
+        let rows = io.elements() / cols;
+        tensors.push((io.name.clone(), rows, cols, data));
+    }
+    // order: layer0_output first (the paper's Fig-4 tensor)
+    tensors.sort_by_key(|(n, ..)| if n == "layer0_output" { 0 } else { 1 });
+    Ok(tensors)
+}
+
+/// Table 1: SIM/MSE/SNR of quantized activations under clamp/comp arms.
+pub fn tab1(ctx: &mut Ctx, quick: bool) -> Result<()> {
+    let tensors = probe_activations(ctx, quick)?;
+    let arms: [(Option<f64>, bool, &str); 5] = [
+        (None, false, "-"),
+        (Some(0.999), false, "99.9"),
+        (Some(0.999), true, "99.9"),
+        (Some(0.99), true, "99"),
+        (Some(0.97), true, "97"),
+    ];
+    let mut t = Table::new(&["CLAMP", "COMP", "QUANTILE", "SIM", "MSE", "SNR(dB)", "ΔY nnz"]);
+    let mut csv = Csv::new(&["clamp", "comp", "quantile", "sim", "mse", "snr_db", "sparsity"]);
+    for (alpha, comp, qlabel) in arms {
+        // average across all probe tensors (paper: across all activation
+        // tensors of the 1.3B model)
+        let mut sim = 0.0;
+        let mut mse = 0.0;
+        let mut snr = 0.0;
+        let mut sp = 0.0;
+        for (_, rows, cols, x) in &tensors {
+            let (f, s) = quant::table1_arm(x, *rows, *cols, alpha, comp, Fp4Kind::E2M1);
+            sim += f.sim;
+            mse += f.mse;
+            snr += f.snr_db;
+            sp += s;
+        }
+        let n = tensors.len() as f64;
+        let (sim, mse, snr, sp) = (sim / n, mse / n, snr / n, sp / n);
+        t.row(&[
+            if alpha.is_some() { "Y" } else { "x" }.into(),
+            if comp { "Y" } else { "x" }.into(),
+            qlabel.into(),
+            pct(sim),
+            f4(mse),
+            f2(snr),
+            pct(sp),
+        ]);
+        csv.row(&[
+            format!("{}", alpha.is_some()),
+            format!("{comp}"),
+            qlabel.to_string(),
+            format!("{sim}"),
+            format!("{mse}"),
+            format!("{snr}"),
+            format!("{sp}"),
+        ]);
+    }
+    csv.write(ctx.results.join("tab1").join("fidelity.csv"))?;
+    println!("{}", t.render());
+    println!(
+        "paper (avg over LLaMA-1.3B activations): 92.19%/0.1055/8.31 -> \
+         98.83%/0.0366/14.25 -> 99.61%/0.0245/15.31 -> 100%/0.0099/18.38 -> \
+         100%/0.0068/20.88 — same monotone ordering expected"
+    );
+    Ok(())
+}
+
+/// Table 2: zero-shot downstream accuracy, BF16 vs FP4, three sizes.
+pub fn tab2(ctx: &mut Ctx, quick: bool) -> Result<()> {
+    let n_items = if quick { 32 } else { 128 };
+    let sizes = ["tiny", "small", "med"];
+    let kinds = CorpusKind::ALL;
+    let mut header = vec!["size".to_string(), "precision".to_string(), "average".to_string()];
+    header.extend(kinds.iter().map(|k| format!("zs_{}", k.name())));
+    let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&href);
+    let mut csv = Csv::new(&href);
+
+    for preset in sizes {
+        let steps = if quick { 48 } else if preset == "med" { 300 } else { 400 };
+        for policy in ["bf16", "fp4"] {
+            // build items first (immutable borrows of ctx corpora)
+            let mut item_sets = Vec::new();
+            for kind in kinds {
+                let corpus = ctx.corpus(kind).clone();
+                item_sets.push(eval::build_mc_items(&corpus, n_items, 128, 32, 77));
+            }
+            let (trainer, _) = ctx.train_arm(preset, policy, steps)?;
+            let mut row = vec![preset.to_string(), policy.to_string()];
+            let mut accs = Vec::new();
+            for items in &item_sets {
+                let acc =
+                    eval::mc_accuracy(&ctx.engine, &trainer.entry, trainer.params(), items)?;
+                accs.push(acc);
+            }
+            let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+            row.push(f2(avg * 100.0));
+            row.extend(accs.iter().map(|a| f2(a * 100.0)));
+            t.row(&row);
+            csv.row(&row);
+        }
+    }
+    csv.write(ctx.results.join("tab2").join("zeroshot.csv"))?;
+    println!("{}", t.render());
+    println!(
+        "paper: FP4 within ±1 point of BF16 at every size; accuracy rises \
+         with size. chance = 25.00"
+    );
+    Ok(())
+}
+
+/// Table 3: held-out perplexity, BF16 vs FP4, three sizes, four suites.
+pub fn tab3(ctx: &mut Ctx, quick: bool) -> Result<()> {
+    let sizes = ["tiny", "small", "med"];
+    let kinds = CorpusKind::ALL;
+    let mut header = vec!["size".to_string(), "precision".to_string(), "average".to_string()];
+    header.extend(kinds.iter().map(|k| format!("ppl_{}", k.name())));
+    let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&href);
+    let mut csv = Csv::new(&href);
+
+    for preset in sizes {
+        let steps = if quick { 48 } else if preset == "med" { 300 } else { 400 };
+        for policy in ["bf16", "fp4"] {
+            let corpora: Vec<_> =
+                kinds.iter().map(|&k| ctx.corpus(k).clone()).collect();
+            let (trainer, _) = ctx.train_arm(preset, policy, steps)?;
+            let mut ppls = Vec::new();
+            for corpus in &corpora {
+                ppls.push(eval::heldout_ppl(
+                    &ctx.engine,
+                    &trainer.entry,
+                    trainer.params(),
+                    corpus,
+                )?);
+            }
+            let avg = ppls.iter().sum::<f64>() / ppls.len() as f64;
+            let mut row = vec![preset.to_string(), policy.to_string(), f2(avg)];
+            row.extend(ppls.iter().map(|&p| f2(p)));
+            t.row(&row);
+            csv.row(&row);
+        }
+    }
+    csv.write(ctx.results.join("tab3").join("ppl.csv"))?;
+    println!("{}", t.render());
+    println!(
+        "paper: FP4 PPL comparable to (sometimes below) BF16; larger models \
+         lower PPL — same two orderings expected here"
+    );
+    Ok(())
+}
+
+/// Table 4 / Figure 7: representable values of the FP4 formats.
+pub fn tab4() -> Result<()> {
+    let mut t = Table::new(&["format", "values (ascending)"]);
+    for fmt in [Fp4Kind::E1M2, Fp4Kind::E2M1, Fp4Kind::E3M0] {
+        let vals: Vec<String> = fmt.values().iter().map(|v| format!("{v}")).collect();
+        t.row(&[fmt.name().to_uppercase(), vals.join(" ")]);
+    }
+    println!("{}", t.render());
+    println!(
+        "paper Table 4: E2M1 = ±{{0.5,1,1.5,2,3,4,6}} ∪ {{0}}; more exponent \
+         bits -> range, more mantissa bits -> resolution"
+    );
+    Ok(())
+}
+
+/// Table 5 + Appendix B: analytical FLOPs and speedup model.
+pub fn tab5() -> Result<()> {
+    use crate::costmodel as cm;
+    let mut t =
+        Table::new(&["component", "subcomponent", "FLOPs fp32", "FLOPs fp4", "speedup"]);
+    let show = |c: (f64, f64, f64)| {
+        let mut parts = Vec::new();
+        if c.0 != 0.0 {
+            parts.push(format!("{}bsh^2", c.0));
+        }
+        if c.1 != 0.0 {
+            parts.push(format!("{}bs^2h", c.1));
+        }
+        if c.2 != 0.0 {
+            parts.push(format!("{}bsh", c.2));
+        }
+        parts.join(" + ")
+    };
+    for r in cm::table5_rows() {
+        t.row(&[
+            r.component.into(),
+            r.subcomponent.into(),
+            show(r.fp32),
+            show(r.fp4),
+            format!("{}x", r.speedup),
+        ]);
+    }
+    let (tot32, tot4) = cm::totals();
+    t.row(&["Total".into(), "-".into(), show(tot32), show(tot4), "-".into()]);
+    println!("{}", t.render());
+
+    let (h, s) = (4096.0, 2048.0);
+    let mut t2 = Table::new(&["quantity", "model", "paper"]);
+    t2.row(&["ideal speedup (7B: h=4096,s=2048)".into(),
+             format!("{:.2}x", cm::ideal_speedup(h, s)), "3.12x".into()]);
+    t2.row(&["adjusted (DGE+OCC, alpha=.99)".into(),
+             format!("{:.2}x", cm::adjusted_speedup(h, s, 0.99)), "2.95x".into()]);
+    t2.row(&["DGE overhead share".into(),
+             pct(cm::dge_overhead_share(h, s)), "0.1%".into()]);
+    t2.row(&["OCC overhead share".into(),
+             pct(cm::occ_overhead_share(h, s, 0.99)), "5.6%".into()]);
+    println!("{}", t2.render());
+    Ok(())
+}
+
+/// Figures 8-14 (Appendix D): weight/activation distributions + channel
+/// outlier concentration.
+pub fn dists(ctx: &mut Ctx, quick: bool) -> Result<()> {
+    let steps = if quick { 48 } else { 400 };
+    // --- weights (Figs. 8-10): from the trained checkpoint ---
+    let (trainer, _) = ctx.train_arm("micro", "fp4", steps)?;
+    let init_spec = trainer.entry.step("init")?.clone();
+    let mut t = Table::new(&["tensor", "absmax", "std", "q99.9", "stretch", "kind"]);
+    let mut csv = Csv::new(&["tensor", "absmax", "std", "q999", "stretch", "kind"]);
+    for (io, lit) in init_spec.outputs.iter().zip(trainer.params()) {
+        if !io.name.starts_with("layers.w") {
+            continue;
+        }
+        let data = Engine::to_f32_vec(lit)?;
+        let s = stats::summarize(&data);
+        t.row(&[
+            io.name.clone(),
+            f4(s.absmax as f64),
+            f4(s.std),
+            f4(s.q999 as f64),
+            f2(s.outlier_stretch),
+            "weight".into(),
+        ]);
+        csv.row(&[
+            io.name.clone(),
+            format!("{}", s.absmax),
+            format!("{}", s.std),
+            format!("{}", s.q999),
+            format!("{}", s.outlier_stretch),
+            "weight".into(),
+        ]);
+    }
+    // --- activations (Figs. 11-14): probe tensors ---
+    let tensors = probe_activations(ctx, quick)?;
+    let mut conc_rows = Vec::new();
+    for (name, rows, cols, x) in &tensors {
+        let s = stats::summarize(x);
+        t.row(&[
+            name.clone(),
+            f4(s.absmax as f64),
+            f4(s.std),
+            f4(s.q999 as f64),
+            f2(s.outlier_stretch),
+            "activation".into(),
+        ]);
+        csv.row(&[
+            name.clone(),
+            format!("{}", s.absmax),
+            format!("{}", s.std),
+            format!("{}", s.q999),
+            format!("{}", s.outlier_stretch),
+            "activation".into(),
+        ]);
+        // Fig. 14: channel-wise outlier concentration
+        let ca = stats::channel_absmax(x, *rows, *cols);
+        let conc = stats::channel_concentration(&ca, (*cols / 16).max(1));
+        conc_rows.push((name.clone(), conc, ca));
+    }
+    csv.write(ctx.results.join("dists").join("summaries.csv"))?;
+
+    // channel heat-map reduced series (Fig. 14)
+    let mut csv2 = Csv::new(&["tensor", "channel", "absmax"]);
+    for (name, _, ca) in &conc_rows {
+        for (c, v) in ca.iter().enumerate() {
+            csv2.row(&[name.clone(), format!("{c}"), format!("{v}")]);
+        }
+    }
+    csv2.write(ctx.results.join("dists").join("channel_absmax.csv"))?;
+
+    println!("{}", t.render());
+    let mut t2 = Table::new(&["activation", "top-1/16 channel mass", "channel-specific?"]);
+    for (name, conc, _) in &conc_rows {
+        t2.row(&[
+            name.clone(),
+            pct(*conc),
+            if *conc > 0.15 { "yes".into() } else { "mild".into() },
+        ]);
+    }
+    println!("{}", t2.render());
+    println!(
+        "paper App. D: weights ~normal with small range; activations show \
+         larger dynamic range with channel-concentrated outliers"
+    );
+    Ok(())
+}
+

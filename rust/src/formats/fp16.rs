@@ -1,0 +1,143 @@
+//! IEEE binary16 codec + the scaled-FP16 storage round trip used for the
+//! Adam second moment (FP8-LM scheme, §4.1).
+//!
+//! Implemented from bits (no `half` crate offline); round-to-nearest-even.
+
+/// f32 -> f16 bits with round-to-nearest-even (saturating to ±inf).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // inf / nan
+        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // normal f16
+        let mut m = man >> 13; // keep 10 bits
+        let rest = man & 0x1FFF;
+        if rest > 0x1000 || (rest == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut e = (unbiased + 15) as u32;
+        if m == 0x400 {
+            m = 0;
+            e += 1;
+            if e >= 31 {
+                return sign | 0x7C00;
+            }
+        }
+        return sign | ((e as u16) << 10) | m as u16;
+    }
+    // subnormal f16: value = m / 2^10 * 2^-14
+    let shift = (-14 - unbiased) as u32;
+    if shift > 24 {
+        return sign; // underflow to zero
+    }
+    let full = man | 0x0080_0000; // implicit leading 1
+    let total_shift = 13 + shift;
+    let m = full >> total_shift;
+    let rest = full & ((1u32 << total_shift) - 1);
+    let half = 1u32 << (total_shift - 1);
+    let m = if rest > half || (rest == half && (m & 1) == 1) { m + 1 } else { m };
+    sign | m as u16
+}
+
+/// f16 bits -> f32 (exact: every f16 value is exactly representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = if h & 0x8000 != 0 { -1.0f32 } else { 1.0 };
+    let exp = ((h >> 10) & 0x1F) as i32;
+    let man = (h & 0x3FF) as u32;
+    if exp == 31 {
+        return if man == 0 { sign * f32::INFINITY } else { f32::NAN };
+    }
+    let v = if exp == 0 {
+        man as f32 * (2f32).powi(-24) // subnormal: man * 2^-10 * 2^-14
+    } else {
+        (1.0 + man as f32 / 1024.0) * (2f32).powi(exp - 15)
+    };
+    sign * v
+}
+
+/// FP16 storage round trip, exact semantics of a cast pair.
+pub fn f16_round_trip(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Scaled-FP16 qdq for optimizer state (mirrors `ref.fp16_qdq`): per-tensor
+/// absmax is pinned to 32768 so tiny second moments survive storage.
+pub fn qdq_f16_scaled(xs: &[f32]) -> Vec<f32> {
+    let amax = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    let gamma = if amax == 0.0 { 1.0 } else { 32768.0 / amax };
+    xs.iter().map(|&x| f16_round_trip(x * gamma) / gamma).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_round_trip() {
+        for i in -2048..=2048 {
+            let x = i as f32;
+            assert_eq!(f16_round_trip(x), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // f16 max
+        assert_eq!(f32_to_f16_bits(65536.0), 0x7C00); // overflow -> inf
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x0001), 5.960_464_5e-8); // min subnormal
+        assert_eq!(f16_bits_to_f32(0x0400), 6.103_515_6e-5); // min normal
+    }
+
+    #[test]
+    fn rtne_on_mantissa() {
+        // 1 + 2^-11 is a tie between 1.0 and 1+2^-10: even (1.0) wins
+        let tie = 1.0 + (2f32).powi(-11);
+        assert_eq!(f16_round_trip(tie), 1.0);
+        // just above the tie rounds up
+        let above = 1.0 + (2f32).powi(-11) + (2f32).powi(-20);
+        assert_eq!(f16_round_trip(above), 1.0 + (2f32).powi(-10));
+    }
+
+    #[test]
+    fn subnormal_round_trip() {
+        let x = 3.0e-8f32; // below min subnormal/2? min sub = 5.96e-8
+        assert_eq!(f16_round_trip(x), 5.960_464_5e-8); // rounds to min sub
+        let y = 2.0e-8f32;
+        assert_eq!(f16_round_trip(y), 0.0);
+    }
+
+    #[test]
+    fn random_values_relative_error_bounded() {
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..10_000 {
+            let x = rng.normal_f32() * 100.0;
+            let y = f16_round_trip(x);
+            assert!((x - y).abs() <= x.abs() * 1e-3 + 1e-7, "{x} {y}");
+        }
+    }
+
+    #[test]
+    fn scaled_qdq_preserves_tiny_tensors() {
+        // the regression that motivated the scaled storage (see
+        // python test_second_moment_survives_tiny_gradients)
+        let xs = vec![1e-10f32; 16];
+        let q = qdq_f16_scaled(&xs);
+        assert!(q.iter().all(|&v| v > 0.0));
+        for (a, b) in xs.iter().zip(&q) {
+            assert!((a - b).abs() < 1e-3 * a.abs());
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! FP8 byte codecs: E4M3 (fn variant — no inf, max 448) and E5M2.
+//!
+//! Used as *real storage* by the gradient-communication coordinator (the
+//! paper performs gradient communication in FP8 per FP8-LM, §4.1): tensors
+//! are scaled by absmax, encoded to one byte per element with
+//! round-to-nearest-even, "transferred", then decoded and unscaled.
+//!
+//! Encode saturates at the format max instead of producing NaN (the comm
+//! path always pre-scales so the max maps exactly to 448 / 57344; the
+//! saturation only guards rounding at the boundary). Decode is bit-exact
+//! against ml_dtypes — see the golden tables in the tests.
+
+/// Parameters of an FP8 format.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Fp8Spec {
+    pub exp_bits: u32,
+    pub man_bits: u32,
+    pub bias: i32,
+    pub max: f32,
+}
+
+pub const E4M3: Fp8Spec = Fp8Spec { exp_bits: 4, man_bits: 3, bias: 7, max: 448.0 };
+pub const E5M2: Fp8Spec = Fp8Spec { exp_bits: 5, man_bits: 2, bias: 15, max: 57344.0 };
+
+impl Fp8Spec {
+    /// Encode one f32 with round-to-nearest-even; saturating at ±max.
+    pub fn encode(&self, x: f32) -> u8 {
+        let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+        let a = x.abs();
+        if a.is_nan() {
+            // canonical NaN: all exponent+mantissa bits set
+            return sign | ((1u8 << (self.exp_bits + self.man_bits)) - 1);
+        }
+        if a == 0.0 {
+            return sign;
+        }
+        let max_code = self.max_finite_code();
+        if a >= self.max {
+            return sign | max_code;
+        }
+        // exponent of the leading bit
+        let e = a.log2().floor() as i32;
+        let min_norm_exp = 1 - self.bias;
+        let (exp_field, man): (i32, f32) = if e < min_norm_exp {
+            // subnormal: value = man/2^man_bits * 2^min_norm_exp
+            (0, a / (min_norm_exp as f32).exp2())
+        } else {
+            (e + self.bias, a / (e as f32).exp2() - 1.0)
+        };
+        let scale = (1u32 << self.man_bits) as f32;
+        let m_scaled = man * scale;
+        let mut m = m_scaled.floor() as u32;
+        let frac = m_scaled - m as f32;
+        // round to nearest, ties to even
+        if frac > 0.5 || (frac == 0.5 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut exp_field = exp_field as u32;
+        if m >= (1u32 << self.man_bits) {
+            m = 0;
+            exp_field += if exp_field == 0 { 1 } else { 1 };
+        }
+        let code = ((exp_field << self.man_bits) | m) as u8;
+        if code > max_code {
+            return sign | max_code;
+        }
+        sign | code
+    }
+
+    /// Decode one byte to f32 (bit-exact vs ml_dtypes).
+    pub fn decode(&self, byte: u8) -> f32 {
+        let emask = (1u32 << self.exp_bits) - 1;
+        let mmask = (1u32 << self.man_bits) - 1;
+        let sign = if byte & 0x80 != 0 { -1.0f32 } else { 1.0 };
+        let exp_field = ((byte as u32) >> self.man_bits) & emask;
+        let man = (byte as u32) & mmask;
+        // E4M3fn: exp=1111, man=111 is NaN (448 = 1111.110). E5M2 keeps
+        // IEEE inf/nan.
+        if self.exp_bits == 4 {
+            if exp_field == emask && man == mmask {
+                return f32::NAN;
+            }
+        } else if exp_field == emask {
+            return if man == 0 { sign * f32::INFINITY } else { f32::NAN };
+        }
+        let scale = (1u32 << self.man_bits) as f32;
+        let v = if exp_field == 0 {
+            (man as f32 / scale) * ((1 - self.bias) as f32).exp2()
+        } else {
+            (1.0 + man as f32 / scale) * ((exp_field as i32 - self.bias) as f32).exp2()
+        };
+        sign * v
+    }
+
+    fn max_finite_code(&self) -> u8 {
+        if self.exp_bits == 4 {
+            0x7E // E4M3fn: 1111.110 = 448
+        } else {
+            0x7B // E5M2: 11110.11 = 57344 (11111.xx is inf/nan)
+        }
+    }
+}
+
+/// A real FP8 payload for one tensor: absmax-scaled bytes + the scale.
+/// This is the wire format of the dp-sim gradient all-reduce: 4 bytes of
+/// f32 become 1 byte on the wire (plus one f32 scale per tensor).
+#[derive(Clone, Debug)]
+pub struct PackedFp8 {
+    pub spec: Fp8Spec,
+    pub gamma: f32,
+    pub data: Vec<u8>,
+}
+
+pub fn pack_fp8(xs: &[f32], spec: Fp8Spec) -> PackedFp8 {
+    let gamma = super::absmax_scale(xs, spec.max);
+    let data = xs.iter().map(|&x| spec.encode(x * gamma)).collect();
+    PackedFp8 { spec, gamma, data }
+}
+
+pub fn unpack_fp8(p: &PackedFp8) -> Vec<f32> {
+    p.data.iter().map(|&b| p.spec.decode(b) / p.gamma).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden decode values generated with ml_dtypes.float8_e4m3fn.
+    const E4M3_GOLDEN: &[(u8, f32)] = &[
+        (0x00, 0.0),
+        (0x01, 0.001953125),
+        (0x07, 0.013671875),
+        (0x08, 0.015625),
+        (0x0F, 0.029296875),
+        (0x10, 0.03125),
+        (0x20, 0.125),
+        (0x30, 0.5),
+        (0x38, 1.0),
+        (0x40, 2.0),
+        (0x48, 4.0),
+        (0x55, 13.0),
+        (0x5A, 20.0),
+        (0x60, 32.0),
+        (0x70, 128.0),
+        (0x77, 240.0),
+        (0x7E, 448.0),
+        (0x81, -0.001953125),
+        (0x90, -0.03125),
+        (0xC4, -3.0),
+        (0xFE, -448.0),
+    ];
+
+    /// Golden decode values generated with ml_dtypes.float8_e5m2.
+    const E5M2_GOLDEN: &[(u8, f32)] = &[
+        (0x00, 0.0),
+        (0x01, 1.52587890625e-05),
+        (0x03, 4.57763671875e-05),
+        (0x04, 6.103515625e-05),
+        (0x3C, 1.0),
+        (0x40, 2.0),
+        (0x44, 4.0),
+        (0x7B, 57344.0),
+        (0x83, -4.57763671875e-05),
+        (0xC0, -2.0),
+    ];
+
+    /// Golden in-range encodes generated with ml_dtypes (RTNE semantics).
+    const E4M3_ENC_GOLDEN: &[(f32, u8)] = &[
+        (0.0, 0x00),
+        (0.001, 0x01),
+        (0.0019531, 0x01),
+        (0.002, 0x01),
+        (0.017, 0x09),
+        (0.1, 0x1D),
+        (0.11, 0x1E),
+        (1.0, 0x38),
+        (1.0625, 0x38), // exact tie -> even mantissa
+        (1.09, 0x39),
+        (3.3, 0x45),
+        (100.0, 0x6C),
+        (448.0, 0x7E),
+        (-2.5, 0xC2),
+        (1e-10, 0x00),
+    ];
+
+    #[test]
+    fn e4m3_decode_matches_ml_dtypes() {
+        for &(code, want) in E4M3_GOLDEN {
+            assert_eq!(E4M3.decode(code), want, "code={code:#x}");
+        }
+    }
+
+    #[test]
+    fn e5m2_decode_matches_ml_dtypes() {
+        for &(code, want) in E5M2_GOLDEN {
+            assert_eq!(E5M2.decode(code), want, "code={code:#x}");
+        }
+    }
+
+    #[test]
+    fn e4m3_encode_matches_ml_dtypes_in_range() {
+        for &(x, want) in E4M3_ENC_GOLDEN {
+            assert_eq!(E4M3.encode(x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn encode_saturates_instead_of_nan() {
+        assert_eq!(E4M3.decode(E4M3.encode(500.0)), 448.0);
+        assert_eq!(E4M3.decode(E4M3.encode(-1e9)), -448.0);
+    }
+
+    #[test]
+    fn round_trip_all_finite_codes() {
+        for spec in [E4M3, E5M2] {
+            for code in 0u16..=255 {
+                let v = spec.decode(code as u8);
+                if !v.is_finite() {
+                    continue;
+                }
+                let back = spec.encode(v);
+                assert_eq!(
+                    spec.decode(back),
+                    v,
+                    "spec={spec:?} code={code:#x} v={v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rtne_ties_go_to_even() {
+        // halfway between 16 (0x58, man=000) and 18 (0x59, man=001) is 17
+        assert_eq!(E4M3.encode(17.0), 0x58);
+        // halfway between 18 and 20: 19 -> 20 (man 010, even)
+        assert_eq!(E4M3.encode(19.0), 0x5A);
+    }
+
+    #[test]
+    fn packed_fp8_relative_error_bounded() {
+        let mut rng = crate::util::Rng::new(3);
+        let xs = rng.normal_vec(4096, 5.0);
+        let p = pack_fp8(&xs, E4M3);
+        assert_eq!(p.data.len(), xs.len()); // 1 byte per element
+        let back = unpack_fp8(&p);
+        for (x, y) in xs.iter().zip(&back) {
+            // E4M3 relative step is 2^-3 within a binade -> 6.25% worst
+            assert!(
+                (x - y).abs() <= 0.0625 * x.abs() + 1e-3,
+                "{x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn subnormal_encode_decode() {
+        // min subnormal 2^-9 for E4M3
+        let tiny = 0.001953125f32;
+        assert_eq!(E4M3.encode(tiny), 0x01);
+        assert_eq!(E4M3.decode(0x01), tiny);
+        // below half of min subnormal -> 0
+        assert_eq!(E4M3.encode(tiny / 4.0), 0x00);
+    }
+}

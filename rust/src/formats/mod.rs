@@ -1,0 +1,405 @@
+//! Numeric-format substrate: bit-exact FP4 / FP8 / FP16 codecs and the
+//! absmax quantizers of Eq. 1, mirroring `python/compile/formats.py`.
+//!
+//! Two distinct uses on the Rust side:
+//!  * *simulation-grade* quantize-dequantize (`qdq_*`) — same LUT semantics
+//!    as the Pallas kernel, used by Table-1 fidelity analysis and the
+//!    direct-cast baselines;
+//!  * *storage-grade* byte codecs (`encode`/`decode`, [`fp8`]) — real 4-bit
+//!    and 8-bit payloads used by the FP8 gradient-communication path of the
+//!    data-parallel coordinator and by checkpoint compression.
+//!
+//! Rounding follows the paper's Appendix-A CUDA kernel exactly: nearest
+//! value with ties toward the *upper* neighbour (strict `<` thresholds at
+//! interval midpoints). Cross-checked against the Python tables in
+//! `python/tests/test_formats.py` and `tests/test_formats.rs`.
+
+pub mod fp8;
+pub mod fp16;
+
+/// A 4-bit floating-point format defined by its 8 non-negative values
+/// (Appendix A, Table 4); negatives mirror via the sign bit (code | 0x8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fp4Kind {
+    E2M1,
+    E1M2,
+    E3M0,
+}
+
+/// Positive value tables, ascending, index == 3-bit magnitude code.
+const E2M1_POS: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+const E1M2_POS: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5];
+const E3M0_POS: [f32; 8] = [0.0, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0];
+
+/// Full signed tables (ascending, ±0 collapsed) as statics so the rounding
+/// hot loop never allocates (§Perf: lut_round 42 -> ~500+ MB/s).
+const fn mirror(pos: [f32; 8]) -> [f32; 15] {
+    let mut v = [0.0f32; 15];
+    let mut i = 0;
+    while i < 7 {
+        v[i] = -pos[7 - i];
+        i += 1;
+    }
+    let mut j = 0;
+    while j < 8 {
+        v[7 + j] = pos[j];
+        j += 1;
+    }
+    v
+}
+
+const E2M1_ALL: [f32; 15] = mirror(E2M1_POS);
+const E1M2_ALL: [f32; 15] = mirror(E1M2_POS);
+const E3M0_ALL: [f32; 15] = mirror(E3M0_POS);
+
+impl Fp4Kind {
+    pub fn from_name(name: &str) -> anyhow::Result<Self> {
+        Ok(match name {
+            "e2m1" => Fp4Kind::E2M1,
+            "e1m2" => Fp4Kind::E1M2,
+            "e3m0" => Fp4Kind::E3M0,
+            other => anyhow::bail!("unknown fp4 format {other:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Fp4Kind::E2M1 => "e2m1",
+            Fp4Kind::E1M2 => "e1m2",
+            Fp4Kind::E3M0 => "e3m0",
+        }
+    }
+
+    /// (exponent bits, mantissa bits)
+    pub fn bits(self) -> (u32, u32) {
+        match self {
+            Fp4Kind::E2M1 => (2, 1),
+            Fp4Kind::E1M2 => (1, 2),
+            Fp4Kind::E3M0 => (3, 0),
+        }
+    }
+
+    #[inline]
+    pub fn positives(self) -> &'static [f32; 8] {
+        match self {
+            Fp4Kind::E2M1 => &E2M1_POS,
+            Fp4Kind::E1M2 => &E1M2_POS,
+            Fp4Kind::E3M0 => &E3M0_POS,
+        }
+    }
+
+    /// All 15 distinct representable values, ascending (±0 collapsed).
+    #[inline]
+    pub fn values(self) -> &'static [f32; 15] {
+        match self {
+            Fp4Kind::E2M1 => &E2M1_ALL,
+            Fp4Kind::E1M2 => &E1M2_ALL,
+            Fp4Kind::E3M0 => &E3M0_ALL,
+        }
+    }
+
+    /// MAX_fp4 of Eq. 1 (6.0 for E2M1).
+    #[inline]
+    pub fn max_value(self) -> f32 {
+        self.positives()[7]
+    }
+
+    /// Index (0..15) of the nearest value in `values()` for a *signed*
+    /// input. Ties round toward the upper value in the SIGNED ordering —
+    /// exactly the paper's strict-`<` comparison chain: -0.25 maps to 0.0
+    /// (not -0.5) while +0.25 maps to +0.5.
+    #[inline]
+    pub fn value_index(self, x: f32) -> usize {
+        let values = self.values();
+        // first index whose midpoint-with-previous exceeds x
+        let mut idx = values.len() - 1;
+        for i in (0..values.len() - 1).rev() {
+            let mid = 0.5 * (values[i] + values[i + 1]);
+            if x < mid {
+                idx = i;
+            }
+        }
+        idx
+    }
+
+    /// Round `x` to the nearest grid value (paper's comparison chain).
+    #[inline]
+    pub fn lut_round(self, x: f32) -> f32 {
+        self.values()[self.value_index(x)]
+    }
+
+    /// Encode to a 4-bit code: bit 3 = sign, bits 0..2 = magnitude index.
+    #[inline]
+    pub fn encode(self, x: f32) -> u8 {
+        let v = self.lut_round(x);
+        let pos = self.positives();
+        let mag = v.abs();
+        let code = pos.iter().position(|&p| p == mag).unwrap_or(0) as u8;
+        if v < 0.0 {
+            code | 0x8
+        } else {
+            code
+        }
+    }
+
+    /// Decode a 4-bit code back to f32.
+    #[inline]
+    pub fn decode(self, code: u8) -> f32 {
+        let mag = self.positives()[(code & 0x7) as usize];
+        if code & 0x8 != 0 {
+            -mag
+        } else {
+            mag
+        }
+    }
+}
+
+/// Quantization granularity (§4.1 / Fig. 6d).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One scale for the whole tensor.
+    Tensor,
+    /// One scale per row of a (rows, cols) tensor — token-wise activations.
+    Row,
+    /// One scale per column — channel-wise weights.
+    Col,
+}
+
+/// absmax scaling factor gamma = MAX / max|x| (Eq. 1); 1-safe on zeros.
+pub fn absmax_scale(xs: &[f32], max_value: f32) -> f32 {
+    let amax = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    if amax == 0.0 {
+        1.0
+    } else {
+        max_value / amax
+    }
+}
+
+/// Tensor-wise FP4 quantize-dequantize (simulation-grade).
+pub fn qdq_tensor(xs: &[f32], fmt: Fp4Kind) -> Vec<f32> {
+    let gamma = absmax_scale(xs, fmt.max_value());
+    xs.iter().map(|&x| fmt.lut_round(x * gamma) / gamma).collect()
+}
+
+/// Vector-wise FP4 qdq of a row-major (rows × cols) tensor.
+pub fn qdq_vector(
+    xs: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: Fp4Kind,
+    gran: Granularity,
+) -> Vec<f32> {
+    assert_eq!(xs.len(), rows * cols, "shape mismatch");
+    let mut out = vec![0.0f32; xs.len()];
+    match gran {
+        Granularity::Tensor => return qdq_tensor(xs, fmt),
+        Granularity::Row => {
+            for r in 0..rows {
+                let row = &xs[r * cols..(r + 1) * cols];
+                let gamma = absmax_scale(row, fmt.max_value());
+                for c in 0..cols {
+                    out[r * cols + c] = fmt.lut_round(row[c] * gamma) / gamma;
+                }
+            }
+        }
+        Granularity::Col => {
+            for c in 0..cols {
+                let mut amax = 0.0f32;
+                for r in 0..rows {
+                    amax = amax.max(xs[r * cols + c].abs());
+                }
+                let gamma = if amax == 0.0 { 1.0 } else { fmt.max_value() / amax };
+                for r in 0..rows {
+                    out[r * cols + c] = fmt.lut_round(xs[r * cols + c] * gamma) / gamma;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A real FP4 payload: packed 4-bit codes + the absmax scale that produced
+/// them. `decode` reproduces exactly what `qdq_tensor` computes, from half
+/// the bytes of an FP8 payload — the storage story of the paper's format.
+#[derive(Clone, Debug)]
+pub struct PackedFp4 {
+    pub fmt: Fp4Kind,
+    pub gamma: f32,
+    pub len: usize,
+    pub data: Vec<u8>, // two codes per byte, low nibble first
+}
+
+pub fn pack_fp4(xs: &[f32], fmt: Fp4Kind) -> PackedFp4 {
+    let gamma = absmax_scale(xs, fmt.max_value());
+    let mut data = vec![0u8; xs.len().div_ceil(2)];
+    for (i, &x) in xs.iter().enumerate() {
+        let code = fmt.encode(x * gamma);
+        data[i / 2] |= code << ((i % 2) * 4);
+    }
+    PackedFp4 { fmt, gamma, len: xs.len(), data }
+}
+
+pub fn unpack_fp4(p: &PackedFp4) -> Vec<f32> {
+    (0..p.len)
+        .map(|i| {
+            let code = (p.data[i / 2] >> ((i % 2) * 4)) & 0xF;
+            p.fmt.decode(code) / p.gamma
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e2m1_table_matches_paper() {
+        assert_eq!(
+            Fp4Kind::E2M1.values(),
+            &[-6.0, -4.0, -3.0, -2.0, -1.5, -1.0, -0.5, 0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+        );
+        assert_eq!(Fp4Kind::E2M1.max_value(), 6.0);
+    }
+
+    #[test]
+    fn e1m2_and_e3m0_tables_match_paper() {
+        assert_eq!(Fp4Kind::E1M2.values()[0], -3.5);
+        assert_eq!(Fp4Kind::E3M0.values()[0], -16.0);
+        assert_eq!(Fp4Kind::E1M2.max_value(), 3.5);
+        assert_eq!(Fp4Kind::E3M0.max_value(), 16.0);
+    }
+
+    #[test]
+    fn lut_round_matches_paper_cuda_chain() {
+        // (input, expected) from the Appendix-A kernel, incl. tie cases.
+        let cases = [
+            (-7.0, -6.0),
+            (-5.0, -4.0),
+            (-3.5, -3.0),
+            (-1.75, -1.5),
+            (-0.25, 0.0),
+            (0.0, 0.0),
+            (0.25, 0.5),
+            (0.75, 1.0),
+            (1.25, 1.5),
+            (2.4, 2.0),
+            (2.5, 3.0),
+            (3.5, 4.0),
+            (5.0, 6.0),
+            (8.0, 6.0),
+        ];
+        for (x, want) in cases {
+            assert_eq!(Fp4Kind::E2M1.lut_round(x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trip_all_codes() {
+        for fmt in [Fp4Kind::E2M1, Fp4Kind::E1M2, Fp4Kind::E3M0] {
+            for code in 0u8..16 {
+                let v = fmt.decode(code);
+                let back = fmt.encode(v);
+                // -0 encodes as +0 (code 8 -> 0): values must round-trip.
+                assert_eq!(fmt.decode(back), v, "{fmt:?} code={code}");
+            }
+        }
+    }
+
+    #[test]
+    fn qdq_tensor_is_idempotent() {
+        let mut rng = crate::util::Rng::new(0);
+        let xs = rng.normal_vec(1000, 2.0);
+        let q1 = qdq_tensor(&xs, Fp4Kind::E2M1);
+        let q2 = qdq_tensor(&q1, Fp4Kind::E2M1);
+        for (a, b) in q1.iter().zip(&q2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn qdq_zero_safe() {
+        assert_eq!(qdq_tensor(&[0.0; 8], Fp4Kind::E2M1), vec![0.0; 8]);
+    }
+
+    #[test]
+    fn qdq_row_vs_col_granularity() {
+        // one hot row: row-wise scaling contains the damage to that row
+        let mut rng = crate::util::Rng::new(1);
+        let rows = 16;
+        let cols = 16;
+        let mut xs = rng.normal_vec(rows * cols, 1.0);
+        for c in 0..cols {
+            xs[c] *= 100.0;
+        }
+        let rq = qdq_vector(&xs, rows, cols, Fp4Kind::E2M1, Granularity::Row);
+        let tq = qdq_vector(&xs, rows, cols, Fp4Kind::E2M1, Granularity::Tensor);
+        let mse = |a: &[f32]| -> f64 {
+            a.iter()
+                .zip(&xs)
+                .skip(cols) // exclude the outlier row itself
+                .map(|(q, x)| ((q - x) as f64).powi(2))
+                .sum::<f64>()
+        };
+        assert!(mse(&rq) < mse(&tq) / 10.0);
+    }
+
+    #[test]
+    fn qdq_col_scales_per_channel() {
+        // column j scaled by 10^j must quantize identically per column
+        let base = [0.3f32, -0.7, 1.1, 0.05];
+        let rows = base.len();
+        let cols = 3;
+        let mut xs = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                xs[r * cols + c] = base[r] * 10f32.powi(c as i32);
+            }
+        }
+        let q = qdq_vector(&xs, rows, cols, Fp4Kind::E2M1, Granularity::Col);
+        for r in 0..rows {
+            for c in 1..cols {
+                let ratio = q[r * cols + c] / q[r * cols];
+                assert!(
+                    (ratio - 10f32.powi(c as i32)).abs() / 10f32.powi(c as i32) < 1e-5,
+                    "r={r} c={c} ratio={ratio}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_fp4_matches_qdq_and_halves_bytes() {
+        let mut rng = crate::util::Rng::new(2);
+        let xs = rng.normal_vec(1001, 3.0); // odd length: padding path
+        let p = pack_fp4(&xs, Fp4Kind::E2M1);
+        assert_eq!(p.data.len(), 501);
+        let back = unpack_fp4(&p);
+        let q = qdq_tensor(&xs, Fp4Kind::E2M1);
+        for (a, b) in back.iter().zip(&q) {
+            assert!((a - b).abs() <= 1e-6 * a.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn value_index_is_monotone() {
+        for fmt in [Fp4Kind::E2M1, Fp4Kind::E1M2, Fp4Kind::E3M0] {
+            let mut last = 0usize;
+            let mut x = -fmt.max_value() - 1.0;
+            while x < fmt.max_value() + 1.0 {
+                let c = fmt.value_index(x);
+                assert!(c >= last, "{fmt:?} x={x}");
+                last = c;
+                x += 0.01;
+            }
+        }
+    }
+
+    #[test]
+    fn signed_tie_rounds_up_like_paper_kernel() {
+        // the paper's chain: (value < -0.25) ? -0.5 : (value < 0.25) ? 0.0
+        assert_eq!(Fp4Kind::E2M1.lut_round(-0.25), 0.0);
+        assert_eq!(Fp4Kind::E2M1.lut_round(0.25), 0.5);
+        assert_eq!(Fp4Kind::E2M1.lut_round(-5.0), -4.0);
+        assert_eq!(Fp4Kind::E2M1.lut_round(5.0), 6.0);
+    }
+}

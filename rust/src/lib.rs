@@ -1,0 +1,48 @@
+//! # fp4train
+//!
+//! Reproduction of *"Optimizing Large Language Model Training Using FP4
+//! Quantization"* (ICML 2025) as a three-layer Rust + JAX + Pallas stack:
+//! this crate is the Layer-3 coordinator — it loads AOT-compiled HLO
+//! artifacts (built once by `python/compile/aot.py`), drives training /
+//! evaluation through the PJRT CPU client, and implements every substrate
+//! the paper's experiments need (numeric-format codecs, quantizers, DGE /
+//! OCC math, synthetic corpora, data pipeline, mixed-precision gradient
+//! communication, analytical cost model, fidelity metrics, experiment
+//! drivers for every table and figure).
+//!
+//! Python never runs on the training path: `make artifacts` is the only
+//! Python entry point, after which the `fp4train` binary is self-contained.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! - [`formats`]  — bit-exact FP4 (E2M1/E1M2/E3M0), FP8 (E4M3/E5M2) and
+//!   scaled-FP16 codecs + absmax quantizers (Eq. 1, Appendix A).
+//! - [`quant`]    — DGE surrogate math (Eqs. 7-8), OCC clamping (Eq. 9),
+//!   SIM/MSE/SNR fidelity metrics (Table 1).
+//! - [`data`]     — seeded synthetic corpora, byte tokenizer, sharding,
+//!   background prefetching batch loader.
+//! - [`runtime`]  — manifest parsing, artifact loading/compilation cache,
+//!   typed step execution over PJRT.
+//! - [`coordinator`] — the training orchestrator: single-process trainer
+//!   (fused or burst stepping), simulated data-parallel workers with
+//!   FP8-compressed gradient all-reduce, checkpoints, metric logs.
+//! - [`eval`]     — perplexity + zero-shot multiple-choice harness.
+//! - [`costmodel`] — Appendix B analytical FLOPs/speedup model (Table 5).
+//! - [`stats`]    — histograms / channel statistics for Figs. 4, 8-14.
+//! - [`report`]   — table renderers + CSV writers for every experiment.
+//! - [`experiments`] — `fp4train repro <id>` drivers (fig1..fig14, tab1-5).
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod formats;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod stats;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,202 @@
+//! fp4train — Layer-3 coordinator CLI.
+//!
+//! ```text
+//! fp4train train  [-o preset=.. -o policy=.. -o steps=.. -o corpus=..]
+//! fp4train eval   [-o preset=.. -o policy=..]      held-out ppl + zero-shot
+//! fp4train dp     [-o workers=4 -o comm=fp8|f32]   data-parallel sim
+//! fp4train repro  <fig1|fig3|fig4|fig5|fig6a..d|tab1..tab5|fig7|dists|perf|all>
+//! fp4train formats                                  print FP4 tables
+//! fp4train info                                     manifest inventory
+//! ```
+
+use anyhow::Result;
+use fp4train::cli::Args;
+use fp4train::config::RunConfig;
+use fp4train::coordinator::dp::{CommPrecision, DpSim};
+use fp4train::coordinator::Trainer;
+use fp4train::data::corpus::{Corpus, CorpusKind};
+use fp4train::data::loader::{BatchLoader, LoaderConfig, Sampler};
+use fp4train::experiments;
+use fp4train::runtime::Engine;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "dp" => cmd_dp(&args),
+        "repro" => cmd_repro(&args),
+        "formats" => fp4train::experiments::tabs::tab4(),
+        "info" => cmd_info(&args),
+        "help" | _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+fp4train — FP4 quantized LLM training (ICML'25 reproduction)
+
+commands:
+  train    train one (preset, policy) arm; -o preset=.. -o policy=..
+           -o steps=.. -o corpus=zipf|markov|code|mix -o seed=..
+  eval     held-out perplexity + zero-shot MC for a trained arm
+  dp       simulated data-parallel training with FP8 gradient all-reduce
+           -o workers=4 -o comm=fp8|f32 -o steps=..
+  repro    regenerate a paper table/figure: fig1 fig3 fig4 fig5 fig6a-d
+           tab1 tab2 tab3 tab4 tab5 fig7 dists perf all   [--quick]
+  formats  print the FP4 value tables (Appendix A, Table 4)
+  info     list artifacts in the manifest
+
+run `make artifacts` (and `make artifacts-repro` for repro) first.";
+
+fn run_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    for (k, v) in &args.overrides {
+        if !matches!(k.as_str(), "workers" | "comm" | "quick") {
+            cfg.set(k, v)?;
+        }
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let engine = std::sync::Arc::new(Engine::load(&cfg.artifacts_dir)?);
+    let corpus = Corpus::generate(cfg.corpus, 1234, cfg.corpus_len, cfg.heldout_len);
+    let mut trainer = Trainer::new(engine.clone(), &cfg.preset, &cfg.policy, cfg.seed)?;
+    let model = trainer.entry.model.clone();
+    println!(
+        "training {}/{} ({} params) for {} steps on {} corpus",
+        cfg.preset,
+        cfg.policy,
+        model.param_count,
+        cfg.steps,
+        cfg.corpus.name()
+    );
+    let loader = BatchLoader::new(
+        &corpus,
+        LoaderConfig {
+            batch: model.batch,
+            seq_len: model.seq_len,
+            seed: cfg.seed as u64,
+            ..Default::default()
+        },
+    );
+    let windows = Sampler::heldout_windows(&corpus, model.seq_len);
+    let mut done = 0;
+    while done < cfg.steps {
+        let chunk = cfg.eval_every.min(cfg.steps - done);
+        let recs = trainer.run(&loader, chunk)?;
+        done = trainer.step;
+        let eval = trainer.eval_loss(&windows)?;
+        let last = recs.last().unwrap();
+        println!(
+            "step {:>5}  train loss {:.4}  heldout loss {:.4}  gnorm {:.3}",
+            last.step, last.loss, eval, last.gnorm
+        );
+    }
+    let out = cfg.out_dir.join(format!("{}_{}.csv", cfg.preset, cfg.policy));
+    trainer.write_history_csv(&out)?;
+    let ckpt = cfg.out_dir.join(format!("{}_{}.ckpt", cfg.preset, cfg.policy));
+    let init_spec = trainer.entry.step("init")?.clone();
+    fp4train::coordinator::checkpoint::save(
+        &ckpt,
+        trainer.step as u64,
+        &init_spec.outputs,
+        trainer.state(),
+    )?;
+    println!("history -> {out:?}\ncheckpoint -> {ckpt:?}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let engine = std::sync::Arc::new(Engine::load(&cfg.artifacts_dir)?);
+    let mut trainer = Trainer::new(engine.clone(), &cfg.preset, &cfg.policy, cfg.seed)?;
+    // restore if a checkpoint exists
+    let ckpt = cfg.out_dir.join(format!("{}_{}.ckpt", cfg.preset, cfg.policy));
+    if ckpt.exists() {
+        let ck = fp4train::coordinator::checkpoint::load(&ckpt)?;
+        let spec = trainer.entry.step("init")?.clone();
+        trainer.replace_state(fp4train::coordinator::checkpoint::to_literals(
+            &ck,
+            &spec.outputs,
+        )?)?;
+        println!("restored {ckpt:?} (step {})", ck.step);
+    } else {
+        println!("no checkpoint at {ckpt:?}; evaluating the random init");
+    }
+    for kind in CorpusKind::ALL {
+        let corpus = Corpus::generate(kind, 1234, 1000, cfg.heldout_len);
+        let ppl =
+            fp4train::eval::heldout_ppl(&engine, &trainer.entry, trainer.params(), &corpus)?;
+        let items = fp4train::eval::build_mc_items(&corpus, 64, 128, 32, 77);
+        let acc =
+            fp4train::eval::mc_accuracy(&engine, &trainer.entry, trainer.params(), &items)?;
+        println!(
+            "{:>7}: ppl {:8.2}   zero-shot acc {:5.1}% (chance 25%)",
+            kind.name(),
+            ppl,
+            acc * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_dp(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let workers: usize = args.get("workers").unwrap_or("4").parse()?;
+    let comm = match args.get("comm").unwrap_or("fp8") {
+        "f32" => CommPrecision::F32,
+        _ => CommPrecision::Fp8,
+    };
+    let engine = std::sync::Arc::new(Engine::load(&cfg.artifacts_dir)?);
+    let corpus = Corpus::generate(cfg.corpus, 1234, cfg.corpus_len, cfg.heldout_len);
+    let mut sim = DpSim::new(engine.clone(), &cfg.preset, &cfg.policy, &corpus, workers, cfg.seed, comm)?;
+    println!("dp-sim: {}", sim.context_label());
+    for step in 0..cfg.steps {
+        let loss = sim.dp_step()?;
+        if step % 10 == 0 || step + 1 == cfg.steps {
+            println!(
+                "step {:>4}  mean worker loss {:.4}  wire {:.1} MB (vs {:.1} MB f32, {:.2}x)",
+                step,
+                loss,
+                sim.stats.bytes_sent as f64 / 1e6,
+                sim.stats.bytes_f32_equiv as f64 / 1e6,
+                sim.compression()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let id = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let artifacts = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let mut ctx = experiments::Ctx::new(&artifacts)?;
+    if let Some(s) = args.get("seed") {
+        ctx.seed = s.parse()?;
+    }
+    experiments::run(id, &mut ctx, args.flag("quick"))
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let artifacts = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let engine = Engine::load(&artifacts)?;
+    println!("platform: {}", engine.platform());
+    for (key, cfg) in &engine.manifest.configs {
+        println!(
+            "{key}: {} params, dim {}, {} layers, steps: {:?}",
+            cfg.model.param_count,
+            cfg.model.dim,
+            cfg.model.n_layers,
+            cfg.steps.keys().collect::<Vec<_>>()
+        );
+    }
+    for (key, k) in &engine.manifest.kernels {
+        println!("kernel {key}: {}", k.file);
+    }
+    Ok(())
+}

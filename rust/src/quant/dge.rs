@@ -1,0 +1,133 @@
+//! Differentiable Gradient Estimator math (§3.1, Eqs. 7-8, Appendix C).
+//!
+//! Rust mirror of `compile/kernels/ref.py::{dge_forward,dge_prime}`; used
+//! by the Figure-3 series generator (`repro fig3`) and by the property
+//! tests that pin the mathematical guarantees (monotonicity, grid
+//! interpolation, the 1/k edge derivative and the 3.0 clip).
+
+use crate::formats::Fp4Kind;
+
+/// Locate the quantization interval [lo, hi) containing `x` (clamped to
+/// the format's dynamic range).
+fn interval(fmt: Fp4Kind, x: f32) -> (f32, f32) {
+    let values = fmt.values();
+    let n = values.len();
+    // first index with values[i] > x
+    let mut hi_idx = n - 1;
+    for (i, &v) in values.iter().enumerate() {
+        if v > x {
+            hi_idx = i;
+            break;
+        }
+    }
+    let hi_idx = hi_idx.clamp(1, n - 1);
+    (values[hi_idx - 1], values[hi_idx])
+}
+
+/// The differentiable surrogate f(x) of Eq. 7, pieced per interval.
+pub fn dge_forward(fmt: Fp4Kind, x: f32, k: f32) -> f32 {
+    let (lo, hi) = interval(fmt, x);
+    let delta = hi - lo;
+    let u = 2.0 * (x - lo) / delta - 1.0;
+    lo + delta / 2.0 * (1.0 + u.signum() * u.abs().powf(1.0 / k))
+}
+
+/// The DGE correction term f'(x) of Eq. 8, clipped (Appendix C.3).
+pub fn dge_prime(fmt: Fp4Kind, x: f32, k: f32, clip: f32) -> f32 {
+    let (lo, hi) = interval(fmt, x);
+    let delta = hi - lo;
+    let u = (2.0 * (x - lo) / delta - 1.0).abs().max(1e-12);
+    ((1.0 / k) * u.powf(1.0 / k - 1.0)).min(clip)
+}
+
+/// Series for Figure 3: (x, hard quant, f, f', ste') over [-max, max].
+pub fn fig3_series(fmt: Fp4Kind, k: f32, clip: f32, n: usize) -> Vec<(f32, f32, f32, f32)> {
+    let max = fmt.max_value();
+    (0..n)
+        .map(|i| {
+            let x = -max + 2.0 * max * i as f32 / (n - 1) as f32;
+            (x, fmt.lut_round(x), dge_forward(fmt, x, k), dge_prime(fmt, x, k, clip))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const F: Fp4Kind = Fp4Kind::E2M1;
+
+    #[test]
+    fn forward_hits_grid_points() {
+        for &v in F.values().iter() {
+            let y = dge_forward(F, v, 5.0);
+            assert!((y - v).abs() < 1e-5, "v={v} y={y}");
+        }
+    }
+
+    #[test]
+    fn forward_monotone() {
+        let mut last = f32::NEG_INFINITY;
+        let mut x = -6.0f32;
+        while x <= 6.0 {
+            let y = dge_forward(F, x, 5.0);
+            assert!(y >= last - 1e-6, "x={x}");
+            last = y;
+            x += 0.001;
+        }
+    }
+
+    #[test]
+    fn prime_clips_at_three() {
+        let mut max_seen = 0.0f32;
+        let mut x = -6.0f32;
+        while x <= 6.0 {
+            let d = dge_prime(F, x, 5.0, 3.0);
+            assert!(d <= 3.0 + 1e-6);
+            assert!(d > 0.0);
+            max_seen = max_seen.max(d);
+            x += 0.0001;
+        }
+        assert!(max_seen >= 3.0 - 1e-3, "cap must bind, max={max_seen}");
+    }
+
+    #[test]
+    fn prime_is_one_over_k_at_interval_edges() {
+        for k in [3.0f32, 5.0, 10.0] {
+            let d = dge_prime(F, 1.0, k, 3.0); // grid point = interval edge
+            assert!((d - 1.0 / k).abs() < 1e-4, "k={k} d={d}");
+        }
+    }
+
+    #[test]
+    fn larger_k_approximates_hard_quant_better() {
+        let err = |k: f32| -> f64 {
+            let mut e = 0.0f64;
+            let mut x = -5.99f32;
+            while x < 6.0 {
+                e += (dge_forward(F, x, k) - F.lut_round(x)).abs() as f64;
+                x += 0.01;
+            }
+            e
+        };
+        assert!(err(10.0) < err(5.0));
+        assert!(err(5.0) < err(2.0));
+    }
+
+    #[test]
+    fn matches_python_reference_values() {
+        // spot values computed with compile/kernels/ref.py (k=5)
+        // x=0.25 is the midpoint of [0, 0.5] -> f = 0.25
+        assert!((dge_forward(F, 0.25, 5.0) - 0.25).abs() < 1e-6);
+        // x=0.5 edge -> f' = 1/5
+        assert!((dge_prime(F, 0.5, 5.0, 3.0) - 0.2).abs() < 1e-5);
+    }
+
+    #[test]
+    fn fig3_series_shape() {
+        let s = fig3_series(F, 5.0, 3.0, 101);
+        assert_eq!(s.len(), 101);
+        assert_eq!(s[0].0, -6.0);
+        assert_eq!(s[100].0, 6.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Outlier Clamping and Compensation (§3.2, Eq. 9) — offline analysis side.
+//!
+//! The *training-path* OCC lives inside the AOT artifacts (L2); this Rust
+//! mirror reproduces the same clamp/residual split on probe tensors for
+//! Table 1, Figure 4 and the Appendix-D distribution studies, and measures
+//! the residual sparsity that drives the Appendix-B overhead model.
+
+/// Signed quantile of a sample (linear interpolation, matching
+/// `jnp.quantile`'s default method).
+pub fn quantile(xs: &[f32], q: f64) -> f32 {
+    assert!(!xs.is_empty());
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let i = pos.floor() as usize;
+    let frac = pos - i as f64;
+    if i + 1 >= sorted.len() {
+        sorted[sorted.len() - 1]
+    } else {
+        (sorted[i] as f64 * (1.0 - frac) + sorted[i + 1] as f64 * frac) as f32
+    }
+}
+
+/// Eq. 9: clamp to the (alpha, 1-alpha) quantiles; returns (Y_c, ΔY) with
+/// Y = Y_c + ΔY exactly.
+pub fn clamp_tensor(xs: &[f32], alpha: f64) -> (Vec<f32>, Vec<f32>) {
+    let hi = quantile(xs, alpha);
+    let lo = quantile(xs, 1.0 - alpha);
+    let clamped: Vec<f32> = xs.iter().map(|&x| x.clamp(lo, hi)).collect();
+    let delta: Vec<f32> = xs.iter().zip(&clamped).map(|(&x, &c)| x - c).collect();
+    (clamped, delta)
+}
+
+/// Fraction of non-zero entries of ΔY (the paper's 0.2%–6% figures).
+pub fn residual_sparsity(xs: &[f32], alpha: f64) -> f64 {
+    let (_, delta) = clamp_tensor(xs, alpha);
+    delta.iter().filter(|&&d| d != 0.0).count() as f64 / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_endpoints_and_median() {
+        let xs = vec![1.0f32, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert_eq!(quantile(&xs, 0.25), 2.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = vec![0.0f32, 10.0];
+        assert!((quantile(&xs, 0.3) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clamp_reconstruction_exact() {
+        let mut rng = crate::util::Rng::new(0);
+        let xs = rng.normal_vec(1000, 3.0);
+        let (c, d) = clamp_tensor(&xs, 0.99);
+        for i in 0..xs.len() {
+            assert_eq!(c[i] + d[i], xs[i]);
+        }
+    }
+
+    #[test]
+    fn clamp_bounds_hold() {
+        let mut rng = crate::util::Rng::new(1);
+        let xs = rng.normal_vec(10_000, 1.0);
+        let hi = quantile(&xs, 0.99);
+        let lo = quantile(&xs, 0.01);
+        let (c, _) = clamp_tensor(&xs, 0.99);
+        for &v in &c {
+            assert!(v <= hi && v >= lo);
+        }
+    }
+
+    #[test]
+    fn sparsity_close_to_two_sided_tail_mass() {
+        let mut rng = crate::util::Rng::new(2);
+        let xs = rng.normal_vec(100_000, 1.0);
+        for alpha in [0.999f64, 0.99, 0.97] {
+            let s = residual_sparsity(&xs, alpha);
+            let expect = 2.0 * (1.0 - alpha);
+            assert!(
+                (s - expect).abs() < 0.5 * expect + 1e-4,
+                "alpha={alpha} s={s} expect={expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn lower_alpha_denser_residual() {
+        let mut rng = crate::util::Rng::new(3);
+        let xs = rng.normal_vec(50_000, 1.0);
+        let s999 = residual_sparsity(&xs, 0.999);
+        let s99 = residual_sparsity(&xs, 0.99);
+        let s97 = residual_sparsity(&xs, 0.97);
+        assert!(s999 < s99 && s99 < s97);
+    }
+}

@@ -1,0 +1,93 @@
+//! Table / figure rendering: aligned ASCII tables for the console (the
+//! paper-table reproductions print in the paper's own row/column layout)
+//! and CSV series for the figures.
+
+use std::fmt::Write as _;
+
+/// Fixed-column ASCII table.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "table row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows_str(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for c in 0..ncol {
+            width[c] = self.header[c].len();
+            for r in &self.rows {
+                width[c] = width[c].max(r[c].len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (c, cell) in cells.iter().enumerate() {
+                let _ = write!(out, "| {:w$} ", cell, w = width[c]);
+            }
+            let _ = writeln!(out, "|");
+        };
+        line(&mut out, &self.header);
+        let mut sep = String::new();
+        for w in &width {
+            let _ = write!(sep, "|{:-<w$}", "", w = w + 2);
+        }
+        let _ = writeln!(out, "{sep}|");
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+}
+
+/// Format helpers shared by the experiment drivers.
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+pub fn f4(v: f64) -> String {
+    format!("{v:.4}")
+}
+pub fn pct(v: f64) -> String {
+    format!("{:.2}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["name", "val"]);
+        t.rows_str(&["a", "1"]);
+        t.rows_str(&["longer", "22.5"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all lines same width
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(s.contains("longer"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.rows_str(&["only-one"]);
+    }
+}

@@ -1,0 +1,136 @@
+//! PJRT execution engine: compile-once cache + typed step execution.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{Dtype, IoDesc, Manifest, StepSpec};
+
+/// The runtime engine: one PJRT CPU client + a per-file executable cache.
+///
+/// Compilation happens at most once per artifact file per process;
+/// `Engine` is cheap to share behind `Arc` across the coordinator's
+/// worker threads (compilation and execution are internally synchronized
+/// by XLA; the cache uses a mutex only around the HashMap).
+pub struct Engine {
+    client: PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Load the manifest from `dir` and create the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact file.
+    pub fn executable(&self, file: &str) -> Result<Arc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling {file}"))?,
+        );
+        self.cache.lock().unwrap().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a step with host literals; returns one literal per declared
+    /// output (handles both tuple and single-array XLA roots).
+    pub fn run<L: std::borrow::Borrow<Literal>>(
+        &self,
+        spec: &StepSpec,
+        args: &[L],
+    ) -> Result<Vec<Literal>> {
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "step {} expects {} inputs, got {}",
+                spec.key,
+                spec.inputs.len(),
+                args.len()
+            );
+        }
+        let exe = self.executable(&spec.file)?;
+        let outs = exe.execute::<L>(args)?;
+        let root = outs[0][0].to_literal_sync()?;
+        let literals = if root.shape()?.is_tuple() {
+            root.to_tuple()?
+        } else {
+            vec![root]
+        };
+        if literals.len() != spec.outputs.len() {
+            bail!(
+                "step {} declared {} outputs, executable produced {}",
+                spec.key,
+                spec.outputs.len(),
+                literals.len()
+            );
+        }
+        Ok(literals)
+    }
+
+    /// Scalar f32 literal.
+    pub fn scalar_f32(v: f32) -> Literal {
+        Literal::scalar(v)
+    }
+
+    /// Tokens literal of the declared shape from a flat i32 buffer.
+    pub fn tokens_literal(io: &IoDesc, tokens: &[i32]) -> Result<Literal> {
+        if io.dtype != Dtype::I32 {
+            bail!("{} is not an i32 slot", io.name);
+        }
+        if tokens.len() != io.elements() {
+            bail!(
+                "{} expects {} tokens, got {}",
+                io.name,
+                io.elements(),
+                tokens.len()
+            );
+        }
+        let dims: Vec<i64> = io.shape.iter().map(|&d| d as i64).collect();
+        Ok(Literal::vec1(tokens).reshape(&dims)?)
+    }
+
+    /// f32 tensor literal of the declared shape from a flat buffer.
+    pub fn f32_literal(io: &IoDesc, data: &[f32]) -> Result<Literal> {
+        if io.dtype != Dtype::F32 {
+            bail!("{} is not an f32 slot", io.name);
+        }
+        if data.len() != io.elements() {
+            bail!("{} expects {} elements, got {}", io.name, io.elements(), data.len());
+        }
+        if io.shape.is_empty() {
+            return Ok(Literal::scalar(data[0]));
+        }
+        let dims: Vec<i64> = io.shape.iter().map(|&d| d as i64).collect();
+        Ok(Literal::vec1(data).reshape(&dims)?)
+    }
+
+    /// Extract an f32 vector from an output literal.
+    pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Extract a scalar f32 from an output literal.
+    pub fn to_f32_scalar(lit: &Literal) -> Result<f32> {
+        Ok(lit.get_first_element::<f32>()?)
+    }
+}

@@ -1,0 +1,388 @@
+//! Parser for the line-oriented artifact manifest emitted by
+//! `python/compile/aot.py::write_manifest_txt` (the image has no JSON
+//! crate offline; `manifest.json` is the human-readable twin).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Dtype of an artifact IO slot. Only what the artifacts actually use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+}
+
+/// One input or output slot of a lowered step.
+#[derive(Clone, Debug)]
+pub struct IoDesc {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>, // empty = scalar
+    pub role: String,      // param | opt_m | opt_v | tokens | loss | ...
+}
+
+impl IoDesc {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One lowered executable (a step kind for a config, or a kernel bench).
+#[derive(Clone, Debug)]
+pub struct StepSpec {
+    pub key: String, // e.g. "train@300", "init", "kernel_qdq"
+    pub file: String,
+    pub total_steps: usize,
+    pub burst_k: usize,
+    pub inputs: Vec<IoDesc>,
+    pub outputs: Vec<IoDesc>,
+}
+
+impl StepSpec {
+    /// Indices of inputs with a given role, in manifest order.
+    pub fn inputs_with_role(&self, role: &str) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, io)| io.role == role)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn outputs_with_role(&self, role: &str) -> Vec<usize> {
+        self.outputs
+            .iter()
+            .enumerate()
+            .filter(|(_, io)| io.role == role)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Model geometry recorded at lowering time.
+#[derive(Clone, Debug, Default)]
+pub struct ModelInfo {
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn_dim: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub vocab: usize,
+    pub param_count: usize,
+}
+
+/// All artifacts lowered for one (preset, policy) pair.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigEntry {
+    pub key: String, // "preset/policy"
+    pub preset: String,
+    pub policy: BTreeMap<String, String>,
+    pub model: ModelInfo,
+    pub steps: BTreeMap<String, StepSpec>,
+}
+
+impl ConfigEntry {
+    /// The training step to use: prefers a burst artifact, falls back to
+    /// the single-step one. Returns (spec, is_burst).
+    pub fn train_step(&self) -> Option<(&StepSpec, bool)> {
+        let burst = self.steps.iter().find(|(k, _)| k.starts_with("burst@"));
+        if let Some((_, s)) = burst {
+            return Some((s, true));
+        }
+        self.steps
+            .iter()
+            .find(|(k, _)| k.starts_with("train@"))
+            .map(|(_, s)| (s, false))
+    }
+
+    pub fn step(&self, key_prefix: &str) -> Result<&StepSpec> {
+        self.steps
+            .iter()
+            .find(|(k, _)| k.as_str() == key_prefix || k.starts_with(&format!("{key_prefix}@")))
+            .map(|(_, s)| s)
+            .with_context(|| {
+                format!(
+                    "config {} has no step {key_prefix:?} (have: {:?}); \
+                     run `make artifacts-repro`",
+                    self.key,
+                    self.steps.keys().collect::<Vec<_>>()
+                )
+            })
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, ConfigEntry>,
+    pub kernels: BTreeMap<String, StepSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn config(&self, preset: &str, policy: &str) -> Result<&ConfigEntry> {
+        let key = format!("{preset}/{policy}");
+        self.configs.get(&key).with_context(|| {
+            format!(
+                "no artifacts for {key:?} (have: {:?}); run `make artifacts-repro`",
+                self.configs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut m = Manifest::default();
+        let mut cur: Option<ConfigEntry> = None;
+        let mut cur_step: Option<StepSpec> = None;
+        let mut cur_kernel: Option<StepSpec> = None;
+
+        fn kv(tok: &str) -> Result<(&str, &str)> {
+            tok.split_once('=').context("expected key=value")
+        }
+
+        let flush_step =
+            |cur: &mut Option<ConfigEntry>, cur_step: &mut Option<StepSpec>| {
+                if let (Some(cfg), Some(st)) = (cur.as_mut(), cur_step.take()) {
+                    cfg.steps.insert(st.key.clone(), st);
+                }
+            };
+
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let tag = parts.next().unwrap();
+            let ctx = || format!("manifest line {}: {line}", lineno + 1);
+            match tag {
+                "#CONFIG" => {
+                    flush_step(&mut cur, &mut cur_step);
+                    if let Some(c) = cur.take() {
+                        m.configs.insert(c.key.clone(), c);
+                    }
+                    let key = parts.next().with_context(ctx)?.to_string();
+                    let preset =
+                        key.split('/').next().with_context(ctx)?.to_string();
+                    cur = Some(ConfigEntry { key, preset, ..Default::default() });
+                }
+                "#MODEL" => {
+                    let cfg = cur.as_mut().with_context(ctx)?;
+                    for tok in parts {
+                        let (k, v) = kv(tok).with_context(ctx)?;
+                        let v: usize = v.parse().with_context(ctx)?;
+                        match k {
+                            "dim" => cfg.model.dim = v,
+                            "n_layers" => cfg.model.n_layers = v,
+                            "n_heads" => cfg.model.n_heads = v,
+                            "ffn_dim" => cfg.model.ffn_dim = v,
+                            "seq_len" => cfg.model.seq_len = v,
+                            "batch" => cfg.model.batch = v,
+                            "vocab" => cfg.model.vocab = v,
+                            "param_count" => cfg.model.param_count = v,
+                            _ => {}
+                        }
+                    }
+                }
+                "#POLICY" => {
+                    let cfg = cur.as_mut().with_context(ctx)?;
+                    for tok in parts {
+                        let (k, v) = kv(tok).with_context(ctx)?;
+                        cfg.policy.insert(k.to_string(), v.to_string());
+                    }
+                }
+                "#STEP" => {
+                    flush_step(&mut cur, &mut cur_step);
+                    let key = parts.next().with_context(ctx)?.to_string();
+                    let mut st = StepSpec {
+                        key,
+                        file: String::new(),
+                        total_steps: 0,
+                        burst_k: 0,
+                        inputs: vec![],
+                        outputs: vec![],
+                    };
+                    for tok in parts {
+                        let (k, v) = kv(tok).with_context(ctx)?;
+                        match k {
+                            "file" => st.file = v.to_string(),
+                            "total_steps" => st.total_steps = v.parse().with_context(ctx)?,
+                            "burst_k" => st.burst_k = v.parse().with_context(ctx)?,
+                            _ => {}
+                        }
+                    }
+                    cur_step = Some(st);
+                }
+                "#KERNEL" => {
+                    flush_step(&mut cur, &mut cur_step);
+                    if let Some(c) = cur.take() {
+                        m.configs.insert(c.key.clone(), c);
+                    }
+                    if let Some(k) = cur_kernel.take() {
+                        m.kernels.insert(k.key.clone(), k);
+                    }
+                    let key = parts.next().with_context(ctx)?.to_string();
+                    let mut st = StepSpec {
+                        key,
+                        file: String::new(),
+                        total_steps: 0,
+                        burst_k: 0,
+                        inputs: vec![],
+                        outputs: vec![],
+                    };
+                    for tok in parts {
+                        let (k, v) = kv(tok).with_context(ctx)?;
+                        if k == "file" {
+                            st.file = v.to_string();
+                        }
+                    }
+                    cur_kernel = Some(st);
+                }
+                "#IN" | "#OUT" => {
+                    let name = parts.next().with_context(ctx)?.to_string();
+                    let dtype = Dtype::parse(parts.next().with_context(ctx)?)?;
+                    let shape_s = parts.next().with_context(ctx)?;
+                    let shape = if shape_s == "-" {
+                        vec![]
+                    } else {
+                        shape_s
+                            .split('x')
+                            .map(|d| d.parse::<usize>())
+                            .collect::<std::result::Result<_, _>>()
+                            .with_context(ctx)?
+                    };
+                    let role = parts.next().with_context(ctx)?.to_string();
+                    let io = IoDesc { name, dtype, shape, role };
+                    let slot = cur_step.as_mut().or(cur_kernel.as_mut()).with_context(ctx)?;
+                    if tag == "#IN" {
+                        slot.inputs.push(io);
+                    } else {
+                        slot.outputs.push(io);
+                    }
+                }
+                "#END" => {
+                    flush_step(&mut cur, &mut cur_step);
+                    if let Some(c) = cur.take() {
+                        m.configs.insert(c.key.clone(), c);
+                    }
+                    if let Some(k) = cur_kernel.take() {
+                        m.kernels.insert(k.key.clone(), k);
+                    }
+                }
+                _ => bail!("unknown manifest tag {tag:?} ({})", ctx()),
+            }
+        }
+        flush_step(&mut cur, &mut cur_step);
+        if let Some(c) = cur.take() {
+            m.configs.insert(c.key.clone(), c);
+        }
+        if let Some(k) = cur_kernel.take() {
+            m.kernels.insert(k.key.clone(), k);
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+#CONFIG nano/fp4
+#MODEL batch=8 dim=64 ffn_dim=192 n_heads=2 n_layers=2 param_count=123200 seq_len=128 vocab=256
+#POLICY act_bits=4 dge_k=5.0 name=fp4 occ_alpha=0.99
+#STEP train@300 file=nano__fp4__train_s300.hlo.txt total_steps=300 burst_k=0
+#IN embed f32 256x64 param
+#IN step f32 - scalar_step
+#IN tokens i32 8x128 tokens
+#OUT embed f32 256x64 param
+#OUT loss f32 - loss
+#STEP burst@300 file=nano__fp4__burst_s300.hlo.txt total_steps=300 burst_k=16
+#IN embed f32 256x64 param
+#IN tokens i32 16x8x128 tokens
+#OUT losses f32 16 loss
+#END
+#KERNEL kernel_qdq file=kernel_qdq.hlo.txt
+#IN x f32 256x512 input
+#OUT y f32 256x512 output
+#END
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let cfg = m.configs.get("nano/fp4").unwrap();
+        assert_eq!(cfg.preset, "nano");
+        assert_eq!(cfg.model.dim, 64);
+        assert_eq!(cfg.model.param_count, 123_200);
+        assert_eq!(cfg.policy.get("dge_k").unwrap(), "5.0");
+        let st = cfg.steps.get("train@300").unwrap();
+        assert_eq!(st.inputs.len(), 3);
+        assert_eq!(st.inputs[1].shape, Vec::<usize>::new());
+        assert_eq!(st.inputs[2].dtype, Dtype::I32);
+        assert_eq!(st.outputs[1].role, "loss");
+        assert!(m.kernels.contains_key("kernel_qdq"));
+    }
+
+    #[test]
+    fn train_step_prefers_burst() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let cfg = m.configs.get("nano/fp4").unwrap();
+        let (st, is_burst) = cfg.train_step().unwrap();
+        assert!(is_burst);
+        assert_eq!(st.burst_k, 16);
+    }
+
+    #[test]
+    fn step_lookup_by_prefix() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let cfg = m.configs.get("nano/fp4").unwrap();
+        assert!(cfg.step("train").is_ok());
+        assert!(cfg.step("eval").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.configs.contains_key("nano/fp4"));
+            let cfg = &m.configs["nano/fp4"];
+            // 11 param tensors * 3 (p, m, v) + step + tokens
+            let st = cfg.step("train").unwrap();
+            assert_eq!(st.inputs.len(), 35);
+            assert_eq!(st.outputs.len(), 36);
+        }
+    }
+
+    #[test]
+    fn io_elements() {
+        let io = IoDesc {
+            name: "x".into(),
+            dtype: Dtype::F32,
+            shape: vec![2, 3, 4],
+            role: "param".into(),
+        };
+        assert_eq!(io.elements(), 24);
+        let s = IoDesc { name: "s".into(), dtype: Dtype::F32, shape: vec![], role: "x".into() };
+        assert_eq!(s.elements(), 1);
+    }
+}

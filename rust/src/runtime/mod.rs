@@ -1,0 +1,15 @@
+//! Layer-3 runtime: manifest-driven loading and execution of the AOT
+//! artifacts over the PJRT CPU client.
+//!
+//! Contract (DESIGN.md §7): `artifacts/manifest.txt` describes every
+//! lowered step — ordered inputs/outputs with name/dtype/shape/role —
+//! and the HLO-text files next to it. [`Engine`] compiles each file once
+//! (per-process cache) and [`Engine::run`] executes with host literals,
+//! returning one literal per declared output regardless of whether XLA
+//! produced a tuple or a single array root.
+
+pub mod manifest;
+pub mod engine;
+
+pub use engine::Engine;
+pub use manifest::{ConfigEntry, IoDesc, Manifest, ModelInfo, StepSpec};

@@ -1,0 +1,195 @@
+//! Tensor-distribution instrumentation for Figure 4, Figures 8–14 and the
+//! Appendix-D analysis: histograms (log-y in the paper), per-channel
+//! statistics (the "vertical light lines" heat-map observation), and
+//! dynamic-range summaries that motivate vector-wise scaling.
+
+use crate::quant::occ::quantile;
+
+/// A fixed-width histogram over [lo, hi] with outlier bins at both ends.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    pub n: u64,
+}
+
+impl Histogram {
+    pub fn build(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Self {
+        assert!(bins >= 1 && hi > lo);
+        let mut h = Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+            n: xs.len() as u64,
+        };
+        let w = (hi - lo) / bins as f32;
+        for &x in xs {
+            if x < lo {
+                h.underflow += 1;
+            } else if x >= hi {
+                h.overflow += 1;
+            } else {
+                h.counts[((x - lo) / w) as usize] += 1;
+            }
+        }
+        h
+    }
+
+    /// Auto-ranged over the data's own min/max.
+    pub fn auto(xs: &[f32], bins: usize) -> Self {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in xs {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        if !(hi > lo) {
+            hi = lo + 1.0;
+        }
+        Self::build(xs, lo, hi + 1e-6, bins)
+    }
+
+    pub fn bin_centers(&self) -> Vec<f32> {
+        let w = (self.hi - self.lo) / self.counts.len() as f32;
+        (0..self.counts.len()).map(|i| self.lo + w * (i as f32 + 0.5)).collect()
+    }
+}
+
+/// Distribution summary of one tensor (a Figures-8-13 panel).
+#[derive(Clone, Debug)]
+pub struct TensorSummary {
+    pub min: f32,
+    pub max: f32,
+    pub absmax: f32,
+    pub mean: f64,
+    pub std: f64,
+    pub q999: f32,
+    pub q001: f32,
+    /// absmax / |q999|: >> 1 signals a heavy outlier tail (App. D).
+    pub outlier_stretch: f64,
+}
+
+pub fn summarize(xs: &[f32]) -> TensorSummary {
+    let n = xs.len().max(1) as f64;
+    let mut min = f32::INFINITY;
+    let mut max = f32::NEG_INFINITY;
+    let mut absmax = 0.0f32;
+    let mut sum = 0.0f64;
+    for &x in xs {
+        min = min.min(x);
+        max = max.max(x);
+        absmax = absmax.max(x.abs());
+        sum += x as f64;
+    }
+    let mean = sum / n;
+    let var = xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    let q999 = quantile(xs, 0.999);
+    let q001 = quantile(xs, 0.001);
+    let denom = q999.abs().max(q001.abs()).max(1e-12);
+    TensorSummary {
+        min,
+        max,
+        absmax,
+        mean,
+        std: var.sqrt(),
+        q999,
+        q001,
+        outlier_stretch: absmax as f64 / denom as f64,
+    }
+}
+
+/// Per-channel absmax of a row-major (rows × cols) activation tensor —
+/// the Figure-14 heat-map reduced to its informative statistic: which
+/// channels carry the outliers.
+pub fn channel_absmax(xs: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(xs.len(), rows * cols);
+    let mut out = vec![0.0f32; cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c] = out[c].max(xs[r * cols + c].abs());
+        }
+    }
+    out
+}
+
+/// Channel-outlier concentration: fraction of the total channel-absmax
+/// mass carried by the top k channels (high = channel-specific outliers,
+/// the App.-D observation that motivates OCC over channel-wise scaling).
+pub fn channel_concentration(channel_absmax: &[f32], top_k: usize) -> f64 {
+    let mut sorted = channel_absmax.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let total: f64 = sorted.iter().map(|&x| x as f64).sum();
+    if total == 0.0 {
+        return 0.0;
+    }
+    sorted.iter().take(top_k).map(|&x| x as f64).sum::<f64>() / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_everything() {
+        let xs = vec![-10.0f32, -1.0, 0.0, 0.5, 1.0, 10.0];
+        let h = Histogram::build(&xs, -2.0, 2.0, 4);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.counts.iter().sum::<u64>(), 4);
+        assert_eq!(h.n, 6);
+    }
+
+    #[test]
+    fn histogram_auto_covers_all() {
+        let mut rng = crate::util::Rng::new(0);
+        let xs = rng.normal_vec(10_000, 2.0);
+        let h = Histogram::auto(&xs, 64);
+        assert_eq!(h.underflow + h.overflow, 0);
+        assert_eq!(h.counts.iter().sum::<u64>(), 10_000);
+    }
+
+    #[test]
+    fn summary_of_standard_normal() {
+        let mut rng = crate::util::Rng::new(1);
+        let xs = rng.normal_vec(100_000, 1.0);
+        let s = summarize(&xs);
+        assert!(s.mean.abs() < 0.02);
+        assert!((s.std - 1.0).abs() < 0.02);
+        assert!(s.q999 > 2.8 && s.q999 < 3.5);
+        assert!(s.outlier_stretch < 2.0); // gaussian: no stretch
+    }
+
+    #[test]
+    fn outlier_stretch_detects_heavy_tail() {
+        let mut rng = crate::util::Rng::new(2);
+        let mut xs = rng.normal_vec(100_000, 1.0);
+        xs[0] = 500.0;
+        let s = summarize(&xs);
+        assert!(s.outlier_stretch > 50.0);
+    }
+
+    #[test]
+    fn channel_absmax_finds_hot_channel() {
+        let rows = 64;
+        let cols = 16;
+        let mut rng = crate::util::Rng::new(3);
+        let mut xs = rng.normal_vec(rows * cols, 1.0);
+        for r in 0..rows {
+            xs[r * cols + 5] *= 40.0;
+        }
+        let ca = channel_absmax(&xs, rows, cols);
+        let hottest = ca
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(hottest, 5);
+        assert!(channel_concentration(&ca, 1) > 0.3);
+    }
+}

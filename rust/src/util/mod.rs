@@ -1,0 +1,204 @@
+//! Small shared utilities: deterministic RNG, timing, CSV output.
+//!
+//! The image is offline (no `rand` crate), so experiments use this
+//! splitmix64/xoshiro-style generator; it is seeded explicitly everywhere
+//! so every experiment in EXPERIMENTS.md is bit-reproducible.
+
+use std::fmt::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+/// Deterministic 64-bit RNG (splitmix64 core). Not cryptographic.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // avoid the all-zero fixed point and decorrelate small seeds
+        Self { state: seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xD1B5_4A32_D192_ED03 }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, n). n must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // rejection-free multiply-shift; bias < 2^-32 for n << 2^32
+        ((self.next_u64() >> 32).wrapping_mul(n)) >> 32
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn unit_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal_f32(&mut self) -> f32 {
+        let u1 = (self.unit_f32()).max(1e-12);
+        let u2 = self.unit_f32();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Fill with i.i.d. N(0, sigma^2).
+    pub fn normal_vec(&mut self, n: usize, sigma: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal_f32() * sigma).collect()
+    }
+
+    /// Fork a decorrelated child stream (for per-shard / per-worker rngs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0xA24B_AED4_963E_E407))
+    }
+}
+
+/// Wall-clock stopwatch for §Perf measurements.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn ms(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Minimal CSV writer (no quoting needs: we only emit numbers + idents).
+pub struct Csv {
+    buf: String,
+    cols: usize,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        let mut buf = String::new();
+        let _ = writeln!(buf, "{}", header.join(","));
+        Self { buf, cols: header.len() }
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(fields.len(), self.cols, "csv row arity");
+        let _ = writeln!(self.buf, "{}", fields.join(","));
+    }
+
+    pub fn rowf(&mut self, fields: &[f64]) {
+        self.row(&fields.iter().map(|v| format!("{v}")).collect::<Vec<_>>());
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, &self.buf)?;
+        Ok(())
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.buf
+    }
+}
+
+/// Mean of a slice (0.0 on empty).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Simple moving-average smoother used by the loss-curve reports.
+pub fn smooth(xs: &[f32], window: usize) -> Vec<f32> {
+    if window <= 1 {
+        return xs.to_vec();
+    }
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = 0.0f64;
+    let mut q = std::collections::VecDeque::new();
+    for &x in xs {
+        acc += x as f64;
+        q.push_back(x as f64);
+        if q.len() > window {
+            acc -= q.pop_front().unwrap();
+        }
+        out.push((acc / q.len() as f64) as f32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_seeds_decorrelate() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn unit_f32_in_unit_interval() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            let x = r.unit_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut r = Rng::new(11);
+        let xs = r.normal_vec(50_000, 1.0);
+        let m = mean(&xs);
+        let var =
+            xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn smooth_flat_is_identity() {
+        let xs = vec![3.0f32; 10];
+        assert_eq!(smooth(&xs, 4), xs);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.rowf(&[1.0, 2.0]);
+        assert_eq!(c.as_str(), "a,b\n1,2\n");
+    }
+}

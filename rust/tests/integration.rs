@@ -1,0 +1,257 @@
+//! End-to-end integration tests over the real AOT artifacts (core set).
+//!
+//! These need `make artifacts` to have run; they skip (with a message)
+//! when artifacts/ is absent so `cargo test` stays green pre-build.
+
+use std::sync::Arc;
+
+use fp4train::coordinator::dp::{CommPrecision, DpSim};
+use fp4train::coordinator::{checkpoint, Trainer};
+use fp4train::data::corpus::{Corpus, CorpusKind};
+use fp4train::data::loader::{BatchLoader, LoaderConfig, Sampler};
+use fp4train::runtime::Engine;
+
+// NOTE: the xla crate's PJRT client is Rc-based (not Send), so each test
+// builds its own Engine; executables are compiled per test process-thread.
+fn engine() -> Option<Arc<Engine>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Engine::load(&dir).expect("engine")))
+}
+
+fn corpus() -> Corpus {
+    Corpus::generate(CorpusKind::Mix, 7, 300_000, 32 * 1024)
+}
+
+fn loader_for(t: &Trainer, c: &Corpus) -> BatchLoader {
+    BatchLoader::new(
+        c,
+        LoaderConfig {
+            batch: t.entry.model.batch,
+            seq_len: t.entry.model.seq_len,
+            seed: 3,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn init_is_deterministic_per_seed() {
+    let Some(engine) = engine() else { return };
+    let t1 = Trainer::new(engine.clone(), "nano", "fp4", 5).unwrap();
+    let t2 = Trainer::new(engine.clone(), "nano", "fp4", 5).unwrap();
+    let t3 = Trainer::new(engine.clone(), "nano", "fp4", 6).unwrap();
+    let a = Engine::to_f32_vec(&t1.params()[0]).unwrap();
+    let b = Engine::to_f32_vec(&t2.params()[0]).unwrap();
+    let c = Engine::to_f32_vec(&t3.params()[0]).unwrap();
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+}
+
+#[test]
+fn training_reduces_loss_on_structured_corpus() {
+    let Some(engine) = engine() else { return };
+    let c = corpus();
+    let mut t = Trainer::new(engine, "nano", "fp4", 0).unwrap();
+    let loader = loader_for(&t, &c);
+    let recs = t.run(&loader, 64).unwrap();
+    assert_eq!(recs.len() % 16, 0, "whole bursts");
+    let first: f32 = recs[..8].iter().map(|r| r.loss).sum::<f32>() / 8.0;
+    let last: f32 = recs[recs.len() - 8..].iter().map(|r| r.loss).sum::<f32>() / 8.0;
+    assert!(
+        last < first - 0.05,
+        "loss should fall: first {first:.4} last {last:.4}"
+    );
+    assert!(recs.iter().all(|r| r.loss.is_finite()));
+}
+
+#[test]
+fn burst_matches_single_step_trajectory() {
+    let Some(engine) = engine() else { return };
+    let c = corpus();
+    // identical data order: same loader seeds
+    let mut t_single = Trainer::new(engine.clone(), "nano", "fp4", 1).unwrap();
+    t_single.force_single_step = true;
+    let l1 = loader_for(&t_single, &c);
+    let r_single = t_single.run(&l1, 16).unwrap();
+
+    let mut t_burst = Trainer::new(engine.clone(), "nano", "fp4", 1).unwrap();
+    let l2 = loader_for(&t_burst, &c);
+    let r_burst = t_burst.run(&l2, 16).unwrap();
+
+    for (a, b) in r_single.iter().zip(&r_burst) {
+        // scan (burst) vs unrolled (single) compile to different fusions;
+        // f32 drift accumulates over steps — bound it, don't expect 0.
+        assert!(
+            (a.loss - b.loss).abs() < 8e-3,
+            "step {}: {} vs {}",
+            a.step,
+            a.loss,
+            b.loss
+        );
+    }
+    // final params close (scan vs unrolled fusion can differ in ulps)
+    let pa = Engine::to_f32_vec(&t_single.params()[0]).unwrap();
+    let pb = Engine::to_f32_vec(&t_burst.params()[0]).unwrap();
+    let max_diff = pa
+        .iter()
+        .zip(&pb)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 4e-3, "param divergence {max_diff}");
+}
+
+#[test]
+fn eval_loss_matches_training_regime() {
+    let Some(engine) = engine() else { return };
+    let c = corpus();
+    let t = Trainer::new(engine, "nano", "fp4", 0).unwrap();
+    let windows = Sampler::heldout_windows(&c, t.entry.model.seq_len);
+    let loss = t.eval_loss(&windows).unwrap();
+    // random init on byte vocab: ~ln(256) = 5.55
+    assert!((loss - 5.545).abs() < 0.5, "init eval loss {loss}");
+}
+
+#[test]
+fn checkpoint_round_trip_preserves_state() {
+    let Some(engine) = engine() else { return };
+    let c = corpus();
+    let mut t = Trainer::new(engine.clone(), "nano", "fp4", 2).unwrap();
+    let loader = loader_for(&t, &c);
+    t.run(&loader, 16).unwrap();
+
+    let dir = std::env::temp_dir().join("fp4train_it_ckpt");
+    let path = dir.join("state.ckpt");
+    let spec = t.entry.step("init").unwrap().clone();
+    checkpoint::save(&path, t.step as u64, &spec.outputs, t.state()).unwrap();
+
+    let mut t2 = Trainer::new(engine.clone(), "nano", "fp4", 99).unwrap();
+    let ck = checkpoint::load(&path).unwrap();
+    t2.replace_state(checkpoint::to_literals(&ck, &spec.outputs).unwrap()).unwrap();
+    t2.step = ck.step as usize;
+
+    let a = Engine::to_f32_vec(&t.params()[3]).unwrap();
+    let b = Engine::to_f32_vec(&t2.params()[3]).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(t2.step, t.step);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn dp_sim_fp8_comm_trains_and_compresses() {
+    let Some(engine) = engine() else { return };
+    // nano/bf16 has grad+apply artifacts in the core plan
+    let c = corpus();
+    let mut sim =
+        DpSim::new(engine, "nano", "bf16", &c, 2, 0, CommPrecision::Fp8).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..12 {
+        losses.push(sim.dp_step().unwrap());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(losses[11] < losses[0], "dp training should descend: {losses:?}");
+    // wire compression close to 4x (scale overhead is negligible)
+    let ratio = sim.compression();
+    assert!(ratio > 3.9 && ratio <= 4.0, "fp8 comm ratio {ratio}");
+}
+
+#[test]
+fn dp_fp8_tracks_f32_comm_closely() {
+    let Some(engine) = engine() else { return };
+    let c = corpus();
+    let mut a = DpSim::new(engine.clone(), "nano", "bf16", &c, 2, 4, CommPrecision::Fp8)
+        .unwrap();
+    let mut b = DpSim::new(engine.clone(), "nano", "bf16", &c, 2, 4, CommPrecision::F32)
+        .unwrap();
+    let mut gap = 0.0f32;
+    for _ in 0..8 {
+        let la = a.dp_step().unwrap();
+        let lb = b.dp_step().unwrap();
+        gap = gap.max((la - lb).abs());
+    }
+    assert!(gap < 0.05, "fp8 gradient comm perturbs loss too much: {gap}");
+}
+
+#[test]
+fn grad_plus_apply_equals_fused_train_step() {
+    let Some(engine) = engine() else { return };
+    let c = corpus();
+    // fused side
+    let mut fused = Trainer::new(engine.clone(), "nano", "bf16", 11).unwrap();
+    fused.force_single_step = true;
+    let loader = loader_for(&fused, &c);
+    let rec = fused.run(&loader, 1).unwrap()[0];
+
+    // decomposed side with the identical batch
+    let mut sim = DpSim::new(engine.clone(), "nano", "bf16", &c, 1, 11, CommPrecision::F32)
+        .unwrap();
+    // align sampling: DpSim uses its own seed derivation, so instead
+    // compare loss magnitude only (same init, same corpus distribution)
+    let loss = sim.dp_step().unwrap();
+    assert!((loss - rec.loss).abs() < 0.5, "{loss} vs {}", rec.loss);
+}
+
+#[test]
+fn kernel_artifacts_execute() {
+    let Some(engine) = engine() else { return };
+    let spec = engine.manifest.kernels.get("kernel_qdq").unwrap().clone();
+    let io = &spec.inputs[0];
+    let mut rng = fp4train::util::Rng::new(0);
+    let xs = rng.normal_vec(io.elements(), 2.0);
+    let lit = Engine::f32_literal(io, &xs).unwrap();
+    let outs = engine.run(&spec, &[lit]).unwrap();
+    let got = Engine::to_f32_vec(&outs[0]).unwrap();
+    // must match the rust row-wise quantizer exactly (same LUT semantics)
+    let (rows, cols) = (io.shape[0], io.shape[1]);
+    let want = fp4train::formats::qdq_vector(
+        &xs,
+        rows,
+        cols,
+        fp4train::formats::Fp4Kind::E2M1,
+        fp4train::formats::Granularity::Row,
+    );
+    let mut max_rel = 0.0f32;
+    for (g, w) in got.iter().zip(&want) {
+        let rel = (g - w).abs() / w.abs().max(1e-6);
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 1e-5, "pallas kernel vs rust quantizer: {max_rel}");
+}
+
+#[test]
+fn qgemm_kernel_matches_rust_reference() {
+    let Some(engine) = engine() else { return };
+    let spec = engine.manifest.kernels.get("kernel_qgemm").unwrap().clone();
+    let (aio, wio) = (&spec.inputs[0], &spec.inputs[1]);
+    let mut rng = fp4train::util::Rng::new(1);
+    let a = rng.normal_vec(aio.elements(), 1.0);
+    let w = rng.normal_vec(wio.elements(), 0.3);
+    let la = Engine::f32_literal(aio, &a).unwrap();
+    let lw = Engine::f32_literal(wio, &w).unwrap();
+    let outs = engine.run(&spec, &[la, lw]).unwrap();
+    let got = Engine::to_f32_vec(&outs[0]).unwrap();
+
+    // rust reference: quantize both operands, multiply
+    use fp4train::formats::{qdq_vector, Fp4Kind, Granularity};
+    let (s, c) = (aio.shape[0], aio.shape[1]);
+    let o = wio.shape[1];
+    let aq = qdq_vector(&a, s, c, Fp4Kind::E2M1, Granularity::Row);
+    let wq = qdq_vector(&w, c, o, Fp4Kind::E2M1, Granularity::Col);
+    let mut want = vec![0.0f32; s * o];
+    for i in 0..s {
+        for k in 0..c {
+            let av = aq[i * c + k];
+            for j in 0..o {
+                want[i * o + j] += av * wq[k * o + j];
+            }
+        }
+    }
+    let mut max_abs = 0.0f32;
+    for (g, w_) in got.iter().zip(&want) {
+        max_abs = max_abs.max((g - w_).abs());
+    }
+    assert!(max_abs < 2e-3, "fused qgemm vs rust reference: {max_abs}");
+}

@@ -1,0 +1,290 @@
+//! Property-based tests (seeded-RNG harness — proptest is unavailable
+//! offline). Each property runs over hundreds of randomized cases; a
+//! failing case prints its seed for replay.
+
+use fp4train::formats::{self, fp16, fp8, Fp4Kind, Granularity};
+use fp4train::quant::{self, occ};
+use fp4train::runtime::Manifest;
+use fp4train::util::Rng;
+
+const FORMATS: [Fp4Kind; 3] = [Fp4Kind::E2M1, Fp4Kind::E1M2, Fp4Kind::E3M0];
+
+fn cases(n: usize) -> impl Iterator<Item = u64> {
+    (0..n as u64).map(|i| 0xF00D_0000 + i)
+}
+
+// ---------------------------------------------------------------------------
+// FP4 codec properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_lut_round_returns_grid_values() {
+    for seed in cases(200) {
+        let mut rng = Rng::new(seed);
+        let fmt = FORMATS[rng.below(3) as usize];
+        let x = (rng.unit_f32() - 0.5) * 3.0 * fmt.max_value();
+        let y = fmt.lut_round(x);
+        assert!(
+            fmt.values().contains(&y),
+            "seed {seed}: {x} -> {y} not on the {fmt:?} grid"
+        );
+    }
+}
+
+#[test]
+fn prop_lut_round_picks_nearest_up_to_tie() {
+    for seed in cases(500) {
+        let mut rng = Rng::new(seed);
+        let fmt = FORMATS[rng.below(3) as usize];
+        let x = (rng.unit_f32() - 0.5) * 2.2 * fmt.max_value();
+        let y = fmt.lut_round(x);
+        let best = fmt
+            .values()
+            .iter()
+            .map(|&v| (v - x).abs())
+            .fold(f32::INFINITY, f32::min);
+        assert!(
+            ((y - x).abs() - best).abs() < 1e-6,
+            "seed {seed}: {fmt:?} {x} -> {y} is not a nearest value"
+        );
+    }
+}
+
+#[test]
+fn prop_pack_unpack_equals_qdq() {
+    for seed in cases(60) {
+        let mut rng = Rng::new(seed);
+        let fmt = FORMATS[rng.below(3) as usize];
+        let n = 1 + rng.below(700) as usize;
+        let scale = 10f32.powi(rng.below(7) as i32 - 3);
+        let xs = rng.normal_vec(n, scale);
+        let q = formats::qdq_tensor(&xs, fmt);
+        let back = formats::unpack_fp4(&formats::pack_fp4(&xs, fmt));
+        for (i, (a, b)) in q.iter().zip(&back).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-6 * a.abs().max(1e-20),
+                "seed {seed} fmt {fmt:?} elem {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_qdq_scale_equivariant() {
+    // absmax scaling makes qdq equivariant under positive rescaling:
+    // qdq(c*x) == c*qdq(x) (up to f32 rounding).
+    for seed in cases(60) {
+        let mut rng = Rng::new(seed);
+        let fmt = FORMATS[rng.below(3) as usize];
+        let n = 2 + rng.below(300) as usize;
+        let xs = rng.normal_vec(n, 1.0);
+        let c = 2f32.powi(rng.below(13) as i32 - 6); // exact power of two
+        let scaled: Vec<f32> = xs.iter().map(|&x| x * c).collect();
+        let q1 = formats::qdq_tensor(&xs, fmt);
+        let q2 = formats::qdq_tensor(&scaled, fmt);
+        for (i, (a, b)) in q1.iter().zip(&q2).enumerate() {
+            assert!(
+                (a * c - b).abs() <= 1e-5 * (a * c).abs().max(1e-12),
+                "seed {seed} {fmt:?} elem {i}: {}*{c} vs {b}",
+                a
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_row_qdq_equals_per_row_tensor_qdq() {
+    for seed in cases(40) {
+        let mut rng = Rng::new(seed);
+        let rows = 1 + rng.below(16) as usize;
+        let cols = 1 + rng.below(64) as usize;
+        let xs = rng.normal_vec(rows * cols, 2.0);
+        let whole = formats::qdq_vector(&xs, rows, cols, Fp4Kind::E2M1, Granularity::Row);
+        for r in 0..rows {
+            let row = &xs[r * cols..(r + 1) * cols];
+            let alone = formats::qdq_tensor(row, Fp4Kind::E2M1);
+            assert_eq!(&whole[r * cols..(r + 1) * cols], &alone[..], "seed {seed} row {r}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FP8 / FP16 codec properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fp8_encode_monotone() {
+    // x <= y  =>  decode(encode(x)) <= decode(encode(y))
+    for seed in cases(100) {
+        let mut rng = Rng::new(seed);
+        let spec = if rng.below(2) == 0 { fp8::E4M3 } else { fp8::E5M2 };
+        let a = rng.normal_f32() * 10.0;
+        let b = rng.normal_f32() * 10.0;
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let dlo = spec.decode(spec.encode(lo));
+        let dhi = spec.decode(spec.encode(hi));
+        assert!(dlo <= dhi, "seed {seed} {spec:?}: {lo}->{dlo} vs {hi}->{dhi}");
+    }
+}
+
+#[test]
+fn prop_fp8_round_trip_error_bounded() {
+    for seed in cases(100) {
+        let mut rng = Rng::new(seed);
+        let x = rng.normal_f32() * 10f32.powi(rng.below(5) as i32 - 2);
+        let y = fp8::E4M3.decode(fp8::E4M3.encode(x));
+        // 2^-4 relative (half ulp of 3-bit mantissa) + subnormal floor
+        assert!(
+            (x - y).abs() <= x.abs() / 16.0 + 0.002,
+            "seed {seed}: {x} -> {y}"
+        );
+    }
+}
+
+#[test]
+fn prop_f16_round_trip_monotone_and_bounded() {
+    for seed in cases(200) {
+        let mut rng = Rng::new(seed);
+        let x = rng.normal_f32() * 10f32.powi(rng.below(9) as i32 - 4);
+        let y = fp16::f16_round_trip(x);
+        assert!((x - y).abs() <= x.abs() * 1e-3 + 6e-8, "seed {seed}: {x} {y}");
+        assert_eq!(y.is_sign_negative(), x.is_sign_negative() || y == 0.0 && x == 0.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OCC / metrics properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_quantile_brackets_sample() {
+    for seed in cases(50) {
+        let mut rng = Rng::new(seed);
+        let n = 2 + rng.below(500) as usize;
+        let xs = rng.normal_vec(n, 3.0);
+        let q = rng.unit_f32() as f64;
+        let v = occ::quantile(&xs, q);
+        let below = xs.iter().filter(|&&x| x <= v).count() as f64 / n as f64;
+        // linear-interpolated quantile: rank error bounded by 1/n
+        assert!(below + 1.0 / n as f64 >= q - 1e-9, "seed {seed}: q={q} below={below}");
+    }
+}
+
+#[test]
+fn prop_clamp_never_widens_range() {
+    for seed in cases(50) {
+        let mut rng = Rng::new(seed);
+        let n = 200 + rng.below(800) as usize;
+        let xs = rng.normal_vec(n, 2.0);
+        let alpha = 0.9 + 0.099 * rng.unit_f32() as f64;
+        let (c, _) = occ::clamp_tensor(&xs, alpha);
+        let amax_in = xs.iter().fold(0f32, |a, &x| a.max(x.abs()));
+        let amax_out = c.iter().fold(0f32, |a, &x| a.max(x.abs()));
+        assert!(amax_out <= amax_in + 1e-6, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_compensated_fidelity_never_below_clamp_only() {
+    for seed in cases(25) {
+        let mut rng = Rng::new(seed);
+        let rows = 32;
+        let cols = 32;
+        let mut xs = rng.normal_vec(rows * cols, 1.0);
+        for v in xs.iter_mut() {
+            if rng.unit_f32() < 0.01 {
+                *v *= 5.0 + rng.unit_f32() * 30.0;
+            }
+        }
+        let (clamp_only, _) =
+            quant::table1_arm(&xs, rows, cols, Some(0.99), false, Fp4Kind::E2M1);
+        let (comp, _) = quant::table1_arm(&xs, rows, cols, Some(0.99), true, Fp4Kind::E2M1);
+        assert!(
+            comp.mse <= clamp_only.mse + 1e-12,
+            "seed {seed}: comp {comp:?} vs clamp {clamp_only:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_snr_sim_agree_on_ordering() {
+    // For a fixed signal, lower MSE must mean higher SNR.
+    for seed in cases(50) {
+        let mut rng = Rng::new(seed);
+        let xs = rng.normal_vec(500, 1.0);
+        let mk = |sigma: f32, rng: &mut Rng| -> Vec<f32> {
+            xs.iter().map(|&x| x + rng.normal_f32() * sigma).collect()
+        };
+        let y1 = mk(0.01 + rng.unit_f32() * 0.1, &mut rng);
+        let y2 = mk(0.2 + rng.unit_f32() * 0.5, &mut rng);
+        let (m1, m2) = (quant::mse(&xs, &y1), quant::mse(&xs, &y2));
+        let (s1, s2) = (quant::snr_db(&xs, &y1), quant::snr_db(&xs, &y2));
+        assert_eq!(m1 < m2, s1 > s2, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Manifest parser fuzz: generated manifests parse back to what was written
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_manifest_round_trip() {
+    for seed in cases(40) {
+        let mut rng = Rng::new(seed);
+        let n_cfg = 1 + rng.below(3) as usize;
+        let mut text = String::new();
+        let mut want: Vec<(String, usize, usize)> = Vec::new(); // key, steps, ios
+        for c in 0..n_cfg {
+            let key = format!("p{c}/pol{}", rng.below(100));
+            text.push_str(&format!("#CONFIG {key}\n"));
+            text.push_str(&format!(
+                "#MODEL batch=8 dim={} ffn_dim=4 n_heads=2 n_layers=1 \
+                 param_count=10 seq_len=16 vocab=256\n",
+                8 + rng.below(500)
+            ));
+            text.push_str("#POLICY name=x act_bits=4\n");
+            let n_steps = 1 + rng.below(3) as usize;
+            let mut total_ios = 0;
+            for s in 0..n_steps {
+                text.push_str(&format!(
+                    "#STEP kind{s}@7 file=f{c}_{s}.hlo.txt total_steps=7 burst_k={}\n",
+                    rng.below(4)
+                ));
+                let ios = 1 + rng.below(5) as usize;
+                for i in 0..ios {
+                    let shape = match rng.below(3) {
+                        0 => "-".to_string(),
+                        1 => format!("{}", 1 + rng.below(9)),
+                        _ => format!("{}x{}", 1 + rng.below(9), 1 + rng.below(9)),
+                    };
+                    text.push_str(&format!("#IN in{i} f32 {shape} param\n"));
+                    text.push_str(&format!("#OUT out{i} f32 {shape} loss\n"));
+                    total_ios += 2;
+                }
+            }
+            text.push_str("#END\n");
+            want.push((key, n_steps, total_ios));
+        }
+        let m = Manifest::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(m.configs.len(), n_cfg, "seed {seed}");
+        for (key, n_steps, total_ios) in want {
+            let cfg = m.configs.get(&key).unwrap_or_else(|| panic!("seed {seed} {key}"));
+            assert_eq!(cfg.steps.len(), n_steps, "seed {seed}");
+            let got_ios: usize =
+                cfg.steps.values().map(|s| s.inputs.len() + s.outputs.len()).sum();
+            assert_eq!(got_ios, total_ios, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_manifest_rejects_garbage_lines() {
+    for seed in cases(30) {
+        let mut rng = Rng::new(seed);
+        let junk: String = (0..5 + rng.below(20))
+            .map(|_| (b'a' + rng.below(26) as u8) as char)
+            .collect();
+        let text = format!("#BOGUS {junk}\n");
+        assert!(Manifest::parse(&text).is_err(), "seed {seed}: accepted {text:?}");
+    }
+}
