@@ -1,7 +1,7 @@
-//! Bench: the dp-sim gradient wire codec — FP8 encode/decode + averaging
-//! vs a plain f32 all-reduce (memcpy-bound baseline).
+//! Bench: the dp-sim gradient wire codec — FP8 and FP4-row encode/decode
+//! plus averaging vs a plain f32 all-reduce (memcpy-bound baseline).
 
-use fp4train::formats::fp8::{pack_fp8, unpack_fp8, E4M3};
+use fp4train::formats::{PackedTensor, QuantSpec};
 use fp4train::util::Rng;
 
 fn timed<F: FnMut() -> usize>(mut f: F) -> f64 {
@@ -18,28 +18,37 @@ fn timed<F: FnMut() -> usize>(mut f: F) -> f64 {
 fn main() {
     let mut rng = Rng::new(0);
     let n = 1 << 22; // one 16 MiB gradient tensor
+    let (rows, cols) = (4096, 1024);
     let grads: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(n, 1e-3)).collect();
     let mb = (n * 4) as f64 / 1e6;
 
-    // fp8 wire: encode 4 workers, decode + average
-    let t = timed(|| {
-        let mut acc = vec![0.0f32; n];
-        let mut wire = 0usize;
-        for g in &grads {
-            let p = pack_fp8(g, E4M3);
-            wire += p.data.len();
-            let d = unpack_fp8(&p);
-            for (a, v) in acc.iter_mut().zip(&d) {
-                *a += v / 4.0;
+    // quantized wire: encode 4 workers, decode + average
+    for spec_str in ["fp8:e4m3", "fp4:e2m1/row"] {
+        let spec = QuantSpec::parse(spec_str).unwrap();
+        let t = timed(|| {
+            let mut acc = vec![0.0f32; n];
+            let mut wire = 0usize;
+            for g in &grads {
+                let p = PackedTensor::pack(g, rows, cols, spec.format, spec.granularity);
+                wire += p.wire_bytes() as usize;
+                let d = p.unpack();
+                for (a, v) in acc.iter_mut().zip(&d) {
+                    *a += v / 4.0;
+                }
             }
-        }
-        wire + acc.len()
-    });
-    println!(
-        "fp8 all-reduce (4 workers, 16MB each): {:>8.2} ms  ({:.0} MB/s per stream)",
-        t * 1e3,
-        4.0 * mb / t
-    );
+            wire + acc.len()
+        });
+        let wire = PackedTensor::pack(&grads[0], rows, cols, spec.format, spec.granularity)
+            .wire_bytes();
+        println!(
+            "{spec_str:<12} all-reduce (4 workers, 16MB each): {:>8.2} ms  \
+             ({:.0} MB/s per stream, {} wire bytes/worker, {:.2}x vs f32)",
+            t * 1e3,
+            4.0 * mb / t,
+            wire,
+            (n as f64 * 4.0) / wire as f64
+        );
+    }
 
     // f32 baseline: straight averaging
     let t32 = timed(|| {
@@ -52,26 +61,24 @@ fn main() {
         acc.len()
     });
     println!(
-        "f32 all-reduce (4 workers, 16MB each): {:>8.2} ms  ({:.0} MB/s per stream)",
+        "f32          all-reduce (4 workers, 16MB each): {:>8.2} ms  ({:.0} MB/s per stream)",
         t32 * 1e3,
         4.0 * mb / t32
     );
-    println!(
-        "fp8 wire bytes per worker: {} ({}x smaller than f32)",
-        n + 4,
-        (n * 4) / (n + 4)
-    );
 
-    // accumulated rounding error of the fp8 path
-    let mut acc8 = vec![0.0f32; n];
-    let mut acc32 = vec![0.0f32; n];
-    for g in &grads {
-        let d = unpack_fp8(&pack_fp8(g, E4M3));
-        for i in 0..n {
-            acc8[i] += d[i] / 4.0;
-            acc32[i] += g[i] / 4.0;
+    // accumulated rounding error of each quantized path
+    for spec_str in ["fp8:e4m3", "fp4:e2m1/row"] {
+        let spec = QuantSpec::parse(spec_str).unwrap();
+        let mut accq = vec![0.0f32; n];
+        let mut acc32 = vec![0.0f32; n];
+        for g in &grads {
+            let d = PackedTensor::pack(g, rows, cols, spec.format, spec.granularity).unpack();
+            for i in 0..n {
+                accq[i] += d[i] / 4.0;
+                acc32[i] += g[i] / 4.0;
+            }
         }
+        let sim = fp4train::quant::cosine_sim(&acc32, &accq);
+        println!("{spec_str:<12} averaged-gradient cosine sim vs f32: {sim:.6}");
     }
-    let sim = fp4train::quant::cosine_sim(&acc32, &acc8);
-    println!("fp8-averaged gradient cosine sim vs f32: {sim:.6}");
 }

@@ -1,7 +1,9 @@
 //! Bench: FP4/FP8/FP16 codec hot loops (plain timing harness — criterion
 //! is unavailable offline; methodology: warm-up + best-of-5 timed reps).
+//! Everything below the first block routes through the unified
+//! `QuantSpec`/`PackedTensor` API, one line per (format, granularity).
 
-use fp4train::formats::{self, fp16, fp8, Fp4Kind};
+use fp4train::formats::{self, Fp4Kind, PackedTensor, QuantSpec};
 use fp4train::util::Rng;
 
 fn bench<F: FnMut() -> usize>(name: &str, bytes_per_iter: usize, mut f: F) {
@@ -24,9 +26,11 @@ fn bench<F: FnMut() -> usize>(name: &str, bytes_per_iter: usize, mut f: F) {
 fn main() {
     let mut rng = Rng::new(0);
     let n = 1 << 22; // 4M elements, 16 MiB f32
+    let (rows, cols) = (4096, 1024);
     let xs = rng.normal_vec(n, 2.0);
     let bytes = n * 4;
 
+    // scalar hot loop (the LUT itself, no scaling)
     bench("fp4 e2m1 lut_round", bytes, || {
         let mut acc = 0usize;
         for &x in &xs {
@@ -34,23 +38,50 @@ fn main() {
         }
         acc
     });
+
+    // legacy delegates (should cost the same as the spec path below)
     bench("fp4 e2m1 qdq_tensor", bytes, || {
         formats::qdq_tensor(&xs, Fp4Kind::E2M1).len()
     });
     bench("fp4 e2m1 qdq_vector row (4096x1024)", bytes, || {
-        formats::qdq_vector(&xs, 4096, 1024, Fp4Kind::E2M1, formats::Granularity::Row).len()
+        formats::qdq_vector(&xs, rows, cols, Fp4Kind::E2M1, formats::Granularity::Row).len()
     });
-    bench("fp4 pack (4-bit wire)", bytes, || {
-        formats::pack_fp4(&xs, Fp4Kind::E2M1).data.len()
-    });
-    let packed4 = formats::pack_fp4(&xs, Fp4Kind::E2M1);
-    bench("fp4 unpack", bytes, || formats::unpack_fp4(&packed4).len());
 
-    bench("fp8 e4m3 encode", bytes, || {
-        fp8::pack_fp8(&xs, fp8::E4M3).data.len()
-    });
-    let packed8 = fp8::pack_fp8(&xs, fp8::E4M3);
-    bench("fp8 e4m3 decode", bytes, || fp8::unpack_fp8(&packed8).len());
+    // unified API: qdq and pack across the format x granularity grid
+    for spec_str in [
+        "fp4:e2m1/tensor",
+        "fp4:e2m1/row",
+        "fp4:e2m1/col",
+        "fp8:e4m3/tensor",
+        "fp8:e4m3/row",
+        "fp8:e5m2/tensor",
+        "f16/tensor",
+    ] {
+        let spec = QuantSpec::parse(spec_str).unwrap();
+        bench(&format!("qdq {spec_str} (4096x1024)"), bytes, || {
+            spec.qdq(&xs, rows, cols).len()
+        });
+        bench(&format!("pack {spec_str} (4096x1024)"), bytes, || {
+            spec.pack(&xs, rows, cols).unwrap().data.len()
+        });
+    }
 
-    bench("fp16 scaled qdq", bytes, || fp16::qdq_f16_scaled(&xs).len());
+    let spec4 = QuantSpec::parse("fp4:e2m1/row").unwrap();
+    let packed4 = PackedTensor::pack(&xs, rows, cols, spec4.format, spec4.granularity);
+    bench("unpack fp4:e2m1/row", bytes, || packed4.unpack().len());
+
+    let spec8 = QuantSpec::parse("fp8:e4m3").unwrap();
+    let packed8 = PackedTensor::pack(&xs, 1, n, spec8.format, spec8.granularity);
+    bench("unpack fp8:e4m3", bytes, || packed8.unpack().len());
+
+    println!(
+        "wire bytes 4096x1024: fp4/row {} vs fp8/tensor {} ({:.3}x)",
+        packed4.wire_bytes(),
+        packed8.wire_bytes(),
+        packed8.wire_bytes() as f64 / packed4.wire_bytes() as f64
+    );
+
+    bench("fp16 scaled qdq", bytes, || {
+        formats::fp16::qdq_f16_scaled(&xs).len()
+    });
 }

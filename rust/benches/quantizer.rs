@@ -1,7 +1,7 @@
 //! Bench: quantization-quality pipeline (clamping, quantiles, metrics) —
 //! the offline-analysis hot path behind `repro tab1`/`fig4`/`dists`.
 
-use fp4train::formats::Fp4Kind;
+use fp4train::formats::{Fp4Kind, QuantSpec};
 use fp4train::quant::{self, occ};
 use fp4train::util::Rng;
 
@@ -27,8 +27,9 @@ fn main() {
         occ::clamp_tensor(&xs, 0.99).0.len() as f64
     });
     bench("residual_sparsity (1M)", || occ::residual_sparsity(&xs, 0.99));
+    let arm = QuantSpec::parse("fp4:e2m1/clamp@0.99+comp").unwrap();
     bench("table1_arm clamp+comp (1M)", || {
-        quant::table1_arm(&xs, rows, cols, Some(0.99), true, Fp4Kind::E2M1).0.snr_db
+        quant::table1_arm(&xs, rows, cols, &arm).0.snr_db
     });
     let q = fp4train::formats::qdq_tensor(&xs, Fp4Kind::E2M1);
     bench("cosine_sim (1M)", || quant::cosine_sim(&xs, &q));

@@ -8,6 +8,7 @@
 use std::path::PathBuf;
 
 use crate::data::corpus::CorpusKind;
+use crate::formats::{fp8, Format, Granularity, QuantSpec};
 
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -21,6 +22,10 @@ pub struct RunConfig {
     pub heldout_len: usize,
     pub eval_every: usize,
     pub out_dir: PathBuf,
+    /// Gradient-communication wire format of the dp sim (clamp-free spec).
+    pub comm: QuantSpec,
+    /// Optional compressed checkpoint encoding; `None` = raw f32 (v1).
+    pub ckpt_format: Option<QuantSpec>,
 }
 
 impl Default for RunConfig {
@@ -36,12 +41,16 @@ impl Default for RunConfig {
             heldout_len: 64 * 1024,
             eval_every: 50,
             out_dir: PathBuf::from("runs"),
+            comm: QuantSpec::new(Format::Fp8(fp8::E4M3), Granularity::Tensor),
+            ckpt_format: None,
         }
     }
 }
 
 impl RunConfig {
     /// Apply `key=value` overrides (the CLI's `-o key=value` flags).
+    /// Spec-valued keys go through [`QuantSpec::from_name`], so unknown
+    /// precision names are hard errors instead of silent defaults.
     pub fn set(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
         match key {
             "artifacts" => self.artifacts_dir = value.into(),
@@ -54,6 +63,8 @@ impl RunConfig {
             "heldout_len" => self.heldout_len = value.parse()?,
             "eval_every" => self.eval_every = value.parse()?,
             "out" => self.out_dir = value.into(),
+            "comm" => self.comm = QuantSpec::from_name(value)?,
+            "ckpt_format" => self.ckpt_format = Some(QuantSpec::from_name(value)?),
             other => anyhow::bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -75,5 +86,21 @@ mod tests {
         assert_eq!(c.corpus, CorpusKind::Markov);
         assert!(c.set("bogus", "1").is_err());
         assert!(c.set("steps", "xyz").is_err());
+    }
+
+    #[test]
+    fn comm_override_goes_through_spec_parser() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.comm, QuantSpec::parse("fp8:e4m3").unwrap());
+        c.set("comm", "fp4:e2m1/row").unwrap();
+        assert_eq!(c.comm, QuantSpec::parse("fp4:e2m1/row").unwrap());
+        c.set("comm", "f32").unwrap();
+        assert!(c.comm.is_raw());
+        // unknown values are errors, not silent fallbacks
+        assert!(c.set("comm", "fp9").is_err());
+        assert!(c.set("comm", "fp8|f32").is_err());
+        c.set("ckpt_format", "fp8:e4m3/row").unwrap();
+        assert!(c.ckpt_format.is_some());
+        assert!(c.set("ckpt_format", "int3").is_err());
     }
 }

@@ -1,6 +1,6 @@
 //! Self-contained binary checkpoints for trainer state.
 //!
-//! Format (little-endian):
+//! Version 1 (raw f32, little-endian):
 //! ```text
 //! magic  b"FP4TCKPT"          8 bytes
 //! version u32                 (1)
@@ -11,16 +11,28 @@
 //!   ndims    u8,  dims u64 × ndims
 //!   data     f32 × prod(dims)
 //! ```
-//! Tensor names come from the manifest IO descriptors, so a checkpoint
-//! written by one process can re-seed a Trainer in another (restore
-//! validates name/shape agreement).
+//!
+//! Version 2 (compressed via [`PackedTensor`], written by [`save_packed`])
+//! replaces the raw data block of each tensor with:
+//! ```text
+//!   spec_len u16, spec bytes    canonical QuantSpec string (fmt + gran)
+//!   rows u64, cols u64          shape2d collapse used for the scales
+//!   n_scales u32, scales f32 ×  per-group gammas
+//!   data_len u64, data bytes    bit-packed codes
+//! ```
+//! Loading a v2 checkpoint decodes back to f32 (lossy by exactly the
+//! codec's quantization error), so `to_literals` works identically for
+//! both versions. Tensor names come from the manifest IO descriptors, so
+//! a checkpoint written by one process can re-seed a Trainer in another
+//! (restore validates name/shape agreement).
 
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use xla::Literal;
 
+use crate::formats::{shape2d, PackedTensor, QuantSpec};
 use crate::runtime::{Engine, IoDesc};
 
 const MAGIC: &[u8; 8] = b"FP4TCKPT";
@@ -66,6 +78,61 @@ pub fn save(
     Ok(())
 }
 
+/// Like [`save`], but stores each tensor as a [`PackedTensor`] in the
+/// given wire format — e.g. `fp8:e4m3` quarters checkpoint size at ~2^-4
+/// relative error, `fp4:e2m1/row` is 8x smaller still coarser. Lossy;
+/// clamped specs are rejected (the residual is not stored).
+pub fn save_packed(
+    path: impl AsRef<Path>,
+    step: u64,
+    ios: &[IoDesc],
+    literals: &[Literal],
+    spec: &QuantSpec,
+) -> Result<()> {
+    ensure!(
+        spec.clamp.is_none(),
+        "checkpoint spec {spec} carries a clamp: the ΔY residual is not stored"
+    );
+    if ios.len() != literals.len() {
+        bail!("checkpoint arity mismatch: {} ios vs {} tensors", ios.len(), literals.len());
+    }
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let spec_str = spec.to_string(); // canonical form; clamp-free per the guard above
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&2u32.to_le_bytes())?;
+    f.write_all(&step.to_le_bytes())?;
+    f.write_all(&(ios.len() as u32).to_le_bytes())?;
+    for (io, lit) in ios.iter().zip(literals) {
+        let name = io.name.as_bytes();
+        f.write_all(&(name.len() as u16).to_le_bytes())?;
+        f.write_all(name)?;
+        f.write_all(&[io.shape.len() as u8])?;
+        for &d in &io.shape {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        let data = Engine::to_f32_vec(lit)?;
+        if data.len() != io.elements() {
+            bail!("{}: literal has {} elems, manifest says {}", io.name, data.len(), io.elements());
+        }
+        let (rows, cols) = shape2d(&io.shape, data.len());
+        let packed = PackedTensor::pack(&data, rows, cols, spec.format, spec.granularity);
+        f.write_all(&(spec_str.len() as u16).to_le_bytes())?;
+        f.write_all(spec_str.as_bytes())?;
+        f.write_all(&(rows as u64).to_le_bytes())?;
+        f.write_all(&(cols as u64).to_le_bytes())?;
+        f.write_all(&(packed.scales.len() as u32).to_le_bytes())?;
+        for s in &packed.scales {
+            f.write_all(&s.to_le_bytes())?;
+        }
+        f.write_all(&(packed.data.len() as u64).to_le_bytes())?;
+        f.write_all(&packed.data)?;
+    }
+    Ok(())
+}
+
 pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(&path).with_context(|| format!("opening {:?}", path.as_ref()))?,
@@ -76,7 +143,7 @@ pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         bail!("not a fp4train checkpoint");
     }
     let version = read_u32(&mut f)?;
-    if version != 1 {
+    if version != 1 && version != 2 {
         bail!("unsupported checkpoint version {version}");
     }
     let step = read_u64(&mut f)?;
@@ -94,12 +161,55 @@ pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
             shape.push(read_u64(&mut f)? as usize);
         }
         let n: usize = shape.iter().product::<usize>().max(1);
-        let mut data = vec![0f32; n];
-        let mut buf = [0u8; 4];
-        for v in data.iter_mut() {
-            f.read_exact(&mut buf)?;
-            *v = f32::from_le_bytes(buf);
-        }
+        let data = if version == 1 {
+            let mut data = vec![0f32; n];
+            let mut buf = [0u8; 4];
+            for v in data.iter_mut() {
+                f.read_exact(&mut buf)?;
+                *v = f32::from_le_bytes(buf);
+            }
+            data
+        } else {
+            let spec_len = read_u16(&mut f)? as usize;
+            let mut spec = vec![0u8; spec_len];
+            f.read_exact(&mut spec)?;
+            let spec = QuantSpec::parse(std::str::from_utf8(&spec)?)
+                .with_context(|| format!("{name}: bad packed-tensor spec"))?;
+            let rows = read_u64(&mut f)? as usize;
+            let cols = read_u64(&mut f)? as usize;
+            ensure!(rows * cols == n, "{name}: packed shape {rows}x{cols} != {n} elements");
+            let n_scales = read_u32(&mut f)? as usize;
+            ensure!(
+                n_scales == spec.granularity.n_groups(rows, cols),
+                "{name}: {n_scales} scales for {rows}x{cols} {spec}"
+            );
+            let mut scales = vec![0f32; n_scales];
+            let mut buf = [0u8; 4];
+            for s in scales.iter_mut() {
+                f.read_exact(&mut buf)?;
+                *s = f32::from_le_bytes(buf);
+            }
+            let data_len = read_u64(&mut f)?;
+            // validate against the exactly computable packed size BEFORE
+            // allocating, so a corrupt length field errors instead of
+            // attempting a huge allocation
+            let expect = (n as u64 * u64::from(spec.bits_per_element())).div_ceil(8);
+            ensure!(
+                data_len == expect,
+                "{name}: packed payload is {data_len} bytes, expected {expect}"
+            );
+            let mut data = vec![0u8; data_len as usize];
+            f.read_exact(&mut data)?;
+            let packed = PackedTensor {
+                format: spec.format,
+                granularity: spec.granularity,
+                rows,
+                cols,
+                scales,
+                data,
+            };
+            packed.unpack()
+        };
         tensors.push((name, shape, data));
     }
     Ok(Checkpoint { step, tensors })
@@ -176,6 +286,39 @@ mod tests {
         let ck = load(&path).unwrap();
         let bad = vec![io("a", vec![2, 2])];
         assert!(to_literals(&ck, &bad).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn packed_round_trip_within_codec_error() {
+        let dir = std::env::temp_dir().join("fp4train_ckpt_test_packed");
+        let path = dir.join("t.ckpt");
+        let ios = vec![io("w", vec![4, 8]), io("b", vec![8])];
+        let w: Vec<f32> = (0..32).map(|i| (i as f32 - 16.0) * 0.37).collect();
+        let b: Vec<f32> = (0..8).map(|i| i as f32 * 1e-3).collect();
+        let lits = vec![
+            Engine::f32_literal(&ios[0], &w).unwrap(),
+            Engine::f32_literal(&ios[1], &b).unwrap(),
+        ];
+        let spec = QuantSpec::parse("fp8:e4m3/row").unwrap();
+        save_packed(&path, 7, &ios, &lits, &spec).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.step, 7);
+        // exactly the codec's qdq, nothing more lost in the file format
+        assert_eq!(ck.tensors[0].2, spec.qdq(&w, 4, 8));
+        assert_eq!(ck.tensors[1].2, spec.qdq(&b, 1, 8));
+        let back = to_literals(&ck, &ios).unwrap();
+        assert_eq!(Engine::to_f32_vec(&back[0]).unwrap(), spec.qdq(&w, 4, 8));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn packed_rejects_clamped_spec() {
+        let ios = vec![io("a", vec![4])];
+        let lits = vec![Engine::f32_literal(&ios[0], &[1.0; 4]).unwrap()];
+        let spec = QuantSpec::parse("fp4:e2m1/clamp@0.99").unwrap();
+        let dir = std::env::temp_dir().join("fp4train_ckpt_test_clamp");
+        assert!(save_packed(dir.join("t.ckpt"), 0, &ios, &lits, &spec).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,14 +1,18 @@
-//! Simulated data-parallel training with FP8 gradient communication.
+//! Simulated data-parallel training with quantized gradient communication.
 //!
 //! The paper (§4.1, following FP8-LM) communicates gradients between
 //! workers in FP8 to halve all-reduce bandwidth. This module reproduces
 //! that path end-to-end on one host: N logical workers each own a
 //! disjoint corpus shard, compute gradients through the `grad` artifact,
-//! *byte-encode* them to real E4M3 (+ one f32 scale per tensor), the
-//! "network" averages the decoded payloads, and the `apply` artifact
-//! performs the Adam update — so the numerical effect of FP8 gradient
-//! compression (including its accumulated rounding) is measured, not
-//! modeled, and wire bytes are counted exactly.
+//! *byte-encode* them through the wire [`QuantSpec`] (real packed codes +
+//! per-group f32 scales), the "network" averages the decoded payloads, and
+//! the `apply` artifact performs the Adam update — so the numerical effect
+//! of gradient compression (including its accumulated rounding) is
+//! measured, not modeled, and wire bytes are counted exactly.
+//!
+//! Any clamp-free spec works on the wire: `fp8:e4m3` is the paper's
+//! FP8-LM scheme, `fp4:e2m1/row` halves the bytes again with per-row
+//! scales, and `f32` is the exact baseline.
 
 use std::sync::Arc;
 
@@ -17,15 +21,8 @@ use xla::Literal;
 
 use crate::data::corpus::Corpus;
 use crate::data::loader::{LoaderConfig, Sampler};
-use crate::formats::fp8::{pack_fp8, unpack_fp8, E4M3};
+use crate::formats::{shape2d, PackedTensor, QuantSpec};
 use crate::runtime::{ConfigEntry, Engine, StepSpec};
-
-/// Gradient wire format used by the all-reduce.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum CommPrecision {
-    F32,
-    Fp8,
-}
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CommStats {
@@ -42,7 +39,7 @@ pub struct DpSim {
     state: Vec<Literal>, // 3n
     samplers: Vec<Sampler>,
     pub step: usize,
-    pub comm: CommPrecision,
+    pub comm: QuantSpec,
     pub stats: CommStats,
     pub losses: Vec<f32>,
 }
@@ -55,8 +52,12 @@ impl DpSim {
         corpus: &Corpus,
         workers: usize,
         seed: i32,
-        comm: CommPrecision,
+        comm: QuantSpec,
     ) -> Result<Self> {
+        anyhow::ensure!(
+            comm.clamp.is_none(),
+            "comm spec {comm} carries a clamp: the ΔY residual is not transmitted"
+        );
         let entry = engine.manifest.config(preset, policy)?.clone();
         let grad_spec = entry.step("grad")?.clone();
         let apply_spec = entry.step("apply")?.clone();
@@ -126,17 +127,21 @@ impl DpSim {
 
             for (gi, lit) in outs.iter().enumerate() {
                 let g = Engine::to_f32_vec(lit)?;
-                let g = match self.comm {
-                    CommPrecision::F32 => {
-                        self.stats.bytes_sent += 4 * g.len() as u64;
-                        g
-                    }
-                    CommPrecision::Fp8 => {
-                        // real wire payload: 1 byte/elem + 4-byte scale
-                        let packed = pack_fp8(&g, E4M3);
-                        self.stats.bytes_sent += packed.data.len() as u64 + 4;
-                        unpack_fp8(&packed)
-                    }
+                let g = if self.comm.is_raw() {
+                    self.stats.bytes_sent += 4 * g.len() as u64;
+                    g
+                } else {
+                    // real wire payload: packed codes + per-group f32 scales
+                    let (rows, cols) = shape2d(&self.grad_spec.outputs[gi].shape, g.len());
+                    let packed = PackedTensor::pack(
+                        &g,
+                        rows,
+                        cols,
+                        self.comm.format,
+                        self.comm.granularity,
+                    );
+                    self.stats.bytes_sent += packed.wire_bytes();
+                    packed.unpack()
                 };
                 self.stats.bytes_f32_equiv += 4 * g.len() as u64;
                 for (a, v) in acc[gi].iter_mut().zip(&g) {
@@ -182,7 +187,7 @@ impl DpSim {
 
     pub fn context_label(&self) -> String {
         format!(
-            "dp{}x {} comm={:?}",
+            "dp{}x {} comm={}",
             self.samplers.len(),
             self.entry.key,
             self.comm

@@ -3,8 +3,8 @@
 use anyhow::Result;
 
 use super::{tail_loss, Ctx};
-use crate::formats::Fp4Kind;
-use crate::quant::{dge, occ};
+use crate::formats::{Fp4Kind, QuantSpec};
+use crate::quant::dge;
 use crate::report::{f4, Table};
 use crate::util::Csv;
 
@@ -77,12 +77,9 @@ pub fn fig3(ctx: &mut Ctx) -> Result<()> {
 pub fn fig4(ctx: &mut Ctx, quick: bool) -> Result<()> {
     let tensors = super::tabs::probe_activations(ctx, quick)?;
     let (name, rows, cols, x) = &tensors[0]; // first transformer layer output
-    let fmt = Fp4Kind::E2M1;
 
-    let direct = crate::formats::qdq_vector(x, *rows, *cols, fmt, crate::formats::Granularity::Row);
-    let (clamped, _) = occ::clamp_tensor(x, 0.999);
-    let clamp_q =
-        crate::formats::qdq_vector(&clamped, *rows, *cols, fmt, crate::formats::Granularity::Row);
+    let direct = QuantSpec::parse("fp4:e2m1/row")?.qdq(x, *rows, *cols);
+    let clamp_q = QuantSpec::parse("fp4:e2m1/row/clamp@0.999")?.qdq(x, *rows, *cols);
 
     let mut csv = Csv::new(&["bin_center", "original", "direct_fp4", "clamped_fp4"]);
     let h0 = crate::stats::Histogram::auto(x, 96);

@@ -55,24 +55,31 @@ pub fn perf(ctx: &mut Ctx) -> Result<()> {
     }
 
     // --- codec throughput (the comm hot path) ---
+    use crate::formats::{PackedTensor, QuantSpec};
     let mut rng = crate::util::Rng::new(0);
     let xs = rng.normal_vec(4 << 20, 1.0); // 16 MiB of f32
+    let fp8 = QuantSpec::parse("fp8:e4m3")?;
     let timer = Timer::start();
-    let packed = crate::formats::fp8::pack_fp8(&xs, crate::formats::fp8::E4M3);
+    let packed = PackedTensor::pack(&xs, 1, xs.len(), fp8.format, fp8.granularity);
     let enc_s = timer.secs();
     let timer = Timer::start();
-    let back = crate::formats::fp8::unpack_fp8(&packed);
+    let back = packed.unpack();
     let dec_s = timer.secs();
     assert_eq!(back.len(), xs.len());
     let mb = (xs.len() * 4) as f64 / 1e6;
     t.row(&["fp8 encode throughput".into(), f2(mb / enc_s), "MB/s (f32 in)".into()]);
     t.row(&["fp8 decode throughput".into(), f2(mb / dec_s), "MB/s (f32 out)".into()]);
 
+    let fp4 = QuantSpec::parse("fp4:e2m1")?;
     let timer = Timer::start();
-    let p4 = crate::formats::pack_fp4(&xs, crate::formats::Fp4Kind::E2M1);
+    let p4 = PackedTensor::pack(&xs, 1, xs.len(), fp4.format, fp4.granularity);
     let enc4 = timer.secs();
     t.row(&["fp4 pack throughput".into(), f2(mb / enc4), "MB/s (f32 in)".into()]);
-    t.row(&["fp4 wire ratio".into(), f2(xs.len() as f64 * 4.0 / p4.data.len() as f64), "x".into()]);
+    t.row(&[
+        "fp4 wire ratio".into(),
+        f2(xs.len() as f64 * 4.0 / p4.wire_bytes() as f64),
+        "x".into(),
+    ]);
 
     // --- data pipeline ---
     let loader = BatchLoader::new(

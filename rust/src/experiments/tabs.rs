@@ -5,7 +5,7 @@ use anyhow::Result;
 use super::Ctx;
 use crate::data::corpus::CorpusKind;
 use crate::eval;
-use crate::formats::Fp4Kind;
+use crate::formats::{Fp4Kind, QuantSpec};
 use crate::quant;
 use crate::report::{f2, f4, pct, Table};
 use crate::runtime::Engine;
@@ -48,18 +48,23 @@ pub fn probe_activations(
 }
 
 /// Table 1: SIM/MSE/SNR of quantized activations under clamp/comp arms.
+/// Every arm is a [`QuantSpec`] string — tensor-wise FP4, matching the
+/// paper's §3.2 isolation of the clamp from the §4.1 vector-wise scaling.
 pub fn tab1(ctx: &mut Ctx, quick: bool) -> Result<()> {
     let tensors = probe_activations(ctx, quick)?;
-    let arms: [(Option<f64>, bool, &str); 5] = [
-        (None, false, "-"),
-        (Some(0.999), false, "99.9"),
-        (Some(0.999), true, "99.9"),
-        (Some(0.99), true, "99"),
-        (Some(0.97), true, "97"),
+    let arms: [(&str, &str); 5] = [
+        ("fp4:e2m1", "-"),
+        ("fp4:e2m1/clamp@0.999", "99.9"),
+        ("fp4:e2m1/clamp@0.999+comp", "99.9"),
+        ("fp4:e2m1/clamp@0.99+comp", "99"),
+        ("fp4:e2m1/clamp@0.97+comp", "97"),
     ];
     let mut t = Table::new(&["CLAMP", "COMP", "QUANTILE", "SIM", "MSE", "SNR(dB)", "ΔY nnz"]);
     let mut csv = Csv::new(&["clamp", "comp", "quantile", "sim", "mse", "snr_db", "sparsity"]);
-    for (alpha, comp, qlabel) in arms {
+    for (spec_str, qlabel) in arms {
+        let spec = QuantSpec::parse(spec_str)?;
+        let clamped = spec.clamp.is_some();
+        let comp = spec.clamp.map(|c| c.compensate).unwrap_or(false);
         // average across all probe tensors (paper: across all activation
         // tensors of the 1.3B model)
         let mut sim = 0.0;
@@ -67,7 +72,7 @@ pub fn tab1(ctx: &mut Ctx, quick: bool) -> Result<()> {
         let mut snr = 0.0;
         let mut sp = 0.0;
         for (_, rows, cols, x) in &tensors {
-            let (f, s) = quant::table1_arm(x, *rows, *cols, alpha, comp, Fp4Kind::E2M1);
+            let (f, s) = quant::table1_arm(x, *rows, *cols, &spec);
             sim += f.sim;
             mse += f.mse;
             snr += f.snr_db;
@@ -76,7 +81,7 @@ pub fn tab1(ctx: &mut Ctx, quick: bool) -> Result<()> {
         let n = tensors.len() as f64;
         let (sim, mse, snr, sp) = (sim / n, mse / n, snr / n, sp / n);
         t.row(&[
-            if alpha.is_some() { "Y" } else { "x" }.into(),
+            if clamped { "Y" } else { "x" }.into(),
             if comp { "Y" } else { "x" }.into(),
             qlabel.into(),
             pct(sim),
@@ -85,7 +90,7 @@ pub fn tab1(ctx: &mut Ctx, quick: bool) -> Result<()> {
             pct(sp),
         ]);
         csv.row(&[
-            format!("{}", alpha.is_some()),
+            format!("{clamped}"),
             format!("{comp}"),
             qlabel.to_string(),
             format!("{sim}"),

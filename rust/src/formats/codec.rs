@@ -1,0 +1,813 @@
+//! The unified numerics API: one extension point for every precision the
+//! mixed-precision scheme touches (FP4 GEMM inputs, FP8 gradient
+//! communication, scaled-FP16 optimizer state, raw F32).
+//!
+//! Three layers, from scalar to storage:
+//!
+//!  * [`Codec`] — scalar encode/decode to a bit code, plus the format's
+//!    finite max (the `MAX` of Eq. 1) and its wire width. Implemented by
+//!    [`Fp4Kind`], [`Fp8Spec`] and [`ScaledF16`]; [`Format`] is the
+//!    value-level sum of all of them (including identity `f32`).
+//!  * [`QuantSpec`] — *what to do to a tensor*: a format, a scaling
+//!    [`Granularity`] (Eq. 1 applied per tensor / row / column, §4.1) and
+//!    an optional outlier [`ClampSpec`] (§3.2, Eq. 9). Parses from and
+//!    renders to a canonical string (see the grammar below), so every CLI
+//!    knob, config field and experiment arm speaks the same language.
+//!  * [`PackedTensor`] — *real storage*: bit-packed codes plus the
+//!    per-group scale vector. `unpack` reproduces exactly what
+//!    [`QuantSpec::qdq`] computes; `wire_bytes` is the exact on-wire cost
+//!    (codes + 4 bytes per f32 scale).
+//!
+//! # Spec-string grammar
+//!
+//! ```text
+//! spec   := format [ "/" gran ] [ "/" clamp ]
+//! format := "fp4:" ("e2m1"|"e1m2"|"e3m0") | "fp8:" ("e4m3"|"e5m2")
+//!         | "f16" | "f32"            -- plus shorthands "fp4" (= fp4:e2m1)
+//!                                    -- and "fp8" (= fp8:e4m3)
+//! gran   := "tensor" | "row" | "col"          -- default: tensor
+//! clamp  := "clamp@" alpha [ "+comp" ]        -- alpha in (0.5, 1)
+//! ```
+//!
+//! Examples: `fp4:e2m1/row`, `fp8:e4m3`, `fp4:e2m1/clamp@0.999+comp`,
+//! `f32`. `Display` always renders the canonical long form
+//! (`fp4:e2m1/tensor/...`), and `parse(display(s)) == s` for every spec.
+//!
+//! # Sanitization (NaN / Inf)
+//!
+//! Quantization is absmax-scaled, so a single non-finite element used to
+//! poison the scale and with it the whole tensor. The unified API defines:
+//! scale computation ignores non-finite values; `NaN` quantizes to `+0.0`;
+//! `±Inf` saturates to the largest finite representable value of the group
+//! (i.e. `±max_value / gamma`). This holds for every format and for both
+//! the qdq and the packed-storage paths.
+
+use std::fmt;
+
+use anyhow::{bail, ensure, Result};
+
+use super::fp16;
+use super::fp8::{self, Fp8Spec};
+use super::{Fp4Kind, Granularity};
+
+/// Scalar codec: one value in, one bit code out (and back).
+///
+/// `encode_bits` expects a *pre-scaled* value (the caller applies Eq. 1's
+/// `gamma` first) and returns the low `bits_per_element()` bits of the
+/// code; `decode_bits` inverts it. `max_value` is the largest finite
+/// magnitude the format represents — the `MAX` numerator of Eq. 1.
+pub trait Codec {
+    fn encode_bits(&self, x: f32) -> u32;
+    fn decode_bits(&self, code: u32) -> f32;
+    fn max_value(&self) -> f32;
+    fn bits_per_element(&self) -> u32;
+}
+
+impl Codec for Fp4Kind {
+    fn encode_bits(&self, x: f32) -> u32 {
+        u32::from((*self).encode(x))
+    }
+
+    fn decode_bits(&self, code: u32) -> f32 {
+        (*self).decode((code & 0xF) as u8)
+    }
+
+    fn max_value(&self) -> f32 {
+        self.positives()[7]
+    }
+
+    fn bits_per_element(&self) -> u32 {
+        4
+    }
+}
+
+impl Codec for Fp8Spec {
+    fn encode_bits(&self, x: f32) -> u32 {
+        u32::from(self.encode(x))
+    }
+
+    fn decode_bits(&self, code: u32) -> f32 {
+        self.decode(code as u8)
+    }
+
+    fn max_value(&self) -> f32 {
+        self.max
+    }
+
+    fn bits_per_element(&self) -> u32 {
+        8
+    }
+}
+
+/// Scaled-FP16 storage (FP8-LM §4.1): absmax is pinned to 32768 so tiny
+/// optimizer moments survive the cast; the codec itself is IEEE binary16.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScaledF16;
+
+impl Codec for ScaledF16 {
+    fn encode_bits(&self, x: f32) -> u32 {
+        // Storage casts must stay finite (the decode side divides by gamma).
+        // ±Inf saturates to ±max_value so the group decodes to its absmax,
+        // matching the sanitization contract of every other format.
+        let x = if x.is_nan() {
+            0.0
+        } else if x.is_infinite() {
+            32768.0f32.copysign(x)
+        } else {
+            x
+        };
+        u32::from(fp16::f32_to_f16_bits(x))
+    }
+
+    fn decode_bits(&self, code: u32) -> f32 {
+        fp16::f16_bits_to_f32(code as u16)
+    }
+
+    fn max_value(&self) -> f32 {
+        32768.0
+    }
+
+    fn bits_per_element(&self) -> u32 {
+        16
+    }
+}
+
+/// Value-level numeric format: the sum of every codec the stack uses.
+///
+/// `F32` is the identity codec (gamma pinned to 1): it lets raw-precision
+/// arms (f32 gradient comm, uncompressed checkpoints) flow through the
+/// same `QuantSpec` plumbing with exact bytes accounting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Format {
+    Fp4(Fp4Kind),
+    Fp8(Fp8Spec),
+    F16,
+    F32,
+}
+
+impl Format {
+    /// Parse a format name: `fp4:<e2m1|e1m2|e3m0>`, `fp8:<e4m3|e5m2>`,
+    /// `f16`, `f32`, plus the shorthands `fp4` (E2M1) and `fp8` (E4M3).
+    pub fn from_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fp4" => Format::Fp4(Fp4Kind::E2M1),
+            "fp8" => Format::Fp8(fp8::E4M3),
+            "f16" | "fp16" => Format::F16,
+            "f32" | "fp32" => Format::F32,
+            _ => {
+                if let Some(kind) = s.strip_prefix("fp4:") {
+                    Format::Fp4(Fp4Kind::from_name(kind)?)
+                } else if let Some(spec) = s.strip_prefix("fp8:") {
+                    Format::Fp8(Fp8Spec::from_name(spec)?)
+                } else {
+                    bail!(
+                        "unknown numeric format {s:?} (expected fp4:<e2m1|e1m2|e3m0>, \
+                         fp8:<e4m3|e5m2>, f16 or f32)"
+                    )
+                }
+            }
+        })
+    }
+}
+
+impl fmt::Display for Format {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Format::Fp4(k) => write!(f, "fp4:{}", k.name()),
+            Format::Fp8(s) => write!(f, "fp8:{}", s.name()),
+            Format::F16 => write!(f, "f16"),
+            Format::F32 => write!(f, "f32"),
+        }
+    }
+}
+
+impl Codec for Format {
+    fn encode_bits(&self, x: f32) -> u32 {
+        let x = if x.is_nan() { 0.0 } else { x };
+        match self {
+            Format::Fp4(k) => Codec::encode_bits(k, x),
+            Format::Fp8(s) => Codec::encode_bits(s, x),
+            Format::F16 => ScaledF16.encode_bits(x),
+            // identity for finite values; ±Inf saturates like every other
+            // format so the sanitization contract is uniform
+            Format::F32 => x.clamp(f32::MIN, f32::MAX).to_bits(),
+        }
+    }
+
+    fn decode_bits(&self, code: u32) -> f32 {
+        match self {
+            Format::Fp4(k) => Codec::decode_bits(k, code),
+            Format::Fp8(s) => Codec::decode_bits(s, code),
+            Format::F16 => ScaledF16.decode_bits(code),
+            Format::F32 => f32::from_bits(code),
+        }
+    }
+
+    fn max_value(&self) -> f32 {
+        match self {
+            Format::Fp4(k) => Codec::max_value(k),
+            Format::Fp8(s) => s.max,
+            Format::F16 => ScaledF16.max_value(),
+            Format::F32 => f32::MAX,
+        }
+    }
+
+    fn bits_per_element(&self) -> u32 {
+        match self {
+            Format::Fp4(_) => 4,
+            Format::Fp8(_) => 8,
+            Format::F16 => 16,
+            Format::F32 => 32,
+        }
+    }
+}
+
+/// Outlier clamp of §3.2 (Eq. 9): clamp to the `(1-alpha, alpha)` signed
+/// quantiles; with `compensate`, the residual `ΔY` is added back after
+/// quantization (the sparse compensation matrix of the paper).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClampSpec {
+    pub alpha: f64,
+    pub compensate: bool,
+}
+
+/// A complete tensor-quantization recipe: format + scaling granularity +
+/// optional outlier clamping. See the module docs for the string grammar.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantSpec {
+    pub format: Format,
+    pub granularity: Granularity,
+    pub clamp: Option<ClampSpec>,
+}
+
+impl QuantSpec {
+    pub const fn new(format: Format, granularity: Granularity) -> Self {
+        QuantSpec { format, granularity, clamp: None }
+    }
+
+    pub fn with_clamp(mut self, alpha: f64, compensate: bool) -> Self {
+        self.clamp = Some(ClampSpec { alpha, compensate });
+        self
+    }
+
+    /// Parse the canonical spec string (see module docs for the grammar).
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut parts = s.split('/');
+        let format = Format::from_name(parts.next().unwrap_or(""))?;
+        let mut granularity = None;
+        let mut clamp = None;
+        for part in parts {
+            if let Some(rest) = part.strip_prefix("clamp@") {
+                ensure!(clamp.is_none(), "duplicate clamp in spec {s:?}");
+                let (alpha_str, compensate) = match rest.strip_suffix("+comp") {
+                    Some(a) => (a, true),
+                    None => (rest, false),
+                };
+                let alpha: f64 = alpha_str
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad clamp quantile {alpha_str:?} in spec {s:?}"))?;
+                ensure!(
+                    alpha > 0.5 && alpha < 1.0,
+                    "clamp quantile must lie in (0.5, 1), got {alpha}"
+                );
+                clamp = Some(ClampSpec { alpha, compensate });
+            } else {
+                ensure!(
+                    granularity.is_none() && clamp.is_none(),
+                    "misplaced or duplicate granularity {part:?} in spec {s:?}"
+                );
+                granularity = Some(Granularity::from_name(part)?);
+            }
+        }
+        Ok(QuantSpec {
+            format,
+            granularity: granularity.unwrap_or(Granularity::Tensor),
+            clamp,
+        })
+    }
+
+    /// CLI-facing alias of [`QuantSpec::parse`]: errors on unknown values
+    /// instead of silently defaulting.
+    pub fn from_name(s: &str) -> Result<Self> {
+        Self::parse(s)
+    }
+
+    /// True when this spec is an exact pass-through (raw f32, no clamp).
+    pub fn is_raw(&self) -> bool {
+        self.format == Format::F32 && self.clamp.is_none()
+    }
+
+    pub fn bits_per_element(&self) -> u32 {
+        self.format.bits_per_element()
+    }
+
+    /// Number of per-group scales for a (rows × cols) tensor.
+    pub fn n_scales(&self, rows: usize, cols: usize) -> usize {
+        self.granularity.n_groups(rows, cols)
+    }
+
+    /// Exact wire cost of packing a (rows × cols) tensor with this spec:
+    /// bit-packed codes plus 4 bytes per f32 scale.
+    pub fn wire_bytes(&self, rows: usize, cols: usize) -> u64 {
+        let n = (rows * cols) as u64;
+        let payload = match self.format.bits_per_element() {
+            4 => n.div_ceil(2),
+            bits => n * u64::from(bits / 8),
+        };
+        payload + 4 * self.n_scales(rows, cols) as u64
+    }
+
+    /// Simulation-grade quantize-dequantize of the full recipe:
+    /// clamp (if any) → absmax-scale per group → round through the codec
+    /// → unscale → compensate (if requested).
+    pub fn qdq(&self, xs: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        self.apply(xs, rows, cols).0
+    }
+
+    /// Like [`QuantSpec::qdq`], additionally returning the residual
+    /// sparsity `nnz(ΔY)/n` of the clamp (0.0 without clamping) — the
+    /// quantity that drives the Appendix-B compensation overhead model.
+    pub fn apply(&self, xs: &[f32], rows: usize, cols: usize) -> (Vec<f32>, f64) {
+        assert_eq!(xs.len(), rows * cols, "shape mismatch");
+        match self.clamp {
+            None => (self.qdq_unclamped(xs, rows, cols), 0.0),
+            Some(_) if xs.is_empty() => (Vec::new(), 0.0),
+            Some(c) => {
+                // The clamp path sorts (quantile) and re-adds ΔY, so
+                // non-finite inputs must be sanitized before clamping:
+                // NaN -> 0, ±Inf -> the tensor's finite extremes (they then
+                // clamp like any other outlier). Without this, a NaN panics
+                // the quantile sort and an Inf residual survives `+comp`.
+                let sanitized: Vec<f32>;
+                let src: &[f32] = if xs.iter().all(|x| x.is_finite()) {
+                    xs
+                } else {
+                    let mut lo = f32::INFINITY;
+                    let mut hi = f32::NEG_INFINITY;
+                    for &x in xs.iter().filter(|x| x.is_finite()) {
+                        lo = lo.min(x);
+                        hi = hi.max(x);
+                    }
+                    if !lo.is_finite() || !hi.is_finite() {
+                        lo = 0.0; // no finite values at all
+                        hi = 0.0;
+                    }
+                    sanitized = xs
+                        .iter()
+                        .map(|&x| {
+                            if x.is_nan() {
+                                0.0
+                            } else if x == f32::INFINITY {
+                                hi
+                            } else if x == f32::NEG_INFINITY {
+                                lo
+                            } else {
+                                x
+                            }
+                        })
+                        .collect();
+                    &sanitized
+                };
+                let (clamped, delta) = crate::quant::occ::clamp_tensor(src, c.alpha);
+                let nnz = delta.iter().filter(|&&d| d != 0.0).count();
+                let mut q = self.qdq_unclamped(&clamped, rows, cols);
+                if c.compensate {
+                    for (qi, di) in q.iter_mut().zip(&delta) {
+                        *qi += di;
+                    }
+                }
+                (q, nnz as f64 / xs.len() as f64)
+            }
+        }
+    }
+
+    /// Pack into real storage. Clamping is a qdq-path transform (the
+    /// residual is not stored), so specs carrying a clamp are rejected.
+    pub fn pack(&self, xs: &[f32], rows: usize, cols: usize) -> Result<PackedTensor> {
+        ensure!(
+            self.clamp.is_none(),
+            "spec {self} carries a clamp: the ΔY residual is not stored, pack the unclamped tensor"
+        );
+        Ok(PackedTensor::pack(xs, rows, cols, self.format, self.granularity))
+    }
+
+    fn qdq_unclamped(&self, xs: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        let fmt = self.format;
+        let qdq1 = |x: f32, gamma: f32| fmt.decode_bits(fmt.encode_bits(x * gamma)) / gamma;
+        let scales = scales_for(fmt, xs, rows, cols, self.granularity);
+        // gamma lookups are hoisted out of the element loop (this is the
+        // dp-comm / repro hot path; see benches/formats.rs)
+        match self.granularity {
+            Granularity::Tensor => {
+                let gamma = scales[0];
+                xs.iter().map(|&x| qdq1(x, gamma)).collect()
+            }
+            Granularity::Row => {
+                let mut out = Vec::with_capacity(xs.len());
+                for (row, &gamma) in xs.chunks(cols).zip(&scales) {
+                    out.extend(row.iter().map(|&x| qdq1(x, gamma)));
+                }
+                out
+            }
+            Granularity::Col => {
+                let mut out = Vec::with_capacity(xs.len());
+                for row in xs.chunks(cols) {
+                    out.extend(row.iter().zip(&scales).map(|(&x, &gamma)| qdq1(x, gamma)));
+                }
+                out
+            }
+        }
+    }
+}
+
+impl fmt::Display for QuantSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.format, self.granularity.name())?;
+        if let Some(c) = &self.clamp {
+            write!(f, "/clamp@{}", c.alpha)?;
+            if c.compensate {
+                write!(f, "+comp")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-group absmax scales (the `gamma` of Eq. 1) of a (rows × cols)
+/// tensor. Non-finite values are ignored; all-zero (or all-non-finite)
+/// groups get gamma = 1 so decoding never divides by zero. `F32` pins
+/// every gamma to 1 (identity).
+pub fn scales_for(
+    format: Format,
+    xs: &[f32],
+    rows: usize,
+    cols: usize,
+    gran: Granularity,
+) -> Vec<f32> {
+    let n_groups = gran.n_groups(rows, cols);
+    if format == Format::F32 {
+        return vec![1.0; n_groups];
+    }
+    let mut amax = vec![0.0f32; n_groups];
+    for (i, &x) in xs.iter().enumerate() {
+        if x.is_finite() {
+            let g = gran.group_of(i, cols);
+            amax[g] = amax[g].max(x.abs());
+        }
+    }
+    let max = format.max_value();
+    amax.into_iter().map(|a| if a == 0.0 { 1.0 } else { max / a }).collect()
+}
+
+/// Collapse an N-D shape to (rows, cols) for vector-wise scaling: the last
+/// axis is the channel axis, every leading axis flattens into rows; scalars
+/// and vectors become a single row.
+pub fn shape2d(shape: &[usize], len: usize) -> (usize, usize) {
+    match shape.len() {
+        0 | 1 => (1, len),
+        _ => {
+            let cols = *shape.last().unwrap();
+            if cols == 0 {
+                (0, 0)
+            } else {
+                (len / cols, cols)
+            }
+        }
+    }
+}
+
+/// A real quantized payload for one (rows × cols) tensor: bit-packed codes
+/// (two per byte for FP4, little-endian for the wider formats) plus the
+/// per-group scale vector. Generalizes the old tensor-wise `PackedFp4` /
+/// `PackedFp8` to every [`Format`] and every [`Granularity`] — vector-wise
+/// quantization of §4.1 as storage, not just simulation.
+#[derive(Clone, Debug)]
+pub struct PackedTensor {
+    pub format: Format,
+    pub granularity: Granularity,
+    pub rows: usize,
+    pub cols: usize,
+    /// One gamma per group: 1 (tensor), `rows` (row) or `cols` (col).
+    pub scales: Vec<f32>,
+    /// Bit-packed codes in row-major element order; for 4-bit formats two
+    /// codes per byte, low nibble first.
+    pub data: Vec<u8>,
+}
+
+impl PackedTensor {
+    pub fn pack(
+        xs: &[f32],
+        rows: usize,
+        cols: usize,
+        format: Format,
+        granularity: Granularity,
+    ) -> Self {
+        assert_eq!(xs.len(), rows * cols, "shape mismatch");
+        let scales = scales_for(format, xs, rows, cols, granularity);
+        let bits = format.bits_per_element();
+        let mut data = match bits {
+            4 => vec![0u8; xs.len().div_ceil(2)],
+            _ => Vec::with_capacity(xs.len() * bits as usize / 8),
+        };
+        let mut i = 0usize;
+        // per-row iteration hoists the gamma lookup out of the element loop
+        // (same structure as `qdq_unclamped`; this is the comm hot path)
+        for (r, row) in xs.chunks(cols.max(1)).enumerate() {
+            for (c, &x) in row.iter().enumerate() {
+                let gamma = match granularity {
+                    Granularity::Tensor => scales[0],
+                    Granularity::Row => scales[r],
+                    Granularity::Col => scales[c],
+                };
+                let code = format.encode_bits(x * gamma);
+                match bits {
+                    4 => data[i / 2] |= ((code & 0xF) as u8) << ((i % 2) * 4),
+                    8 => data.push(code as u8),
+                    16 => data.extend_from_slice(&(code as u16).to_le_bytes()),
+                    _ => data.extend_from_slice(&code.to_le_bytes()),
+                }
+                i += 1;
+            }
+        }
+        PackedTensor { format, granularity, rows, cols, scales, data }
+    }
+
+    /// Decode back to f32. Bit-exact with [`QuantSpec::qdq`] (same codec,
+    /// same scales) — the storage and simulation paths cannot drift.
+    pub fn unpack(&self) -> Vec<f32> {
+        let bits = self.format.bits_per_element();
+        let mut out = Vec::with_capacity(self.len());
+        let mut i = 0usize;
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let code = match bits {
+                    4 => u32::from((self.data[i / 2] >> ((i % 2) * 4)) & 0xF),
+                    8 => u32::from(self.data[i]),
+                    16 => {
+                        u32::from(u16::from_le_bytes([self.data[2 * i], self.data[2 * i + 1]]))
+                    }
+                    _ => u32::from_le_bytes([
+                        self.data[4 * i],
+                        self.data[4 * i + 1],
+                        self.data[4 * i + 2],
+                        self.data[4 * i + 3],
+                    ]),
+                };
+                let gamma = match self.granularity {
+                    Granularity::Tensor => self.scales[0],
+                    Granularity::Row => self.scales[r],
+                    Granularity::Col => self.scales[c],
+                };
+                out.push(self.format.decode_bits(code) / gamma);
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Exact wire cost: packed codes + 4 bytes per f32 scale.
+    pub fn wire_bytes(&self) -> u64 {
+        self.data.len() as u64 + 4 * self.scales.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL_FORMATS: [Format; 7] = [
+        Format::Fp4(Fp4Kind::E2M1),
+        Format::Fp4(Fp4Kind::E1M2),
+        Format::Fp4(Fp4Kind::E3M0),
+        Format::Fp8(fp8::E4M3),
+        Format::Fp8(fp8::E5M2),
+        Format::F16,
+        Format::F32,
+    ];
+    const ALL_GRANS: [Granularity; 3] =
+        [Granularity::Tensor, Granularity::Row, Granularity::Col];
+
+    #[test]
+    fn spec_string_round_trips_all_combinations() {
+        let clamps = [None, Some((0.999, false)), Some((0.999, true)), Some((0.97, true))];
+        for fmt in ALL_FORMATS {
+            for gran in ALL_GRANS {
+                for clamp in clamps {
+                    let mut spec = QuantSpec::new(fmt, gran);
+                    if let Some((alpha, comp)) = clamp {
+                        spec = spec.with_clamp(alpha, comp);
+                    }
+                    let s = spec.to_string();
+                    let back = QuantSpec::parse(&s)
+                        .unwrap_or_else(|e| panic!("reparsing {s:?}: {e}"));
+                    assert_eq!(back, spec, "{s:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_accepts_shorthands_and_defaults() {
+        assert_eq!(
+            QuantSpec::parse("fp8").unwrap(),
+            QuantSpec::new(Format::Fp8(fp8::E4M3), Granularity::Tensor)
+        );
+        assert_eq!(
+            QuantSpec::parse("fp4").unwrap(),
+            QuantSpec::new(Format::Fp4(Fp4Kind::E2M1), Granularity::Tensor)
+        );
+        assert_eq!(
+            QuantSpec::parse("fp4:e2m1/row").unwrap(),
+            QuantSpec::new(Format::Fp4(Fp4Kind::E2M1), Granularity::Row)
+        );
+        assert_eq!(
+            QuantSpec::parse("fp4:e2m1/clamp@0.999+comp").unwrap(),
+            QuantSpec::new(Format::Fp4(Fp4Kind::E2M1), Granularity::Tensor)
+                .with_clamp(0.999, true)
+        );
+        assert!(QuantSpec::parse("f32").unwrap().is_raw());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "fp5",
+            "fp4:e9m9",
+            "fp8:e3m4",
+            "fp4:e2m1/diag",
+            "fp4:e2m1/row/row",
+            "fp4:e2m1/clamp@0.999/row", // granularity after clamp
+            "fp4:e2m1/clamp@abc",
+            "fp4:e2m1/clamp@1.5",
+            "fp4:e2m1/clamp@0.2",
+            "fp4:e2m1/clamp@0.99+comp/clamp@0.97",
+        ] {
+            assert!(QuantSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn packed_round_trip_equals_qdq_for_all_format_gran_pairs() {
+        let mut rng = crate::util::Rng::new(7);
+        for fmt in ALL_FORMATS {
+            for gran in ALL_GRANS {
+                let (rows, cols) = (5, 7); // odd sizes: exercises nibble padding
+                let mut xs = rng.normal_vec(rows * cols, 2.0);
+                for c in 0..cols {
+                    xs[2 * cols + c] = 0.0; // an all-zero row
+                }
+                for r in 0..rows {
+                    xs[r * cols + 3] = 0.0; // an all-zero column
+                }
+                let spec = QuantSpec::new(fmt, gran);
+                let q = spec.qdq(&xs, rows, cols);
+                let p = spec.pack(&xs, rows, cols).unwrap();
+                assert_eq!(p.unpack(), q, "{spec}");
+                assert_eq!(p.wire_bytes(), spec.wire_bytes(rows, cols), "{spec}");
+            }
+        }
+    }
+
+    #[test]
+    fn fp4_wire_is_half_of_fp8() {
+        // Codes are exactly half; per-row scales add <1% on real shapes.
+        let (rows, cols) = (256, 1024);
+        let fp4 = QuantSpec::parse("fp4:e2m1/row").unwrap();
+        let fp8_t = QuantSpec::parse("fp8:e4m3").unwrap();
+        let b4 = fp4.wire_bytes(rows, cols);
+        let b8 = fp8_t.wire_bytes(rows, cols);
+        assert_eq!(b4 - 4 * rows as u64, (b8 - 4) / 2); // codes: exactly half
+        assert!((b4 as f64) < 0.51 * b8 as f64, "{b4} vs {b8}");
+    }
+
+    #[test]
+    fn f32_spec_is_exact_identity() {
+        let mut rng = crate::util::Rng::new(9);
+        let xs = rng.normal_vec(33, 100.0);
+        let spec = QuantSpec::parse("f32/row").unwrap();
+        assert_eq!(spec.qdq(&xs, 3, 11), xs);
+        let p = spec.pack(&xs, 3, 11).unwrap();
+        assert_eq!(p.unpack(), xs);
+        assert_eq!(p.wire_bytes(), 33 * 4 + 3 * 4);
+    }
+
+    #[test]
+    fn f16_spec_matches_scaled_f16_qdq() {
+        let mut rng = crate::util::Rng::new(10);
+        let xs = rng.normal_vec(257, 1e-6);
+        let spec = QuantSpec::new(Format::F16, Granularity::Tensor);
+        assert_eq!(spec.qdq(&xs, 1, xs.len()), fp16::qdq_f16_scaled(&xs));
+    }
+
+    #[test]
+    fn nan_quantizes_to_zero_without_poisoning_neighbours() {
+        for fmt in ALL_FORMATS {
+            let xs = [1.0f32, f32::NAN, -2.0, 0.5];
+            let clean = [1.0f32, 0.0, -2.0, 0.5];
+            let spec = QuantSpec::new(fmt, Granularity::Tensor);
+            let q = spec.qdq(&xs, 1, 4);
+            let qc = spec.qdq(&clean, 1, 4);
+            assert_eq!(q, qc, "{spec}");
+            assert_eq!(q[1], 0.0, "{spec}");
+            assert!(q.iter().all(|v| v.is_finite()), "{spec}");
+        }
+    }
+
+    #[test]
+    fn all_nan_tensor_quantizes_to_zeros() {
+        for fmt in ALL_FORMATS {
+            let xs = [f32::NAN; 6];
+            let spec = QuantSpec::new(fmt, Granularity::Row);
+            assert_eq!(spec.qdq(&xs, 2, 3), vec![0.0; 6], "{spec}");
+        }
+    }
+
+    #[test]
+    fn infinity_saturates_to_group_max() {
+        let xs = [f32::INFINITY, 4.0, f32::NEG_INFINITY, -1.0];
+        let spec = QuantSpec::new(Format::Fp4(Fp4Kind::E2M1), Granularity::Tensor);
+        let q = spec.qdq(&xs, 1, 4);
+        // gamma = 6/4; ±Inf hits the ±6 grid end -> ±4 after unscaling
+        assert_eq!(q[0], 4.0);
+        assert_eq!(q[2], -4.0);
+        assert!(q.iter().all(|v| v.is_finite()));
+        // fp8 and scaled-f16: saturate at ±max/gamma likewise
+        for fmt in [Format::Fp8(fp8::E4M3), Format::F16] {
+            let q = QuantSpec::new(fmt, Granularity::Tensor).qdq(&xs, 1, 4);
+            assert_eq!(q[0], 4.0, "{fmt}");
+            assert_eq!(q[2], -4.0, "{fmt}");
+        }
+    }
+
+    #[test]
+    fn packed_fp8_tensor_relative_error_bounded() {
+        // migrated from the retired `pack_fp8` free function
+        let mut rng = crate::util::Rng::new(3);
+        let xs = rng.normal_vec(4096, 5.0);
+        let p = PackedTensor::pack(&xs, 1, 4096, Format::Fp8(fp8::E4M3), Granularity::Tensor);
+        assert_eq!(p.data.len(), xs.len()); // 1 byte per element
+        for (x, y) in xs.iter().zip(&p.unpack()) {
+            // E4M3 relative step is 2^-3 within a binade -> 6.25% worst
+            assert!((x - y).abs() <= 0.0625 * x.abs() + 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn clamp_spec_apply_matches_manual_pipeline() {
+        let mut rng = crate::util::Rng::new(4);
+        let xs = rng.normal_vec(512, 1.0);
+        let spec = QuantSpec::parse("fp4:e2m1/row/clamp@0.99+comp").unwrap();
+        let (q, sparsity) = spec.apply(&xs, 16, 32);
+        let (clamped, delta) = crate::quant::occ::clamp_tensor(&xs, 0.99);
+        let mut want = QuantSpec::parse("fp4:e2m1/row").unwrap().qdq(&clamped, 16, 32);
+        for (w, d) in want.iter_mut().zip(&delta) {
+            *w += d;
+        }
+        assert_eq!(q, want);
+        let nnz = delta.iter().filter(|&&d| d != 0.0).count();
+        assert_eq!(sparsity, nnz as f64 / 512.0);
+    }
+
+    #[test]
+    fn clamped_spec_survives_nan_and_inf() {
+        // the quantile sort must not panic on NaN, and +comp must not
+        // re-add an infinite residual
+        let mut rng = crate::util::Rng::new(11);
+        let mut xs = rng.normal_vec(256, 1.0);
+        xs[3] = f32::NAN;
+        xs[57] = f32::INFINITY;
+        xs[100] = f32::NEG_INFINITY;
+        for s in ["fp4:e2m1/clamp@0.99", "fp4:e2m1/row/clamp@0.99+comp"] {
+            let spec = QuantSpec::parse(s).unwrap();
+            let (q, sparsity) = spec.apply(&xs, 8, 32);
+            assert!(q.iter().all(|v| v.is_finite()), "{s}");
+            assert!(sparsity > 0.0, "{s}");
+        }
+    }
+
+    #[test]
+    fn pack_rejects_clamped_specs() {
+        let spec = QuantSpec::parse("fp4:e2m1/clamp@0.99").unwrap();
+        assert!(spec.pack(&[1.0, 2.0], 1, 2).is_err());
+    }
+
+    #[test]
+    fn shape2d_collapses_leading_axes() {
+        assert_eq!(shape2d(&[], 1), (1, 1));
+        assert_eq!(shape2d(&[7], 7), (1, 7));
+        assert_eq!(shape2d(&[3, 4], 12), (3, 4));
+        assert_eq!(shape2d(&[2, 3, 4], 24), (6, 4));
+    }
+}

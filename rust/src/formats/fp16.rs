@@ -72,10 +72,10 @@ pub fn f16_round_trip(x: f32) -> f32 {
 
 /// Scaled-FP16 qdq for optimizer state (mirrors `ref.fp16_qdq`): per-tensor
 /// absmax is pinned to 32768 so tiny second moments survive storage.
+/// Delegates to the unified codec API (`Format::F16` = [`super::ScaledF16`]).
 pub fn qdq_f16_scaled(xs: &[f32]) -> Vec<f32> {
-    let amax = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
-    let gamma = if amax == 0.0 { 1.0 } else { 32768.0 / amax };
-    xs.iter().map(|&x| f16_round_trip(x * gamma) / gamma).collect()
+    use super::{Format, Granularity, QuantSpec};
+    QuantSpec::new(Format::F16, Granularity::Tensor).qdq(xs, 1, xs.len())
 }
 
 #[cfg(test)]

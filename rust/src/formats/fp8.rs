@@ -23,6 +23,22 @@ pub const E4M3: Fp8Spec = Fp8Spec { exp_bits: 4, man_bits: 3, bias: 7, max: 448.
 pub const E5M2: Fp8Spec = Fp8Spec { exp_bits: 5, man_bits: 2, bias: 15, max: 57344.0 };
 
 impl Fp8Spec {
+    pub fn from_name(name: &str) -> anyhow::Result<Self> {
+        Ok(match name {
+            "e4m3" => E4M3,
+            "e5m2" => E5M2,
+            other => anyhow::bail!("unknown fp8 format {other:?}"),
+        })
+    }
+
+    /// Canonical `e<exp>m<man>` name. Derived from the bit layout so a
+    /// hand-built custom spec renders truthfully (and then fails loudly in
+    /// `from_name`, which only accepts the two standard formats) instead
+    /// of masquerading as e5m2.
+    pub fn name(&self) -> String {
+        format!("e{}m{}", self.exp_bits, self.man_bits)
+    }
+
     /// Encode one f32 with round-to-nearest-even; saturating at ±max.
     pub fn encode(&self, x: f32) -> u8 {
         let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
@@ -57,8 +73,11 @@ impl Fp8Spec {
         }
         let mut exp_field = exp_field as u32;
         if m >= (1u32 << self.man_bits) {
+            // Mantissa overflow: bump the exponent. This also covers the
+            // subnormal -> normal boundary: exp_field 0 with a full mantissa
+            // rounds up to the smallest normal (exp_field 1, mantissa 0).
             m = 0;
-            exp_field += if exp_field == 0 { 1 } else { 1 };
+            exp_field += 1;
         }
         let code = ((exp_field << self.man_bits) | m) as u8;
         if code > max_code {
@@ -101,25 +120,9 @@ impl Fp8Spec {
     }
 }
 
-/// A real FP8 payload for one tensor: absmax-scaled bytes + the scale.
-/// This is the wire format of the dp-sim gradient all-reduce: 4 bytes of
-/// f32 become 1 byte on the wire (plus one f32 scale per tensor).
-#[derive(Clone, Debug)]
-pub struct PackedFp8 {
-    pub spec: Fp8Spec,
-    pub gamma: f32,
-    pub data: Vec<u8>,
-}
-
-pub fn pack_fp8(xs: &[f32], spec: Fp8Spec) -> PackedFp8 {
-    let gamma = super::absmax_scale(xs, spec.max);
-    let data = xs.iter().map(|&x| spec.encode(x * gamma)).collect();
-    PackedFp8 { spec, gamma, data }
-}
-
-pub fn unpack_fp8(p: &PackedFp8) -> Vec<f32> {
-    p.data.iter().map(|&b| p.spec.decode(b) / p.gamma).collect()
-}
+// The tensor-level payload (`PackedFp8`, `pack_fp8`, `unpack_fp8`) moved
+// into the unified storage type: see `codec::PackedTensor` with
+// `Format::Fp8(..)` — same bytes on the wire, any granularity.
 
 #[cfg(test)]
 mod tests {
@@ -237,19 +240,53 @@ mod tests {
     }
 
     #[test]
-    fn packed_fp8_relative_error_bounded() {
-        let mut rng = crate::util::Rng::new(3);
-        let xs = rng.normal_vec(4096, 5.0);
-        let p = pack_fp8(&xs, E4M3);
-        assert_eq!(p.data.len(), xs.len()); // 1 byte per element
-        let back = unpack_fp8(&p);
-        for (x, y) in xs.iter().zip(&back) {
-            // E4M3 relative step is 2^-3 within a binade -> 6.25% worst
-            assert!(
-                (x - y).abs() <= 0.0625 * x.abs() + 1e-3,
-                "{x} vs {y}"
-            );
+    fn subnormal_to_normal_mantissa_overflow_e4m3() {
+        // Largest E4M3 subnormal is 7/512 (0x07), smallest normal 2^-6
+        // (0x08). The midpoint 0.0146484375 is an exact tie between
+        // mantissa 7 (odd) and the overflowing 8 -> RTNE picks the
+        // overflow, which must carry into the exponent, not wrap.
+        let mid = 0.0146484375f32;
+        assert_eq!(E4M3.encode(mid), 0x08);
+        assert_eq!(E4M3.decode(0x08), 0.015625);
+        // just below the tie stays on the largest subnormal
+        assert_eq!(E4M3.encode(0.0146), 0x07);
+        // just above the tie also rounds to the smallest normal
+        assert_eq!(E4M3.encode(0.0147), 0x08);
+        // negative mirror
+        assert_eq!(E4M3.encode(-mid), 0x88);
+    }
+
+    #[test]
+    fn subnormal_to_normal_mantissa_overflow_e5m2() {
+        // Largest E5M2 subnormal is 3/4 * 2^-14 (0x03), smallest normal
+        // 2^-14 (0x04); the tie at 7/8 * 2^-14 overflows into the normal.
+        let mid = 5.340576171875e-05f32;
+        assert_eq!(E5M2.encode(mid), 0x04);
+        assert_eq!(E5M2.decode(0x04), 6.103515625e-05);
+        assert_eq!(E5M2.encode(5.3e-05), 0x03);
+        assert_eq!(E5M2.encode(5.4e-05), 0x04);
+        assert_eq!(E5M2.encode(-mid), 0x84);
+    }
+
+    #[test]
+    fn normal_mantissa_overflow_carries_binade() {
+        // 0.99 rounds past mantissa 8/8 of the 2^-1 binade -> exactly 1.0
+        assert_eq!(E4M3.encode(0.99), 0x38);
+        assert_eq!(E4M3.decode(0x38), 1.0);
+        assert_eq!(E5M2.encode(1.95), 0x40);
+        assert_eq!(E5M2.decode(0x40), 2.0);
+    }
+
+    #[test]
+    fn spec_names_round_trip() {
+        for spec in [E4M3, E5M2] {
+            assert_eq!(Fp8Spec::from_name(&spec.name()).unwrap(), spec);
         }
+        assert!(Fp8Spec::from_name("e3m4").is_err());
+        // a custom layout renders truthfully and does not parse back
+        let custom = Fp8Spec { exp_bits: 3, man_bits: 4, bias: 3, max: 15.5 };
+        assert_eq!(custom.name(), "e3m4");
+        assert!(Fp8Spec::from_name(&custom.name()).is_err());
     }
 
     #[test]

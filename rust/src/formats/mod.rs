@@ -1,21 +1,39 @@
 //! Numeric-format substrate: bit-exact FP4 / FP8 / FP16 codecs and the
 //! absmax quantizers of Eq. 1, mirroring `python/compile/formats.py`.
 //!
-//! Two distinct uses on the Rust side:
-//!  * *simulation-grade* quantize-dequantize (`qdq_*`) — same LUT semantics
-//!    as the Pallas kernel, used by Table-1 fidelity analysis and the
-//!    direct-cast baselines;
-//!  * *storage-grade* byte codecs (`encode`/`decode`, [`fp8`]) — real 4-bit
-//!    and 8-bit payloads used by the FP8 gradient-communication path of the
-//!    data-parallel coordinator and by checkpoint compression.
+//! The module is layered (see [`codec`] for the full story):
+//!
+//!  * **scalar codecs** — [`Fp4Kind`] (this file), [`fp8::Fp8Spec`] and
+//!    the binary16 helpers in [`fp16`] hold the bit-exact tables and
+//!    rounding; each implements the [`codec::Codec`] trait, and
+//!    [`codec::Format`] is their value-level sum (plus identity `f32`).
+//!  * **tensor recipes** — [`codec::QuantSpec`] combines a format, a
+//!    scaling [`Granularity`] and an optional outlier clamp, parsed
+//!    from/rendered to the canonical string grammar
+//!    `<format>[/<tensor|row|col>][/clamp@<alpha>[+comp]]`
+//!    (e.g. `fp4:e2m1/row/clamp@0.999+comp`). `QuantSpec::qdq` is the
+//!    *simulation-grade* quantize-dequantize used by the Table-1 fidelity
+//!    analysis and the direct-cast baselines.
+//!  * **storage** — [`codec::PackedTensor`] is the *storage-grade* payload
+//!    (bit-packed codes + per-group scale vector) used by the gradient
+//!    communication path of the data-parallel coordinator and by
+//!    checkpoint compression; it decodes bit-exactly to what `qdq`
+//!    computes.
+//!
+//! The legacy free functions (`qdq_tensor`, `qdq_vector`, `pack_fp4`,
+//! `unpack_fp4`) are thin delegates into that API — all rounding logic
+//! lives in one place.
 //!
 //! Rounding follows the paper's Appendix-A CUDA kernel exactly: nearest
 //! value with ties toward the *upper* neighbour (strict `<` thresholds at
 //! interval midpoints). Cross-checked against the Python tables in
 //! `python/tests/test_formats.py` and `tests/test_formats.rs`.
 
+pub mod codec;
 pub mod fp8;
 pub mod fp16;
+
+pub use codec::{shape2d, ClampSpec, Codec, Format, PackedTensor, QuantSpec, ScaledF16};
 
 /// A 4-bit floating-point format defined by its 8 non-negative values
 /// (Appendix A, Table 4); negatives mirror via the sign bit (code | 0x8).
@@ -165,9 +183,53 @@ pub enum Granularity {
     Col,
 }
 
+impl Granularity {
+    pub fn from_name(name: &str) -> anyhow::Result<Self> {
+        Ok(match name {
+            "tensor" => Granularity::Tensor,
+            "row" => Granularity::Row,
+            "col" | "column" => Granularity::Col,
+            other => anyhow::bail!("unknown granularity {other:?} (expected tensor, row or col)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Granularity::Tensor => "tensor",
+            Granularity::Row => "row",
+            Granularity::Col => "col",
+        }
+    }
+
+    /// Number of scale groups of a (rows × cols) tensor.
+    #[inline]
+    pub fn n_groups(self, rows: usize, cols: usize) -> usize {
+        match self {
+            Granularity::Tensor => 1,
+            Granularity::Row => rows,
+            Granularity::Col => cols,
+        }
+    }
+
+    /// Scale-group index of the element at flat (row-major) index `i`.
+    #[inline]
+    pub fn group_of(self, i: usize, cols: usize) -> usize {
+        match self {
+            Granularity::Tensor => 0,
+            Granularity::Row => i / cols,
+            Granularity::Col => i % cols,
+        }
+    }
+}
+
 /// absmax scaling factor gamma = MAX / max|x| (Eq. 1); 1-safe on zeros.
+/// Non-finite values are ignored so a stray NaN/Inf cannot poison the
+/// scale (see the sanitization contract in [`codec`]).
 pub fn absmax_scale(xs: &[f32], max_value: f32) -> f32 {
-    let amax = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    let amax = xs
+        .iter()
+        .filter(|x| x.is_finite())
+        .fold(0.0f32, |a, &x| a.max(x.abs()));
     if amax == 0.0 {
         1.0
     } else {
@@ -175,13 +237,14 @@ pub fn absmax_scale(xs: &[f32], max_value: f32) -> f32 {
     }
 }
 
-/// Tensor-wise FP4 quantize-dequantize (simulation-grade).
+/// Tensor-wise FP4 quantize-dequantize (simulation-grade). Delegates to
+/// [`QuantSpec::qdq`]; kept for the many call sites that only speak FP4.
 pub fn qdq_tensor(xs: &[f32], fmt: Fp4Kind) -> Vec<f32> {
-    let gamma = absmax_scale(xs, fmt.max_value());
-    xs.iter().map(|&x| fmt.lut_round(x * gamma) / gamma).collect()
+    QuantSpec::new(Format::Fp4(fmt), Granularity::Tensor).qdq(xs, 1, xs.len())
 }
 
-/// Vector-wise FP4 qdq of a row-major (rows × cols) tensor.
+/// Vector-wise FP4 qdq of a row-major (rows × cols) tensor. Delegates to
+/// [`QuantSpec::qdq`].
 pub fn qdq_vector(
     xs: &[f32],
     rows: usize,
@@ -189,63 +252,17 @@ pub fn qdq_vector(
     fmt: Fp4Kind,
     gran: Granularity,
 ) -> Vec<f32> {
-    assert_eq!(xs.len(), rows * cols, "shape mismatch");
-    let mut out = vec![0.0f32; xs.len()];
-    match gran {
-        Granularity::Tensor => return qdq_tensor(xs, fmt),
-        Granularity::Row => {
-            for r in 0..rows {
-                let row = &xs[r * cols..(r + 1) * cols];
-                let gamma = absmax_scale(row, fmt.max_value());
-                for c in 0..cols {
-                    out[r * cols + c] = fmt.lut_round(row[c] * gamma) / gamma;
-                }
-            }
-        }
-        Granularity::Col => {
-            for c in 0..cols {
-                let mut amax = 0.0f32;
-                for r in 0..rows {
-                    amax = amax.max(xs[r * cols + c].abs());
-                }
-                let gamma = if amax == 0.0 { 1.0 } else { fmt.max_value() / amax };
-                for r in 0..rows {
-                    out[r * cols + c] = fmt.lut_round(xs[r * cols + c] * gamma) / gamma;
-                }
-            }
-        }
-    }
-    out
+    QuantSpec::new(Format::Fp4(fmt), gran).qdq(xs, rows, cols)
 }
 
-/// A real FP4 payload: packed 4-bit codes + the absmax scale that produced
-/// them. `decode` reproduces exactly what `qdq_tensor` computes, from half
-/// the bytes of an FP8 payload — the storage story of the paper's format.
-#[derive(Clone, Debug)]
-pub struct PackedFp4 {
-    pub fmt: Fp4Kind,
-    pub gamma: f32,
-    pub len: usize,
-    pub data: Vec<u8>, // two codes per byte, low nibble first
+/// Tensor-wise FP4 packing. Delegates to [`PackedTensor::pack`].
+pub fn pack_fp4(xs: &[f32], fmt: Fp4Kind) -> PackedTensor {
+    PackedTensor::pack(xs, 1, xs.len(), Format::Fp4(fmt), Granularity::Tensor)
 }
 
-pub fn pack_fp4(xs: &[f32], fmt: Fp4Kind) -> PackedFp4 {
-    let gamma = absmax_scale(xs, fmt.max_value());
-    let mut data = vec![0u8; xs.len().div_ceil(2)];
-    for (i, &x) in xs.iter().enumerate() {
-        let code = fmt.encode(x * gamma);
-        data[i / 2] |= code << ((i % 2) * 4);
-    }
-    PackedFp4 { fmt, gamma, len: xs.len(), data }
-}
-
-pub fn unpack_fp4(p: &PackedFp4) -> Vec<f32> {
-    (0..p.len)
-        .map(|i| {
-            let code = (p.data[i / 2] >> ((i % 2) * 4)) & 0xF;
-            p.fmt.decode(code) / p.gamma
-        })
-        .collect()
+/// Decode a packed payload. Delegates to [`PackedTensor::unpack`].
+pub fn unpack_fp4(p: &PackedTensor) -> Vec<f32> {
+    p.unpack()
 }
 
 #[cfg(test)]
@@ -319,6 +336,33 @@ mod tests {
     #[test]
     fn qdq_zero_safe() {
         assert_eq!(qdq_tensor(&[0.0; 8], Fp4Kind::E2M1), vec![0.0; 8]);
+    }
+
+    #[test]
+    fn absmax_scale_ignores_non_finite() {
+        assert_eq!(absmax_scale(&[1.0, f32::NAN, -3.0], 6.0), 2.0);
+        assert_eq!(absmax_scale(&[f32::INFINITY, 2.0], 6.0), 3.0);
+        assert_eq!(absmax_scale(&[f32::NAN, f32::INFINITY], 6.0), 1.0);
+    }
+
+    #[test]
+    fn qdq_nan_does_not_poison_tensor() {
+        let xs = [4.0f32, f32::NAN, -2.0, 1.0];
+        let q = qdq_tensor(&xs, Fp4Kind::E2M1);
+        // gamma = 6/4: finite values quantize as if the NaN were absent
+        assert_eq!(q[0], 4.0);
+        assert_eq!(q[1], 0.0);
+        assert_eq!(q[2], -2.0);
+        assert!(q.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn qdq_vector_inf_saturates_per_row() {
+        let xs = [f32::INFINITY, 3.0, 1.0, -1.0, 0.5, 0.25];
+        let q = qdq_vector(&xs, 2, 3, Fp4Kind::E2M1, Granularity::Row);
+        // row 0: gamma = 6/3, +Inf -> +6/gamma = 3.0 (the row's absmax)
+        assert_eq!(q[0], 3.0);
+        assert!(q.iter().all(|v| v.is_finite()));
     }
 
     #[test]

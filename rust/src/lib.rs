@@ -14,17 +14,23 @@
 //! Python entry point, after which the `fp4train` binary is self-contained.
 //!
 //! Module map (see DESIGN.md for the full inventory):
-//! - [`formats`]  — bit-exact FP4 (E2M1/E1M2/E3M0), FP8 (E4M3/E5M2) and
-//!   scaled-FP16 codecs + absmax quantizers (Eq. 1, Appendix A).
+//! - [`formats`]  — the unified numerics API: bit-exact FP4
+//!   (E2M1/E1M2/E3M0), FP8 (E4M3/E5M2), scaled-FP16 and identity-f32
+//!   codecs behind one `Codec` trait; `QuantSpec` (format + granularity +
+//!   optional clamp, parsed from strings like `fp4:e2m1/row/clamp@0.999+comp`)
+//!   for simulation-grade qdq; `PackedTensor` for storage-grade payloads
+//!   with per-tensor/row/col scales (Eq. 1, §4.1, Appendix A).
 //! - [`quant`]    — DGE surrogate math (Eqs. 7-8), OCC clamping (Eq. 9),
-//!   SIM/MSE/SNR fidelity metrics (Table 1).
+//!   SIM/MSE/SNR fidelity metrics (Table 1); `table1_arm` evaluates any
+//!   `QuantSpec` against a probe tensor.
 //! - [`data`]     — seeded synthetic corpora, byte tokenizer, sharding,
 //!   background prefetching batch loader.
 //! - [`runtime`]  — manifest parsing, artifact loading/compilation cache,
 //!   typed step execution over PJRT.
 //! - [`coordinator`] — the training orchestrator: single-process trainer
 //!   (fused or burst stepping), simulated data-parallel workers with
-//!   FP8-compressed gradient all-reduce, checkpoints, metric logs.
+//!   spec-driven gradient compression on the all-reduce wire (f32 / FP8 /
+//!   FP4 per `-o comm=<spec>`), raw or packed checkpoints, metric logs.
 //! - [`eval`]     — perplexity + zero-shot multiple-choice harness.
 //! - [`costmodel`] — Appendix B analytical FLOPs/speedup model (Table 5).
 //! - [`stats`]    — histograms / channel statistics for Figs. 4, 8-14.

@@ -1,18 +1,23 @@
 //! fp4train — Layer-3 coordinator CLI.
 //!
 //! ```text
-//! fp4train train  [-o preset=.. -o policy=.. -o steps=.. -o corpus=..]
+//! fp4train train  [-o preset=.. -o policy=.. -o steps=.. -o corpus=..
+//!                  -o ckpt_format=fp8:e4m3]
 //! fp4train eval   [-o preset=.. -o policy=..]      held-out ppl + zero-shot
-//! fp4train dp     [-o workers=4 -o comm=fp8|f32]   data-parallel sim
+//! fp4train dp     [-o workers=4 -o comm=<spec>]    data-parallel sim
 //! fp4train repro  <fig1|fig3|fig4|fig5|fig6a..d|tab1..tab5|fig7|dists|perf|all>
 //! fp4train formats                                  print FP4 tables
 //! fp4train info                                     manifest inventory
 //! ```
+//!
+//! `<spec>` is a quantization spec string,
+//! `<format>[/<tensor|row|col>][/clamp@<alpha>[+comp]]` — e.g. `fp8:e4m3`,
+//! `fp4:e2m1/row`, `f32` (see `formats::codec`).
 
 use anyhow::Result;
 use fp4train::cli::Args;
 use fp4train::config::RunConfig;
-use fp4train::coordinator::dp::{CommPrecision, DpSim};
+use fp4train::coordinator::dp::DpSim;
 use fp4train::coordinator::Trainer;
 use fp4train::data::corpus::{Corpus, CorpusKind};
 use fp4train::data::loader::{BatchLoader, LoaderConfig, Sampler};
@@ -41,20 +46,25 @@ fp4train — FP4 quantized LLM training (ICML'25 reproduction)
 commands:
   train    train one (preset, policy) arm; -o preset=.. -o policy=..
            -o steps=.. -o corpus=zipf|markov|code|mix -o seed=..
+           -o ckpt_format=<spec> for compressed checkpoints
   eval     held-out perplexity + zero-shot MC for a trained arm
-  dp       simulated data-parallel training with FP8 gradient all-reduce
-           -o workers=4 -o comm=fp8|f32 -o steps=..
+  dp       simulated data-parallel training with quantized all-reduce
+           -o workers=4 -o comm=<spec> -o steps=..
   repro    regenerate a paper table/figure: fig1 fig3 fig4 fig5 fig6a-d
            tab1 tab2 tab3 tab4 tab5 fig7 dists perf all   [--quick]
   formats  print the FP4 value tables (Appendix A, Table 4)
   info     list artifacts in the manifest
+
+precision specs: <format>[/<tensor|row|col>][/clamp@<alpha>[+comp]]
+  formats fp4:e2m1 fp4:e1m2 fp4:e3m0 fp8:e4m3 fp8:e5m2 f16 f32
+  e.g. -o comm=fp8:e4m3 (FP8-LM wire), -o comm=fp4:e2m1/row (half again)
 
 run `make artifacts` (and `make artifacts-repro` for repro) first.";
 
 fn run_config(args: &Args) -> Result<RunConfig> {
     let mut cfg = RunConfig::default();
     for (k, v) in &args.overrides {
-        if !matches!(k.as_str(), "workers" | "comm" | "quick") {
+        if !matches!(k.as_str(), "workers" | "quick") {
             cfg.set(k, v)?;
         }
     }
@@ -101,12 +111,24 @@ fn cmd_train(args: &Args) -> Result<()> {
     trainer.write_history_csv(&out)?;
     let ckpt = cfg.out_dir.join(format!("{}_{}.ckpt", cfg.preset, cfg.policy));
     let init_spec = trainer.entry.step("init")?.clone();
-    fp4train::coordinator::checkpoint::save(
-        &ckpt,
-        trainer.step as u64,
-        &init_spec.outputs,
-        trainer.state(),
-    )?;
+    match &cfg.ckpt_format {
+        Some(spec) => {
+            fp4train::coordinator::checkpoint::save_packed(
+                &ckpt,
+                trainer.step as u64,
+                &init_spec.outputs,
+                trainer.state(),
+                spec,
+            )?;
+            println!("checkpoint packed as {spec}");
+        }
+        None => fp4train::coordinator::checkpoint::save(
+            &ckpt,
+            trainer.step as u64,
+            &init_spec.outputs,
+            trainer.state(),
+        )?,
+    }
     println!("history -> {out:?}\ncheckpoint -> {ckpt:?}");
     Ok(())
 }
@@ -148,13 +170,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_dp(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
     let workers: usize = args.get("workers").unwrap_or("4").parse()?;
-    let comm = match args.get("comm").unwrap_or("fp8") {
-        "f32" => CommPrecision::F32,
-        _ => CommPrecision::Fp8,
-    };
     let engine = std::sync::Arc::new(Engine::load(&cfg.artifacts_dir)?);
     let corpus = Corpus::generate(cfg.corpus, 1234, cfg.corpus_len, cfg.heldout_len);
-    let mut sim = DpSim::new(engine.clone(), &cfg.preset, &cfg.policy, &corpus, workers, cfg.seed, comm)?;
+    let mut sim = DpSim::new(engine.clone(), &cfg.preset, &cfg.policy, &corpus, workers, cfg.seed, cfg.comm)?;
     println!("dp-sim: {}", sim.context_label());
     for step in 0..cfg.steps {
         let loss = sim.dp_step()?;

@@ -6,7 +6,7 @@
 pub mod dge;
 pub mod occ;
 
-use crate::formats::{Fp4Kind, Granularity};
+use crate::formats::QuantSpec;
 
 /// Cosine similarity between two tensors (Table 1 "SIM").
 pub fn cosine_sim(x: &[f32], y: &[f32]) -> f64 {
@@ -45,35 +45,16 @@ pub fn fidelity(x: &[f32], q: &[f32]) -> Fidelity {
     Fidelity { sim: cosine_sim(x, q), mse: mse(x, q), snr_db: snr_db(x, q) }
 }
 
-/// One Table-1 experiment arm applied to a raw activation tensor:
-/// optional clamp at `alpha`, optional compensation, FP4 qdq.
+/// One Table-1 experiment arm applied to a raw activation tensor: the
+/// spec's optional clamp/compensation followed by its format qdq.
 ///
-/// Quantization is tensor-wise here, matching the paper's §3.2 analysis
-/// (Table 1 / Fig. 4 study the clamp in isolation from the vector-wise
-/// scaling of §4.1 — with per-token scales the direct baseline would
-/// already absorb much of the outlier stretch).
-pub fn table1_arm(
-    x: &[f32],
-    rows: usize,
-    cols: usize,
-    alpha: Option<f64>,
-    compensate: bool,
-    fmt: Fp4Kind,
-) -> (Fidelity, f64) {
-    let (clamped, delta, sparsity) = match alpha {
-        None => (x.to_vec(), vec![0.0; x.len()], 0.0),
-        Some(a) => {
-            let (c, d) = occ::clamp_tensor(x, a);
-            let nz = d.iter().filter(|&&v| v != 0.0).count();
-            (c, d, nz as f64 / x.len() as f64)
-        }
-    };
-    let mut q = crate::formats::qdq_vector(&clamped, rows, cols, fmt, Granularity::Tensor);
-    if compensate {
-        for (qi, di) in q.iter_mut().zip(&delta) {
-            *qi += di;
-        }
-    }
+/// The paper's §3.2 analysis uses tensor-wise specs (Table 1 / Fig. 4
+/// study the clamp in isolation from the vector-wise scaling of §4.1 —
+/// with per-token scales the direct baseline would already absorb much of
+/// the outlier stretch), so the canonical arms look like
+/// `fp4:e2m1/clamp@0.999+comp`; any other [`QuantSpec`] works too.
+pub fn table1_arm(x: &[f32], rows: usize, cols: usize, spec: &QuantSpec) -> (Fidelity, f64) {
+    let (q, sparsity) = spec.apply(x, rows, cols);
     (fidelity(x, &q), sparsity)
 }
 
@@ -125,10 +106,11 @@ mod tests {
         for r in 0..rows {
             x[r * cols + 7] *= 20.0;
         }
-        let (direct, s0) = table1_arm(&x, rows, cols, None, false, Fp4Kind::E2M1);
-        let (clamp, s1) = table1_arm(&x, rows, cols, Some(0.999), false, Fp4Kind::E2M1);
-        let (comp, s2) = table1_arm(&x, rows, cols, Some(0.999), true, Fp4Kind::E2M1);
-        let (comp97, _) = table1_arm(&x, rows, cols, Some(0.97), true, Fp4Kind::E2M1);
+        let base = QuantSpec::parse("fp4:e2m1").unwrap();
+        let (direct, s0) = table1_arm(&x, rows, cols, &base);
+        let (clamp, s1) = table1_arm(&x, rows, cols, &base.with_clamp(0.999, false));
+        let (comp, s2) = table1_arm(&x, rows, cols, &base.with_clamp(0.999, true));
+        let (comp97, _) = table1_arm(&x, rows, cols, &base.with_clamp(0.97, true));
         assert_eq!(s0, 0.0);
         assert!(s1 > 0.0 && (s1 - s2).abs() < 1e-12);
         assert!(clamp.snr_db > direct.snr_db, "{clamp:?} vs {direct:?}");

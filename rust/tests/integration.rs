@@ -5,11 +5,16 @@
 
 use std::sync::Arc;
 
-use fp4train::coordinator::dp::{CommPrecision, DpSim};
+use fp4train::coordinator::dp::DpSim;
 use fp4train::coordinator::{checkpoint, Trainer};
 use fp4train::data::corpus::{Corpus, CorpusKind};
 use fp4train::data::loader::{BatchLoader, LoaderConfig, Sampler};
+use fp4train::formats::QuantSpec;
 use fp4train::runtime::Engine;
+
+fn spec(s: &str) -> QuantSpec {
+    QuantSpec::parse(s).unwrap()
+}
 
 // NOTE: the xla crate's PJRT client is Rc-based (not Send), so each test
 // builds its own Engine; executables are compiled per test process-thread.
@@ -145,8 +150,7 @@ fn dp_sim_fp8_comm_trains_and_compresses() {
     let Some(engine) = engine() else { return };
     // nano/bf16 has grad+apply artifacts in the core plan
     let c = corpus();
-    let mut sim =
-        DpSim::new(engine, "nano", "bf16", &c, 2, 0, CommPrecision::Fp8).unwrap();
+    let mut sim = DpSim::new(engine, "nano", "bf16", &c, 2, 0, spec("fp8:e4m3")).unwrap();
     let mut losses = Vec::new();
     for _ in 0..12 {
         losses.push(sim.dp_step().unwrap());
@@ -159,12 +163,36 @@ fn dp_sim_fp8_comm_trains_and_compresses() {
 }
 
 #[test]
+fn dp_fp4_row_comm_roughly_halves_fp8_wire_bytes() {
+    let Some(engine) = engine() else { return };
+    let c = corpus();
+    let mut a =
+        DpSim::new(engine.clone(), "nano", "bf16", &c, 2, 0, spec("fp4:e2m1/row")).unwrap();
+    let mut b = DpSim::new(engine.clone(), "nano", "bf16", &c, 2, 0, spec("fp8:e4m3")).unwrap();
+    for _ in 0..4 {
+        a.dp_step().unwrap();
+        b.dp_step().unwrap();
+    }
+    let (fp4, fp8) = (a.stats.bytes_sent, b.stats.bytes_sent);
+    // codes are exactly half of the fp8 payload; the per-row scale vectors
+    // (counted!) add 4/cols per element, noticeable on nano-sized tensors
+    // but <1% at paper-scale shapes (see `fp4_wire_is_half_of_fp8` in
+    // formats::codec for the exact-shape accounting).
+    assert!(
+        (fp4 as f64) <= 0.57 * fp8 as f64,
+        "fp4 row wire {fp4} vs fp8 {fp8}"
+    );
+    assert!(a.compression() > 6.0, "fp4 comm ratio {}", a.compression());
+    assert!(a.losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
 fn dp_fp8_tracks_f32_comm_closely() {
     let Some(engine) = engine() else { return };
     let c = corpus();
-    let mut a = DpSim::new(engine.clone(), "nano", "bf16", &c, 2, 4, CommPrecision::Fp8)
+    let mut a = DpSim::new(engine.clone(), "nano", "bf16", &c, 2, 4, spec("fp8:e4m3"))
         .unwrap();
-    let mut b = DpSim::new(engine.clone(), "nano", "bf16", &c, 2, 4, CommPrecision::F32)
+    let mut b = DpSim::new(engine.clone(), "nano", "bf16", &c, 2, 4, spec("f32"))
         .unwrap();
     let mut gap = 0.0f32;
     for _ in 0..8 {
@@ -186,7 +214,7 @@ fn grad_plus_apply_equals_fused_train_step() {
     let rec = fused.run(&loader, 1).unwrap()[0];
 
     // decomposed side with the identical batch
-    let mut sim = DpSim::new(engine.clone(), "nano", "bf16", &c, 1, 11, CommPrecision::F32)
+    let mut sim = DpSim::new(engine.clone(), "nano", "bf16", &c, 1, 11, spec("f32"))
         .unwrap();
     // align sampling: DpSim uses its own seed derivation, so instead
     // compare loss magnitude only (same init, same corpus distribution)

@@ -2,12 +2,24 @@
 //! offline). Each property runs over hundreds of randomized cases; a
 //! failing case prints its seed for replay.
 
-use fp4train::formats::{self, fp16, fp8, Fp4Kind, Granularity};
+use fp4train::formats::{self, fp16, fp8, Format, Fp4Kind, Granularity, QuantSpec};
 use fp4train::quant::{self, occ};
 use fp4train::runtime::Manifest;
 use fp4train::util::Rng;
 
 const FORMATS: [Fp4Kind; 3] = [Fp4Kind::E2M1, Fp4Kind::E1M2, Fp4Kind::E3M0];
+
+/// Every storage format of the unified codec API.
+const ALL_FORMATS: [Format; 7] = [
+    Format::Fp4(Fp4Kind::E2M1),
+    Format::Fp4(Fp4Kind::E1M2),
+    Format::Fp4(Fp4Kind::E3M0),
+    Format::Fp8(fp8::E4M3),
+    Format::Fp8(fp8::E5M2),
+    Format::F16,
+    Format::F32,
+];
+const ALL_GRANS: [Granularity; 3] = [Granularity::Tensor, Granularity::Row, Granularity::Col];
 
 fn cases(n: usize) -> impl Iterator<Item = u64> {
     (0..n as u64).map(|i| 0xF00D_0000 + i)
@@ -89,6 +101,99 @@ fn prop_qdq_scale_equivariant() {
                 a
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Unified codec API properties (QuantSpec / PackedTensor)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_packed_round_trip_equals_qdq_all_pairs() {
+    // Storage and simulation must agree bit-exactly for every
+    // (format, granularity) pair, including odd lengths and degenerate
+    // all-zero rows/columns.
+    for seed in cases(40) {
+        let mut rng = Rng::new(seed);
+        for fmt in ALL_FORMATS {
+            for gran in ALL_GRANS {
+                let rows = 1 + rng.below(9) as usize;
+                let cols = 1 + rng.below(33) as usize; // frequently odd
+                let scale = 10f32.powi(rng.below(7) as i32 - 3);
+                let mut xs = rng.normal_vec(rows * cols, scale);
+                let zr = rng.below(rows as u64) as usize;
+                for c in 0..cols {
+                    xs[zr * cols + c] = 0.0; // an all-zero row
+                }
+                let zc = rng.below(cols as u64) as usize;
+                for r in 0..rows {
+                    xs[r * cols + zc] = 0.0; // an all-zero column
+                }
+                let spec = QuantSpec::new(fmt, gran);
+                let q = spec.qdq(&xs, rows, cols);
+                let p = spec.pack(&xs, rows, cols).unwrap();
+                assert_eq!(p.unpack(), q, "seed {seed} spec {spec} {rows}x{cols}");
+                assert_eq!(
+                    p.wire_bytes(),
+                    spec.wire_bytes(rows, cols),
+                    "seed {seed} spec {spec}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_spec_string_round_trips() {
+    for seed in cases(200) {
+        let mut rng = Rng::new(seed);
+        let fmt = ALL_FORMATS[rng.below(ALL_FORMATS.len() as u64) as usize];
+        let gran = ALL_GRANS[rng.below(3) as usize];
+        let mut spec = QuantSpec::new(fmt, gran);
+        if rng.below(2) == 1 {
+            // quantiles in (0.5, 1) with a few digits, like real configs
+            let alpha = 0.5 + 0.499 * f64::from(rng.unit_f32());
+            let alpha = (alpha * 1e4).round() / 1e4;
+            if alpha > 0.5 && alpha < 1.0 {
+                spec = spec.with_clamp(alpha, rng.below(2) == 1);
+            }
+        }
+        let s = spec.to_string();
+        let back = QuantSpec::parse(&s).unwrap_or_else(|e| panic!("seed {seed}: {s:?}: {e}"));
+        assert_eq!(back, spec, "seed {seed}: {s:?}");
+    }
+}
+
+#[test]
+fn prop_qdq_never_emits_non_finite() {
+    // NaN -> 0, ±Inf -> the group's largest representable value; and a
+    // non-finite element never changes how its neighbours quantize.
+    for seed in cases(60) {
+        let mut rng = Rng::new(seed);
+        let fmt = ALL_FORMATS[rng.below(ALL_FORMATS.len() as u64) as usize];
+        let gran = ALL_GRANS[rng.below(3) as usize];
+        let rows = 2 + rng.below(6) as usize;
+        let cols = 2 + rng.below(12) as usize;
+        let mut xs = rng.normal_vec(rows * cols, 2.0);
+        let mut sanitized = xs.clone();
+        for _ in 0..1 + rng.below(4) {
+            let i = rng.below((rows * cols) as u64) as usize;
+            let bad = match rng.below(3) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                _ => f32::NEG_INFINITY,
+            };
+            xs[i] = bad;
+            sanitized[i] = if bad.is_nan() { 0.0 } else { bad };
+        }
+        let spec = QuantSpec::new(fmt, gran);
+        let q = spec.qdq(&xs, rows, cols);
+        assert!(
+            q.iter().all(|v| v.is_finite()),
+            "seed {seed} spec {spec}: non-finite output"
+        );
+        // NaN positions quantize exactly like zeros (scales ignore them)
+        assert_eq!(q, spec.qdq(&sanitized, rows, cols), "seed {seed} spec {spec}");
     }
 }
 
@@ -196,9 +301,10 @@ fn prop_compensated_fidelity_never_below_clamp_only() {
                 *v *= 5.0 + rng.unit_f32() * 30.0;
             }
         }
+        let base = QuantSpec::parse("fp4:e2m1").unwrap();
         let (clamp_only, _) =
-            quant::table1_arm(&xs, rows, cols, Some(0.99), false, Fp4Kind::E2M1);
-        let (comp, _) = quant::table1_arm(&xs, rows, cols, Some(0.99), true, Fp4Kind::E2M1);
+            quant::table1_arm(&xs, rows, cols, &base.with_clamp(0.99, false));
+        let (comp, _) = quant::table1_arm(&xs, rows, cols, &base.with_clamp(0.99, true));
         assert!(
             comp.mse <= clamp_only.mse + 1e-12,
             "seed {seed}: comp {comp:?} vs clamp {clamp_only:?}"
