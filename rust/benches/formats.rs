@@ -2,11 +2,17 @@
 //! is unavailable offline; methodology: warm-up + best-of-5 timed reps).
 //! Everything below the first block routes through the unified
 //! `QuantSpec`/`PackedTensor` API, one line per (format, granularity).
+//!
+//! The `scalar ref` rows time the retained pre-kernel per-element paths
+//! (`formats::kernels::reference`); the trailing summary prints the
+//! kernel-vs-scalar speedups the perf PR is gated on (fp8 encode ≥5x,
+//! fp4 pack ≥3x on the same 16 MiB probe).
 
+use fp4train::formats::kernels::reference;
 use fp4train::formats::{self, Fp4Kind, PackedTensor, QuantSpec};
 use fp4train::util::Rng;
 
-fn bench<F: FnMut() -> usize>(name: &str, bytes_per_iter: usize, mut f: F) {
+fn bench<F: FnMut() -> usize>(name: &str, bytes_per_iter: usize, mut f: F) -> f64 {
     f(); // warm-up
     let mut best = f64::INFINITY;
     for _ in 0..5 {
@@ -21,6 +27,7 @@ fn bench<F: FnMut() -> usize>(name: &str, bytes_per_iter: usize, mut f: F) {
         best * 1e3,
         bytes_per_iter as f64 / best / 1e6
     );
+    best
 }
 
 fn main() {
@@ -84,4 +91,83 @@ fn main() {
     bench("fp16 scaled qdq", bytes, || {
         formats::fp16::qdq_f16_scaled(&xs).len()
     });
+
+    // ---- kernel vs pre-PR scalar reference (the PR's perf gate) ----
+    println!("\n-- kernel vs scalar reference (16 MiB probe) --");
+    let enc8_ref = bench("fp8:e4m3 encode scalar ref", bytes, || {
+        reference::pack(&xs, 1, n, spec8.format, spec8.granularity).data.len()
+    });
+    let mut scratch8 = PackedTensor::empty(spec8.format, spec8.granularity);
+    let enc8 = bench("fp8:e4m3 encode kernel (pack_into)", bytes, || {
+        PackedTensor::pack_into(&xs, 1, n, spec8.format, spec8.granularity, &mut scratch8);
+        scratch8.data.len()
+    });
+    let dec8_ref = bench("fp8:e4m3 decode scalar ref", bytes, || {
+        reference::unpack(&packed8).len()
+    });
+    let mut out = Vec::new();
+    let dec8 = bench("fp8:e4m3 decode kernel (unpack_into)", bytes, || {
+        packed8.unpack_into(&mut out);
+        out.len()
+    });
+    let spec4t = QuantSpec::parse("fp4:e2m1").unwrap();
+    let enc4_ref = bench("fp4:e2m1 pack scalar ref", bytes, || {
+        reference::pack(&xs, 1, n, spec4t.format, spec4t.granularity).data.len()
+    });
+    let mut scratch4 = PackedTensor::empty(spec4t.format, spec4t.granularity);
+    let enc4 = bench("fp4:e2m1 pack kernel (pack_into)", bytes, || {
+        PackedTensor::pack_into(&xs, 1, n, spec4t.format, spec4t.granularity, &mut scratch4);
+        scratch4.data.len()
+    });
+    let qdq_ref = bench("fp4:e2m1/row qdq scalar ref", bytes, || {
+        reference::qdq(spec4.format, spec4.granularity, &xs, rows, cols).len()
+    });
+    let mut qout = Vec::new();
+    let qdq_k = bench("fp4:e2m1/row qdq kernel (qdq_into)", bytes, || {
+        spec4.qdq_into(&xs, rows, cols, &mut qout);
+        qout.len()
+    });
+    let mut acc = vec![0.0f32; n];
+    bench("fp8:e4m3 unpack_accumulate (fused)", bytes, || {
+        packed8.unpack_accumulate(&mut acc, 0.25);
+        acc.len()
+    });
+
+    // single-thread view: a probe below the kernels' parallel threshold
+    // (1M elements), so these ratios isolate the algorithmic gain
+    // (integer-domain fp8 encode, threshold-table fp4) from the chunked
+    // thread fan-out that the 16 MiB rows above additionally enjoy
+    let ns = 1 << 19; // 2 MiB f32, serial path
+    let bytes_s = ns * 4;
+    let xss = &xs[..ns];
+    println!("\n-- single-thread (sub-threshold 2 MiB probe) --");
+    let enc8_ref1 = bench("fp8:e4m3 encode scalar ref (1 thr)", bytes_s, || {
+        reference::pack(xss, 1, ns, spec8.format, spec8.granularity).data.len()
+    });
+    let enc8_1 = bench("fp8:e4m3 encode kernel (1 thr)", bytes_s, || {
+        PackedTensor::pack_into(xss, 1, ns, spec8.format, spec8.granularity, &mut scratch8);
+        scratch8.data.len()
+    });
+    let enc4_ref1 = bench("fp4:e2m1 pack scalar ref (1 thr)", bytes_s, || {
+        reference::pack(xss, 1, ns, spec4t.format, spec4t.granularity).data.len()
+    });
+    let enc4_1 = bench("fp4:e2m1 pack kernel (1 thr)", bytes_s, || {
+        PackedTensor::pack_into(xss, 1, ns, spec4t.format, spec4t.granularity, &mut scratch4);
+        scratch4.data.len()
+    });
+
+    println!(
+        "\nkernel speedups (16 MiB, threads on): fp8 encode {:.1}x (gate >=5), \
+         fp4 pack {:.1}x (gate >=3), fp8 decode {:.1}x, fp4 qdq {:.1}x",
+        enc8_ref / enc8,
+        enc4_ref / enc4,
+        dec8_ref / dec8,
+        qdq_ref / qdq_k
+    );
+    println!(
+        "kernel speedups (2 MiB, single thread): fp8 encode {:.1}x, fp4 pack {:.1}x \
+         — algorithmic gain only",
+        enc8_ref1 / enc8_1,
+        enc4_ref1 / enc4_1
+    );
 }

@@ -22,9 +22,35 @@ fn main() {
     let cols = 1024;
     let xs = rng.normal_vec(rows * cols, 1.5);
 
-    bench("quantile (sort-based, 1M)", || occ::quantile(&xs, 0.99) as f64);
-    bench("clamp_tensor alpha=.99 (1M)", || {
+    // pre-PR reference: full sort per quantile, two quantiles per clamp
+    let sort_quantile = |xs: &[f32], q: f64| -> f32 {
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+        let i = pos.floor() as usize;
+        let frac = pos - i as f64;
+        if i + 1 >= sorted.len() {
+            sorted[sorted.len() - 1]
+        } else {
+            (sorted[i] as f64 * (1.0 - frac) + sorted[i + 1] as f64 * frac) as f32
+        }
+    };
+    bench("quantile sort-based ref (1M)", || {
+        sort_quantile(&xs, 0.99) as f64
+    });
+    bench("quantile selection O(n) (1M)", || occ::quantile(&xs, 0.99) as f64);
+    bench("clamp_tensor ref: 2 sorts (1M)", || {
+        let hi = sort_quantile(&xs, 0.99);
+        let lo = sort_quantile(&xs, 0.01);
+        xs.iter().map(|&x| x.clamp(lo, hi)).filter(|&c| c != 0.0).count() as f64
+    });
+    bench("clamp_tensor fused O(n) alpha=.99 (1M)", || {
         occ::clamp_tensor(&xs, 0.99).0.len() as f64
+    });
+    let mut cbuf = Vec::new();
+    let mut dbuf = Vec::new();
+    bench("clamp_tensor_into reused outputs (1M)", || {
+        occ::clamp_tensor_into(&xs, 0.99, &mut cbuf, &mut dbuf) as f64
     });
     bench("residual_sparsity (1M)", || occ::residual_sparsity(&xs, 0.99));
     let arm = QuantSpec::parse("fp4:e2m1/clamp@0.99+comp").unwrap();

@@ -105,6 +105,9 @@ pub fn save_packed(
     f.write_all(&2u32.to_le_bytes())?;
     f.write_all(&step.to_le_bytes())?;
     f.write_all(&(ios.len() as u32).to_le_bytes())?;
+    // one pack scratch reused across every tensor (pack_into keeps the
+    // code/scale buffer capacity of the largest tensor seen)
+    let mut packed = PackedTensor::empty(spec.format, spec.granularity);
     for (io, lit) in ios.iter().zip(literals) {
         let name = io.name.as_bytes();
         f.write_all(&(name.len() as u16).to_le_bytes())?;
@@ -118,7 +121,7 @@ pub fn save_packed(
             bail!("{}: literal has {} elems, manifest says {}", io.name, data.len(), io.elements());
         }
         let (rows, cols) = shape2d(&io.shape, data.len());
-        let packed = PackedTensor::pack(&data, rows, cols, spec.format, spec.granularity);
+        PackedTensor::pack_into(&data, rows, cols, spec.format, spec.granularity, &mut packed);
         f.write_all(&(spec_str.len() as u16).to_le_bytes())?;
         f.write_all(spec_str.as_bytes())?;
         f.write_all(&(rows as u64).to_le_bytes())?;

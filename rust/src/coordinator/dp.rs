@@ -13,6 +13,12 @@
 //! Any clamp-free spec works on the wire: `fp8:e4m3` is the paper's
 //! FP8-LM scheme, `fp4:e2m1/row` halves the bytes again with per-row
 //! scales, and `f32` is the exact baseline.
+//!
+//! §Perf: the comm path is zero-alloc per step — each gradient owns a
+//! persistent [`PackedTensor`] wire buffer (`pack_into` reuses its
+//! capacity) and a persistent accumulator that the payload decodes
+//! straight into (`unpack_accumulate`, weighted by a precomputed
+//! `1/workers` reciprocal), so the decoded tensor is never materialized.
 
 use std::sync::Arc;
 
@@ -42,6 +48,14 @@ pub struct DpSim {
     pub comm: QuantSpec,
     pub stats: CommStats,
     pub losses: Vec<f32>,
+    /// Persistent all-reduce accumulators, one per gradient tensor
+    /// (zeroed per step — never reallocated).
+    acc: Vec<Vec<f32>>,
+    /// Persistent wire payloads, one per gradient tensor: `pack_into`
+    /// reuses their code/scale buffers every step (§Perf: the old path
+    /// allocated pack + unpack + accumulate buffers per gradient per
+    /// worker per step).
+    wire: Vec<PackedTensor>,
 }
 
 impl DpSim {
@@ -63,6 +77,16 @@ impl DpSim {
         let apply_spec = entry.step("apply")?.clone();
         let init = entry.step("init")?;
         let state = engine.run(init, &[Literal::scalar(seed)])?;
+        let n = state.len() / 3;
+        let acc: Vec<Vec<f32>> = grad_spec
+            .outputs
+            .iter()
+            .take(n)
+            .map(|io| vec![0.0f32; io.elements()])
+            .collect();
+        let wire = (0..n)
+            .map(|_| PackedTensor::empty(comm.format, comm.granularity))
+            .collect();
         let samplers = (0..workers)
             .map(|w| {
                 Sampler::new(
@@ -89,6 +113,8 @@ impl DpSim {
             comm,
             stats: CommStats::default(),
             losses: Vec::new(),
+            acc,
+            wire,
         })
     }
 
@@ -106,15 +132,14 @@ impl DpSim {
         let n = self.n_params();
         let workers = self.samplers.len();
         let tok_io = self.grad_spec.inputs.last().unwrap().clone();
+        // 1/workers hoisted out of the accumulate loop (one multiply per
+        // element instead of a divide)
+        let inv_workers = 1.0 / workers as f32;
 
-        // accumulate decoded gradients (the "all-reduce" buffer)
-        let mut acc: Vec<Vec<f32>> = self
-            .grad_spec
-            .outputs
-            .iter()
-            .take(n)
-            .map(|io| vec![0.0f32; io.elements()])
-            .collect();
+        // zero the persistent all-reduce accumulators (no reallocation)
+        for a in &mut self.acc {
+            a.fill(0.0);
+        }
         let mut loss_sum = 0.0f64;
 
         for w in 0..workers {
@@ -125,34 +150,43 @@ impl DpSim {
             let mut outs = self.engine.run(&self.grad_spec, &args)?;
             loss_sum += Engine::to_f32_scalar(&outs.pop().unwrap())? as f64;
 
+            let mut elems = 0u64;
             for (gi, lit) in outs.iter().enumerate() {
                 let g = Engine::to_f32_vec(lit)?;
-                let g = if self.comm.is_raw() {
+                elems += g.len() as u64;
+                if self.comm.is_raw() {
                     self.stats.bytes_sent += 4 * g.len() as u64;
-                    g
+                    for (a, &v) in self.acc[gi].iter_mut().zip(&g) {
+                        *a += v * inv_workers;
+                    }
                 } else {
-                    // real wire payload: packed codes + per-group f32 scales
+                    // real wire payload: packed codes + per-group f32
+                    // scales, encoded into the persistent per-gradient
+                    // buffer and decoded straight into the accumulator
+                    // (fused unpack-accumulate — the decoded tensor is
+                    // never materialized)
                     let (rows, cols) = shape2d(&self.grad_spec.outputs[gi].shape, g.len());
-                    let packed = PackedTensor::pack(
+                    let wire = &mut self.wire[gi];
+                    PackedTensor::pack_into(
                         &g,
                         rows,
                         cols,
                         self.comm.format,
                         self.comm.granularity,
+                        wire,
                     );
-                    self.stats.bytes_sent += packed.wire_bytes();
-                    packed.unpack()
-                };
-                self.stats.bytes_f32_equiv += 4 * g.len() as u64;
-                for (a, v) in acc[gi].iter_mut().zip(&g) {
-                    *a += v / workers as f32;
+                    self.stats.bytes_sent += wire.wire_bytes();
+                    wire.unpack_accumulate(&mut self.acc[gi], inv_workers);
                 }
             }
+            // byte accounting hoisted out of the per-tensor loop
+            self.stats.bytes_f32_equiv += 4 * elems;
             self.stats.reduces += 1;
         }
 
         // apply: state(3n) + grads(n) + step
-        let grad_lits: Vec<Literal> = acc
+        let grad_lits: Vec<Literal> = self
+            .acc
             .iter()
             .enumerate()
             .map(|(i, g)| Engine::f32_literal(&self.grad_spec.outputs[i], g))

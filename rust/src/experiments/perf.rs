@@ -1,5 +1,20 @@
 //! §Perf driver: measures the L3 hot paths and the burst-vs-single-step
 //! optimization; feeds EXPERIMENTS.md §Perf.
+//!
+//! EXPERIMENTS §Perf rows emitted here:
+//!  * train-step latency (single vs burst) per preset;
+//!  * codec kernel throughput on a 16 MiB f32 probe — for fp8 encode and
+//!    fp4 pack both the retained pre-kernel scalar path
+//!    (`formats::kernels::reference`) and the kernelized path are timed,
+//!    so the table carries the speedup ratio the PR is gated on (fp8
+//!    encode ≥5x, fp4 pack ≥3x);
+//!  * zero-alloc `_into` variants (`pack_into` / `unpack_into` /
+//!    `unpack_accumulate`) as used by the dp-sim comm loop;
+//!  * O(n) OCC clamp throughput; dataloader throughput.
+//!
+//! Besides the ASCII table, the codec rows are written as machine-
+//! readable JSON to `results/perf/BENCH_codec.json` (kernel -> MB/s) so
+//! the bench trajectory is tracked across PRs.
 
 use anyhow::Result;
 
@@ -54,32 +69,104 @@ pub fn perf(ctx: &mut Ctx) -> Result<()> {
         }
     }
 
-    // --- codec throughput (the comm hot path) ---
+    // --- codec throughput (the comm hot path; 16 MiB f32 probe) ---
+    use crate::formats::kernels::reference;
     use crate::formats::{PackedTensor, QuantSpec};
     let mut rng = crate::util::Rng::new(0);
     let xs = rng.normal_vec(4 << 20, 1.0); // 16 MiB of f32
-    let fp8 = QuantSpec::parse("fp8:e4m3")?;
-    let timer = Timer::start();
-    let packed = PackedTensor::pack(&xs, 1, xs.len(), fp8.format, fp8.granularity);
-    let enc_s = timer.secs();
-    let timer = Timer::start();
-    let back = packed.unpack();
-    let dec_s = timer.secs();
-    assert_eq!(back.len(), xs.len());
     let mb = (xs.len() * 4) as f64 / 1e6;
-    t.row(&["fp8 encode throughput".into(), f2(mb / enc_s), "MB/s (f32 in)".into()]);
-    t.row(&["fp8 decode throughput".into(), f2(mb / dec_s), "MB/s (f32 out)".into()]);
+    let mut json_rows: Vec<(String, f64)> = Vec::new();
+    // best-of-3 wall time for one invocation of `f`
+    let timed = |f: &mut dyn FnMut() -> usize| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let timer = Timer::start();
+            std::hint::black_box(f());
+            best = best.min(timer.secs());
+        }
+        best
+    };
 
+    let fp8 = QuantSpec::parse("fp8:e4m3")?;
     let fp4 = QuantSpec::parse("fp4:e2m1")?;
-    let timer = Timer::start();
-    let p4 = PackedTensor::pack(&xs, 1, xs.len(), fp4.format, fp4.granularity);
-    let enc4 = timer.secs();
-    t.row(&["fp4 pack throughput".into(), f2(mb / enc4), "MB/s (f32 in)".into()]);
+    let n = xs.len();
+    let enc8_ref = timed(&mut || {
+        reference::pack(&xs, 1, n, fp8.format, fp8.granularity).data.len()
+    });
+    let mut scratch = PackedTensor::empty(fp8.format, fp8.granularity);
+    let enc8 = timed(&mut || {
+        PackedTensor::pack_into(&xs, 1, n, fp8.format, fp8.granularity, &mut scratch);
+        scratch.data.len()
+    });
+    let packed8 = PackedTensor::pack(&xs, 1, n, fp8.format, fp8.granularity);
+    let dec8_ref = timed(&mut || reference::unpack(&packed8).len());
+    let mut out = Vec::new();
+    let dec8 = timed(&mut || {
+        packed8.unpack_into(&mut out);
+        out.len()
+    });
+    let mut acc = vec![0.0f32; n];
+    let acc8 = timed(&mut || {
+        packed8.unpack_accumulate(&mut acc, 0.25);
+        acc.len()
+    });
+    let enc4_ref = timed(&mut || {
+        reference::pack(&xs, 1, n, fp4.format, fp4.granularity).data.len()
+    });
+    let mut scratch4 = PackedTensor::empty(fp4.format, fp4.granularity);
+    let enc4 = timed(&mut || {
+        PackedTensor::pack_into(&xs, 1, n, fp4.format, fp4.granularity, &mut scratch4);
+        scratch4.data.len()
+    });
+    let dec4 = timed(&mut || {
+        scratch4.unpack_into(&mut out);
+        out.len()
+    });
+    let mut qout = Vec::new();
+    let qdq4 = timed(&mut || {
+        fp4.qdq_into(&xs, 1, n, &mut qout);
+        qout.len()
+    });
+    let clamp = timed(&mut || {
+        crate::quant::occ::clamp_tensor(&xs, 0.99).0.len()
+    });
+
+    for (name, secs) in [
+        ("fp8 encode (scalar ref)", enc8_ref),
+        ("fp8 encode (kernel)", enc8),
+        ("fp8 decode (scalar ref)", dec8_ref),
+        ("fp8 decode (kernel)", dec8),
+        ("fp8 unpack-accumulate (fused)", acc8),
+        ("fp4 pack (scalar ref)", enc4_ref),
+        ("fp4 pack (kernel)", enc4),
+        ("fp4 unpack (kernel)", dec4),
+        ("fp4 qdq (fused kernel)", qdq4),
+        ("occ clamp O(n) alpha=0.99", clamp),
+    ] {
+        let mbps = mb / secs;
+        t.row(&[format!("{name} throughput"), f2(mbps), "MB/s (f32 side)".into()]);
+        json_rows.push((name.to_string(), mbps));
+    }
+    t.row(&[
+        "fp8 encode kernel speedup".into(),
+        f2(enc8_ref / enc8),
+        "x vs scalar (gate: >=5)".into(),
+    ]);
+    t.row(&[
+        "fp4 pack kernel speedup".into(),
+        f2(enc4_ref / enc4),
+        "x vs scalar (gate: >=3)".into(),
+    ]);
     t.row(&[
         "fp4 wire ratio".into(),
-        f2(xs.len() as f64 * 4.0 / p4.wire_bytes() as f64),
+        f2(n as f64 * 4.0 / scratch4.wire_bytes() as f64),
         "x".into(),
     ]);
+
+    // machine-readable bench trajectory (tracked across PRs)
+    let json_path = ctx.results.join("perf").join("BENCH_codec.json");
+    write_bench_json(&json_path, &json_rows)?;
+    println!("wrote {}", json_path.display());
 
     // --- data pipeline ---
     let loader = BatchLoader::new(
@@ -96,5 +183,22 @@ pub fn perf(ctx: &mut Ctx) -> Result<()> {
     t.row(&["dataloader throughput".into(), f2(tok_per_s / 1e6), "Mtok/s".into()]);
 
     println!("{}", t.render());
+    Ok(())
+}
+
+/// Emit the codec throughput rows as JSON (`kernel -> MB/s`); names are
+/// plain ASCII so `{:?}` escaping yields valid JSON strings.
+fn write_bench_json(path: &std::path::Path, rows: &[(String, f64)]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut s = String::from("{\n  \"bench\": \"codec\",\n  \"unit\": \"MB/s\",\n");
+    s.push_str("  \"kernels\": {\n");
+    for (i, (name, mbps)) in rows.iter().enumerate() {
+        let sep = if i + 1 == rows.len() { "" } else { "," };
+        s.push_str(&format!("    {:?}: {:.1}{}\n", name, mbps, sep));
+    }
+    s.push_str("  }\n}\n");
+    std::fs::write(path, s)?;
     Ok(())
 }

@@ -41,6 +41,21 @@
 //! `±Inf` saturates to the largest finite representable value of the group
 //! (i.e. `±max_value / gamma`). This holds for every format and for both
 //! the qdq and the packed-storage paths.
+//!
+//! # Kernel layer and the bit-exactness contract
+//!
+//! The tensor loops behind `qdq`, `pack` and `unpack` are single-pass
+//! kernels ([`super::kernels`]) monomorphized per (format × granularity):
+//! the per-element `match bits` / `match granularity` dispatch runs once
+//! per tensor, FP8 encodes in the integer domain, FP4 encodes through a
+//! precomputed threshold table, and decoding goes through per-tensor
+//! LUTs. The `_into` variants ([`QuantSpec::qdq_into`],
+//! [`PackedTensor::pack_into`], [`PackedTensor::unpack_into`],
+//! [`PackedTensor::unpack_accumulate`]) write into caller-owned scratch
+//! for the zero-allocation comm/checkpoint paths. **Contract:** every
+//! kernel is bit-exact with the retained scalar reference
+//! ([`super::kernels::reference`]) — same codes, same scales, same qdq
+//! output — enforced by the property tests in `tests/property.rs`.
 
 use std::fmt;
 
@@ -48,6 +63,7 @@ use anyhow::{bail, ensure, Result};
 
 use super::fp16;
 use super::fp8::{self, Fp8Spec};
+use super::kernels;
 use super::{Fp4Kind, Granularity};
 
 /// Scalar codec: one value in, one bit code out (and back).
@@ -263,9 +279,9 @@ impl QuantSpec {
                     Some(a) => (a, true),
                     None => (rest, false),
                 };
-                let alpha: f64 = alpha_str
-                    .parse()
-                    .map_err(|_| anyhow::anyhow!("bad clamp quantile {alpha_str:?} in spec {s:?}"))?;
+                let alpha: f64 = alpha_str.parse().map_err(|_| {
+                    anyhow::anyhow!("bad clamp quantile {alpha_str:?} in spec {s:?}")
+                })?;
                 ensure!(
                     alpha > 0.5 && alpha < 1.0,
                     "clamp quantile must lie in (0.5, 1), got {alpha}"
@@ -368,8 +384,12 @@ impl QuantSpec {
                         .collect();
                     &sanitized
                 };
-                let (clamped, delta) = crate::quant::occ::clamp_tensor(src, c.alpha);
-                let nnz = delta.iter().filter(|&&d| d != 0.0).count();
+                // fused O(n) clamp: bounds from one selection pass, then
+                // clamp+delta+nnz in a single loop (quant::occ)
+                let mut clamped = Vec::new();
+                let mut delta = Vec::new();
+                let nnz =
+                    crate::quant::occ::clamp_tensor_into(src, c.alpha, &mut clamped, &mut delta);
                 let mut q = self.qdq_unclamped(&clamped, rows, cols);
                 if c.compensate {
                     for (qi, di) in q.iter_mut().zip(&delta) {
@@ -391,35 +411,30 @@ impl QuantSpec {
         Ok(PackedTensor::pack(xs, rows, cols, self.format, self.granularity))
     }
 
+    /// Scratch-buffer variant of [`QuantSpec::qdq`]: the O(n) output goes
+    /// into caller-owned scratch (cleared and resized; capacity reused
+    /// across calls); only an O(groups) scale vector is allocated per
+    /// call. Clamped specs fall back to the allocating
+    /// [`QuantSpec::apply`] pipeline — the clamp is an offline-analysis
+    /// transform, not a hot path. Bit-exact with `qdq` by construction
+    /// (same kernel).
+    pub fn qdq_into(&self, xs: &[f32], rows: usize, cols: usize, out: &mut Vec<f32>) {
+        assert_eq!(xs.len(), rows * cols, "shape mismatch");
+        if self.clamp.is_some() {
+            let (q, _) = self.apply(xs, rows, cols);
+            out.clear();
+            out.extend_from_slice(&q);
+            return;
+        }
+        kernels::qdq_into(self.format, self.granularity, xs, rows, cols, out);
+    }
+
     fn qdq_unclamped(&self, xs: &[f32], rows: usize, cols: usize) -> Vec<f32> {
-        if xs.is_empty() {
-            return Vec::new();
-        }
-        let fmt = self.format;
-        let qdq1 = |x: f32, gamma: f32| fmt.decode_bits(fmt.encode_bits(x * gamma)) / gamma;
-        let scales = scales_for(fmt, xs, rows, cols, self.granularity);
-        // gamma lookups are hoisted out of the element loop (this is the
-        // dp-comm / repro hot path; see benches/formats.rs)
-        match self.granularity {
-            Granularity::Tensor => {
-                let gamma = scales[0];
-                xs.iter().map(|&x| qdq1(x, gamma)).collect()
-            }
-            Granularity::Row => {
-                let mut out = Vec::with_capacity(xs.len());
-                for (row, &gamma) in xs.chunks(cols).zip(&scales) {
-                    out.extend(row.iter().map(|&x| qdq1(x, gamma)));
-                }
-                out
-            }
-            Granularity::Col => {
-                let mut out = Vec::with_capacity(xs.len());
-                for row in xs.chunks(cols) {
-                    out.extend(row.iter().zip(&scales).map(|(&x, &gamma)| qdq1(x, gamma)));
-                }
-                out
-            }
-        }
+        // single-pass fused kernel, monomorphized per format × granularity
+        // (this is the dp-comm / repro hot path; see benches/formats.rs)
+        let mut out = Vec::new();
+        kernels::qdq_into(self.format, self.granularity, xs, rows, cols, &mut out);
+        out
     }
 }
 
@@ -439,7 +454,8 @@ impl fmt::Display for QuantSpec {
 /// Per-group absmax scales (the `gamma` of Eq. 1) of a (rows × cols)
 /// tensor. Non-finite values are ignored; all-zero (or all-non-finite)
 /// groups get gamma = 1 so decoding never divides by zero. `F32` pins
-/// every gamma to 1 (identity).
+/// every gamma to 1 (identity). Computed by the single-pass kernel
+/// (`kernels::scales_into` — no per-element group div/mod).
 pub fn scales_for(
     format: Format,
     xs: &[f32],
@@ -447,19 +463,9 @@ pub fn scales_for(
     cols: usize,
     gran: Granularity,
 ) -> Vec<f32> {
-    let n_groups = gran.n_groups(rows, cols);
-    if format == Format::F32 {
-        return vec![1.0; n_groups];
-    }
-    let mut amax = vec![0.0f32; n_groups];
-    for (i, &x) in xs.iter().enumerate() {
-        if x.is_finite() {
-            let g = gran.group_of(i, cols);
-            amax[g] = amax[g].max(x.abs());
-        }
-    }
-    let max = format.max_value();
-    amax.into_iter().map(|a| if a == 0.0 { 1.0 } else { max / a }).collect()
+    let mut out = Vec::new();
+    kernels::scales_into(format, xs, rows, cols, gran, &mut out);
+    out
 }
 
 /// Collapse an N-D shape to (rows, cols) for vector-wise scaling: the last
@@ -498,6 +504,19 @@ pub struct PackedTensor {
 }
 
 impl PackedTensor {
+    /// An empty payload with the given wire format, ready to be used as
+    /// reusable scratch for [`PackedTensor::pack_into`].
+    pub fn empty(format: Format, granularity: Granularity) -> Self {
+        PackedTensor {
+            format,
+            granularity,
+            rows: 0,
+            cols: 0,
+            scales: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
     pub fn pack(
         xs: &[f32],
         rows: usize,
@@ -505,67 +524,47 @@ impl PackedTensor {
         format: Format,
         granularity: Granularity,
     ) -> Self {
+        let mut out = Self::empty(format, granularity);
+        Self::pack_into(xs, rows, cols, format, granularity, &mut out);
+        out
+    }
+
+    /// Zero-alloc variant of [`PackedTensor::pack`]: encodes into a
+    /// caller-owned payload, reusing its `scales`/`data` capacity (the
+    /// dp-sim comm path keeps one per gradient). Single-pass kernel,
+    /// bit-exact with `pack`.
+    pub fn pack_into(
+        xs: &[f32],
+        rows: usize,
+        cols: usize,
+        format: Format,
+        granularity: Granularity,
+        out: &mut PackedTensor,
+    ) {
         assert_eq!(xs.len(), rows * cols, "shape mismatch");
-        let scales = scales_for(format, xs, rows, cols, granularity);
-        let bits = format.bits_per_element();
-        let mut data = match bits {
-            4 => vec![0u8; xs.len().div_ceil(2)],
-            _ => Vec::with_capacity(xs.len() * bits as usize / 8),
-        };
-        let mut i = 0usize;
-        // per-row iteration hoists the gamma lookup out of the element loop
-        // (same structure as `qdq_unclamped`; this is the comm hot path)
-        for (r, row) in xs.chunks(cols.max(1)).enumerate() {
-            for (c, &x) in row.iter().enumerate() {
-                let gamma = match granularity {
-                    Granularity::Tensor => scales[0],
-                    Granularity::Row => scales[r],
-                    Granularity::Col => scales[c],
-                };
-                let code = format.encode_bits(x * gamma);
-                match bits {
-                    4 => data[i / 2] |= ((code & 0xF) as u8) << ((i % 2) * 4),
-                    8 => data.push(code as u8),
-                    16 => data.extend_from_slice(&(code as u16).to_le_bytes()),
-                    _ => data.extend_from_slice(&code.to_le_bytes()),
-                }
-                i += 1;
-            }
-        }
-        PackedTensor { format, granularity, rows, cols, scales, data }
+        kernels::pack_into(xs, rows, cols, format, granularity, out);
     }
 
     /// Decode back to f32. Bit-exact with [`QuantSpec::qdq`] (same codec,
     /// same scales) — the storage and simulation paths cannot drift.
     pub fn unpack(&self) -> Vec<f32> {
-        let bits = self.format.bits_per_element();
-        let mut out = Vec::with_capacity(self.len());
-        let mut i = 0usize;
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                let code = match bits {
-                    4 => u32::from((self.data[i / 2] >> ((i % 2) * 4)) & 0xF),
-                    8 => u32::from(self.data[i]),
-                    16 => {
-                        u32::from(u16::from_le_bytes([self.data[2 * i], self.data[2 * i + 1]]))
-                    }
-                    _ => u32::from_le_bytes([
-                        self.data[4 * i],
-                        self.data[4 * i + 1],
-                        self.data[4 * i + 2],
-                        self.data[4 * i + 3],
-                    ]),
-                };
-                let gamma = match self.granularity {
-                    Granularity::Tensor => self.scales[0],
-                    Granularity::Row => self.scales[r],
-                    Granularity::Col => self.scales[c],
-                };
-                out.push(self.format.decode_bits(code) / gamma);
-                i += 1;
-            }
-        }
+        let mut out = Vec::new();
+        self.unpack_into(&mut out);
         out
+    }
+
+    /// Zero-alloc variant of [`PackedTensor::unpack`]: decodes into
+    /// caller-owned scratch (cleared and resized; capacity reused).
+    pub fn unpack_into(&self, out: &mut Vec<f32>) {
+        kernels::unpack_into(self, out);
+    }
+
+    /// Fused decode-accumulate: `acc[i] += decode(i) * weight` without
+    /// materializing the decoded tensor — the all-reduce inner loop of
+    /// the data-parallel coordinator. `acc.len()` must equal
+    /// [`PackedTensor::len`].
+    pub fn unpack_accumulate(&self, acc: &mut [f32], weight: f32) {
+        kernels::unpack_accumulate(self, acc, weight);
     }
 
     pub fn len(&self) -> usize {
@@ -677,6 +676,64 @@ mod tests {
                 assert_eq!(p.unpack(), q, "{spec}");
                 assert_eq!(p.wire_bytes(), spec.wire_bytes(rows, cols), "{spec}");
             }
+        }
+    }
+
+    #[test]
+    fn pack_into_reuses_scratch_across_shapes_bit_exactly() {
+        let mut rng = crate::util::Rng::new(21);
+        let mut scratch = PackedTensor::empty(Format::Fp8(fp8::E4M3), Granularity::Tensor);
+        // reuse the same scratch across formats, granularities and shapes
+        // (shrinking and growing): every repack must equal a fresh pack
+        for (fmt, gran, rows, cols) in [
+            (Format::Fp8(fp8::E4M3), Granularity::Tensor, 16, 33),
+            (Format::Fp4(Fp4Kind::E2M1), Granularity::Row, 7, 5),
+            (Format::Fp4(Fp4Kind::E2M1), Granularity::Row, 31, 9),
+            (Format::F16, Granularity::Col, 4, 6),
+            (Format::F32, Granularity::Tensor, 3, 3),
+            (Format::Fp8(fp8::E5M2), Granularity::Col, 1, 17),
+        ] {
+            let xs = rng.normal_vec(rows * cols, 2.0);
+            PackedTensor::pack_into(&xs, rows, cols, fmt, gran, &mut scratch);
+            let fresh = PackedTensor::pack(&xs, rows, cols, fmt, gran);
+            assert_eq!(scratch.data, fresh.data, "{fmt} {gran:?} {rows}x{cols}");
+            assert_eq!(scratch.scales, fresh.scales, "{fmt} {gran:?}");
+            let mut out = Vec::new();
+            scratch.unpack_into(&mut out);
+            assert_eq!(out, fresh.unpack(), "{fmt} {gran:?}");
+        }
+    }
+
+    #[test]
+    fn unpack_accumulate_equals_unpack_then_axpy() {
+        let mut rng = crate::util::Rng::new(22);
+        for fmt in ALL_FORMATS {
+            for gran in ALL_GRANS {
+                let (rows, cols) = (6, 11);
+                let xs = rng.normal_vec(rows * cols, 1.5);
+                let p = PackedTensor::pack(&xs, rows, cols, fmt, gran);
+                let base = rng.normal_vec(rows * cols, 0.1);
+                let w = 0.25f32;
+                let mut acc = base.clone();
+                p.unpack_accumulate(&mut acc, w);
+                let dec = p.unpack();
+                let want: Vec<f32> =
+                    base.iter().zip(&dec).map(|(b, d)| b + d * w).collect();
+                assert_eq!(acc, want, "{fmt} {gran:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn qdq_into_matches_qdq_including_clamped_specs() {
+        let mut rng = crate::util::Rng::new(23);
+        let (rows, cols) = (8, 13);
+        let xs = rng.normal_vec(rows * cols, 1.0);
+        for s in ["fp4:e2m1/row", "fp8:e4m3", "f16/col", "fp4:e2m1/clamp@0.99+comp"] {
+            let spec = QuantSpec::parse(s).unwrap();
+            let mut out = vec![99.0f32; 3]; // stale scratch must be cleared
+            spec.qdq_into(&xs, rows, cols, &mut out);
+            assert_eq!(out, spec.qdq(&xs, rows, cols), "{s}");
         }
     }
 

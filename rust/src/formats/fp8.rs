@@ -40,39 +40,50 @@ impl Fp8Spec {
     }
 
     /// Encode one f32 with round-to-nearest-even; saturating at ±max.
+    ///
+    /// Integer-domain: the exponent comes straight from the f32 bit
+    /// pattern and the mantissa is rounded with shifts and masks — no
+    /// `log2`/`exp2` per element (§Perf: the fp8 comm-encode hot loop).
+    /// Bit-exact with the original float-domain path, which is retained
+    /// in `kernels::reference::fp8_encode_float` as the test oracle.
     pub fn encode(&self, x: f32) -> u8 {
-        let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
-        let a = x.abs();
+        let bits = x.to_bits();
+        let sign = ((bits >> 24) & 0x80) as u8;
+        let abs_bits = bits & 0x7FFF_FFFF;
+        let a = f32::from_bits(abs_bits);
         if a.is_nan() {
             // canonical NaN: all exponent+mantissa bits set
             return sign | ((1u8 << (self.exp_bits + self.man_bits)) - 1);
         }
-        if a == 0.0 {
+        if a >= self.max {
+            // saturate (also catches +inf)
+            return sign | self.max_finite_code();
+        }
+        if abs_bits < 0x0080_0000 {
+            // f32 zero or subnormal: far below half the smallest e4m3 /
+            // e5m2 subnormal, so it always rounds to ±0
             return sign;
         }
-        let max_code = self.max_finite_code();
-        if a >= self.max {
-            return sign | max_code;
-        }
-        // exponent of the leading bit
-        let e = a.log2().floor() as i32;
+        let e = ((abs_bits >> 23) as i32) - 127; // unbiased f32 exponent
+        let m23 = abs_bits & 0x007F_FFFF; // 23-bit f32 mantissa
         let min_norm_exp = 1 - self.bias;
-        let (exp_field, man): (i32, f32) = if e < min_norm_exp {
-            // subnormal: value = man/2^man_bits * 2^min_norm_exp
-            (0, a / (min_norm_exp as f32).exp2())
+        let (mut exp_field, mut m) = if e >= min_norm_exp {
+            // normal target: round the 23-bit mantissa to man_bits
+            (
+                (e + self.bias) as u32,
+                rtne_shift(m23, 23 - self.man_bits),
+            )
         } else {
-            (e + self.bias, a / (e as f32).exp2() - 1.0)
+            // subnormal target: shift the full 24-bit significand down to
+            // units of 2^(min_norm_exp - man_bits)
+            let shift = (23 - self.man_bits as i32) + (min_norm_exp - e);
+            if shift > 24 {
+                // the whole significand sits below the round bit
+                return sign;
+            }
+            (0, rtne_shift(m23 | 0x0080_0000, shift as u32))
         };
-        let scale = (1u32 << self.man_bits) as f32;
-        let m_scaled = man * scale;
-        let mut m = m_scaled.floor() as u32;
-        let frac = m_scaled - m as f32;
-        // round to nearest, ties to even
-        if frac > 0.5 || (frac == 0.5 && (m & 1) == 1) {
-            m += 1;
-        }
-        let mut exp_field = exp_field as u32;
-        if m >= (1u32 << self.man_bits) {
+        if m >= 1u32 << self.man_bits {
             // Mantissa overflow: bump the exponent. This also covers the
             // subnormal -> normal boundary: exp_field 0 with a full mantissa
             // rounds up to the smallest normal (exp_field 1, mantissa 0).
@@ -80,6 +91,7 @@ impl Fp8Spec {
             exp_field += 1;
         }
         let code = ((exp_field << self.man_bits) | m) as u8;
+        let max_code = self.max_finite_code();
         if code > max_code {
             return sign | max_code;
         }
@@ -111,12 +123,26 @@ impl Fp8Spec {
         sign * v
     }
 
-    fn max_finite_code(&self) -> u8 {
+    pub(crate) fn max_finite_code(&self) -> u8 {
         if self.exp_bits == 4 {
             0x7E // E4M3fn: 1111.110 = 448
         } else {
             0x7B // E5M2: 11110.11 = 57344 (11111.xx is inf/nan)
         }
+    }
+}
+
+/// Round a value down-shifted by `shift` bits to nearest, ties to even.
+/// `shift` must be in 1..=31.
+#[inline]
+fn rtne_shift(v: u32, shift: u32) -> u32 {
+    let m = v >> shift;
+    let rest = v & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    if rest > half || (rest == half && (m & 1) == 1) {
+        m + 1
+    } else {
+        m
     }
 }
 
@@ -287,6 +313,93 @@ mod tests {
         let custom = Fp8Spec { exp_bits: 3, man_bits: 4, bias: 3, max: 15.5 };
         assert_eq!(custom.name(), "e3m4");
         assert!(Fp8Spec::from_name(&custom.name()).is_err());
+    }
+
+    /// Bump a non-negative finite f32 one ulp up/down via the bit pattern
+    /// (`f32::next_up` needs rustc 1.86; we pin 1.74).
+    fn ulp_up(x: f32) -> f32 {
+        f32::from_bits(x.to_bits() + 1)
+    }
+    fn ulp_down(x: f32) -> f32 {
+        f32::from_bits(x.to_bits() - 1)
+    }
+
+    #[test]
+    fn integer_encode_matches_log2_oracle_exhaustive_codes() {
+        use crate::formats::kernels::reference::fp8_encode_float;
+        for spec in [E4M3, E5M2] {
+            for code in 0u16..=255 {
+                let v = spec.decode(code as u8);
+                if v.is_nan() {
+                    continue; // NaN payloads collapse to the canonical code
+                }
+                assert_eq!(
+                    spec.encode(v),
+                    fp8_encode_float(&spec, v),
+                    "spec={spec:?} code={code:#x} v={v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn integer_encode_matches_log2_oracle_at_all_boundaries() {
+        use crate::formats::kernels::reference::fp8_encode_float;
+        for spec in [E4M3, E5M2] {
+            // every midpoint between adjacent non-negative representables,
+            // plus one ulp either side (the RTNE decision boundaries)
+            let mut reps: Vec<f32> = (0u16..=255)
+                .map(|c| spec.decode(c as u8))
+                .filter(|v| v.is_finite() && *v >= 0.0)
+                .collect();
+            reps.sort_by(f32::total_cmp);
+            reps.dedup();
+            assert!(reps.len() > 100, "{spec:?}: degenerate table");
+            for w in reps.windows(2) {
+                let mid = ((w[0] as f64 + w[1] as f64) * 0.5) as f32;
+                for x in [mid, ulp_up(mid), ulp_down(mid), w[0], w[1]] {
+                    for s in [x, -x] {
+                        assert_eq!(
+                            spec.encode(s),
+                            fp8_encode_float(&spec, s),
+                            "spec={spec:?} x={s}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn integer_encode_matches_log2_oracle_on_specials_and_random() {
+        use crate::formats::kernels::reference::fp8_encode_float;
+        let mut rng = crate::util::Rng::new(0xF8);
+        for spec in [E4M3, E5M2] {
+            let specials = [
+                0.0,
+                -0.0,
+                f32::INFINITY,
+                f32::NEG_INFINITY,
+                spec.max,
+                -spec.max,
+                ulp_down(spec.max),
+                ulp_up(spec.max),
+                f32::MIN_POSITIVE,          // smallest normal f32
+                f32::from_bits(1),          // smallest subnormal f32
+                f32::from_bits(0x007F_FFFF), // largest subnormal f32
+                1e-30,
+                1e30,
+            ];
+            for &x in &specials {
+                assert_eq!(spec.encode(x), fp8_encode_float(&spec, x), "{spec:?} x={x}");
+            }
+            // NaN: both paths return the canonical all-ones payload
+            assert_eq!(spec.encode(f32::NAN), fp8_encode_float(&spec, f32::NAN));
+            for _ in 0..20_000 {
+                let x = rng.normal_f32() * 10f32.powi(rng.below(13) as i32 - 6);
+                assert_eq!(spec.encode(x), fp8_encode_float(&spec, x), "{spec:?} x={x}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,848 @@
+//! Single-pass tensor kernels behind the [`QuantSpec`]/[`PackedTensor`]
+//! API (§Perf: the codec layer is the hot path of the FP8/FP4 gradient
+//! communication reproduction and of every Table-1/Fig-4 sweep).
+//!
+//! Design rules, in order:
+//!
+//!  1. **Bit-exactness is mandatory.** Every kernel produces exactly the
+//!     bytes/floats of the scalar per-element path it replaces. The
+//!     pre-kernel scalar loops are retained verbatim in [`reference`] and
+//!     the property tests (`tests/property.rs`) plus the unit oracles in
+//!     `formats/mod.rs` / `formats/fp8.rs` pin the equivalence across all
+//!     format × granularity pairs, odd lengths, all-zero groups and
+//!     NaN/±Inf inputs.
+//!  2. **One dispatch per tensor.** The `match format` / `match
+//!     granularity` that used to run per element is hoisted: each entry
+//!     point dispatches once into a loop monomorphized per
+//!     (format × granularity) — the granularity becomes an inlined gamma
+//!     closure, the format a specialized inner loop (threshold-table FP4
+//!     encode, integer-domain FP8 encode, 256-entry FP8 decode LUT).
+//!  3. **No O(n) allocation on the `_into` paths.**
+//!     `pack_into`/`unpack_into`/`unpack_accumulate`/`qdq_into` write into
+//!     caller-owned scratch. `pack_into` reuses the payload's own
+//!     scale/code capacity, so the dp-sim comm loop and checkpoint
+//!     packing allocate nothing per gradient per step; `qdq_into`
+//!     allocates only its O(groups) scale vector (gamma per row/col —
+//!     negligible next to the O(n) buffers it avoids).
+//!  4. **Optional chunked parallelism.** Tensors above [`PAR_MIN_ELEMS`]
+//!     elements fan out over `std::thread::scope` in aligned contiguous
+//!     chunks (no added dependencies — the offline image only vendors
+//!     `anyhow`/`xla`). Every element is independent, so the result is
+//!     bit-identical to the serial pass.
+
+use super::codec::{Codec, Format, PackedTensor};
+use super::fp8::Fp8Spec;
+use super::{fp16, Fp4Kind, Granularity};
+
+/// Tensors below this many elements run serially; above it the kernels
+/// fan out over scoped threads.
+const PAR_MIN_ELEMS: usize = 1 << 20;
+/// Upper bound on kernel threads (the comm path is memory-bound well
+/// before this).
+const MAX_KERNEL_THREADS: usize = 8;
+
+/// Hoist the per-element granularity dispatch into a monomorphized gamma
+/// closure: `$body` is compiled once per granularity with `$g(r, c)`
+/// inlined to a constant, a row lookup or a column lookup.
+macro_rules! per_gran {
+    ($gran:expr, $scales:expr, |$g:ident| $body:expr) => {{
+        let scales: &[f32] = $scales;
+        match $gran {
+            Granularity::Tensor => {
+                let s0 = if scales.is_empty() { 1.0 } else { scales[0] };
+                let $g = move |_r: usize, _c: usize| s0;
+                $body
+            }
+            Granularity::Row => {
+                let $g = move |r: usize, _c: usize| scales[r];
+                $body
+            }
+            Granularity::Col => {
+                let $g = move |_r: usize, c: usize| scales[c];
+                $body
+            }
+        }
+    }};
+}
+
+/// The Format-level sanitization contract: NaN quantizes as +0.0.
+#[inline(always)]
+fn san(t: f32) -> f32 {
+    if t.is_nan() {
+        0.0
+    } else {
+        t
+    }
+}
+
+/// Branchless FP4 value index: delegates to the single shared rounding
+/// decision ([`Fp4Kind::index_for`]) with the table already hoisted.
+#[inline(always)]
+fn fp4_index(thr: &[f32; 14], x: f32) -> usize {
+    Fp4Kind::index_for(thr, x)
+}
+
+/// Branchless FP4 encode straight to the 4-bit wire code.
+#[inline(always)]
+fn fp4_code(thr: &[f32; 14], x: f32) -> u8 {
+    Fp4Kind::index_to_code(fp4_index(thr, x))
+}
+
+/// ScaledF16 storage cast including the Format-level NaN→0 sanitization
+/// (±Inf saturates to the pinned absmax so the decode stays finite).
+#[inline(always)]
+fn scaled_f16_bits(t: f32) -> u16 {
+    let t = if t.is_nan() {
+        0.0
+    } else if t.is_infinite() {
+        32768.0f32.copysign(t)
+    } else {
+        t
+    };
+    fp16::f32_to_f16_bits(t)
+}
+
+/// 256-entry FP8 decode table (exact: one `decode` per code, per tensor).
+#[inline]
+fn fp8_decode_lut(spec: &Fp8Spec) -> [f32; 256] {
+    std::array::from_fn(|c| spec.decode(c as u8))
+}
+
+/// 16-entry FP4 decode table.
+#[inline]
+fn fp4_decode_lut(kind: Fp4Kind) -> [f32; 16] {
+    std::array::from_fn(|c| kind.decode(c as u8))
+}
+
+// ---------------------------------------------------------------------------
+// Scales
+// ---------------------------------------------------------------------------
+
+/// Per-group absmax scales (the gamma of Eq. 1) in one row-major pass —
+/// the per-element `group_of` div/mod of the old `scales_for` is hoisted
+/// into the loop structure. Bit-exact with [`reference::scales`] (same
+/// per-group accumulation order; non-finite inputs skipped; all-zero
+/// groups get gamma = 1). Reuses `out`'s capacity.
+pub(crate) fn scales_into(
+    format: Format,
+    xs: &[f32],
+    rows: usize,
+    cols: usize,
+    gran: Granularity,
+    out: &mut Vec<f32>,
+) {
+    let n_groups = gran.n_groups(rows, cols);
+    out.clear();
+    out.resize(n_groups, 0.0);
+    if format == Format::F32 {
+        out.fill(1.0);
+        return;
+    }
+    match gran {
+        Granularity::Tensor => {
+            let mut amax = 0.0f32;
+            for &x in xs {
+                if x.is_finite() {
+                    amax = amax.max(x.abs());
+                }
+            }
+            out[0] = amax;
+        }
+        Granularity::Row => {
+            for (a, row) in out.iter_mut().zip(xs.chunks(cols.max(1))) {
+                let mut amax = 0.0f32;
+                for &x in row {
+                    if x.is_finite() {
+                        amax = amax.max(x.abs());
+                    }
+                }
+                *a = amax;
+            }
+        }
+        Granularity::Col => {
+            for row in xs.chunks(cols.max(1)) {
+                for (a, &x) in out.iter_mut().zip(row) {
+                    if x.is_finite() {
+                        *a = a.max(x.abs());
+                    }
+                }
+            }
+        }
+    }
+    let max = format.max_value();
+    for a in out.iter_mut() {
+        *a = if *a == 0.0 { 1.0 } else { max / *a };
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry points (dispatch once per tensor)
+// ---------------------------------------------------------------------------
+
+/// Fused quantize-dequantize into caller scratch: encode+decode collapse
+/// to a table lookup per element (no intermediate code buffer).
+pub(crate) fn qdq_into(
+    format: Format,
+    gran: Granularity,
+    xs: &[f32],
+    rows: usize,
+    cols: usize,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.resize(xs.len(), 0.0);
+    if xs.is_empty() {
+        return;
+    }
+    let mut scales = Vec::new();
+    scales_into(format, xs, rows, cols, gran, &mut scales);
+    let cols = cols.max(1);
+    let out = out.as_mut_slice();
+    match format {
+        Format::Fp4(k) => qdq4(k, xs, cols, gran, &scales, out),
+        Format::Fp8(s) => qdq8(s, xs, cols, gran, &scales, out),
+        Format::F16 => qdq16(xs, cols, gran, &scales, out),
+        Format::F32 => qdq32(xs, cols, gran, &scales, out),
+    }
+}
+
+/// Single-pass pack into a caller-owned [`PackedTensor`] (scales and code
+/// buffer reuse their capacity; every byte is overwritten).
+pub(crate) fn pack_into(
+    xs: &[f32],
+    rows: usize,
+    cols: usize,
+    format: Format,
+    granularity: Granularity,
+    out: &mut PackedTensor,
+) {
+    out.format = format;
+    out.granularity = granularity;
+    out.rows = rows;
+    out.cols = cols;
+    scales_into(format, xs, rows, cols, granularity, &mut out.scales);
+    let bits = format.bits_per_element() as usize;
+    out.data.resize((xs.len() * bits).div_ceil(8), 0);
+    if xs.is_empty() {
+        return;
+    }
+    let cols = cols.max(1);
+    let data = out.data.as_mut_slice();
+    let scales = out.scales.as_slice();
+    match format {
+        Format::Fp4(k) => pack4(k, xs, cols, granularity, scales, data),
+        Format::Fp8(s) => pack8(s, xs, cols, granularity, scales, data),
+        Format::F16 => pack16(xs, cols, granularity, scales, data),
+        Format::F32 => pack32(xs, cols, granularity, scales, data),
+    }
+}
+
+/// Decode into caller scratch.
+pub(crate) fn unpack_into(p: &PackedTensor, out: &mut Vec<f32>) {
+    let n = p.rows * p.cols;
+    out.clear();
+    out.resize(n, 0.0);
+    decode_dispatch(p, out.as_mut_slice(), |o, v| *o = v);
+}
+
+/// Fused decode-accumulate: `acc[i] += decode(i) * weight` without ever
+/// materializing the decoded tensor — the dp-sim all-reduce inner loop.
+/// Same decode loops as [`unpack_into`], only the sink differs.
+pub(crate) fn unpack_accumulate(p: &PackedTensor, acc: &mut [f32], weight: f32) {
+    assert_eq!(acc.len(), p.rows * p.cols, "accumulator shape mismatch");
+    decode_dispatch(p, acc, move |o, v| *o += v * weight);
+}
+
+/// One decode surface for both unpack and accumulate: `sink` is inlined
+/// per call site (`*o = v` or `*o += v * weight`), so the per-format
+/// decode loops exist exactly once.
+fn decode_dispatch(
+    p: &PackedTensor,
+    out: &mut [f32],
+    sink: impl Fn(&mut f32, f32) + Copy + Sync,
+) {
+    if out.is_empty() {
+        return;
+    }
+    let cols = p.cols.max(1);
+    match p.format {
+        Format::Fp4(k) => decode4(k, &p.data, cols, p.granularity, &p.scales, out, sink),
+        Format::Fp8(s) => decode8(s, &p.data, cols, p.granularity, &p.scales, out, sink),
+        Format::F16 => decode16(&p.data, cols, p.granularity, &p.scales, out, sink),
+        Format::F32 => decode32(&p.data, cols, p.granularity, &p.scales, out, sink),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-format qdq kernels
+// ---------------------------------------------------------------------------
+
+fn qdq4(
+    kind: Fp4Kind,
+    xs: &[f32],
+    cols: usize,
+    gran: Granularity,
+    scales: &[f32],
+    out: &mut [f32],
+) {
+    let vals = kind.values();
+    let thr = kind.thresholds();
+    per_gran!(gran, scales, |g| {
+        chunked(xs.len(), xs, (1, 1), out, (1, 1), |base, xs, out| {
+            let (mut r, mut c) = (base / cols, base % cols);
+            for (&x, o) in xs.iter().zip(out.iter_mut()) {
+                let gamma = g(r, c);
+                *o = vals[fp4_index(thr, san(x * gamma))] / gamma;
+                c += 1;
+                if c == cols {
+                    c = 0;
+                    r += 1;
+                }
+            }
+        })
+    });
+}
+
+fn qdq8(
+    spec: Fp8Spec,
+    xs: &[f32],
+    cols: usize,
+    gran: Granularity,
+    scales: &[f32],
+    out: &mut [f32],
+) {
+    let dec = fp8_decode_lut(&spec);
+    per_gran!(gran, scales, |g| {
+        chunked(xs.len(), xs, (1, 1), out, (1, 1), |base, xs, out| {
+            let (mut r, mut c) = (base / cols, base % cols);
+            for (&x, o) in xs.iter().zip(out.iter_mut()) {
+                let gamma = g(r, c);
+                *o = dec[spec.encode(san(x * gamma)) as usize] / gamma;
+                c += 1;
+                if c == cols {
+                    c = 0;
+                    r += 1;
+                }
+            }
+        })
+    });
+}
+
+fn qdq16(xs: &[f32], cols: usize, gran: Granularity, scales: &[f32], out: &mut [f32]) {
+    per_gran!(gran, scales, |g| {
+        chunked(xs.len(), xs, (1, 1), out, (1, 1), |base, xs, out| {
+            let (mut r, mut c) = (base / cols, base % cols);
+            for (&x, o) in xs.iter().zip(out.iter_mut()) {
+                let gamma = g(r, c);
+                *o = fp16::f16_bits_to_f32(scaled_f16_bits(x * gamma)) / gamma;
+                c += 1;
+                if c == cols {
+                    c = 0;
+                    r += 1;
+                }
+            }
+        })
+    });
+}
+
+fn qdq32(xs: &[f32], cols: usize, gran: Granularity, scales: &[f32], out: &mut [f32]) {
+    per_gran!(gran, scales, |g| {
+        chunked(xs.len(), xs, (1, 1), out, (1, 1), |base, xs, out| {
+            let (mut r, mut c) = (base / cols, base % cols);
+            for (&x, o) in xs.iter().zip(out.iter_mut()) {
+                let gamma = g(r, c);
+                *o = san(x * gamma).clamp(f32::MIN, f32::MAX) / gamma;
+                c += 1;
+                if c == cols {
+                    c = 0;
+                    r += 1;
+                }
+            }
+        })
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Per-format pack kernels (write every output byte; no read-modify-write)
+// ---------------------------------------------------------------------------
+
+fn pack4(
+    kind: Fp4Kind,
+    xs: &[f32],
+    cols: usize,
+    gran: Granularity,
+    scales: &[f32],
+    data: &mut [u8],
+) {
+    let thr = kind.thresholds();
+    per_gran!(gran, scales, |g| {
+        chunked(xs.len(), xs, (1, 1), data, (1, 2), |base, xs, out| {
+            let (mut r, mut c) = (base / cols, base % cols);
+            for (pair, byte) in xs.chunks(2).zip(out.iter_mut()) {
+                let lo = fp4_code(thr, san(pair[0] * g(r, c)));
+                c += 1;
+                if c == cols {
+                    c = 0;
+                    r += 1;
+                }
+                let hi = if let Some(&x1) = pair.get(1) {
+                    let h = fp4_code(thr, san(x1 * g(r, c)));
+                    c += 1;
+                    if c == cols {
+                        c = 0;
+                        r += 1;
+                    }
+                    h
+                } else {
+                    0 // odd tail: high nibble is padding, as in the scalar path
+                };
+                *byte = lo | (hi << 4);
+            }
+        })
+    });
+}
+
+fn pack8(
+    spec: Fp8Spec,
+    xs: &[f32],
+    cols: usize,
+    gran: Granularity,
+    scales: &[f32],
+    data: &mut [u8],
+) {
+    per_gran!(gran, scales, |g| {
+        chunked(xs.len(), xs, (1, 1), data, (1, 1), |base, xs, out| {
+            let (mut r, mut c) = (base / cols, base % cols);
+            for (&x, o) in xs.iter().zip(out.iter_mut()) {
+                *o = spec.encode(san(x * g(r, c)));
+                c += 1;
+                if c == cols {
+                    c = 0;
+                    r += 1;
+                }
+            }
+        })
+    });
+}
+
+fn pack16(xs: &[f32], cols: usize, gran: Granularity, scales: &[f32], data: &mut [u8]) {
+    per_gran!(gran, scales, |g| {
+        chunked(xs.len(), xs, (1, 1), data, (2, 1), |base, xs, out| {
+            let (mut r, mut c) = (base / cols, base % cols);
+            for (&x, o) in xs.iter().zip(out.chunks_exact_mut(2)) {
+                o.copy_from_slice(&scaled_f16_bits(x * g(r, c)).to_le_bytes());
+                c += 1;
+                if c == cols {
+                    c = 0;
+                    r += 1;
+                }
+            }
+        })
+    });
+}
+
+fn pack32(xs: &[f32], cols: usize, gran: Granularity, scales: &[f32], data: &mut [u8]) {
+    per_gran!(gran, scales, |g| {
+        chunked(xs.len(), xs, (1, 1), data, (4, 1), |base, xs, out| {
+            let (mut r, mut c) = (base / cols, base % cols);
+            for (&x, o) in xs.iter().zip(out.chunks_exact_mut(4)) {
+                let t = san(x * g(r, c)).clamp(f32::MIN, f32::MAX);
+                o.copy_from_slice(&t.to_bits().to_le_bytes());
+                c += 1;
+                if c == cols {
+                    c = 0;
+                    r += 1;
+                }
+            }
+        })
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Per-format decode kernels (shared by unpack_into / unpack_accumulate)
+// ---------------------------------------------------------------------------
+
+fn decode4(
+    kind: Fp4Kind,
+    data: &[u8],
+    cols: usize,
+    gran: Granularity,
+    scales: &[f32],
+    out: &mut [f32],
+    sink: impl Fn(&mut f32, f32) + Copy + Sync,
+) {
+    let dec = fp4_decode_lut(kind);
+    per_gran!(gran, scales, |g| {
+        chunked(out.len(), data, (1, 2), out, (1, 1), |base, bytes, out| {
+            let (mut r, mut c) = (base / cols, base % cols);
+            for (j, o) in out.iter_mut().enumerate() {
+                let code = (bytes[j >> 1] >> ((j & 1) * 4)) & 0xF;
+                sink(o, dec[code as usize] / g(r, c));
+                c += 1;
+                if c == cols {
+                    c = 0;
+                    r += 1;
+                }
+            }
+        })
+    });
+}
+
+fn decode8(
+    spec: Fp8Spec,
+    data: &[u8],
+    cols: usize,
+    gran: Granularity,
+    scales: &[f32],
+    out: &mut [f32],
+    sink: impl Fn(&mut f32, f32) + Copy + Sync,
+) {
+    let dec = fp8_decode_lut(&spec);
+    per_gran!(gran, scales, |g| {
+        chunked(out.len(), data, (1, 1), out, (1, 1), |base, bytes, out| {
+            let (mut r, mut c) = (base / cols, base % cols);
+            for (&b, o) in bytes.iter().zip(out.iter_mut()) {
+                sink(o, dec[b as usize] / g(r, c));
+                c += 1;
+                if c == cols {
+                    c = 0;
+                    r += 1;
+                }
+            }
+        })
+    });
+}
+
+fn decode16(
+    data: &[u8],
+    cols: usize,
+    gran: Granularity,
+    scales: &[f32],
+    out: &mut [f32],
+    sink: impl Fn(&mut f32, f32) + Copy + Sync,
+) {
+    per_gran!(gran, scales, |g| {
+        chunked(out.len(), data, (2, 1), out, (1, 1), |base, bytes, out| {
+            let (mut r, mut c) = (base / cols, base % cols);
+            for (bb, o) in bytes.chunks_exact(2).zip(out.iter_mut()) {
+                sink(o, fp16::f16_bits_to_f32(u16::from_le_bytes([bb[0], bb[1]])) / g(r, c));
+                c += 1;
+                if c == cols {
+                    c = 0;
+                    r += 1;
+                }
+            }
+        })
+    });
+}
+
+fn decode32(
+    data: &[u8],
+    cols: usize,
+    gran: Granularity,
+    scales: &[f32],
+    out: &mut [f32],
+    sink: impl Fn(&mut f32, f32) + Copy + Sync,
+) {
+    per_gran!(gran, scales, |g| {
+        chunked(out.len(), data, (4, 1), out, (1, 1), |base, bytes, out| {
+            let (mut r, mut c) = (base / cols, base % cols);
+            for (bb, o) in bytes.chunks_exact(4).zip(out.iter_mut()) {
+                let bits = u32::from_le_bytes([bb[0], bb[1], bb[2], bb[3]]);
+                sink(o, f32::from_bits(bits) / g(r, c));
+                c += 1;
+                if c == cols {
+                    c = 0;
+                    r += 1;
+                }
+            }
+        })
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Chunked execution driver
+// ---------------------------------------------------------------------------
+
+fn kernel_threads(n_elems: usize) -> usize {
+    if n_elems < PAR_MIN_ELEMS {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map_or(1, |p| p.get())
+        .min(MAX_KERNEL_THREADS)
+}
+
+/// Slice items covering `elems` elements under an (items, per-elems)
+/// ratio: fp4 codes are (1, 2) — one byte per two elements — while f16
+/// bytes are (2, 1).
+#[inline]
+fn items_for(elems: usize, (num, den): (usize, usize)) -> usize {
+    (elems * num).div_ceil(den)
+}
+
+/// Run `body(base_element, input_chunk, output_chunk)` over contiguous
+/// element ranges: serially for small tensors, across scoped threads for
+/// large ones. Chunk boundaries are aligned to the coarser of the two
+/// ratios' element granularities (so a byte of two fp4 nibbles is never
+/// split), and every element is written exactly once — the parallel and
+/// serial paths are bit-identical.
+fn chunked<I: Sync, O: Send, F>(
+    n_elems: usize,
+    inp: &[I],
+    in_ratio: (usize, usize),
+    out: &mut [O],
+    out_ratio: (usize, usize),
+    body: F,
+) where
+    F: Fn(usize, &[I], &mut [O]) + Sync,
+{
+    debug_assert_eq!(inp.len(), items_for(n_elems, in_ratio));
+    debug_assert_eq!(out.len(), items_for(n_elems, out_ratio));
+    let threads = kernel_threads(n_elems);
+    if threads <= 1 {
+        body(0, inp, out);
+        return;
+    }
+    let align = in_ratio.1.max(out_ratio.1);
+    let chunk = n_elems.div_ceil(threads).next_multiple_of(align);
+    let body = &body;
+    std::thread::scope(|s| {
+        let mut inp = inp;
+        let mut out = out;
+        let mut base = 0usize;
+        while base < n_elems {
+            let take = chunk.min(n_elems - base);
+            let (ic, ir) = inp.split_at(items_for(take, in_ratio));
+            let (oc, or) = std::mem::take(&mut out).split_at_mut(items_for(take, out_ratio));
+            inp = ir;
+            out = or;
+            let b = base;
+            s.spawn(move || body(b, ic, oc));
+            base += take;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference (pre-kernel paths, verbatim)
+// ---------------------------------------------------------------------------
+
+#[doc(hidden)]
+pub mod reference {
+    //! The pre-kernel scalar paths, retained verbatim: the bit-exactness
+    //! oracle for `tests/property.rs` and the baseline of the
+    //! kernel-vs-scalar speedup ratios in `benches/formats.rs` /
+    //! `repro perf`. Not part of the public API.
+
+    use super::super::codec::{Codec, Format, PackedTensor, ScaledF16};
+    use super::super::fp8::Fp8Spec;
+    use super::super::{Fp4Kind, Granularity};
+
+    /// Original descending midpoint scan (pre-threshold-table
+    /// `Fp4Kind::value_index`).
+    pub fn fp4_value_index(kind: Fp4Kind, x: f32) -> usize {
+        let values = kind.values();
+        // first index whose midpoint-with-previous exceeds x
+        let mut idx = values.len() - 1;
+        for i in (0..values.len() - 1).rev() {
+            let mid = 0.5 * (values[i] + values[i + 1]);
+            if x < mid {
+                idx = i;
+            }
+        }
+        idx
+    }
+
+    /// Original two-scan FP4 encode (lut_round + `positives()` position
+    /// scan).
+    pub fn fp4_encode(kind: Fp4Kind, x: f32) -> u8 {
+        let v = kind.values()[fp4_value_index(kind, x)];
+        let mag = v.abs();
+        let code = kind.positives().iter().position(|&p| p == mag).unwrap_or(0) as u8;
+        if v < 0.0 {
+            code | 0x8
+        } else {
+            code
+        }
+    }
+
+    /// Original float-domain FP8 encode (`log2().floor()` / `exp2` per
+    /// element).
+    pub fn fp8_encode_float(spec: &Fp8Spec, x: f32) -> u8 {
+        let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+        let a = x.abs();
+        if a.is_nan() {
+            return sign | ((1u8 << (spec.exp_bits + spec.man_bits)) - 1);
+        }
+        if a == 0.0 {
+            return sign;
+        }
+        let max_code = spec.max_finite_code();
+        if a >= spec.max {
+            return sign | max_code;
+        }
+        let e = a.log2().floor() as i32;
+        let min_norm_exp = 1 - spec.bias;
+        let (exp_field, man): (i32, f32) = if e < min_norm_exp {
+            (0, a / (min_norm_exp as f32).exp2())
+        } else {
+            (e + spec.bias, a / (e as f32).exp2() - 1.0)
+        };
+        let scale = (1u32 << spec.man_bits) as f32;
+        let m_scaled = man * scale;
+        let mut m = m_scaled.floor() as u32;
+        let frac = m_scaled - m as f32;
+        if frac > 0.5 || (frac == 0.5 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut exp_field = exp_field as u32;
+        if m >= (1u32 << spec.man_bits) {
+            m = 0;
+            exp_field += 1;
+        }
+        let code = ((exp_field << spec.man_bits) | m) as u8;
+        if code > max_code {
+            return sign | max_code;
+        }
+        sign | code
+    }
+
+    /// Per-element scalar encode with the original scalar codecs
+    /// (pre-kernel `Format::encode_bits`).
+    fn encode_bits(format: Format, x: f32) -> u32 {
+        let x = if x.is_nan() { 0.0 } else { x };
+        match format {
+            Format::Fp4(k) => u32::from(fp4_encode(k, x)),
+            Format::Fp8(s) => u32::from(fp8_encode_float(&s, x)),
+            Format::F16 => ScaledF16.encode_bits(x),
+            Format::F32 => x.clamp(f32::MIN, f32::MAX).to_bits(),
+        }
+    }
+
+    /// The original per-element `scales_for` (flat `group_of` div/mod).
+    pub fn scales(
+        format: Format,
+        xs: &[f32],
+        rows: usize,
+        cols: usize,
+        gran: Granularity,
+    ) -> Vec<f32> {
+        let n_groups = gran.n_groups(rows, cols);
+        if format == Format::F32 {
+            return vec![1.0; n_groups];
+        }
+        let mut amax = vec![0.0f32; n_groups];
+        for (i, &x) in xs.iter().enumerate() {
+            if x.is_finite() {
+                let g = gran.group_of(i, cols);
+                amax[g] = amax[g].max(x.abs());
+            }
+        }
+        let max = format.max_value();
+        amax.into_iter().map(|a| if a == 0.0 { 1.0 } else { max / a }).collect()
+    }
+
+    /// The original `QuantSpec::qdq` inner loop (unclamped specs).
+    pub fn qdq(
+        format: Format,
+        gran: Granularity,
+        xs: &[f32],
+        rows: usize,
+        cols: usize,
+    ) -> Vec<f32> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        let qdq1 = |x: f32, gamma: f32| format.decode_bits(encode_bits(format, x * gamma)) / gamma;
+        let scales = scales(format, xs, rows, cols, gran);
+        match gran {
+            Granularity::Tensor => {
+                let gamma = scales[0];
+                xs.iter().map(|&x| qdq1(x, gamma)).collect()
+            }
+            Granularity::Row => {
+                let mut out = Vec::with_capacity(xs.len());
+                for (row, &gamma) in xs.chunks(cols).zip(&scales) {
+                    out.extend(row.iter().map(|&x| qdq1(x, gamma)));
+                }
+                out
+            }
+            Granularity::Col => {
+                let mut out = Vec::with_capacity(xs.len());
+                for row in xs.chunks(cols) {
+                    out.extend(row.iter().zip(&scales).map(|(&x, &gamma)| qdq1(x, gamma)));
+                }
+                out
+            }
+        }
+    }
+
+    /// The original per-element `PackedTensor::pack` loop.
+    pub fn pack(
+        xs: &[f32],
+        rows: usize,
+        cols: usize,
+        format: Format,
+        granularity: Granularity,
+    ) -> PackedTensor {
+        assert_eq!(xs.len(), rows * cols, "shape mismatch");
+        let scales = scales(format, xs, rows, cols, granularity);
+        let bits = format.bits_per_element();
+        let mut data = match bits {
+            4 => vec![0u8; xs.len().div_ceil(2)],
+            _ => Vec::with_capacity(xs.len() * bits as usize / 8),
+        };
+        let mut i = 0usize;
+        for (r, row) in xs.chunks(cols.max(1)).enumerate() {
+            for (c, &x) in row.iter().enumerate() {
+                let gamma = match granularity {
+                    Granularity::Tensor => scales[0],
+                    Granularity::Row => scales[r],
+                    Granularity::Col => scales[c],
+                };
+                let code = encode_bits(format, x * gamma);
+                match bits {
+                    4 => data[i / 2] |= ((code & 0xF) as u8) << ((i % 2) * 4),
+                    8 => data.push(code as u8),
+                    16 => data.extend_from_slice(&(code as u16).to_le_bytes()),
+                    _ => data.extend_from_slice(&code.to_le_bytes()),
+                }
+                i += 1;
+            }
+        }
+        PackedTensor { format, granularity, rows, cols, scales, data }
+    }
+
+    /// The original per-element `PackedTensor::unpack` loop.
+    pub fn unpack(p: &PackedTensor) -> Vec<f32> {
+        let bits = p.format.bits_per_element();
+        let mut out = Vec::with_capacity(p.len());
+        let mut i = 0usize;
+        for r in 0..p.rows {
+            for c in 0..p.cols {
+                let code = match bits {
+                    4 => u32::from((p.data[i / 2] >> ((i % 2) * 4)) & 0xF),
+                    8 => u32::from(p.data[i]),
+                    16 => {
+                        u32::from(u16::from_le_bytes([p.data[2 * i], p.data[2 * i + 1]]))
+                    }
+                    _ => u32::from_le_bytes([
+                        p.data[4 * i],
+                        p.data[4 * i + 1],
+                        p.data[4 * i + 2],
+                        p.data[4 * i + 3],
+                    ]),
+                };
+                let gamma = match p.granularity {
+                    Granularity::Tensor => p.scales[0],
+                    Granularity::Row => p.scales[r],
+                    Granularity::Col => p.scales[c],
+                };
+                out.push(p.format.decode_bits(code) / gamma);
+                i += 1;
+            }
+        }
+        out
+    }
+}

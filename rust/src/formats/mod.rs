@@ -24,6 +24,18 @@
 //! `unpack_fp4`) are thin delegates into that API — all rounding logic
 //! lives in one place.
 //!
+//! # Kernel layer
+//!
+//! The tensor-level hot loops live in [`kernels`]: single-pass,
+//! monomorphized per (format × granularity), with `_into` variants
+//! (`QuantSpec::qdq_into`, `PackedTensor::pack_into` / `unpack_into` /
+//! `unpack_accumulate`) that write into caller-owned scratch so the
+//! gradient-communication and checkpoint paths allocate nothing per
+//! tensor. The kernels are **bit-exact** with the scalar per-element
+//! paths they replace; the pre-kernel scalar loops are retained verbatim
+//! in [`kernels::reference`] as the oracle for the property tests and the
+//! kernel-vs-scalar bench ratios (`benches/formats.rs`).
+//!
 //! Rounding follows the paper's Appendix-A CUDA kernel exactly: nearest
 //! value with ties toward the *upper* neighbour (strict `<` thresholds at
 //! interval midpoints). Cross-checked against the Python tables in
@@ -32,6 +44,7 @@
 pub mod codec;
 pub mod fp8;
 pub mod fp16;
+pub mod kernels;
 
 pub use codec::{shape2d, ClampSpec, Codec, Format, PackedTensor, QuantSpec, ScaledF16};
 
@@ -69,6 +82,23 @@ const fn mirror(pos: [f32; 8]) -> [f32; 15] {
 const E2M1_ALL: [f32; 15] = mirror(E2M1_POS);
 const E1M2_ALL: [f32; 15] = mirror(E1M2_POS);
 const E3M0_ALL: [f32; 15] = mirror(E3M0_POS);
+
+/// Ascending decision thresholds: the midpoint between each pair of
+/// adjacent grid values. `value_index` is then a branchless count of
+/// thresholds at or below `x` — no per-element re-derivation of the
+/// midpoints and no early-exit branches (the §Perf fp4 encode kernel).
+/// Every midpoint is exactly representable in f32 (all grid values are
+/// small dyadic rationals); `thresholds_match_value_midpoints` pins the
+/// tables against `0.5 * (values[i] + values[i+1])`.
+const E2M1_THR: [f32; 14] = [
+    -5.0, -3.5, -2.5, -1.75, -1.25, -0.75, -0.25, 0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0,
+];
+const E1M2_THR: [f32; 14] = [
+    -3.25, -2.75, -2.25, -1.75, -1.25, -0.75, -0.25, 0.25, 0.75, 1.25, 1.75, 2.25, 2.75, 3.25,
+];
+const E3M0_THR: [f32; 14] = [
+    -12.0, -6.0, -3.0, -1.5, -0.75, -0.375, -0.125, 0.125, 0.375, 0.75, 1.5, 3.0, 6.0, 12.0,
+];
 
 impl Fp4Kind {
     pub fn from_name(name: &str) -> anyhow::Result<Self> {
@@ -122,22 +152,40 @@ impl Fp4Kind {
         self.positives()[7]
     }
 
+    /// Precomputed ascending midpoint thresholds between adjacent grid
+    /// values; the branchless decision table behind [`Self::value_index`].
+    #[inline]
+    pub fn thresholds(self) -> &'static [f32; 14] {
+        match self {
+            Fp4Kind::E2M1 => &E2M1_THR,
+            Fp4Kind::E1M2 => &E1M2_THR,
+            Fp4Kind::E3M0 => &E3M0_THR,
+        }
+    }
+
+    /// The single copy of the FP4 rounding decision, shared by the scalar
+    /// path and the tensor kernels (which hoist the table lookup):
+    /// branchless count of thresholds above `x`.
+    #[inline(always)]
+    pub(crate) fn index_for(thr: &[f32; 14], x: f32) -> usize {
+        let mut above = 0usize;
+        for &t in thr {
+            above += (x < t) as usize;
+        }
+        thr.len() - above
+    }
+
     /// Index (0..15) of the nearest value in `values()` for a *signed*
     /// input. Ties round toward the upper value in the SIGNED ordering —
     /// exactly the paper's strict-`<` comparison chain: -0.25 maps to 0.0
     /// (not -0.5) while +0.25 maps to +0.5.
+    ///
+    /// Branchless: the answer is `14 - |{t in thresholds : x < t}|`
+    /// (identical to the old descending midpoint scan, including the
+    /// NaN case where no comparison fires and the index saturates high).
     #[inline]
     pub fn value_index(self, x: f32) -> usize {
-        let values = self.values();
-        // first index whose midpoint-with-previous exceeds x
-        let mut idx = values.len() - 1;
-        for i in (0..values.len() - 1).rev() {
-            let mid = 0.5 * (values[i] + values[i + 1]);
-            if x < mid {
-                idx = i;
-            }
-        }
-        idx
+        Self::index_for(self.thresholds(), x)
     }
 
     /// Round `x` to the nearest grid value (paper's comparison chain).
@@ -146,18 +194,33 @@ impl Fp4Kind {
         self.values()[self.value_index(x)]
     }
 
+    /// Map a signed value index (0..15, from [`Self::value_index`]) to
+    /// the 4-bit wire code. Index 7 is ±0; indices above mirror the
+    /// positive magnitude table directly, indices below set the sign bit.
+    #[inline]
+    pub(crate) const fn index_to_code(idx: usize) -> u8 {
+        if idx >= 7 {
+            (idx - 7) as u8
+        } else {
+            0x8 | (7 - idx) as u8
+        }
+    }
+
     /// Encode to a 4-bit code: bit 3 = sign, bits 0..2 = magnitude index.
+    /// Derived from `value_index` via the direct index↔code mapping — no
+    /// second scan over `positives()` (see `encode_reference` for the
+    /// retained two-scan oracle).
     #[inline]
     pub fn encode(self, x: f32) -> u8 {
-        let v = self.lut_round(x);
-        let pos = self.positives();
-        let mag = v.abs();
-        let code = pos.iter().position(|&p| p == mag).unwrap_or(0) as u8;
-        if v < 0.0 {
-            code | 0x8
-        } else {
-            code
-        }
+        Self::index_to_code(self.value_index(x))
+    }
+
+    /// The original two-scan encode (lut_round + `positives().position`),
+    /// kept as the reference oracle for `encode_matches_two_scan_oracle`.
+    /// Delegates to the single retained copy in [`kernels::reference`].
+    #[cfg(test)]
+    pub(crate) fn encode_reference(self, x: f32) -> u8 {
+        kernels::reference::fp4_encode(self, x)
     }
 
     /// Decode a 4-bit code back to f32.
@@ -434,6 +497,68 @@ mod tests {
                 assert!(c >= last, "{fmt:?} x={x}");
                 last = c;
                 x += 0.01;
+            }
+        }
+    }
+
+    #[test]
+    fn thresholds_match_value_midpoints() {
+        for fmt in [Fp4Kind::E2M1, Fp4Kind::E1M2, Fp4Kind::E3M0] {
+            let values = fmt.values();
+            let thr = fmt.thresholds();
+            for i in 0..thr.len() {
+                let mid = 0.5 * (values[i] + values[i + 1]);
+                assert_eq!(thr[i], mid, "{fmt:?} threshold {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn value_index_matches_descending_scan_oracle() {
+        use crate::formats::kernels::reference::fp4_value_index;
+        for fmt in [Fp4Kind::E2M1, Fp4Kind::E1M2, Fp4Kind::E3M0] {
+            let mut x = -fmt.max_value() * 1.5;
+            while x < fmt.max_value() * 1.5 {
+                assert_eq!(fmt.value_index(x), fp4_value_index(fmt, x), "{fmt:?} x={x}");
+                x += 0.0078125; // exact step: hits every tie midpoint exactly
+            }
+            for x in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0] {
+                assert_eq!(fmt.value_index(x), fp4_value_index(fmt, x), "{fmt:?} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_matches_two_scan_oracle() {
+        let mut rng = crate::util::Rng::new(42);
+        for fmt in [Fp4Kind::E2M1, Fp4Kind::E1M2, Fp4Kind::E3M0] {
+            // dense sweep across the range plus ties and specials
+            let mut x = -fmt.max_value() * 1.5;
+            while x < fmt.max_value() * 1.5 {
+                assert_eq!(fmt.encode(x), fmt.encode_reference(x), "{fmt:?} x={x}");
+                x += 0.0078125;
+            }
+            for _ in 0..2000 {
+                let x = rng.normal_f32() * fmt.max_value();
+                assert_eq!(fmt.encode(x), fmt.encode_reference(x), "{fmt:?} x={x}");
+            }
+            for x in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0] {
+                assert_eq!(fmt.encode(x), fmt.encode_reference(x), "{fmt:?} x={x}");
+            }
+            // every decoded code re-encodes through both paths identically
+            for code in 0u8..16 {
+                let v = fmt.decode(code);
+                assert_eq!(fmt.encode(v), fmt.encode_reference(v), "{fmt:?} code={code}");
+            }
+        }
+    }
+
+    #[test]
+    fn index_to_code_round_trips_all_indices() {
+        for fmt in [Fp4Kind::E2M1, Fp4Kind::E1M2, Fp4Kind::E3M0] {
+            for idx in 0..15 {
+                let code = Fp4Kind::index_to_code(idx);
+                assert_eq!(fmt.decode(code), fmt.values()[idx], "{fmt:?} idx={idx}");
             }
         }
     }

@@ -4,37 +4,166 @@
 //! mirror reproduces the same clamp/residual split on probe tensors for
 //! Table 1, Figure 4 and the Appendix-D distribution studies, and measures
 //! the residual sparsity that drives the Appendix-B overhead model.
+//!
+//! §Perf: quantiles run in O(n) expected time via `select_nth_unstable`
+//! (quickselect) instead of a full sort, both clamp bounds come out of one
+//! scratch buffer (the upper-rank selection partitions the buffer, the
+//! lower rank is then selected inside the left partition), and
+//! [`clamp_tensor_into`] fuses clamp + residual + nnz into a single output
+//! pass over caller-owned scratch (plus one O(n) selection scratch for the
+//! bounds). Interpolation is unchanged, so results are numerically
+//! identical to the sort-based implementation.
+//!
+//! NaN inputs: selection orders with `total_cmp`, so it never panics (the
+//! old sort's `partial_cmp().unwrap()` did). Quantile *values* are only
+//! meaningful on sanitized data — the codec clamp path sanitizes first
+//! (see `formats::codec`); if a quantile rank does land on a NaN, the
+//! clamp degrades to a no-op pass-through instead of panicking inside
+//! `f32::clamp`.
+//!
+//! All entry points are empty-slice safe: they return 0.0 / empty vectors
+//! instead of panicking or dividing by zero.
 
 /// Signed quantile of a sample (linear interpolation, matching
-/// `jnp.quantile`'s default method).
+/// `jnp.quantile`'s default method). O(n) expected; 0.0 on empty input.
 pub fn quantile(xs: &[f32], q: f64) -> f32 {
-    assert!(!xs.is_empty());
-    let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut buf = xs.to_vec();
+    quantile_mut(&mut buf, q)
+}
+
+/// Fractional rank of quantile `q` in a sample of `n` (n >= 1).
+fn rank_of(q: f64, n: usize) -> (usize, f64) {
+    let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
     let i = pos.floor() as usize;
-    let frac = pos - i as f64;
-    if i + 1 >= sorted.len() {
-        sorted[sorted.len() - 1]
+    (i, pos - i as f64)
+}
+
+/// Linear interpolation between the rank-`i` value and its upper
+/// neighbour — the exact expression of the old sort-based path.
+fn interp(v: f32, next: f32, frac: f64) -> f32 {
+    (v as f64 * (1.0 - frac) + next as f64 * frac) as f32
+}
+
+/// Smallest element of a slice (`rank i+1` of the partition above a
+/// selected pivot).
+fn min_of(xs: &[f32]) -> f32 {
+    xs.iter().copied().fold(f32::INFINITY, f32::min)
+}
+
+/// Quantile of a scratch buffer, reordering it in place (quickselect).
+fn quantile_mut(buf: &mut [f32], q: f64) -> f32 {
+    let n = buf.len();
+    let (i, frac) = rank_of(q, n);
+    let (_, v, above) = buf.select_nth_unstable_by(i, f32::total_cmp);
+    let v = *v;
+    if i + 1 >= n {
+        v
     } else {
-        (sorted[i] as f64 * (1.0 - frac) + sorted[i + 1] as f64 * frac) as f32
+        interp(v, min_of(above), frac)
     }
 }
 
+/// Both clamp bounds of Eq. 9 — the `(1-alpha, alpha)` quantiles — from
+/// one scratch buffer: select the upper rank (which partitions the
+/// buffer), then the lower rank inside the left partition. O(n) expected,
+/// no sort, no second buffer.
+fn clamp_bounds_mut(buf: &mut [f32], alpha: f64) -> (f32, f32) {
+    let n = buf.len();
+    debug_assert!(n > 0);
+    let a = alpha.max(1.0 - alpha); // normalize so hi rank >= lo rank
+    let (ih, fh) = rank_of(a, n);
+    let (left, vh, above) = buf.select_nth_unstable_by(ih, f32::total_cmp);
+    let vh = *vh;
+    let above_min = if ih + 1 < n { min_of(above) } else { vh };
+    let hi = if ih + 1 >= n { vh } else { interp(vh, above_min, fh) };
+    let (il, fl) = rank_of(1.0 - a, n);
+    let lo = if il == ih {
+        if il + 1 >= n {
+            vh
+        } else {
+            interp(vh, above_min, fl)
+        }
+    } else {
+        // il < ih: both the rank and its upper neighbour live at or left
+        // of the pivot
+        let (_, vl, mid) = left.select_nth_unstable_by(il, f32::total_cmp);
+        let vl = *vl;
+        let next = if il + 1 < ih { min_of(mid) } else { vh };
+        interp(vl, next, fl)
+    };
+    (lo, hi)
+}
+
 /// Eq. 9: clamp to the (alpha, 1-alpha) quantiles; returns (Y_c, ΔY) with
-/// Y = Y_c + ΔY exactly.
+/// Y = Y_c + ΔY exactly. Empty input yields empty vectors.
 pub fn clamp_tensor(xs: &[f32], alpha: f64) -> (Vec<f32>, Vec<f32>) {
-    let hi = quantile(xs, alpha);
-    let lo = quantile(xs, 1.0 - alpha);
-    let clamped: Vec<f32> = xs.iter().map(|&x| x.clamp(lo, hi)).collect();
-    let delta: Vec<f32> = xs.iter().zip(&clamped).map(|(&x, &c)| x - c).collect();
+    let mut clamped = Vec::new();
+    let mut delta = Vec::new();
+    clamp_tensor_into(xs, alpha, &mut clamped, &mut delta);
     (clamped, delta)
 }
 
-/// Fraction of non-zero entries of ΔY (the paper's 0.2%–6% figures).
+/// Fused clamp kernel into caller-owned output scratch: one O(n)
+/// selection pass for both bounds (over one internal scratch copy of the
+/// input — selection reorders, and `xs` must stay intact for the delta),
+/// then a single loop producing `clamped`, `delta` and the returned
+/// nnz(ΔY) (the Appendix-B sparsity numerator). `clamped` and `delta`
+/// are cleared and refilled, reusing their capacity.
+pub fn clamp_tensor_into(
+    xs: &[f32],
+    alpha: f64,
+    clamped: &mut Vec<f32>,
+    delta: &mut Vec<f32>,
+) -> usize {
+    clamped.clear();
+    delta.clear();
+    if xs.is_empty() {
+        return 0;
+    }
+    let mut buf = xs.to_vec();
+    let (lo, hi) = clamp_bounds_checked(&mut buf, alpha);
+    clamped.reserve(xs.len());
+    delta.reserve(xs.len());
+    let mut nnz = 0usize;
+    for &x in xs {
+        let c = x.clamp(lo, hi);
+        let d = x - c;
+        nnz += (d != 0.0) as usize;
+        clamped.push(c);
+        delta.push(d);
+    }
+    nnz
+}
+
+/// [`clamp_bounds_mut`] hardened for unsanitized inputs: if a quantile
+/// rank lands on a NaN (possible only when the caller skipped the NaN
+/// sanitization the codec path performs), degrade to pass-through bounds
+/// instead of letting `f32::clamp` panic on a NaN limit.
+fn clamp_bounds_checked(buf: &mut [f32], alpha: f64) -> (f32, f32) {
+    let (lo, hi) = clamp_bounds_mut(buf, alpha);
+    if lo <= hi {
+        (lo, hi)
+    } else {
+        (f32::NEG_INFINITY, f32::INFINITY)
+    }
+}
+
+/// Fraction of non-zero entries of ΔY (the paper's 0.2%–6% figures),
+/// without materializing the clamped tensor. 0.0 on empty input.
 pub fn residual_sparsity(xs: &[f32], alpha: f64) -> f64 {
-    let (_, delta) = clamp_tensor(xs, alpha);
-    delta.iter().filter(|&&d| d != 0.0).count() as f64 / xs.len() as f64
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut buf = xs.to_vec();
+    let (lo, hi) = clamp_bounds_checked(&mut buf, alpha);
+    // exactly the `delta != 0` accounting of `clamp_tensor_into`, without
+    // materializing the vectors: NaN elements (and Inf elements clamped
+    // against an Inf bound, where Inf - Inf is NaN) count as residuals
+    let nnz = xs.iter().filter(|&&x| x - x.clamp(lo, hi) != 0.0).count();
+    nnz as f64 / xs.len() as f64
 }
 
 #[cfg(test)]
@@ -54,6 +183,99 @@ mod tests {
     fn quantile_interpolates() {
         let xs = vec![0.0f32, 10.0];
         assert!((quantile(&xs, 0.3) - 3.0).abs() < 1e-6);
+    }
+
+    /// Sort-based reference (the pre-selection implementation, verbatim).
+    fn quantile_sorted_ref(xs: &[f32], q: f64) -> f32 {
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+        let i = pos.floor() as usize;
+        let frac = pos - i as f64;
+        if i + 1 >= sorted.len() {
+            sorted[sorted.len() - 1]
+        } else {
+            (sorted[i] as f64 * (1.0 - frac) + sorted[i + 1] as f64 * frac) as f32
+        }
+    }
+
+    #[test]
+    fn selection_quantile_matches_sort_reference() {
+        let mut rng = crate::util::Rng::new(17);
+        for n in [1usize, 2, 3, 7, 100, 1001] {
+            let xs = rng.normal_vec(n, 2.0);
+            for q in [0.0, 0.001, 0.01, 0.25, 0.5, 0.75, 0.97, 0.99, 0.999, 1.0] {
+                assert_eq!(
+                    quantile(&xs, q),
+                    quantile_sorted_ref(&xs, q),
+                    "n={n} q={q}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn clamp_bounds_match_independent_quantiles() {
+        let mut rng = crate::util::Rng::new(18);
+        for n in [1usize, 2, 5, 64, 999] {
+            let xs = rng.normal_vec(n, 1.0);
+            for alpha in [0.999f64, 0.99, 0.97, 0.9, 0.75] {
+                let mut buf = xs.clone();
+                let (lo, hi) = clamp_bounds_mut(&mut buf, alpha);
+                assert_eq!(hi, quantile_sorted_ref(&xs, alpha), "n={n} alpha={alpha}");
+                assert_eq!(
+                    lo,
+                    quantile_sorted_ref(&xs, 1.0 - alpha),
+                    "n={n} alpha={alpha}"
+                );
+                assert!(lo <= hi);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        assert_eq!(quantile(&[], 0.5), 0.0);
+        let (c, d) = clamp_tensor(&[], 0.99);
+        assert!(c.is_empty() && d.is_empty());
+        assert_eq!(residual_sparsity(&[], 0.99), 0.0);
+        let mut a = vec![1.0f32];
+        let mut b = vec![2.0f32];
+        assert_eq!(clamp_tensor_into(&[], 0.99, &mut a, &mut b), 0);
+        assert!(a.is_empty() && b.is_empty());
+    }
+
+    #[test]
+    fn unsanitized_nan_heavy_input_does_not_panic() {
+        // Enough NaNs that a quantile rank lands on one (total_cmp sorts
+        // them to the extremes): the clamp must degrade to pass-through,
+        // not panic inside f32::clamp.
+        let mut xs = vec![f32::NAN; 60];
+        xs.extend_from_slice(&[1.0, -2.0, 3.0, 0.5]);
+        let (c, d) = clamp_tensor(&xs, 0.99);
+        assert_eq!(c.len(), xs.len());
+        // finite values pass through unclamped; NaN deltas count as nnz
+        assert_eq!(c[60], 1.0);
+        assert_eq!(d[60], 0.0);
+        let s = residual_sparsity(&xs, 0.99);
+        assert!((0.0..=1.0).contains(&s));
+    }
+
+    #[test]
+    fn fused_nnz_matches_delta_count_and_sparsity() {
+        let mut rng = crate::util::Rng::new(19);
+        let xs = rng.normal_vec(10_000, 1.0);
+        for alpha in [0.999f64, 0.99, 0.9] {
+            let mut c = Vec::new();
+            let mut d = Vec::new();
+            let nnz = clamp_tensor_into(&xs, alpha, &mut c, &mut d);
+            assert_eq!(nnz, d.iter().filter(|&&x| x != 0.0).count(), "alpha={alpha}");
+            assert_eq!(
+                residual_sparsity(&xs, alpha),
+                nnz as f64 / xs.len() as f64,
+                "alpha={alpha}"
+            );
+        }
     }
 
     #[test]

@@ -214,6 +214,164 @@ fn prop_row_qdq_equals_per_row_tensor_qdq() {
 }
 
 // ---------------------------------------------------------------------------
+// Kernel <-> scalar-reference bit-exactness (the formats::kernels contract)
+// ---------------------------------------------------------------------------
+
+use fp4train::formats::kernels::reference;
+use fp4train::formats::PackedTensor;
+
+/// Random (rows, cols, xs) with odd sizes, an all-zero row/column and a
+/// sprinkle of NaN/±Inf — the adversarial shapes of the kernel contract.
+fn adversarial_tensor(rng: &mut Rng) -> (usize, usize, Vec<f32>) {
+    let rows = 1 + rng.below(9) as usize;
+    let cols = 1 + rng.below(33) as usize; // frequently odd
+    let scale = 10f32.powi(rng.below(7) as i32 - 3);
+    let mut xs = rng.normal_vec(rows * cols, scale);
+    let zr = rng.below(rows as u64) as usize;
+    for c in 0..cols {
+        xs[zr * cols + c] = 0.0; // an all-zero row
+    }
+    let zc = rng.below(cols as u64) as usize;
+    for r in 0..rows {
+        xs[r * cols + zc] = 0.0; // an all-zero column
+    }
+    for _ in 0..rng.below(4) {
+        let i = rng.below((rows * cols) as u64) as usize;
+        xs[i] = match rng.below(3) {
+            0 => f32::NAN,
+            1 => f32::INFINITY,
+            _ => f32::NEG_INFINITY,
+        };
+    }
+    (rows, cols, xs)
+}
+
+#[test]
+fn prop_kernel_pack_bit_exact_with_scalar_reference() {
+    // pack_into must produce byte-identical codes and bit-identical
+    // scales vs the retained pre-kernel per-element loop, for every
+    // format x granularity, odd lengths, zero groups and NaN/Inf.
+    for seed in cases(40) {
+        let mut rng = Rng::new(seed);
+        for fmt in ALL_FORMATS {
+            for gran in ALL_GRANS {
+                let (rows, cols, xs) = adversarial_tensor(&mut rng);
+                let want = reference::pack(&xs, rows, cols, fmt, gran);
+                let mut got = PackedTensor::empty(fmt, gran);
+                PackedTensor::pack_into(&xs, rows, cols, fmt, gran, &mut got);
+                assert_eq!(got.data, want.data, "seed {seed} {fmt} {gran:?} {rows}x{cols}");
+                assert_eq!(
+                    got.scales.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+                    want.scales.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+                    "seed {seed} {fmt} {gran:?}"
+                );
+                // and the one-shot pack API is the same kernel
+                let one_shot = PackedTensor::pack(&xs, rows, cols, fmt, gran);
+                assert_eq!(one_shot.data, want.data, "seed {seed} {fmt} {gran:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_kernel_unpack_bit_exact_with_scalar_reference() {
+    for seed in cases(40) {
+        let mut rng = Rng::new(seed);
+        for fmt in ALL_FORMATS {
+            for gran in ALL_GRANS {
+                let (rows, cols, xs) = adversarial_tensor(&mut rng);
+                let p = PackedTensor::pack(&xs, rows, cols, fmt, gran);
+                let want = reference::unpack(&p);
+                let mut got = vec![7.0f32; 3]; // stale scratch must be cleared
+                p.unpack_into(&mut got);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&got), bits(&want), "seed {seed} {fmt} {gran:?}");
+                assert_eq!(bits(&p.unpack()), bits(&want), "seed {seed} {fmt} {gran:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_kernel_qdq_bit_exact_with_scalar_reference() {
+    for seed in cases(40) {
+        let mut rng = Rng::new(seed);
+        for fmt in ALL_FORMATS {
+            for gran in ALL_GRANS {
+                let (rows, cols, xs) = adversarial_tensor(&mut rng);
+                let want = reference::qdq(fmt, gran, &xs, rows, cols);
+                let spec = QuantSpec::new(fmt, gran);
+                let mut got = Vec::new();
+                spec.qdq_into(&xs, rows, cols, &mut got);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&got), bits(&want), "seed {seed} {fmt} {gran:?}");
+                assert_eq!(bits(&spec.qdq(&xs, rows, cols)), bits(&want), "seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_unpack_accumulate_matches_unpack_then_axpy() {
+    for seed in cases(30) {
+        let mut rng = Rng::new(seed);
+        for fmt in ALL_FORMATS {
+            for gran in ALL_GRANS {
+                let (rows, cols, xs) = adversarial_tensor(&mut rng);
+                let p = PackedTensor::pack(&xs, rows, cols, fmt, gran);
+                let base = rng.normal_vec(rows * cols, 0.3);
+                let w = 1.0 / (1.0 + rng.below(7) as f32);
+                let mut acc = base.clone();
+                p.unpack_accumulate(&mut acc, w);
+                let dec = reference::unpack(&p);
+                for (i, ((a, b), d)) in acc.iter().zip(&base).zip(&dec).enumerate() {
+                    let want = b + d * w;
+                    assert_eq!(
+                        a.to_bits(),
+                        want.to_bits(),
+                        "seed {seed} {fmt} {gran:?} elem {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_scales_for_matches_reference_scales() {
+    for seed in cases(60) {
+        let mut rng = Rng::new(seed);
+        let fmt = ALL_FORMATS[rng.below(ALL_FORMATS.len() as u64) as usize];
+        let gran = ALL_GRANS[rng.below(3) as usize];
+        let (rows, cols, xs) = adversarial_tensor(&mut rng);
+        let got = formats::codec::scales_for(fmt, &xs, rows, cols, gran);
+        let want = reference::scales(fmt, &xs, rows, cols, gran);
+        assert_eq!(
+            got.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+            "seed {seed} {fmt} {gran:?} {rows}x{cols}"
+        );
+    }
+}
+
+#[test]
+fn prop_empty_tensors_are_safe_through_every_kernel() {
+    for fmt in ALL_FORMATS {
+        for gran in ALL_GRANS {
+            let spec = QuantSpec::new(fmt, gran);
+            assert_eq!(spec.qdq(&[], 0, 0), Vec::<f32>::new(), "{spec}");
+            let mut out = vec![1.0f32];
+            spec.qdq_into(&[], 0, 0, &mut out);
+            assert!(out.is_empty(), "{spec}");
+            let p = PackedTensor::pack(&[], 0, 0, fmt, gran);
+            assert!(p.is_empty() && p.data.is_empty(), "{spec}");
+            assert_eq!(p.unpack(), Vec::<f32>::new(), "{spec}");
+            p.unpack_accumulate(&mut [], 1.0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // FP8 / FP16 codec properties
 // ---------------------------------------------------------------------------
 
