@@ -1,8 +1,8 @@
 //! Data-parallel simulation with quantized gradient communication (§4.1 /
 //! FP8-LM): 4 workers on disjoint corpus shards, gradients byte-encoded
-//! on the wire per the comm `QuantSpec`, averaged, applied via the
-//! `apply` artifact. Compares loss trajectory and wire bytes across
-//! FP8, FP4-row and f32 communication.
+//! on the wire per the `Wire` class of a `PrecisionPolicy`, averaged,
+//! applied via the `apply` artifact. Compares loss trajectory and wire
+//! bytes across FP8, FP4-row and f32 communication.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example dp_fp8_comm
@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use fp4train::coordinator::dp::DpSim;
 use fp4train::data::corpus::{Corpus, CorpusKind};
-use fp4train::formats::QuantSpec;
+use fp4train::policy::PrecisionPolicy;
 use fp4train::runtime::Engine;
 
 fn main() -> anyhow::Result<()> {
@@ -26,10 +26,11 @@ fn main() -> anyhow::Result<()> {
     let corpus = Corpus::generate(CorpusKind::Mix, 1234, 2_000_000, 64 * 1024);
 
     let mut results = Vec::new();
-    for comm in ["fp8:e4m3", "fp4:e2m1/row", "f32"] {
-        let comm = QuantSpec::parse(comm)?;
+    for wire in ["fp8:e4m3", "fp4:e2m1/row", "f32"] {
+        let policy = PrecisionPolicy::parse(&format!("wire={wire}"))?;
+        let comm = policy.wire_spec_at(0);
         let mut sim =
-            DpSim::new(engine.clone(), "nano", "bf16", &corpus, workers, 0, comm)?;
+            DpSim::new(engine.clone(), "nano", "bf16", &corpus, workers, 0, policy)?;
         println!("\n=== {} ===", sim.context_label());
         let t0 = std::time::Instant::now();
         for step in 0..steps {

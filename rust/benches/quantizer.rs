@@ -2,6 +2,7 @@
 //! the offline-analysis hot path behind `repro tab1`/`fig4`/`dists`.
 
 use fp4train::formats::{Fp4Kind, QuantSpec};
+use fp4train::policy::{PrecisionPolicy, TensorClass};
 use fp4train::quant::{self, occ};
 use fp4train::util::Rng;
 
@@ -53,7 +54,10 @@ fn main() {
         occ::clamp_tensor_into(&xs, 0.99, &mut cbuf, &mut dbuf) as f64
     });
     bench("residual_sparsity (1M)", || occ::residual_sparsity(&xs, 0.99));
-    let arm = QuantSpec::parse("fp4:e2m1/clamp@0.99+comp").unwrap();
+    let arm = PrecisionPolicy::default().with_class_spec(
+        TensorClass::Activation,
+        QuantSpec::parse("fp4:e2m1/clamp@0.99+comp").unwrap(),
+    );
     bench("table1_arm clamp+comp (1M)", || {
         quant::table1_arm(&xs, rows, cols, &arm).0.snr_db
     });

@@ -1,19 +1,29 @@
 //! Run configuration: what the CLI / examples feed the coordinator.
 //!
-//! Model geometry and precision policy live in the artifact manifest (the
-//! single source of truth, written at lowering time); this module only
-//! configures the *run*: which artifacts, how many steps, which corpus,
-//! where outputs go.
+//! Model geometry and the *compute* precision arm live in the artifact
+//! manifest (the single source of truth, written at lowering time — the
+//! `policy` field here names that lowered arm); this module configures
+//! the *run*: which artifacts, how many steps, which corpus, where
+//! outputs go, and the coordinator-level [`PrecisionPolicy`] (wire
+//! encoding, checkpoint encoding, schedules).
+//!
+//! The old `comm` / `ckpt_format` knobs are folded into `precision`:
+//! `-o comm=<spec>` and `-o ckpt_format=<spec>` remain as aliases that
+//! set the corresponding tensor class (`Wire` / `Checkpoint`), and
+//! `-o precision=<policy>` sets the whole policy at once.
 
 use std::path::PathBuf;
 
 use crate::data::corpus::CorpusKind;
-use crate::formats::{fp8, Format, Granularity, QuantSpec};
+use crate::formats::QuantSpec;
+use crate::policy::{ClassSpec, PrecisionPolicy, TensorClass};
 
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub artifacts_dir: PathBuf,
     pub preset: String,
+    /// Lowered artifact arm (manifest key), e.g. `fp4`, `bf16`,
+    /// `w4a8_dge_k5` — not to be confused with [`RunConfig::precision`].
     pub policy: String,
     pub steps: usize,
     pub seed: i32,
@@ -22,10 +32,11 @@ pub struct RunConfig {
     pub heldout_len: usize,
     pub eval_every: usize,
     pub out_dir: PathBuf,
-    /// Gradient-communication wire format of the dp sim (clamp-free spec).
-    pub comm: QuantSpec,
-    /// Optional compressed checkpoint encoding; `None` = raw f32 (v1).
-    pub ckpt_format: Option<QuantSpec>,
+    /// Coordinator-level precision policy: wire format of the dp sim
+    /// (`Wire` class), checkpoint encoding (`Checkpoint` class), and any
+    /// step schedule. Defaults match the pre-policy knobs exactly
+    /// (FP8 E4M3 wire, raw f32 checkpoints).
+    pub precision: PrecisionPolicy,
 }
 
 impl Default for RunConfig {
@@ -41,16 +52,18 @@ impl Default for RunConfig {
             heldout_len: 64 * 1024,
             eval_every: 50,
             out_dir: PathBuf::from("runs"),
-            comm: QuantSpec::new(Format::Fp8(fp8::E4M3), Granularity::Tensor),
-            ckpt_format: None,
+            precision: PrecisionPolicy::default(),
         }
     }
 }
 
 impl RunConfig {
     /// Apply `key=value` overrides (the CLI's `-o key=value` flags).
-    /// Spec-valued keys go through [`QuantSpec::from_name`], so unknown
-    /// precision names are hard errors instead of silent defaults.
+    /// Precision-valued keys go through the policy/spec parsers, so
+    /// unknown names are hard errors instead of silent defaults; the
+    /// class aliases re-validate the whole policy, so e.g. a clamped
+    /// `-o comm=` spec fails here with the same error every other
+    /// consumer of the `Wire` class would raise.
     pub fn set(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
         match key {
             "artifacts" => self.artifacts_dir = value.into(),
@@ -63,11 +76,32 @@ impl RunConfig {
             "heldout_len" => self.heldout_len = value.parse()?,
             "eval_every" => self.eval_every = value.parse()?,
             "out" => self.out_dir = value.into(),
-            "comm" => self.comm = QuantSpec::from_name(value)?,
-            "ckpt_format" => self.ckpt_format = Some(QuantSpec::from_name(value)?),
+            "precision" => self.precision = PrecisionPolicy::parse(value)?,
+            "comm" => self.set_class(TensorClass::Wire, value)?,
+            "ckpt_format" => self.set_class(TensorClass::Checkpoint, value)?,
             other => anyhow::bail!("unknown config key {other:?}"),
         }
         Ok(())
+    }
+
+    /// Alias path: set one tensor class of the policy and re-validate.
+    fn set_class(&mut self, class: TensorClass, value: &str) -> anyhow::Result<()> {
+        let spec = QuantSpec::from_name(value)?;
+        let next = self.precision.clone().with_class(class, ClassSpec::of(spec));
+        next.validate()?;
+        self.precision = next;
+        Ok(())
+    }
+
+    /// The dp-sim wire spec at step 0 (schedules may change it later).
+    pub fn comm(&self) -> QuantSpec {
+        self.precision.wire_spec_at(0)
+    }
+
+    /// The checkpoint encoding for a final state saved at `step`;
+    /// `None` = raw f32 (v1).
+    pub fn ckpt_format(&self, step: usize) -> Option<QuantSpec> {
+        self.precision.ckpt_spec_at(step)
     }
 }
 
@@ -89,18 +123,54 @@ mod tests {
     }
 
     #[test]
-    fn comm_override_goes_through_spec_parser() {
+    fn comm_alias_sets_the_wire_class() {
         let mut c = RunConfig::default();
-        assert_eq!(c.comm, QuantSpec::parse("fp8:e4m3").unwrap());
+        // default identical to the pre-policy RunConfig.comm default
+        assert_eq!(c.comm(), QuantSpec::parse("fp8:e4m3").unwrap());
         c.set("comm", "fp4:e2m1/row").unwrap();
-        assert_eq!(c.comm, QuantSpec::parse("fp4:e2m1/row").unwrap());
+        assert_eq!(c.comm(), QuantSpec::parse("fp4:e2m1/row").unwrap());
+        assert_eq!(
+            c.precision.class(TensorClass::Wire).spec,
+            QuantSpec::parse("fp4:e2m1/row").unwrap()
+        );
         c.set("comm", "f32").unwrap();
-        assert!(c.comm.is_raw());
+        assert!(c.comm().is_raw());
         // unknown values are errors, not silent fallbacks
         assert!(c.set("comm", "fp9").is_err());
         assert!(c.set("comm", "fp8|f32").is_err());
+        // the Wire clamp invariant fires at set time, same error text as
+        // any other consumer of the class
+        let err = c.set("comm", "fp4:e2m1/clamp@0.99").unwrap_err().to_string();
+        assert!(err.contains("not transmitted"), "{err}");
+    }
+
+    #[test]
+    fn ckpt_format_alias_sets_the_checkpoint_class() {
+        let mut c = RunConfig::default();
+        // default identical to the pre-policy ckpt_format: None
+        assert_eq!(c.ckpt_format(0), None);
         c.set("ckpt_format", "fp8:e4m3/row").unwrap();
-        assert!(c.ckpt_format.is_some());
+        assert_eq!(c.ckpt_format(0), QuantSpec::parse("fp8:e4m3/row").ok());
         assert!(c.set("ckpt_format", "int3").is_err());
+        assert!(c.set("ckpt_format", "fp4:e2m1/clamp@0.99").is_err());
+        // f32 returns to raw v1 checkpoints
+        c.set("ckpt_format", "f32").unwrap();
+        assert_eq!(c.ckpt_format(0), None);
+    }
+
+    #[test]
+    fn precision_key_sets_the_whole_policy() {
+        let mut c = RunConfig::default();
+        c.set("precision", "wire=fp4:e2m1/row;0..10:wire=fp8:e4m3").unwrap();
+        assert_eq!(c.comm(), QuantSpec::parse("fp8:e4m3").unwrap()); // phase at 0
+        assert_eq!(
+            c.precision.wire_spec_at(10),
+            QuantSpec::parse("fp4:e2m1/row").unwrap()
+        );
+        assert!(c.set("precision", "wire=fp4:e2m1/clamp@0.99").is_err());
+        assert!(c.set("precision", "bogus=f32").is_err());
+        // aliases compose with a full policy: comm rewrites only Wire
+        c.set("comm", "f32").unwrap();
+        assert!(c.precision.wire_spec_at(10).is_raw());
     }
 }

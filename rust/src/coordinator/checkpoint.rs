@@ -42,6 +42,27 @@ pub struct Checkpoint {
     pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
 }
 
+/// Save per a policy's `Checkpoint`-class spec: `None` (or a raw f32
+/// spec upstream, via [`PrecisionPolicy::ckpt_spec_at`]) writes a raw v1
+/// checkpoint, anything else a packed v2. This is the one entry point the
+/// CLI and drivers use, so the encoding is data (a policy), not a code
+/// path per call site.
+///
+/// [`PrecisionPolicy::ckpt_spec_at`]: crate::policy::PrecisionPolicy::ckpt_spec_at
+pub fn save_with_spec(
+    path: impl AsRef<Path>,
+    step: u64,
+    ios: &[IoDesc],
+    literals: &[Literal],
+    spec: Option<&QuantSpec>,
+) -> Result<()> {
+    match spec {
+        None => save(path, step, ios, literals),
+        Some(s) if s.is_raw() => save(path, step, ios, literals),
+        Some(s) => save_packed(path, step, ios, literals, s),
+    }
+}
+
 pub fn save(
     path: impl AsRef<Path>,
     step: u64,
@@ -322,6 +343,26 @@ mod tests {
         let spec = QuantSpec::parse("fp4:e2m1/clamp@0.99").unwrap();
         let dir = std::env::temp_dir().join("fp4train_ckpt_test_clamp");
         assert!(save_packed(dir.join("t.ckpt"), 0, &ios, &lits, &spec).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_with_spec_dispatches_on_rawness() {
+        use crate::policy::PrecisionPolicy;
+        let dir = std::env::temp_dir().join("fp4train_ckpt_test_spec");
+        let ios = vec![io("a", vec![2, 2])];
+        let xs = [1.5f32, -0.25, 3.0, 0.125];
+        let lits = vec![Engine::f32_literal(&ios[0], &xs).unwrap()];
+        // default policy: raw v1 — exact round trip
+        let p1 = dir.join("raw.ckpt");
+        let policy = PrecisionPolicy::default();
+        save_with_spec(&p1, 1, &ios, &lits, policy.ckpt_spec_at(1).as_ref()).unwrap();
+        assert_eq!(load(&p1).unwrap().tensors[0].2, xs);
+        // packed class spec: v2, lossy by exactly the codec qdq
+        let spec = QuantSpec::parse("fp8:e4m3/row").unwrap();
+        let p2 = dir.join("packed.ckpt");
+        save_with_spec(&p2, 2, &ios, &lits, Some(&spec)).unwrap();
+        assert_eq!(load(&p2).unwrap().tensors[0].2, spec.qdq(&xs, 2, 2));
         std::fs::remove_dir_all(&dir).ok();
     }
 

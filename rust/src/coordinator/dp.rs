@@ -10,15 +10,27 @@
 //! of gradient compression (including its accumulated rounding) is
 //! measured, not modeled, and wire bytes are counted exactly.
 //!
-//! Any clamp-free spec works on the wire: `fp8:e4m3` is the paper's
-//! FP8-LM scheme, `fp4:e2m1/row` halves the bytes again with per-row
-//! scales, and `f32` is the exact baseline.
+//! The wire spec is the `Wire` class of a [`PrecisionPolicy`], resolved
+//! *per step* from the policy's schedule — an FP8→FP4 wire switch mid-run
+//! is one `-o precision=...` flag (e.g.
+//! `wire=fp4:e2m1/row;0..100:wire=fp8:e4m3`), not code. [`CommStats`]
+//! accounts bytes per schedule phase, so the summary shows exactly what
+//! each precision regime cost on the wire. Any clamp-free spec works:
+//! `fp8:e4m3` is the paper's FP8-LM scheme, `fp4:e2m1/row` halves the
+//! bytes again, `f32` is the exact baseline (clamped wire specs are
+//! rejected by [`PrecisionPolicy::validate`] — the ΔY residual is not
+//! transmitted).
 //!
 //! §Perf: the comm path is zero-alloc per step — each gradient owns a
 //! persistent [`PackedTensor`] wire buffer (`pack_into` reuses its
-//! capacity) and a persistent accumulator that the payload decodes
-//! straight into (`unpack_accumulate`, weighted by a precomputed
-//! `1/workers` reciprocal), so the decoded tensor is never materialized.
+//! capacity and re-stamps the format on a wire switch) and a persistent
+//! accumulator that the payload decodes straight into
+//! (`unpack_accumulate`, weighted by a precomputed `1/workers`
+//! reciprocal), so the decoded tensor is never materialized. Policy
+//! resolution is one schedule scan per step
+//! ([`PrecisionPolicy::wire_resolution_at`]), and the per-phase stats are
+//! keyed by phase index — labels are materialized once, on first entry
+//! into a phase.
 
 use std::sync::Arc;
 
@@ -28,13 +40,56 @@ use xla::Literal;
 use crate::data::corpus::Corpus;
 use crate::data::loader::{LoaderConfig, Sampler};
 use crate::formats::{shape2d, PackedTensor, QuantSpec};
+use crate::policy::PrecisionPolicy;
 use crate::runtime::{ConfigEntry, Engine, StepSpec};
 
-#[derive(Clone, Copy, Debug, Default)]
+/// Wire accounting for one schedule phase (one precision regime).
+#[derive(Clone, Debug)]
+pub struct PhaseStats {
+    /// Index into the policy's `schedule.phases`; `None` = base policy.
+    pub phase: Option<usize>,
+    /// Schedule phase label: `"base"` or the range string (`"0..100"`).
+    pub label: String,
+    /// Canonical wire spec the phase ran at.
+    pub wire: String,
+    pub steps: u64,
+    pub bytes_sent: u64,
+    pub bytes_f32_equiv: u64,
+}
+
+#[derive(Clone, Debug, Default)]
 pub struct CommStats {
     pub bytes_sent: u64,
     pub bytes_f32_equiv: u64,
     pub reduces: u64,
+    /// Per-schedule-phase totals, in first-use order (one entry per
+    /// distinct precision regime the run passed through).
+    pub phases: Vec<PhaseStats>,
+}
+
+impl CommStats {
+    /// Keyed by phase index (an integer compare per step); the display
+    /// label and wire string are materialized only when a phase is first
+    /// entered, keeping the steady-state path allocation-free.
+    fn phase_entry(
+        &mut self,
+        phase: Option<usize>,
+        label: impl FnOnce() -> String,
+        wire: &QuantSpec,
+    ) -> &mut PhaseStats {
+        if let Some(i) = self.phases.iter().position(|p| p.phase == phase) {
+            return &mut self.phases[i];
+        }
+        self.phases.push(PhaseStats {
+            phase,
+            label: label(),
+            wire: wire.to_string(),
+            steps: 0,
+            bytes_sent: 0,
+            bytes_f32_equiv: 0,
+        });
+        self.phases.last_mut().unwrap()
+    }
 }
 
 pub struct DpSim {
@@ -45,7 +100,8 @@ pub struct DpSim {
     state: Vec<Literal>, // 3n
     samplers: Vec<Sampler>,
     pub step: usize,
-    pub comm: QuantSpec,
+    /// The full precision policy; the `Wire` class drives the comm path.
+    pub precision: PrecisionPolicy,
     pub stats: CommStats,
     pub losses: Vec<f32>,
     /// Persistent all-reduce accumulators, one per gradient tensor
@@ -54,11 +110,15 @@ pub struct DpSim {
     /// Persistent wire payloads, one per gradient tensor: `pack_into`
     /// reuses their code/scale buffers every step (§Perf: the old path
     /// allocated pack + unpack + accumulate buffers per gradient per
-    /// worker per step).
+    /// worker per step). `pack_into` re-stamps format/granularity, so a
+    /// scheduled wire switch reuses the same buffers.
     wire: Vec<PackedTensor>,
 }
 
 impl DpSim {
+    /// Build a dp sim whose wire encoding follows `precision`'s `Wire`
+    /// class (per-step, schedule-resolved). The policy is re-validated so
+    /// hand-built policies fail with the same errors as parsed ones.
     pub fn new(
         engine: Arc<Engine>,
         preset: &str,
@@ -66,26 +126,21 @@ impl DpSim {
         corpus: &Corpus,
         workers: usize,
         seed: i32,
-        comm: QuantSpec,
+        precision: PrecisionPolicy,
     ) -> Result<Self> {
-        anyhow::ensure!(
-            comm.clamp.is_none(),
-            "comm spec {comm} carries a clamp: the ΔY residual is not transmitted"
-        );
-        let entry = engine.manifest.config(preset, policy)?.clone();
+        precision.validate()?;
+        let (entry, state, n) = super::bootstrap_state(&engine, preset, policy, seed)?;
         let grad_spec = entry.step("grad")?.clone();
         let apply_spec = entry.step("apply")?.clone();
-        let init = entry.step("init")?;
-        let state = engine.run(init, &[Literal::scalar(seed)])?;
-        let n = state.len() / 3;
         let acc: Vec<Vec<f32>> = grad_spec
             .outputs
             .iter()
             .take(n)
             .map(|io| vec![0.0f32; io.elements()])
             .collect();
+        let wire0 = precision.wire_spec_at(0);
         let wire = (0..n)
-            .map(|_| PackedTensor::empty(comm.format, comm.granularity))
+            .map(|_| PackedTensor::empty(wire0.format, wire0.granularity))
             .collect();
         let samplers = (0..workers)
             .map(|w| {
@@ -110,7 +165,7 @@ impl DpSim {
             state,
             samplers,
             step: 0,
-            comm,
+            precision,
             stats: CommStats::default(),
             losses: Vec::new(),
             acc,
@@ -126,12 +181,20 @@ impl DpSim {
         &self.state[..self.n_params()]
     }
 
-    /// One data-parallel step: per-worker grads -> FP8 all-reduce -> Adam.
-    /// Returns the mean worker loss.
+    /// The wire spec the *next* `dp_step` will encode with.
+    pub fn wire_spec(&self) -> QuantSpec {
+        self.precision.wire_spec_at(self.step)
+    }
+
+    /// One data-parallel step: per-worker grads -> quantized all-reduce ->
+    /// Adam. The wire spec is resolved from the policy schedule at the
+    /// current step. Returns the mean worker loss.
     pub fn dp_step(&mut self) -> Result<f32> {
         let n = self.n_params();
         let workers = self.samplers.len();
         let tok_io = self.grad_spec.inputs.last().unwrap().clone();
+        // one schedule scan resolves both the wire spec and the phase key
+        let (phase_id, comm) = self.precision.wire_resolution_at(self.step);
         // 1/workers hoisted out of the accumulate loop (one multiply per
         // element instead of a divide)
         let inv_workers = 1.0 / workers as f32;
@@ -141,6 +204,8 @@ impl DpSim {
             a.fill(0.0);
         }
         let mut loss_sum = 0.0f64;
+        let mut step_bytes = 0u64;
+        let mut step_equiv = 0u64;
 
         for w in 0..workers {
             let batch = self.samplers[w].next_batch();
@@ -154,8 +219,8 @@ impl DpSim {
             for (gi, lit) in outs.iter().enumerate() {
                 let g = Engine::to_f32_vec(lit)?;
                 elems += g.len() as u64;
-                if self.comm.is_raw() {
-                    self.stats.bytes_sent += 4 * g.len() as u64;
+                if comm.is_raw() {
+                    step_bytes += 4 * g.len() as u64;
                     for (a, &v) in self.acc[gi].iter_mut().zip(&g) {
                         *a += v * inv_workers;
                     }
@@ -171,18 +236,32 @@ impl DpSim {
                         &g,
                         rows,
                         cols,
-                        self.comm.format,
-                        self.comm.granularity,
+                        comm.format,
+                        comm.granularity,
                         wire,
                     );
-                    self.stats.bytes_sent += wire.wire_bytes();
+                    step_bytes += wire.wire_bytes();
                     wire.unpack_accumulate(&mut self.acc[gi], inv_workers);
                 }
             }
             // byte accounting hoisted out of the per-tensor loop
-            self.stats.bytes_f32_equiv += 4 * elems;
+            step_equiv += 4 * elems;
             self.stats.reduces += 1;
         }
+        self.stats.bytes_sent += step_bytes;
+        self.stats.bytes_f32_equiv += step_equiv;
+        let precision = &self.precision;
+        let phase = self.stats.phase_entry(
+            phase_id,
+            || match phase_id {
+                None => "base".to_string(),
+                Some(i) => precision.schedule.phases[i].range.to_string(),
+            },
+            &comm,
+        );
+        phase.steps += 1;
+        phase.bytes_sent += step_bytes;
+        phase.bytes_f32_equiv += step_equiv;
 
         // apply: state(3n) + grads(n) + step
         let grad_lits: Vec<Literal> = self
@@ -219,13 +298,23 @@ impl DpSim {
         &self.state
     }
 
+    /// Self-describing run label: worker count, manifest arm, and the
+    /// wire spec in effect at the current step (plus phase count when a
+    /// schedule is active).
     pub fn context_label(&self) -> String {
-        format!(
-            "dp{}x {} comm={}",
+        let mut s = format!(
+            "dp{}x {} wire={}",
             self.samplers.len(),
             self.entry.key,
-            self.comm
-        )
+            self.wire_spec()
+        );
+        if !self.precision.schedule.is_empty() {
+            s.push_str(&format!(
+                " ({} scheduled phases)",
+                self.precision.schedule.phases.len()
+            ));
+        }
+        s
     }
 }
 

@@ -5,14 +5,37 @@
 //!   eval, CSV metrics and checkpointing.
 //! * [`dp`] — simulated data-parallel training over the `grad` + `apply`
 //!   artifacts: N workers with disjoint shards, per-worker gradients
-//!   byte-encoded to real FP8 (E4M3 + per-tensor scale) before the
-//!   all-reduce (the paper adopts FP8-LM's FP8 gradient communication,
-//!   §4.1), with measured wire bytes.
-//! * [`checkpoint`] — self-contained binary tensor snapshots.
+//!   byte-encoded on the wire per the policy's `Wire` class (resolved per
+//!   step from the schedule, so warmups and mid-run precision switches
+//!   are data, not code), with measured per-phase wire bytes.
+//! * [`checkpoint`] — self-contained binary tensor snapshots, raw (v1) or
+//!   packed (v2) per the policy's `Checkpoint` class.
 
 pub mod checkpoint;
 pub mod dp;
 pub mod trainer;
 
+use anyhow::Result;
+use xla::Literal;
+
+use crate::runtime::{ConfigEntry, Engine};
+
 pub use dp::DpSim;
 pub use trainer::{TrainRecord, Trainer};
+
+/// Shared optimizer-state bootstrap for [`Trainer`] and [`DpSim`]: resolve
+/// the (preset, policy) manifest entry, run its `init` artifact with the
+/// seed, and split the returned state as 3n tensors (params, m, v).
+/// Returns `(entry, state, n_params)`.
+pub fn bootstrap_state(
+    engine: &Engine,
+    preset: &str,
+    policy: &str,
+    seed: i32,
+) -> Result<(ConfigEntry, Vec<Literal>, usize)> {
+    let entry = engine.manifest.config(preset, policy)?.clone();
+    let init = entry.step("init")?;
+    let state = engine.run(init, &[Literal::scalar(seed)])?;
+    let n = state.len() / 3;
+    Ok((entry, state, n))
+}

@@ -35,11 +35,10 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    /// Initialize optimizer state from the `init` artifact with a seed.
+    /// Initialize optimizer state from the `init` artifact with a seed
+    /// (via the shared [`super::bootstrap_state`] helper).
     pub fn new(engine: Arc<Engine>, preset: &str, policy: &str, seed: i32) -> Result<Self> {
-        let entry = engine.manifest.config(preset, policy)?.clone();
-        let init = entry.step("init")?;
-        let state = engine.run(init, &[Literal::scalar(seed)])?;
+        let (entry, state, _n) = super::bootstrap_state(&engine, preset, policy, seed)?;
         Ok(Self {
             engine,
             entry,

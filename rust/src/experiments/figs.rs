@@ -2,8 +2,10 @@
 
 use anyhow::Result;
 
+use super::tabs::resolved_policy_string;
 use super::{tail_loss, Ctx};
-use crate::formats::{Fp4Kind, QuantSpec};
+use crate::formats::Fp4Kind;
+use crate::policy::{arms, TensorClass};
 use crate::quant::dge;
 use crate::report::{f4, Table};
 use crate::util::Csv;
@@ -32,11 +34,11 @@ pub fn fig1(ctx: &mut Ctx, quick: bool) -> Result<()> {
         arms.push((policy.to_string(), recs));
     }
     let path = ctx.write_curves("fig1", &arms)?;
-    let mut t = Table::new(&["arm", "final loss (tail-16 mean)", "gap vs bf16"]);
+    let mut t = Table::new(&["arm", "final loss (tail-16 mean)", "gap vs bf16", "policy"]);
     let base = tail_loss(&arms[0].1, 16);
     for (name, recs) in &arms {
         let fl = tail_loss(recs, 16);
-        t.row(&[name.clone(), f4(fl), f4(fl - base)]);
+        t.row(&[name.clone(), f4(fl), f4(fl - base), resolved_policy_string(name)]);
     }
     println!("{}", t.render());
     println!("paper: direct FP4 shows a large persistent gap; ours ~overlaps bf16");
@@ -73,13 +75,16 @@ pub fn fig3(ctx: &mut Ctx) -> Result<()> {
     Ok(())
 }
 
-/// Fig. 4: quantization of a real activation tensor with/without clamping.
+/// Fig. 4: quantization of a real activation tensor with/without clamping
+/// (the two named [`arms::fig4_arms`] policies, `Activation` class).
 pub fn fig4(ctx: &mut Ctx, quick: bool) -> Result<()> {
     let tensors = super::tabs::probe_activations(ctx, quick)?;
     let (name, rows, cols, x) = &tensors[0]; // first transformer layer output
 
-    let direct = QuantSpec::parse("fp4:e2m1/row")?.qdq(x, *rows, *cols);
-    let clamp_q = QuantSpec::parse("fp4:e2m1/row/clamp@0.999")?.qdq(x, *rows, *cols);
+    let arms = arms::fig4_arms();
+    let act = |i: usize| arms[i].policy.class(TensorClass::Activation).spec;
+    let direct = act(0).qdq(x, *rows, *cols);
+    let clamp_q = act(1).qdq(x, *rows, *cols);
 
     let mut csv = Csv::new(&["bin_center", "original", "direct_fp4", "clamped_fp4"]);
     let h0 = crate::stats::Histogram::auto(x, 96);
@@ -153,7 +158,7 @@ fn ablation(
     }
     let path = ctx.write_curves(id, &arms)?;
     let base = tail_loss(&arms[0].1, 16);
-    let mut t = Table::new(&["arm", "final loss", "gap vs first", "diverged"]);
+    let mut t = Table::new(&["arm", "final loss", "gap vs first", "diverged", "policy"]);
     for (name, recs) in &arms {
         let fl = tail_loss(recs, 16);
         let diverged = recs.iter().any(|r| !r.loss.is_finite())
@@ -163,6 +168,7 @@ fn ablation(
             f4(fl),
             f4(fl - base),
             if diverged { "YES".into() } else { "no".into() },
+            resolved_policy_string(name),
         ]);
     }
     println!("{}", t.render());

@@ -5,12 +5,21 @@ use anyhow::Result;
 use super::Ctx;
 use crate::data::corpus::CorpusKind;
 use crate::eval;
-use crate::formats::{Fp4Kind, QuantSpec};
+use crate::formats::Fp4Kind;
+use crate::policy::{arms, TensorClass};
 use crate::quant;
 use crate::report::{f2, f4, pct, Table};
 use crate::runtime::Engine;
 use crate::stats;
 use crate::util::Csv;
+
+/// Canonical policy string describing a lowered manifest arm, `"-"` when
+/// the arm has no policy-level description (see [`arms::for_manifest_arm`]).
+pub(crate) fn resolved_policy_string(manifest_arm: &str) -> String {
+    arms::for_manifest_arm(manifest_arm)
+        .map(|p| p.to_string())
+        .unwrap_or_else(|| "-".to_string())
+}
 
 /// Run the probe artifact on a trained micro/fp4 arm: returns the named
 /// pre-quantization activation tensors (flattened to tokens × channels).
@@ -48,23 +57,26 @@ pub fn probe_activations(
 }
 
 /// Table 1: SIM/MSE/SNR of quantized activations under clamp/comp arms.
-/// Every arm is a [`QuantSpec`] string — tensor-wise FP4, matching the
-/// paper's §3.2 isolation of the clamp from the §4.1 vector-wise scaling.
+/// The arms are the named [`arms::table1_arms`] precision policies
+/// (tensor-wise FP4 `Activation`-class sweeps, matching the paper's §3.2
+/// isolation of the clamp from the §4.1 vector-wise scaling); the CSV
+/// records each arm's resolved policy string, so the output is
+/// self-describing.
 pub fn tab1(ctx: &mut Ctx, quick: bool) -> Result<()> {
     let tensors = probe_activations(ctx, quick)?;
-    let arms: [(&str, &str); 5] = [
-        ("fp4:e2m1", "-"),
-        ("fp4:e2m1/clamp@0.999", "99.9"),
-        ("fp4:e2m1/clamp@0.999+comp", "99.9"),
-        ("fp4:e2m1/clamp@0.99+comp", "99"),
-        ("fp4:e2m1/clamp@0.97+comp", "97"),
-    ];
-    let mut t = Table::new(&["CLAMP", "COMP", "QUANTILE", "SIM", "MSE", "SNR(dB)", "ΔY nnz"]);
-    let mut csv = Csv::new(&["clamp", "comp", "quantile", "sim", "mse", "snr_db", "sparsity"]);
-    for (spec_str, qlabel) in arms {
-        let spec = QuantSpec::parse(spec_str)?;
+    let mut t =
+        Table::new(&["ARM", "CLAMP", "COMP", "QUANTILE", "SIM", "MSE", "SNR(dB)", "ΔY nnz"]);
+    let mut csv = Csv::new(&[
+        "arm", "clamp", "comp", "quantile", "sim", "mse", "snr_db", "sparsity", "policy",
+    ]);
+    for arm in arms::table1_arms() {
+        let spec = arm.policy.class(TensorClass::Activation).spec;
         let clamped = spec.clamp.is_some();
         let comp = spec.clamp.map(|c| c.compensate).unwrap_or(false);
+        let qlabel = match spec.clamp {
+            None => "-".to_string(),
+            Some(c) => format!("{}", (c.alpha * 1000.0).round() / 10.0),
+        };
         // average across all probe tensors (paper: across all activation
         // tensors of the 1.3B model)
         let mut sim = 0.0;
@@ -72,7 +84,7 @@ pub fn tab1(ctx: &mut Ctx, quick: bool) -> Result<()> {
         let mut snr = 0.0;
         let mut sp = 0.0;
         for (_, rows, cols, x) in &tensors {
-            let (f, s) = quant::table1_arm(x, *rows, *cols, &spec);
+            let (f, s) = quant::table1_arm(x, *rows, *cols, &arm.policy);
             sim += f.sim;
             mse += f.mse;
             snr += f.snr_db;
@@ -81,22 +93,25 @@ pub fn tab1(ctx: &mut Ctx, quick: bool) -> Result<()> {
         let n = tensors.len() as f64;
         let (sim, mse, snr, sp) = (sim / n, mse / n, snr / n, sp / n);
         t.row(&[
+            arm.name.into(),
             if clamped { "Y" } else { "x" }.into(),
             if comp { "Y" } else { "x" }.into(),
-            qlabel.into(),
+            qlabel.clone(),
             pct(sim),
             f4(mse),
             f2(snr),
             pct(sp),
         ]);
         csv.row(&[
+            arm.name.to_string(),
             format!("{clamped}"),
             format!("{comp}"),
-            qlabel.to_string(),
+            qlabel,
             format!("{sim}"),
             format!("{mse}"),
             format!("{snr}"),
             format!("{sp}"),
+            arm.policy.to_string(),
         ]);
     }
     csv.write(ctx.results.join("tab1").join("fidelity.csv"))?;
@@ -118,7 +133,12 @@ pub fn tab2(ctx: &mut Ctx, quick: bool) -> Result<()> {
     header.extend(kinds.iter().map(|k| format!("zs_{}", k.name())));
     let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new(&href);
-    let mut csv = Csv::new(&href);
+    // CSV rows additionally record the resolved precision policy of each
+    // manifest arm, so the output is self-describing
+    let mut cheader = header.clone();
+    cheader.push("policy".to_string());
+    let chref: Vec<&str> = cheader.iter().map(|s| s.as_str()).collect();
+    let mut csv = Csv::new(&chref);
 
     for preset in sizes {
         let steps = if quick { 48 } else if preset == "med" { 300 } else { 400 };
@@ -141,6 +161,7 @@ pub fn tab2(ctx: &mut Ctx, quick: bool) -> Result<()> {
             row.push(f2(avg * 100.0));
             row.extend(accs.iter().map(|a| f2(a * 100.0)));
             t.row(&row);
+            row.push(resolved_policy_string(policy));
             csv.row(&row);
         }
     }
@@ -161,7 +182,10 @@ pub fn tab3(ctx: &mut Ctx, quick: bool) -> Result<()> {
     header.extend(kinds.iter().map(|k| format!("ppl_{}", k.name())));
     let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new(&href);
-    let mut csv = Csv::new(&href);
+    let mut cheader = header.clone();
+    cheader.push("policy".to_string());
+    let chref: Vec<&str> = cheader.iter().map(|s| s.as_str()).collect();
+    let mut csv = Csv::new(&chref);
 
     for preset in sizes {
         let steps = if quick { 48 } else if preset == "med" { 300 } else { 400 };
@@ -182,6 +206,7 @@ pub fn tab3(ctx: &mut Ctx, quick: bool) -> Result<()> {
             let mut row = vec![preset.to_string(), policy.to_string(), f2(avg)];
             row.extend(ppls.iter().map(|&p| f2(p)));
             t.row(&row);
+            row.push(resolved_policy_string(policy));
             csv.row(&row);
         }
     }

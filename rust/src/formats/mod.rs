@@ -24,6 +24,12 @@
 //! `unpack_fp4`) are thin delegates into that API — all rounding logic
 //! lives in one place.
 //!
+//! One level up, [`crate::policy`] maps *tensor classes* (weights,
+//! activations, gradients, wire, checkpoints, master state) to
+//! `QuantSpec`s plus estimator params, with step-scheduled overrides —
+//! that is where run-level precision decisions live; this module stays
+//! the per-tensor substrate.
+//!
 //! # Kernel layer
 //!
 //! The tensor-level hot loops live in [`kernels`]: single-pass,

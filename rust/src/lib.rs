@@ -20,9 +20,20 @@
 //!   optional clamp, parsed from strings like `fp4:e2m1/row/clamp@0.999+comp`)
 //!   for simulation-grade qdq; `PackedTensor` for storage-grade payloads
 //!   with per-tensor/row/col scales (Eq. 1, §4.1, Appendix A).
+//! - [`policy`]   — the precision-policy layer: [`policy::TensorClass`]
+//!   (`Weight | Activation | Gradient | Wire | Checkpoint | Master`),
+//!   [`policy::PrecisionPolicy`] mapping each class to a `QuantSpec` plus
+//!   estimator params (DGE `k`/clip, OCC quantile/compensation), and a
+//!   step-ranged [`policy::schedule::Schedule`] of overrides (warmup,
+//!   fallback, mid-run wire switches). Parses from / renders to a
+//!   canonical string (e.g.
+//!   `w=fp4:e2m1/col+dge@k5,a=fp4:e2m1/row/clamp@0.999+comp,wire=fp8:e4m3;0..100:f32`)
+//!   exactly like `QuantSpec`; every precision knob of the coordinator
+//!   (`-o precision=`, with `-o comm=` / `-o ckpt_format=` as per-class
+//!   aliases) resolves through it.
 //! - [`quant`]    — DGE surrogate math (Eqs. 7-8), OCC clamping (Eq. 9),
-//!   SIM/MSE/SNR fidelity metrics (Table 1); `table1_arm` evaluates any
-//!   `QuantSpec` against a probe tensor.
+//!   SIM/MSE/SNR fidelity metrics (Table 1); `table1_arm` evaluates a
+//!   policy's `Activation` class against a probe tensor.
 //! - [`data`]     — seeded synthetic corpora, byte tokenizer, sharding,
 //!   background prefetching batch loader.
 //! - [`runtime`]  — manifest parsing, artifact loading/compilation cache,
@@ -45,6 +56,7 @@ pub mod data;
 pub mod eval;
 pub mod experiments;
 pub mod formats;
+pub mod policy;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -2,15 +2,21 @@
 //!
 //! ```text
 //! fp4train train  [-o preset=.. -o policy=.. -o steps=.. -o corpus=..
-//!                  -o ckpt_format=fp8:e4m3]
+//!                  -o precision=<policy> | -o ckpt_format=<spec>]
 //! fp4train eval   [-o preset=.. -o policy=..]      held-out ppl + zero-shot
-//! fp4train dp     [-o workers=4 -o comm=<spec>]    data-parallel sim
+//! fp4train dp     [-o workers=4 -o precision=<policy> | -o comm=<spec>]
 //! fp4train repro  <fig1|fig3|fig4|fig5|fig6a..d|tab1..tab5|fig7|dists|perf|all>
 //! fp4train formats                                  print FP4 tables
 //! fp4train info                                     manifest inventory
 //! ```
 //!
-//! `<spec>` is a quantization spec string,
+//! `<policy>` is a precision-policy string mapping tensor classes
+//! (`w|a|g|wire|ckpt|master`) to quantization specs, with an optional
+//! step schedule — e.g.
+//! `wire=fp4:e2m1/row;0..100:wire=fp8:e4m3` runs an FP8 wire warmup and
+//! switches to FP4 at step 100 (see `policy` module docs for the
+//! grammar). `-o comm=<spec>` / `-o ckpt_format=<spec>` are aliases that
+//! set the `wire` / `ckpt` class; `<spec>` is a quantization spec string,
 //! `<format>[/<tensor|row|col>][/clamp@<alpha>[+comp]]` — e.g. `fp8:e4m3`,
 //! `fp4:e2m1/row`, `f32` (see `formats::codec`).
 
@@ -49,12 +55,17 @@ commands:
            -o ckpt_format=<spec> for compressed checkpoints
   eval     held-out perplexity + zero-shot MC for a trained arm
   dp       simulated data-parallel training with quantized all-reduce
-           -o workers=4 -o comm=<spec> -o steps=..
+           -o workers=4 -o precision=<policy> (or -o comm=<spec>) -o steps=..
   repro    regenerate a paper table/figure: fig1 fig3 fig4 fig5 fig6a-d
            tab1 tab2 tab3 tab4 tab5 fig7 dists perf all   [--quick]
   formats  print the FP4 value tables (Appendix A, Table 4)
   info     list artifacts in the manifest
 
+precision policy: -o precision=<class>=<spec>[+dge@k<K>[c<CLIP>]],...[;<range>:<override>]
+  classes  w a g wire ckpt master; ranges LO..HI, LO.. or warmup=N
+  e.g. -o precision='wire=fp4:e2m1/row;0..100:wire=fp8:e4m3'
+       (FP8 wire warmup, one-flag mid-run switch to FP4)
+  aliases: -o comm=<spec> sets wire, -o ckpt_format=<spec> sets ckpt
 precision specs: <format>[/<tensor|row|col>][/clamp@<alpha>[+comp]]
   formats fp4:e2m1 fp4:e1m2 fp4:e3m0 fp8:e4m3 fp8:e5m2 f16 f32
   e.g. -o comm=fp8:e4m3 (FP8-LM wire), -o comm=fp4:e2m1/row (half again)
@@ -111,24 +122,20 @@ fn cmd_train(args: &Args) -> Result<()> {
     trainer.write_history_csv(&out)?;
     let ckpt = cfg.out_dir.join(format!("{}_{}.ckpt", cfg.preset, cfg.policy));
     let init_spec = trainer.entry.step("init")?.clone();
-    match &cfg.ckpt_format {
-        Some(spec) => {
-            fp4train::coordinator::checkpoint::save_packed(
-                &ckpt,
-                trainer.step as u64,
-                &init_spec.outputs,
-                trainer.state(),
-                spec,
-            )?;
-            println!("checkpoint packed as {spec}");
-        }
-        None => fp4train::coordinator::checkpoint::save(
-            &ckpt,
-            trainer.step as u64,
-            &init_spec.outputs,
-            trainer.state(),
-        )?,
+    // Checkpoint-class spec of the precision policy, resolved at the
+    // final step: raw v1 when f32, packed v2 otherwise.
+    let ckpt_spec = cfg.ckpt_format(trainer.step);
+    fp4train::coordinator::checkpoint::save_with_spec(
+        &ckpt,
+        trainer.step as u64,
+        &init_spec.outputs,
+        trainer.state(),
+        ckpt_spec.as_ref(),
+    )?;
+    if let Some(spec) = &ckpt_spec {
+        println!("checkpoint packed as {spec}");
     }
+    println!("run precision policy: {}", cfg.precision);
     println!("history -> {out:?}\ncheckpoint -> {ckpt:?}");
     Ok(())
 }
@@ -172,20 +179,42 @@ fn cmd_dp(args: &Args) -> Result<()> {
     let workers: usize = args.get("workers").unwrap_or("4").parse()?;
     let engine = std::sync::Arc::new(Engine::load(&cfg.artifacts_dir)?);
     let corpus = Corpus::generate(cfg.corpus, 1234, cfg.corpus_len, cfg.heldout_len);
-    let mut sim = DpSim::new(engine.clone(), &cfg.preset, &cfg.policy, &corpus, workers, cfg.seed, cfg.comm)?;
+    let mut sim = DpSim::new(
+        engine.clone(),
+        &cfg.preset,
+        &cfg.policy,
+        &corpus,
+        workers,
+        cfg.seed,
+        cfg.precision.clone(),
+    )?;
     println!("dp-sim: {}", sim.context_label());
+    println!("precision policy: {}", sim.precision);
     for step in 0..cfg.steps {
+        let wire = sim.wire_spec();
         let loss = sim.dp_step()?;
         if step % 10 == 0 || step + 1 == cfg.steps {
             println!(
-                "step {:>4}  mean worker loss {:.4}  wire {:.1} MB (vs {:.1} MB f32, {:.2}x)",
+                "step {:>4}  mean worker loss {:.4}  wire {:.1} MB (vs {:.1} MB f32, {:.2}x) [{wire}]",
                 step,
                 loss,
                 sim.stats.bytes_sent as f64 / 1e6,
                 sim.stats.bytes_f32_equiv as f64 / 1e6,
-                sim.compression()
+                sim.compression(),
             );
         }
+    }
+    // per-phase wire accounting: one line per precision regime the
+    // schedule passed through
+    for p in &sim.stats.phases {
+        println!(
+            "phase {:>8} wire={}: {} steps, {:.2} MB sent ({:.2}x vs f32)",
+            p.label,
+            p.wire,
+            p.steps,
+            p.bytes_sent as f64 / 1e6,
+            p.bytes_f32_equiv as f64 / p.bytes_sent.max(1) as f64,
+        );
     }
     Ok(())
 }

@@ -1,0 +1,162 @@
+//! Named [`PrecisionPolicy`] arms for the experiment drivers.
+//!
+//! The table/figure sweeps used to hand-build `QuantSpec` lists at each
+//! call site; they now iterate over named policy arms from this module,
+//! so an arm is one named datum (its canonical policy string lands in the
+//! CSV outputs, making runs self-describing) instead of scattered code.
+
+use super::{ClassSpec, DgeParams, PrecisionPolicy, TensorClass};
+use crate::formats::QuantSpec;
+
+/// One named experiment arm.
+#[derive(Clone, Debug)]
+pub struct Arm {
+    pub name: &'static str,
+    pub policy: PrecisionPolicy,
+}
+
+fn activation_arm(name: &'static str, spec: &str) -> Arm {
+    Arm {
+        name,
+        policy: PrecisionPolicy::default()
+            .with_class_spec(TensorClass::Activation, QuantSpec::parse(spec).unwrap()),
+    }
+}
+
+/// The five Table-1 arms: tensor-wise FP4 activation quantization with the
+/// clamp studied in isolation (§3.2 — with per-token scales the direct
+/// baseline would already absorb much of the outlier stretch). The
+/// `Activation`-class specs map 1:1 to the pre-policy hand-built list
+/// (`table1_arms_match_legacy_spec_list` pins this).
+pub fn table1_arms() -> Vec<Arm> {
+    vec![
+        activation_arm("direct", "fp4:e2m1"),
+        activation_arm("clamp999", "fp4:e2m1/clamp@0.999"),
+        activation_arm("clamp999_comp", "fp4:e2m1/clamp@0.999+comp"),
+        activation_arm("clamp99_comp", "fp4:e2m1/clamp@0.99+comp"),
+        activation_arm("clamp97_comp", "fp4:e2m1/clamp@0.97+comp"),
+    ]
+}
+
+/// The two Figure-4 arms: row-wise (token-wise) FP4 activation cast,
+/// without and with the α=0.999 clamp.
+pub fn fig4_arms() -> Vec<Arm> {
+    vec![
+        activation_arm("direct_row", "fp4:e2m1/row"),
+        activation_arm("clamp999_row", "fp4:e2m1/row/clamp@0.999"),
+    ]
+}
+
+/// Describe a lowered manifest policy arm (the `policy` positional of
+/// `config(preset, policy)`) as a [`PrecisionPolicy`], so experiment
+/// tables and CSVs can record what each arm actually quantizes. `f32`
+/// classes mean "unquantized at the coordinator layer" (the bf16 compute
+/// dtype of the artifacts is below this layer's resolution). `None` for
+/// manifest arms with no policy-level description.
+pub fn for_manifest_arm(name: &str) -> Option<PrecisionPolicy> {
+    let base = PrecisionPolicy::default();
+    let w = TensorClass::Weight;
+    let a = TensorClass::Activation;
+    let spec = |s: &str| QuantSpec::parse(s).unwrap();
+    // W4 through the DGE surrogate at a given k (channel-wise scales)
+    let w4 = |k: f32| ClassSpec {
+        spec: spec("fp4:e2m1/col"),
+        dge: Some(DgeParams { k, clip: DgeParams::DEFAULT_CLIP }),
+    };
+    // the (weight, activation) compute pair; wire/ckpt/master keep defaults
+    let wa = |ws: &str, as_: &str| {
+        base.clone()
+            .with_class_spec(w, spec(ws))
+            .with_class_spec(a, spec(as_))
+    };
+    Some(match name {
+        // full paper scheme / baselines
+        "fp4" => base.clone(),
+        "bf16" => wa("f32", "f32"),
+        "fp8" => wa("fp8:e4m3/col", "fp8:e4m3/row"),
+        "fp4_direct" => wa("fp4:e2m1/col", "fp4:e2m1/row"),
+        // Fig. 6b: DGE ablation at W4A8
+        "w4a8_ste" => wa("fp4:e2m1/col", "fp8:e4m3/row"),
+        "w4a8_dge_k3" => wa("f32", "fp8:e4m3/row").with_class(w, w4(3.0)),
+        "w4a8_dge_k5" => wa("f32", "fp8:e4m3/row").with_class(w, w4(5.0)),
+        "w4a8_dge_k10" => wa("f32", "fp8:e4m3/row").with_class(w, w4(10.0)),
+        // Fig. 6c: OCC ablation at W8A4
+        "w8a4_direct" => wa("fp8:e4m3/col", "fp4:e2m1/row"),
+        "w8a4_occ_a999" => wa("fp8:e4m3/col", "fp4:e2m1/row/clamp@0.999+comp"),
+        "w8a4_occ_a99" => wa("fp8:e4m3/col", "fp4:e2m1/row/clamp@0.99+comp"),
+        "w8a4_occ_a97" => wa("fp8:e4m3/col", "fp4:e2m1/row/clamp@0.97+comp"),
+        // Fig. 6d: granularity ablation
+        "fp4_weight_tensorwise" => base.clone().with_class(
+            w,
+            ClassSpec { spec: spec("fp4:e2m1"), dge: Some(DgeParams::PAPER) },
+        ),
+        "fp4_act_tensorwise" => {
+            base.clone().with_class_spec(a, spec("fp4:e2m1/clamp@0.999+comp"))
+        }
+        "fp4_tensorwise" => base
+            .clone()
+            .with_class(w, ClassSpec { spec: spec("fp4:e2m1"), dge: Some(DgeParams::PAPER) })
+            .with_class_spec(a, spec("fp4:e2m1/clamp@0.999+comp")),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_arms_match_legacy_spec_list() {
+        // the pre-policy hand-built (spec, arm) list of experiments::tabs,
+        // pinned 1:1 against the named arms' Activation class
+        let legacy = [
+            "fp4:e2m1",
+            "fp4:e2m1/clamp@0.999",
+            "fp4:e2m1/clamp@0.999+comp",
+            "fp4:e2m1/clamp@0.99+comp",
+            "fp4:e2m1/clamp@0.97+comp",
+        ];
+        let arms = table1_arms();
+        assert_eq!(arms.len(), legacy.len());
+        for (arm, old) in arms.iter().zip(legacy) {
+            assert_eq!(
+                arm.policy.class(TensorClass::Activation).spec,
+                QuantSpec::parse(old).unwrap(),
+                "{}",
+                arm.name
+            );
+        }
+    }
+
+    #[test]
+    fn fig4_arms_match_legacy_specs() {
+        let arms = fig4_arms();
+        assert_eq!(
+            arms[0].policy.class(TensorClass::Activation).spec,
+            QuantSpec::parse("fp4:e2m1/row").unwrap()
+        );
+        assert_eq!(
+            arms[1].policy.class(TensorClass::Activation).spec,
+            QuantSpec::parse("fp4:e2m1/row/clamp@0.999").unwrap()
+        );
+    }
+
+    #[test]
+    fn manifest_arm_descriptions_validate_and_round_trip() {
+        for name in [
+            "fp4", "bf16", "fp8", "fp4_direct", "w4a8_ste", "w4a8_dge_k3", "w4a8_dge_k5",
+            "w4a8_dge_k10", "w8a4_direct", "w8a4_occ_a999", "w8a4_occ_a99", "w8a4_occ_a97",
+            "fp4_weight_tensorwise", "fp4_act_tensorwise", "fp4_tensorwise",
+        ] {
+            let p = for_manifest_arm(name).unwrap_or_else(|| panic!("{name} unmapped"));
+            p.validate().unwrap();
+            assert_eq!(PrecisionPolicy::parse(&p.to_string()).unwrap(), p, "{name}");
+        }
+        assert!(for_manifest_arm("no_such_arm").is_none());
+        // the DGE k sweep differs only in k
+        let k3 = for_manifest_arm("w4a8_dge_k3").unwrap();
+        let k10 = for_manifest_arm("w4a8_dge_k10").unwrap();
+        assert_eq!(k3.class(TensorClass::Weight).dge.unwrap().k, 3.0);
+        assert_eq!(k10.class(TensorClass::Weight).dge.unwrap().k, 10.0);
+    }
+}

@@ -1,0 +1,712 @@
+//! The precision-policy layer: one first-class object describing *which
+//! precision every tensor class runs at, at every training step*.
+//!
+//! The paper's framework (§4.3) is not a single quantizer but a
+//! mixed-precision *scheme*: W4 weights through the DGE estimator
+//! (§3.1), A4 activations through OCC clamp + compensation (§3.2), FP8
+//! gradient communication (following FP8-LM), and high-precision master
+//! state — plus warmup/fallback phases by training step. Before this
+//! module the repo plumbed those choices through scattered knobs (an
+//! opaque manifest `policy` string, `RunConfig.comm`,
+//! `RunConfig.ckpt_format`, DGE `k`/clip constants at call sites); a
+//! [`PrecisionPolicy`] replaces all of them with data.
+//!
+//! Three pieces:
+//!
+//!  * [`TensorClass`] — the six tensor roles the scheme distinguishes:
+//!    `Weight | Activation | Gradient | Wire | Checkpoint | Master`.
+//!  * [`ClassSpec`] — what one class runs at: a [`QuantSpec`] (format,
+//!    granularity, optional OCC clamp/compensation) plus optional
+//!    estimator parameters ([`DgeParams`]: the surrogate's `k` and
+//!    derivative clip of Eqs. 7-8).
+//!  * [`Schedule`](schedule::Schedule) — step-ranged overrides: BF16-style
+//!    warmup for the first N steps, precision fallback arms, mid-run wire
+//!    switches. Ranges are half-open `[start, end)` and must not overlap.
+//!
+//! # Policy-string grammar
+//!
+//! A policy round-trips through [`PrecisionPolicy::parse`] /
+//! `Display` exactly like [`QuantSpec`] does — `parse(display(p)) == p`:
+//!
+//! ```text
+//! policy    := classes (";" phase)*
+//!            | phase (";" phase)*       -- schedule-only: defaults + phases
+//! classes   := class "=" classspec ("," class "=" classspec)*
+//! class     := "w" | "a" | "g" | "wire" | "ckpt" | "master"
+//!              -- long aliases accepted on parse: weight, activation,
+//!              -- act, gradient, grad, comm, checkpoint, opt
+//! classspec := quantspec [ "+dge@k" K [ "c" CLIP ] ]
+//!              -- quantspec per formats::codec (fp4:e2m1/row/clamp@0.999+comp)
+//! phase     := range ":" override
+//! range     := LO ".." [HI]            -- steps [LO, HI), HI omitted = open
+//!            | "warmup=" N             -- sugar for 0..N
+//! override  := classes                 -- targeted per-class overrides
+//!            | classspec               -- blanket: every class
+//! ```
+//!
+//! Examples (missing classes take the paper defaults of
+//! [`PrecisionPolicy::default`]):
+//!
+//! ```text
+//! w=fp4:e2m1/col+dge@k5,a=fp4:e2m1/row/clamp@0.999+comp,wire=fp8:e4m3
+//! wire=fp4:e2m1/row;0..100:wire=fp8:e4m3      -- FP8 warmup on the wire
+//! ckpt=fp8:e4m3/row;warmup=50:f32             -- blanket f32 first 50 steps
+//! ```
+//!
+//! # Validation
+//!
+//! [`PrecisionPolicy::validate`] (run automatically by `parse`) centralizes
+//! the invariants that used to live as ad-hoc `ensure!`s at consumer call
+//! sites, so *every* consumer of a class spec gets the same error:
+//!
+//!  * the `Wire` class must be clamp-free (the ΔY residual is not
+//!    transmitted) — formerly a bare check inside `DpSim::new`;
+//!  * the `Checkpoint` class must be clamp-free (the residual is not
+//!    stored) — mirrored by `checkpoint::save_packed`;
+//!  * schedule ranges must be non-empty and pairwise disjoint;
+//!  * DGE parameters must be positive.
+
+pub mod arms;
+pub mod schedule;
+
+use std::fmt;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::formats::{fp8, Format, Fp4Kind, Granularity, QuantSpec};
+use schedule::{Override, Schedule};
+
+/// The six tensor roles the mixed-precision scheme distinguishes (§4.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorClass {
+    /// GEMM weight operands (the paper's W4 side, quantized through DGE).
+    Weight,
+    /// GEMM activation operands (the A4 side, quantized through OCC).
+    Activation,
+    /// Locally computed gradients (before any wire encoding).
+    Gradient,
+    /// The all-reduce wire encoding of gradient communication (FP8-LM).
+    Wire,
+    /// On-disk checkpoint tensor encoding.
+    Checkpoint,
+    /// Master weights + optimizer moments held between steps.
+    Master,
+}
+
+impl TensorClass {
+    /// All classes, in canonical display order.
+    pub const ALL: [TensorClass; 6] = [
+        TensorClass::Weight,
+        TensorClass::Activation,
+        TensorClass::Gradient,
+        TensorClass::Wire,
+        TensorClass::Checkpoint,
+        TensorClass::Master,
+    ];
+
+    /// Canonical short name (the one `Display` renders).
+    pub fn name(self) -> &'static str {
+        match self {
+            TensorClass::Weight => "w",
+            TensorClass::Activation => "a",
+            TensorClass::Gradient => "g",
+            TensorClass::Wire => "wire",
+            TensorClass::Checkpoint => "ckpt",
+            TensorClass::Master => "master",
+        }
+    }
+
+    /// Parse a class name; long aliases accepted, unknown names are hard
+    /// errors (never silent defaults).
+    pub fn from_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "w" | "weight" => TensorClass::Weight,
+            "a" | "act" | "activation" => TensorClass::Activation,
+            "g" | "grad" | "gradient" => TensorClass::Gradient,
+            "wire" | "comm" => TensorClass::Wire,
+            "ckpt" | "checkpoint" => TensorClass::Checkpoint,
+            "master" | "opt" => TensorClass::Master,
+            other => bail!(
+                "unknown tensor class {other:?} (expected w, a, g, wire, ckpt or master)"
+            ),
+        })
+    }
+
+    pub(crate) fn index(self) -> usize {
+        match self {
+            TensorClass::Weight => 0,
+            TensorClass::Activation => 1,
+            TensorClass::Gradient => 2,
+            TensorClass::Wire => 3,
+            TensorClass::Checkpoint => 4,
+            TensorClass::Master => 5,
+        }
+    }
+}
+
+impl fmt::Display for TensorClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// DGE surrogate parameters (Eqs. 7-8, Appendix C): the interpolation
+/// power `k` and the derivative clip (Appendix C.3, default 3.0).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DgeParams {
+    pub k: f32,
+    pub clip: f32,
+}
+
+impl DgeParams {
+    /// The Appendix-C.3 derivative cap.
+    pub const DEFAULT_CLIP: f32 = 3.0;
+
+    /// The paper's production setting (k=5, clip=3).
+    pub const PAPER: DgeParams = DgeParams { k: 5.0, clip: Self::DEFAULT_CLIP };
+
+    /// Parse the fragment after `+dge@`: `k<K>[c<CLIP>]`.
+    fn parse(s: &str) -> Result<Self> {
+        let rest = s
+            .strip_prefix('k')
+            .ok_or_else(|| anyhow::anyhow!("dge params must start with k, got {s:?}"))?;
+        let (k_str, clip_str) = match rest.split_once('c') {
+            Some((k, c)) => (k, Some(c)),
+            None => (rest, None),
+        };
+        let k: f32 = k_str
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad dge k {k_str:?} in {s:?}"))?;
+        let clip: f32 = match clip_str {
+            Some(c) => c
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad dge clip {c:?} in {s:?}"))?,
+            None => Self::DEFAULT_CLIP,
+        };
+        Ok(DgeParams { k, clip })
+    }
+}
+
+impl fmt::Display for DgeParams {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "k{}", self.k)?;
+        if self.clip != Self::DEFAULT_CLIP {
+            write!(f, "c{}", self.clip)?;
+        }
+        Ok(())
+    }
+}
+
+/// What one tensor class runs at: the quantization recipe plus optional
+/// estimator parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClassSpec {
+    pub spec: QuantSpec,
+    /// DGE surrogate parameters — meaningful on `Weight`-like classes;
+    /// `None` = straight-through / no surrogate.
+    pub dge: Option<DgeParams>,
+}
+
+impl ClassSpec {
+    pub const fn raw(format: Format) -> Self {
+        ClassSpec { spec: QuantSpec::new(format, Granularity::Tensor), dge: None }
+    }
+
+    pub const fn of(spec: QuantSpec) -> Self {
+        ClassSpec { spec, dge: None }
+    }
+
+    /// Parse `quantspec[+dge@k<K>[c<CLIP>]]`. The `+dge@` marker cannot
+    /// occur inside the QuantSpec grammar, so the split is unambiguous
+    /// even next to a `clamp@..+comp` suffix.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (spec_str, dge) = match s.find("+dge@") {
+            Some(i) => (&s[..i], Some(DgeParams::parse(&s[i + "+dge@".len()..])?)),
+            None => (s, None),
+        };
+        Ok(ClassSpec { spec: QuantSpec::parse(spec_str)?, dge })
+    }
+}
+
+impl fmt::Display for ClassSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.spec)?;
+        if let Some(d) = &self.dge {
+            write!(f, "+dge@{d}")?;
+        }
+        Ok(())
+    }
+}
+
+/// The complete per-tensor-class, step-scheduled precision policy.
+///
+/// Construction: [`PrecisionPolicy::default`] gives the paper's §4.3
+/// scheme; [`PrecisionPolicy::parse`] overlays a policy string on those
+/// defaults; `with_class` / `with_schedule` build programmatically. Every
+/// path validates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrecisionPolicy {
+    classes: [ClassSpec; 6],
+    pub schedule: Schedule,
+}
+
+impl Default for PrecisionPolicy {
+    /// The paper's §4.3 mixed-precision scheme:
+    ///
+    /// * `w` — FP4 E2M1, channel-wise (col) scales, DGE k=5/clip=3;
+    /// * `a` — FP4 E2M1, token-wise (row) scales, OCC clamp@0.999+comp;
+    /// * `g` — f32 (gradients computed in high precision);
+    /// * `wire` — FP8 E4M3 tensor-wise (FP8-LM gradient communication;
+    ///   identical to the old `RunConfig.comm` default);
+    /// * `ckpt` — f32, i.e. raw v1 checkpoints (the old
+    ///   `ckpt_format: None` default);
+    /// * `master` — f32 master state.
+    fn default() -> Self {
+        let fp4 = Format::Fp4(Fp4Kind::E2M1);
+        let mut p = PrecisionPolicy {
+            classes: [ClassSpec::raw(Format::F32); 6],
+            schedule: Schedule::empty(),
+        };
+        p.classes[TensorClass::Weight.index()] = ClassSpec {
+            spec: QuantSpec::new(fp4, Granularity::Col),
+            dge: Some(DgeParams::PAPER),
+        };
+        p.classes[TensorClass::Activation.index()] = ClassSpec::of(
+            QuantSpec::new(fp4, Granularity::Row).with_clamp(0.999, true),
+        );
+        p.classes[TensorClass::Wire.index()] =
+            ClassSpec::of(QuantSpec::new(Format::Fp8(fp8::E4M3), Granularity::Tensor));
+        p
+    }
+}
+
+impl PrecisionPolicy {
+    /// Parse a policy string (see the module docs for the grammar) as an
+    /// overlay on the [`PrecisionPolicy::default`] scheme. Validates.
+    ///
+    /// A string may also be schedule-only (`warmup=100:f32`,
+    /// `0..100:wire=fp8:e4m3;...`): when the first segment is a phase
+    /// (its prefix before the first `:` parses as a step range), every
+    /// segment is a phase and the base classes stay at their defaults.
+    pub fn parse(s: &str) -> Result<Self> {
+        ensure!(!s.trim().is_empty(), "empty precision policy");
+        let mut segments = s.split(';').peekable();
+        let mut p = PrecisionPolicy::default();
+        let first_is_phase = segments.peek().is_some_and(|seg| {
+            matches!(seg.split_once(':'), Some((r, _)) if schedule::StepRange::parse(r).is_ok())
+        });
+        if !first_is_phase {
+            let base = segments.next().unwrap_or("");
+            for (class, cs) in parse_class_list(base)? {
+                p.classes[class.index()] = cs;
+            }
+        }
+        for seg in segments {
+            p.schedule.phases.push(schedule::parse_phase(seg)?);
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Builder: replace one class's spec. Does not validate (call
+    /// [`PrecisionPolicy::validate`], or let the consumer do it).
+    pub fn with_class(mut self, class: TensorClass, cs: ClassSpec) -> Self {
+        self.classes[class.index()] = cs;
+        self
+    }
+
+    /// Builder: replace one class's [`QuantSpec`], keeping no estimator.
+    pub fn with_class_spec(self, class: TensorClass, spec: QuantSpec) -> Self {
+        self.with_class(class, ClassSpec::of(spec))
+    }
+
+    /// Builder: attach a schedule.
+    pub fn with_schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    /// The base (un-scheduled) spec of a class.
+    pub fn class(&self, class: TensorClass) -> &ClassSpec {
+        &self.classes[class.index()]
+    }
+
+    /// The spec of a class at a given training step, after applying any
+    /// schedule phase covering that step. A blanket phase override applies
+    /// to every class; a per-class phase only to the classes it names.
+    /// Boundary semantics: a phase `LO..HI` covers `step == LO` and not
+    /// `step == HI` (half-open, like Rust ranges).
+    pub fn class_at(&self, class: TensorClass, step: usize) -> &ClassSpec {
+        if let Some((_, phase)) = self.schedule.phase_at(step) {
+            match &phase.over {
+                Override::Blanket(cs) => return cs,
+                Override::PerClass(list) => {
+                    if let Some((_, cs)) = list.iter().find(|(c, _)| *c == class) {
+                        return cs;
+                    }
+                }
+            }
+        }
+        self.class(class)
+    }
+
+    /// The gradient-communication wire spec at a step (clamp-free by
+    /// validation).
+    pub fn wire_spec_at(&self, step: usize) -> QuantSpec {
+        self.class_at(TensorClass::Wire, step).spec
+    }
+
+    /// One-scan resolution for the dp hot path: the schedule-phase index
+    /// covering `step` (`None` = base policy) together with the wire spec
+    /// it implies — equivalent to `(schedule.phase_at(step).map(i),
+    /// wire_spec_at(step))` but with a single schedule scan and no
+    /// allocation.
+    pub fn wire_resolution_at(&self, step: usize) -> (Option<usize>, QuantSpec) {
+        match self.schedule.phase_at(step) {
+            None => (None, self.class(TensorClass::Wire).spec),
+            Some((i, phase)) => {
+                let cs = match &phase.over {
+                    Override::Blanket(cs) => cs,
+                    Override::PerClass(list) => list
+                        .iter()
+                        .find(|(c, _)| *c == TensorClass::Wire)
+                        .map(|(_, cs)| cs)
+                        .unwrap_or_else(|| self.class(TensorClass::Wire)),
+                };
+                (Some(i), cs.spec)
+            }
+        }
+    }
+
+    /// The checkpoint encoding in effect at a step: `None` means raw f32
+    /// (version-1 checkpoints), `Some(spec)` a packed v2 encoding.
+    pub fn ckpt_spec_at(&self, step: usize) -> Option<QuantSpec> {
+        let spec = self.class_at(TensorClass::Checkpoint, step).spec;
+        if spec.is_raw() {
+            None
+        } else {
+            Some(spec)
+        }
+    }
+
+    /// Label of the schedule phase covering `step` — `"base"` outside any
+    /// phase, the canonical range string (`"0..100"`, `"100.."`) inside.
+    /// Used by the dp-sim's per-phase wire accounting.
+    pub fn phase_label_at(&self, step: usize) -> String {
+        match self.schedule.phase_at(step) {
+            None => "base".to_string(),
+            Some((_, phase)) => phase.range.to_string(),
+        }
+    }
+
+    /// Central invariant checks (see module docs). Every consumer of a
+    /// class spec goes through a validated policy, so e.g. a clamped wire
+    /// spec fails identically whether it arrives via `-o comm=`,
+    /// `-o precision=` or a hand-built policy handed to `DpSim`.
+    pub fn validate(&self) -> Result<()> {
+        for (class, cs) in TensorClass::ALL.iter().zip(&self.classes) {
+            validate_class(*class, cs)?;
+        }
+        self.schedule.validate()?;
+        for phase in &self.schedule.phases {
+            match &phase.over {
+                // a blanket override applies to every class, so it must
+                // satisfy every class's invariants
+                Override::Blanket(cs) => {
+                    for class in TensorClass::ALL {
+                        validate_class(class, cs)?;
+                    }
+                }
+                Override::PerClass(list) => {
+                    for (class, cs) in list {
+                        validate_class(*class, cs)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-class invariants, in one place — applied to base classes *and*
+/// every schedule override: the clamp-free rule of the transport classes,
+/// and DGE-parameter positivity everywhere.
+fn validate_class(class: TensorClass, cs: &ClassSpec) -> Result<()> {
+    match class {
+        TensorClass::Wire => ensure!(
+            cs.spec.clamp.is_none(),
+            "wire spec {} carries a clamp: the ΔY residual is not transmitted",
+            cs.spec
+        ),
+        TensorClass::Checkpoint => ensure!(
+            cs.spec.clamp.is_none(),
+            "checkpoint spec {} carries a clamp: the ΔY residual is not stored",
+            cs.spec
+        ),
+        _ => {}
+    }
+    if let Some(d) = &cs.dge {
+        ensure!(
+            d.k > 0.0 && d.clip > 0.0,
+            "class {class}: dge params must be positive (k={}, clip={})",
+            d.k,
+            d.clip
+        );
+    }
+    Ok(())
+}
+
+/// Parse `class=classspec,...`, rejecting unknown and duplicate classes.
+/// Returned in input order; callers overlay onto defaults or sort.
+pub(crate) fn parse_class_list(s: &str) -> Result<Vec<(TensorClass, ClassSpec)>> {
+    let mut out: Vec<(TensorClass, ClassSpec)> = Vec::new();
+    for item in s.split(',') {
+        let (name, spec) = item
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("expected class=spec, got {item:?}"))?;
+        let class = TensorClass::from_name(name.trim())?;
+        ensure!(
+            !out.iter().any(|(c, _)| *c == class),
+            "duplicate class {class} in {s:?}"
+        );
+        out.push((class, ClassSpec::parse(spec)?));
+    }
+    Ok(out)
+}
+
+impl fmt::Display for PrecisionPolicy {
+    /// Canonical long form: all six classes in [`TensorClass::ALL`] order,
+    /// then each schedule phase. `parse(display(p)) == p`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, class) in TensorClass::ALL.iter().enumerate() {
+            if i > 0 {
+                f.write_str(",")?;
+            }
+            write!(f, "{class}={}", self.classes[class.index()])?;
+        }
+        for phase in &self.schedule.phases {
+            write!(f, ";{phase}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_pre_refactor_knob_defaults() {
+        let p = PrecisionPolicy::default();
+        // the old RunConfig.comm default
+        assert_eq!(p.wire_spec_at(0), QuantSpec::parse("fp8:e4m3").unwrap());
+        // the old ckpt_format: None default (raw v1 checkpoints)
+        assert_eq!(p.ckpt_spec_at(0), None);
+        // paper scheme for the compute classes
+        assert_eq!(
+            p.class(TensorClass::Weight).spec,
+            QuantSpec::parse("fp4:e2m1/col").unwrap()
+        );
+        assert_eq!(p.class(TensorClass::Weight).dge, Some(DgeParams::PAPER));
+        assert_eq!(
+            p.class(TensorClass::Activation).spec,
+            QuantSpec::parse("fp4:e2m1/row/clamp@0.999+comp").unwrap()
+        );
+        assert!(p.class(TensorClass::Master).spec.is_raw());
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn parse_overlays_defaults_and_round_trips() {
+        let p = PrecisionPolicy::parse("wire=fp4:e2m1/row").unwrap();
+        assert_eq!(p.wire_spec_at(0), QuantSpec::parse("fp4:e2m1/row").unwrap());
+        // untouched classes keep defaults
+        assert_eq!(
+            p.class(TensorClass::Weight),
+            PrecisionPolicy::default().class(TensorClass::Weight)
+        );
+        let back = PrecisionPolicy::parse(&p.to_string()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn parse_accepts_the_issue_example() {
+        let p = PrecisionPolicy::parse(
+            "w=fp4:e2m1/row+dge@k5,a=fp4:e2m1/clamp@0.999+comp,wire=fp8:e4m3,\
+             ckpt=fp8:e4m3/row;warmup=100:f32",
+        )
+        .unwrap();
+        assert_eq!(
+            p.class(TensorClass::Weight).spec,
+            QuantSpec::parse("fp4:e2m1/row").unwrap()
+        );
+        assert_eq!(p.class(TensorClass::Weight).dge, Some(DgeParams::PAPER));
+        assert_eq!(p.ckpt_spec_at(200), QuantSpec::parse("fp8:e4m3/row").ok());
+        // warmup phase: blanket f32 everywhere, including the wire
+        assert!(p.wire_spec_at(0).is_raw());
+        assert!(p.wire_spec_at(99).is_raw());
+        assert_eq!(p.wire_spec_at(100), QuantSpec::parse("fp8:e4m3").unwrap());
+        // warmup sugar canonicalizes to 0..100 and round-trips
+        assert!(p.to_string().contains(";0..100:f32"));
+        assert_eq!(PrecisionPolicy::parse(&p.to_string()).unwrap(), p);
+    }
+
+    #[test]
+    fn schedule_only_strings_overlay_the_defaults() {
+        // no base class list needed just to attach a warmup to the defaults
+        let p = PrecisionPolicy::parse("warmup=100:f32").unwrap();
+        assert_eq!(
+            p.class(TensorClass::Weight),
+            PrecisionPolicy::default().class(TensorClass::Weight)
+        );
+        assert!(p.wire_spec_at(0).is_raw());
+        assert_eq!(p.wire_spec_at(100), QuantSpec::parse("fp8:e4m3").unwrap());
+        assert_eq!(PrecisionPolicy::parse(&p.to_string()).unwrap(), p);
+        // multiple phases, per-class overrides
+        let p = PrecisionPolicy::parse("0..10:wire=f32;10..20:wire=fp4:e2m1/row").unwrap();
+        assert!(p.wire_spec_at(0).is_raw());
+        assert_eq!(p.wire_spec_at(10), QuantSpec::parse("fp4:e2m1/row").unwrap());
+        assert_eq!(p.wire_spec_at(20), QuantSpec::parse("fp8:e4m3").unwrap());
+        // a bare range without an override is still rejected
+        assert!(PrecisionPolicy::parse("0..10").is_err());
+    }
+
+    #[test]
+    fn dge_params_round_trip_and_reject_garbage() {
+        for s in ["k5", "k5c3", "k2.5c1.5", "k10"] {
+            let d = DgeParams::parse(s).unwrap();
+            assert_eq!(DgeParams::parse(&d.to_string()).unwrap(), d, "{s}");
+        }
+        assert_eq!(DgeParams::parse("k5c3").unwrap(), DgeParams::PAPER);
+        assert_eq!(DgeParams::PAPER.to_string(), "k5"); // default clip elided
+        for bad in ["", "5", "kxc3", "k5cx", "c3"] {
+            assert!(DgeParams::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn class_spec_dge_suffix_coexists_with_clamp_comp() {
+        let cs = ClassSpec::parse("fp4:e2m1/row/clamp@0.99+comp+dge@k3c2").unwrap();
+        assert_eq!(cs.spec, QuantSpec::parse("fp4:e2m1/row/clamp@0.99+comp").unwrap());
+        assert_eq!(cs.dge, Some(DgeParams { k: 3.0, clip: 2.0 }));
+        assert_eq!(ClassSpec::parse(&cs.to_string()).unwrap(), cs);
+    }
+
+    #[test]
+    fn rejects_unknown_and_duplicate_classes() {
+        assert!(PrecisionPolicy::parse("bogus=f32").is_err());
+        assert!(PrecisionPolicy::parse("w=f32,w=fp4:e2m1").is_err());
+        assert!(PrecisionPolicy::parse("").is_err());
+        assert!(PrecisionPolicy::parse("w=fp9").is_err());
+        // unknown class inside a phase override too
+        assert!(PrecisionPolicy::parse("w=f32;0..10:bogus=f32").is_err());
+    }
+
+    #[test]
+    fn clamped_wire_and_ckpt_rejected_everywhere() {
+        // base classes
+        assert!(PrecisionPolicy::parse("wire=fp4:e2m1/clamp@0.99").is_err());
+        assert!(PrecisionPolicy::parse("ckpt=fp4:e2m1/clamp@0.99").is_err());
+        // phase overrides
+        assert!(PrecisionPolicy::parse("w=f32;0..10:wire=fp4:e2m1/clamp@0.99").is_err());
+        // blanket overrides cover the wire too
+        assert!(PrecisionPolicy::parse("w=f32;0..10:fp4:e2m1/clamp@0.99").is_err());
+        // hand-built policies fail identically through validate()
+        let p = PrecisionPolicy::default().with_class_spec(
+            TensorClass::Wire,
+            QuantSpec::parse("fp4:e2m1/clamp@0.99").unwrap(),
+        );
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("ΔY residual is not transmitted"), "{err}");
+        // a clamp on a compute class is fine
+        assert!(PrecisionPolicy::parse("a=fp4:e2m1/clamp@0.99+comp").is_ok());
+    }
+
+    #[test]
+    fn bad_dge_params_rejected_in_base_and_overrides() {
+        // base class
+        assert!(PrecisionPolicy::parse("w=fp4:e2m1/col+dge@k-1").is_err());
+        assert!(PrecisionPolicy::parse("w=fp4:e2m1/col+dge@k5c0").is_err());
+        // the identical params must not smuggle through a schedule phase
+        assert!(PrecisionPolicy::parse("w=f32;0..10:w=fp4:e2m1/col+dge@k-1").is_err());
+        assert!(PrecisionPolicy::parse("w=f32;0..10:f32+dge@k0").is_err());
+        // positive params are fine in both positions
+        assert!(PrecisionPolicy::parse("w=fp4:e2m1/col+dge@k3c2").is_ok());
+        assert!(PrecisionPolicy::parse("w=f32;0..10:w=fp4:e2m1/col+dge@k3c2").is_ok());
+    }
+
+    #[test]
+    fn schedule_resolution_at_phase_boundaries() {
+        let p = PrecisionPolicy::parse("wire=fp4:e2m1/row;10..20:wire=fp8:e4m3;20..:wire=f32")
+            .unwrap();
+        let fp4 = QuantSpec::parse("fp4:e2m1/row").unwrap();
+        let fp8 = QuantSpec::parse("fp8:e4m3").unwrap();
+        assert_eq!(p.wire_spec_at(0), fp4);
+        assert_eq!(p.wire_spec_at(9), fp4);
+        assert_eq!(p.wire_spec_at(10), fp8); // start inclusive
+        assert_eq!(p.wire_spec_at(19), fp8);
+        assert!(p.wire_spec_at(20).is_raw()); // end exclusive, next phase starts
+        assert!(p.wire_spec_at(1_000_000).is_raw()); // open-ended
+        assert_eq!(p.phase_label_at(0), "base");
+        assert_eq!(p.phase_label_at(10), "10..20");
+        assert_eq!(p.phase_label_at(20), "20..");
+        // the one-scan hot-path resolver agrees with the two-call form
+        for step in [0, 9, 10, 19, 20, 1_000_000] {
+            let (idx, wire) = p.wire_resolution_at(step);
+            assert_eq!(wire, p.wire_spec_at(step), "step {step}");
+            assert_eq!(
+                idx,
+                p.schedule.phase_at(step).map(|(i, _)| i),
+                "step {step}"
+            );
+        }
+    }
+
+    #[test]
+    fn per_class_phase_override_leaves_other_classes_alone() {
+        let p = PrecisionPolicy::parse("w=fp4:e2m1/col+dge@k5;0..5:w=f32").unwrap();
+        assert!(p.class_at(TensorClass::Weight, 0).spec.is_raw());
+        assert_eq!(p.class_at(TensorClass::Weight, 0).dge, None);
+        assert_eq!(
+            p.class_at(TensorClass::Weight, 5).spec,
+            QuantSpec::parse("fp4:e2m1/col").unwrap()
+        );
+        // activation untouched during the phase
+        assert_eq!(
+            p.class_at(TensorClass::Activation, 0),
+            p.class(TensorClass::Activation)
+        );
+    }
+
+    #[test]
+    fn overlapping_or_empty_ranges_rejected() {
+        assert!(PrecisionPolicy::parse("w=f32;0..10:f32;5..15:f32").is_err());
+        assert!(PrecisionPolicy::parse("w=f32;0..:f32;100..200:f32").is_err());
+        assert!(PrecisionPolicy::parse("w=f32;10..10:f32").is_err());
+        assert!(PrecisionPolicy::parse("w=f32;10..5:f32").is_err());
+        // identical ranges are overlapping too
+        assert!(PrecisionPolicy::parse("w=f32;0..10:f32;0..10:f16").is_err());
+        // adjacent half-open ranges are fine
+        assert!(PrecisionPolicy::parse("w=f32;0..10:f32;10..20:f16").is_ok());
+    }
+
+    #[test]
+    fn display_lists_all_classes_canonically() {
+        let s = PrecisionPolicy::default().to_string();
+        for prefix in ["w=", "a=", "g=", "wire=", "ckpt=", "master="] {
+            assert!(s.contains(prefix), "{s}");
+        }
+        assert_eq!(
+            s,
+            "w=fp4:e2m1/col+dge@k5,a=fp4:e2m1/row/clamp@0.999+comp,g=f32/tensor,\
+             wire=fp8:e4m3/tensor,ckpt=f32/tensor,master=f32/tensor"
+        );
+    }
+
+    #[test]
+    fn long_class_aliases_parse_to_canonical_classes() {
+        let p = PrecisionPolicy::parse("weight=f32,activation=f32,comm=fp4:e2m1/row").unwrap();
+        assert!(p.class(TensorClass::Weight).spec.is_raw());
+        assert_eq!(p.wire_spec_at(0), QuantSpec::parse("fp4:e2m1/row").unwrap());
+    }
+}

@@ -1,0 +1,237 @@
+//! Step-ranged precision overrides: the warmup / fallback / mid-run-switch
+//! half of a [`PrecisionPolicy`](super::PrecisionPolicy).
+//!
+//! A [`Schedule`] is a list of [`Phase`]s, each a half-open step range
+//! `[start, end)` (open-ended when `end` is `None`) plus an [`Override`] —
+//! either a blanket [`ClassSpec`] applied to every tensor class, or a
+//! targeted per-class list. Ranges must be non-empty and pairwise
+//! disjoint; resolution at a step therefore finds at most one phase.
+//!
+//! Grammar (one phase per `;`-separated segment of the policy string):
+//!
+//! ```text
+//! phase := range ":" override
+//! range := LO ".." [HI] | "warmup=" N        -- warmup=N canonicalizes to 0..N
+//! override := class "=" classspec ("," ...)  -- targeted
+//!           | classspec                      -- blanket (no '=' present)
+//! ```
+
+use std::fmt;
+
+use anyhow::{ensure, Result};
+
+use super::{parse_class_list, ClassSpec, TensorClass};
+
+/// Half-open step range `[start, end)`; `end == None` means open-ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepRange {
+    pub start: usize,
+    pub end: Option<usize>,
+}
+
+impl StepRange {
+    pub fn contains(&self, step: usize) -> bool {
+        step >= self.start
+            && match self.end {
+                Some(e) => step < e,
+                None => true,
+            }
+    }
+
+    fn overlaps(&self, other: &StepRange) -> bool {
+        let lo = self.start.max(other.start);
+        match (self.end, other.end) {
+            (Some(a), Some(b)) => lo < a.min(b),
+            (Some(a), None) => lo < a,
+            (None, Some(b)) => lo < b,
+            (None, None) => true,
+        }
+    }
+
+    pub(crate) fn parse(s: &str) -> Result<Self> {
+        if let Some(n) = s.strip_prefix("warmup=") {
+            let end: usize = n
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad warmup length {n:?}"))?;
+            return Ok(StepRange { start: 0, end: Some(end) });
+        }
+        let (lo, hi) = s.split_once("..").ok_or_else(|| {
+            anyhow::anyhow!("bad step range {s:?} (expected LO..HI, LO.. or warmup=N)")
+        })?;
+        let start: usize = lo
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad range start {lo:?} in {s:?}"))?;
+        let end = if hi.is_empty() {
+            None
+        } else {
+            Some(
+                hi.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad range end {hi:?} in {s:?}"))?,
+            )
+        };
+        Ok(StepRange { start, end })
+    }
+}
+
+impl fmt::Display for StepRange {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.end {
+            Some(e) => write!(f, "{}..{}", self.start, e),
+            None => write!(f, "{}..", self.start),
+        }
+    }
+}
+
+/// What a phase changes: everything, or specific classes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Override {
+    /// One spec for every tensor class (e.g. an f32 warmup).
+    Blanket(ClassSpec),
+    /// Targeted per-class overrides; unlisted classes keep the base spec.
+    PerClass(Vec<(TensorClass, ClassSpec)>),
+}
+
+/// One step-ranged override.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Phase {
+    pub range: StepRange,
+    pub over: Override,
+}
+
+impl fmt::Display for Phase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:", self.range)?;
+        match &self.over {
+            Override::Blanket(cs) => write!(f, "{cs}"),
+            Override::PerClass(list) => {
+                for (i, (class, cs)) in list.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{class}={cs}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Parse one `range:override` segment. The range grammar contains no `:`,
+/// so the first colon splits unambiguously (QuantSpec strings like
+/// `fp4:e2m1` keep their colon on the override side).
+pub(crate) fn parse_phase(s: &str) -> Result<Phase> {
+    let (range_str, over_str) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("bad schedule phase {s:?} (expected range:override)"))?;
+    let range = StepRange::parse(range_str)?;
+    let over = if over_str.contains('=') {
+        let mut list = parse_class_list(over_str)?;
+        list.sort_by_key(|(c, _)| c.index()); // canonical order for Display
+        Override::PerClass(list)
+    } else {
+        Override::Blanket(ClassSpec::parse(over_str)?)
+    };
+    Ok(Phase { range, over })
+}
+
+/// Ordered list of disjoint phases.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Schedule {
+    pub phases: Vec<Phase>,
+}
+
+impl Schedule {
+    pub fn empty() -> Self {
+        Schedule { phases: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.phases.is_empty()
+    }
+
+    /// The unique phase covering `step`, with its index; `None` outside
+    /// every phase (the base policy applies).
+    pub fn phase_at(&self, step: usize) -> Option<(usize, &Phase)> {
+        self.phases
+            .iter()
+            .enumerate()
+            .find(|(_, p)| p.range.contains(step))
+    }
+
+    /// Ranges must be non-empty and pairwise disjoint (so resolution is
+    /// unambiguous and order-independent).
+    pub fn validate(&self) -> Result<()> {
+        for p in &self.phases {
+            if let Some(e) = p.range.end {
+                ensure!(
+                    p.range.start < e,
+                    "empty schedule range {} (start must be < end)",
+                    p.range
+                );
+            }
+        }
+        for (i, a) in self.phases.iter().enumerate() {
+            for b in &self.phases[i + 1..] {
+                ensure!(
+                    !a.range.overlaps(&b.range),
+                    "overlapping schedule ranges {} and {}",
+                    a.range,
+                    b.range
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_parse_display_round_trip() {
+        for s in ["0..100", "100..", "7..8"] {
+            let r = StepRange::parse(s).unwrap();
+            assert_eq!(r.to_string(), s);
+            assert_eq!(StepRange::parse(&r.to_string()).unwrap(), r);
+        }
+        assert_eq!(
+            StepRange::parse("warmup=64").unwrap(),
+            StepRange { start: 0, end: Some(64) }
+        );
+        for bad in ["", "..", "..100", "abc..5", "5..xyz", "warmup=abc", "5"] {
+            assert!(StepRange::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn contains_is_half_open() {
+        let r = StepRange { start: 10, end: Some(20) };
+        assert!(!r.contains(9));
+        assert!(r.contains(10));
+        assert!(r.contains(19));
+        assert!(!r.contains(20));
+        let open = StepRange { start: 5, end: None };
+        assert!(!open.contains(4));
+        assert!(open.contains(usize::MAX));
+    }
+
+    #[test]
+    fn overlap_detection() {
+        let r = |s: usize, e: Option<usize>| StepRange { start: s, end: e };
+        assert!(r(0, Some(10)).overlaps(&r(5, Some(15))));
+        assert!(!r(0, Some(10)).overlaps(&r(10, Some(20)))); // adjacent
+        assert!(r(0, None).overlaps(&r(100, Some(200))));
+        assert!(r(0, None).overlaps(&r(50, None)));
+        assert!(!r(0, Some(5)).overlaps(&r(5, None)));
+    }
+
+    #[test]
+    fn per_class_overrides_sort_canonically() {
+        // parse order (wire before w) canonicalizes to class order (w first)
+        let p = parse_phase("0..10:wire=f32,w=f16").unwrap();
+        let s = p.to_string();
+        assert_eq!(s, "0..10:w=f16/tensor,wire=f32/tensor");
+        assert_eq!(parse_phase(&s).unwrap(), p);
+    }
+}

@@ -9,18 +9,24 @@ use crate::formats::Fp4Kind;
 
 /// Locate the quantization interval [lo, hi) containing `x` (clamped to
 /// the format's dynamic range).
+///
+/// Binary search over the precomputed static grid (`Fp4Kind::values`, the
+/// same table the `formats::kernels` encode path shares):
+/// `partition_point(v <= x)` is exactly "first index with `values[i] > x`",
+/// which the old path found with a per-call linear scan. NaN is pinned to
+/// the top interval — the old scan's fall-through, where no `v > NaN`
+/// comparison ever fired (partition_point alone would land on the bottom
+/// interval instead, since `v <= NaN` is also always false).
+/// `interval_matches_linear_scan_reference` pins the equivalence over a
+/// dense sweep of every format's range, NaN included.
 fn interval(fmt: Fp4Kind, x: f32) -> (f32, f32) {
     let values = fmt.values();
     let n = values.len();
-    // first index with values[i] > x
-    let mut hi_idx = n - 1;
-    for (i, &v) in values.iter().enumerate() {
-        if v > x {
-            hi_idx = i;
-            break;
-        }
-    }
-    let hi_idx = hi_idx.clamp(1, n - 1);
+    let hi_idx = if x.is_nan() {
+        n - 1
+    } else {
+        values.partition_point(|&v| v <= x).clamp(1, n - 1)
+    };
     (values[hi_idx - 1], values[hi_idx])
 }
 
@@ -56,6 +62,49 @@ mod tests {
     use super::*;
 
     const F: Fp4Kind = Fp4Kind::E2M1;
+
+    /// The pre-`partition_point` linear scan, verbatim: the equivalence
+    /// oracle for [`interval`].
+    fn interval_scan_reference(fmt: Fp4Kind, x: f32) -> (f32, f32) {
+        let values = fmt.values();
+        let n = values.len();
+        let mut hi_idx = n - 1;
+        for (i, &v) in values.iter().enumerate() {
+            if v > x {
+                hi_idx = i;
+                break;
+            }
+        }
+        let hi_idx = hi_idx.clamp(1, n - 1);
+        (values[hi_idx - 1], values[hi_idx])
+    }
+
+    #[test]
+    fn interval_matches_linear_scan_reference() {
+        // dense sweep past both ends of the range, every Fp4Kind; includes
+        // every grid value and every dyadic tie point exactly (step 2^-7)
+        for fmt in [Fp4Kind::E2M1, Fp4Kind::E1M2, Fp4Kind::E3M0] {
+            let max = fmt.max_value();
+            let mut x = -1.5 * max;
+            while x <= 1.5 * max {
+                assert_eq!(
+                    interval(fmt, x),
+                    interval_scan_reference(fmt, x),
+                    "{fmt:?} x={x}"
+                );
+                x += 0.0078125;
+            }
+            // exact grid values land in the interval above them
+            for &v in fmt.values() {
+                assert_eq!(interval(fmt, v), interval_scan_reference(fmt, v), "{fmt:?} v={v}");
+            }
+            // non-finite inputs: NaN keeps the old fall-through-to-top
+            // behavior; ±Inf saturate like any out-of-range value
+            for x in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                assert_eq!(interval(fmt, x), interval_scan_reference(fmt, x), "{fmt:?} x={x}");
+            }
+        }
+    }
 
     #[test]
     fn forward_hits_grid_points() {

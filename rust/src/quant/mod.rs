@@ -6,7 +6,7 @@
 pub mod dge;
 pub mod occ;
 
-use crate::formats::QuantSpec;
+use crate::policy::{PrecisionPolicy, TensorClass};
 
 /// Cosine similarity between two tensors (Table 1 "SIM").
 pub fn cosine_sim(x: &[f32], y: &[f32]) -> f64 {
@@ -46,14 +46,22 @@ pub fn fidelity(x: &[f32], q: &[f32]) -> Fidelity {
 }
 
 /// One Table-1 experiment arm applied to a raw activation tensor: the
-/// spec's optional clamp/compensation followed by its format qdq.
+/// policy's `Activation`-class spec — optional clamp/compensation followed
+/// by its format qdq.
 ///
 /// The paper's §3.2 analysis uses tensor-wise specs (Table 1 / Fig. 4
 /// study the clamp in isolation from the vector-wise scaling of §4.1 —
 /// with per-token scales the direct baseline would already absorb much of
-/// the outlier stretch), so the canonical arms look like
-/// `fp4:e2m1/clamp@0.999+comp`; any other [`QuantSpec`] works too.
-pub fn table1_arm(x: &[f32], rows: usize, cols: usize, spec: &QuantSpec) -> (Fidelity, f64) {
+/// the outlier stretch), so the canonical arms
+/// ([`crate::policy::arms::table1_arms`]) set the activation class to
+/// specs like `fp4:e2m1/clamp@0.999+comp`; any policy works.
+pub fn table1_arm(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    policy: &PrecisionPolicy,
+) -> (Fidelity, f64) {
+    let spec = policy.class(TensorClass::Activation).spec;
     let (q, sparsity) = spec.apply(x, rows, cols);
     (fidelity(x, &q), sparsity)
 }
@@ -106,11 +114,16 @@ mod tests {
         for r in 0..rows {
             x[r * cols + 7] *= 20.0;
         }
-        let base = QuantSpec::parse("fp4:e2m1").unwrap();
-        let (direct, s0) = table1_arm(&x, rows, cols, &base);
-        let (clamp, s1) = table1_arm(&x, rows, cols, &base.with_clamp(0.999, false));
-        let (comp, s2) = table1_arm(&x, rows, cols, &base.with_clamp(0.999, true));
-        let (comp97, _) = table1_arm(&x, rows, cols, &base.with_clamp(0.97, true));
+        let arm = |s: &str| {
+            PrecisionPolicy::default().with_class_spec(
+                TensorClass::Activation,
+                crate::formats::QuantSpec::parse(s).unwrap(),
+            )
+        };
+        let (direct, s0) = table1_arm(&x, rows, cols, &arm("fp4:e2m1"));
+        let (clamp, s1) = table1_arm(&x, rows, cols, &arm("fp4:e2m1/clamp@0.999"));
+        let (comp, s2) = table1_arm(&x, rows, cols, &arm("fp4:e2m1/clamp@0.999+comp"));
+        let (comp97, _) = table1_arm(&x, rows, cols, &arm("fp4:e2m1/clamp@0.97+comp"));
         assert_eq!(s0, 0.0);
         assert!(s1 > 0.0 && (s1 - s2).abs() < 1e-12);
         assert!(clamp.snr_db > direct.snr_db, "{clamp:?} vs {direct:?}");

@@ -93,7 +93,23 @@ impl Csv {
 
     pub fn row(&mut self, fields: &[String]) {
         assert_eq!(fields.len(), self.cols, "csv row arity");
-        let _ = writeln!(self.buf, "{}", fields.join(","));
+        for (i, f) in fields.iter().enumerate() {
+            if i > 0 {
+                self.buf.push(',');
+            }
+            // RFC-4180 quoting, applied only when needed so numeric series
+            // render exactly as before: fields containing the separator, a
+            // quote or a newline (e.g. precision-policy strings, which
+            // embed commas) are double-quoted with `"` doubled inside
+            if f.contains(',') || f.contains('"') || f.contains('\n') {
+                self.buf.push('"');
+                self.buf.push_str(&f.replace('"', "\"\""));
+                self.buf.push('"');
+            } else {
+                self.buf.push_str(f);
+            }
+        }
+        self.buf.push('\n');
     }
 
     pub fn rowf(&mut self, fields: &[f64]) {
@@ -143,6 +159,20 @@ pub fn smooth(xs: &[f32], window: usize) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn csv_quotes_fields_containing_separators() {
+        let mut csv = Csv::new(&["a", "policy"]);
+        csv.row(&["1".into(), "w=f32,wire=fp8".into()]);
+        csv.row(&["2".into(), "plain".into()]);
+        csv.row(&["3".into(), "say \"hi\"".into()]);
+        let lines: Vec<&str> = csv.as_str().lines().collect();
+        assert_eq!(lines[0], "a,policy");
+        // embedded commas quoted, so every row has the header's arity
+        assert_eq!(lines[1], "1,\"w=f32,wire=fp8\"");
+        assert_eq!(lines[2], "2,plain"); // plain fields untouched
+        assert_eq!(lines[3], "3,\"say \"\"hi\"\"\"");
+    }
 
     #[test]
     fn rng_is_deterministic() {

@@ -9,11 +9,13 @@ use fp4train::coordinator::dp::DpSim;
 use fp4train::coordinator::{checkpoint, Trainer};
 use fp4train::data::corpus::{Corpus, CorpusKind};
 use fp4train::data::loader::{BatchLoader, LoaderConfig, Sampler};
-use fp4train::formats::QuantSpec;
+use fp4train::policy::PrecisionPolicy;
 use fp4train::runtime::Engine;
 
-fn spec(s: &str) -> QuantSpec {
-    QuantSpec::parse(s).unwrap()
+/// A default policy whose `Wire` class is `s` — the dp-sim arms below
+/// differ only in wire encoding.
+fn spec(s: &str) -> PrecisionPolicy {
+    PrecisionPolicy::parse(&format!("wire={s}")).unwrap()
 }
 
 // NOTE: the xla crate's PJRT client is Rc-based (not Send), so each test
@@ -201,6 +203,62 @@ fn dp_fp8_tracks_f32_comm_closely() {
         gap = gap.max((la - lb).abs());
     }
     assert!(gap < 0.05, "fp8 gradient comm perturbs loss too much: {gap}");
+}
+
+#[test]
+fn dp_default_policy_is_identical_to_explicit_fp8_comm() {
+    let Some(engine) = engine() else { return };
+    // behavior pin: a default PrecisionPolicy must reproduce the
+    // pre-policy default knobs (comm=fp8:e4m3) byte- and loss-exactly
+    let c = corpus();
+    let mut a =
+        DpSim::new(engine.clone(), "nano", "bf16", &c, 2, 0, PrecisionPolicy::default())
+            .unwrap();
+    let mut b = DpSim::new(engine.clone(), "nano", "bf16", &c, 2, 0, spec("fp8:e4m3")).unwrap();
+    for _ in 0..4 {
+        let la = a.dp_step().unwrap();
+        let lb = b.dp_step().unwrap();
+        assert_eq!(la, lb);
+    }
+    assert_eq!(a.stats.bytes_sent, b.stats.bytes_sent);
+    assert_eq!(a.stats.bytes_f32_equiv, b.stats.bytes_f32_equiv);
+}
+
+#[test]
+fn dp_mid_run_wire_switch_runs_via_one_policy_string() {
+    let Some(engine) = engine() else { return };
+    // the acceptance scenario: FP8 wire for the first 2 steps, then FP4 —
+    // a single `-o precision=...`-style string, no code
+    let c = corpus();
+    let policy =
+        PrecisionPolicy::parse("wire=fp4:e2m1/row;0..2:wire=fp8:e4m3").unwrap();
+    let mut sim = DpSim::new(engine.clone(), "nano", "bf16", &c, 2, 0, policy).unwrap();
+    for _ in 0..4 {
+        sim.dp_step().unwrap();
+    }
+    assert!(sim.losses.iter().all(|l| l.is_finite()));
+    // two phases accounted separately, with the right specs and steps
+    assert_eq!(sim.stats.phases.len(), 2);
+    let warm = &sim.stats.phases[0];
+    let base = &sim.stats.phases[1];
+    assert_eq!(warm.label, "0..2");
+    assert_eq!(warm.wire, "fp8:e4m3/tensor");
+    assert_eq!(warm.steps, 2);
+    assert_eq!(base.label, "base");
+    assert_eq!(base.wire, "fp4:e2m1/row");
+    assert_eq!(base.steps, 2);
+    // the FP4 phase moves roughly half the bytes of the FP8 phase
+    assert!(
+        (base.bytes_sent as f64) < 0.6 * warm.bytes_sent as f64,
+        "fp4 phase {} vs fp8 phase {}",
+        base.bytes_sent,
+        warm.bytes_sent
+    );
+    assert_eq!(
+        sim.stats.bytes_sent,
+        warm.bytes_sent + base.bytes_sent,
+        "phase totals must partition the run total"
+    );
 }
 
 #[test]

@@ -3,6 +3,8 @@
 //! failing case prints its seed for replay.
 
 use fp4train::formats::{self, fp16, fp8, Format, Fp4Kind, Granularity, QuantSpec};
+use fp4train::policy::schedule::{Override, Phase, Schedule, StepRange};
+use fp4train::policy::{ClassSpec, DgeParams, PrecisionPolicy, TensorClass};
 use fp4train::quant::{self, occ};
 use fp4train::runtime::Manifest;
 use fp4train::util::Rng;
@@ -460,9 +462,12 @@ fn prop_compensated_fidelity_never_below_clamp_only() {
             }
         }
         let base = QuantSpec::parse("fp4:e2m1").unwrap();
+        let arm = |spec: QuantSpec| {
+            PrecisionPolicy::default().with_class_spec(TensorClass::Activation, spec)
+        };
         let (clamp_only, _) =
-            quant::table1_arm(&xs, rows, cols, &base.with_clamp(0.99, false));
-        let (comp, _) = quant::table1_arm(&xs, rows, cols, &base.with_clamp(0.99, true));
+            quant::table1_arm(&xs, rows, cols, &arm(base.with_clamp(0.99, false)));
+        let (comp, _) = quant::table1_arm(&xs, rows, cols, &arm(base.with_clamp(0.99, true)));
         assert!(
             comp.mse <= clamp_only.mse + 1e-12,
             "seed {seed}: comp {comp:?} vs clamp {clamp_only:?}"
@@ -484,6 +489,209 @@ fn prop_snr_sim_agree_on_ordering() {
         let (m1, m2) = (quant::mse(&xs, &y1), quant::mse(&xs, &y2));
         let (s1, s2) = (quant::snr_db(&xs, &y1), quant::snr_db(&xs, &y2));
         assert_eq!(m1 < m2, s1 > s2, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Precision-policy grammar: random class maps + schedules round-trip
+// through parse/Display; malformed schedules are rejected; resolution is
+// exact at phase boundaries
+// ---------------------------------------------------------------------------
+
+/// A random clamp-free QuantSpec (valid for every tensor class).
+fn random_clampfree_spec(rng: &mut Rng) -> QuantSpec {
+    let fmt = ALL_FORMATS[rng.below(ALL_FORMATS.len() as u64) as usize];
+    let gran = ALL_GRANS[rng.below(3) as usize];
+    QuantSpec::new(fmt, gran)
+}
+
+/// A random QuantSpec, possibly clamped (only valid for compute classes).
+fn random_spec(rng: &mut Rng) -> QuantSpec {
+    let spec = random_clampfree_spec(rng);
+    if rng.below(3) == 0 {
+        let alpha = 0.501 + 0.49 * rng.unit_f32() as f64;
+        spec.with_clamp(alpha, rng.below(2) == 0)
+    } else {
+        spec
+    }
+}
+
+fn random_class_spec(rng: &mut Rng, class: TensorClass) -> ClassSpec {
+    let clamped_ok =
+        !matches!(class, TensorClass::Wire | TensorClass::Checkpoint);
+    let spec = if clamped_ok { random_spec(rng) } else { random_clampfree_spec(rng) };
+    let dge = if rng.below(3) == 0 {
+        let k = 1.0 + rng.below(12) as f32 + if rng.below(2) == 0 { 0.5 } else { 0.0 };
+        let clip = if rng.below(2) == 0 {
+            DgeParams::DEFAULT_CLIP
+        } else {
+            0.5 + rng.unit_f32() * 5.0
+        };
+        Some(DgeParams { k, clip })
+    } else {
+        None
+    };
+    ClassSpec { spec, dge }
+}
+
+/// Random disjoint phases with increasing starts; at most one open-ended
+/// tail phase.
+fn random_schedule(rng: &mut Rng) -> Schedule {
+    let mut phases = Vec::new();
+    let n_phases = rng.below(4) as usize;
+    let mut cursor = rng.below(50) as usize;
+    for i in 0..n_phases {
+        let len = 1 + rng.below(200) as usize;
+        let open_tail = i + 1 == n_phases && rng.below(4) == 0;
+        let range = StepRange {
+            start: cursor,
+            end: if open_tail { None } else { Some(cursor + len) },
+        };
+        cursor += len + rng.below(100) as usize; // gap (possibly 0) to next
+        let over = if rng.below(2) == 0 {
+            Override::Blanket(random_class_spec(rng, TensorClass::Wire))
+        } else {
+            let mut list = Vec::new();
+            for class in TensorClass::ALL {
+                if rng.below(3) == 0 {
+                    list.push((class, random_class_spec(rng, class)));
+                }
+            }
+            if list.is_empty() {
+                list.push((
+                    TensorClass::Weight,
+                    random_class_spec(rng, TensorClass::Weight),
+                ));
+            }
+            Override::PerClass(list)
+        };
+        phases.push(Phase { range, over });
+    }
+    Schedule { phases }
+}
+
+fn random_policy(rng: &mut Rng) -> PrecisionPolicy {
+    let mut p = PrecisionPolicy::default();
+    for class in TensorClass::ALL {
+        if rng.below(2) == 0 {
+            p = p.with_class(class, random_class_spec(rng, class));
+        }
+    }
+    p.with_schedule(random_schedule(rng))
+}
+
+#[test]
+fn prop_policy_round_trips_through_parse_display() {
+    for seed in cases(300) {
+        let mut rng = Rng::new(seed);
+        let p = random_policy(&mut rng);
+        p.validate().unwrap_or_else(|e| panic!("seed {seed}: generated invalid: {e}"));
+        let s = p.to_string();
+        let back = PrecisionPolicy::parse(&s)
+            .unwrap_or_else(|e| panic!("seed {seed}: reparsing {s:?}: {e}"));
+        assert_eq!(back, p, "seed {seed}: {s:?}");
+        // Display is a fixed point: canonical strings re-render identically
+        assert_eq!(back.to_string(), s, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_overlapping_schedules_rejected() {
+    for seed in cases(150) {
+        let mut rng = Rng::new(seed);
+        let mut sched = random_schedule(&mut rng);
+        let Some(base) = sched.phases.iter().find(|p| p.range.end.is_some()).cloned()
+        else {
+            continue; // no bounded phase this round
+        };
+        // duplicate a bounded phase shifted to straddle its own range
+        let mut clash = base.clone();
+        clash.range = StepRange {
+            start: base.range.start + (base.range.end.unwrap() - base.range.start) / 2,
+            end: Some(base.range.end.unwrap() + 1),
+        };
+        sched.phases.push(clash);
+        let p = PrecisionPolicy::default().with_schedule(sched);
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("overlapping"), "seed {seed}: {err}");
+    }
+}
+
+#[test]
+fn prop_unknown_class_rejected_everywhere() {
+    for seed in cases(50) {
+        let mut rng = Rng::new(seed);
+        let bogus = format!("cls{}", rng.below(1000));
+        assert!(PrecisionPolicy::parse(&format!("{bogus}=f32")).is_err(), "{bogus}");
+        assert!(
+            PrecisionPolicy::parse(&format!("w=f32;0..10:{bogus}=f32")).is_err(),
+            "{bogus}"
+        );
+    }
+}
+
+#[test]
+fn prop_schedule_resolution_exact_at_boundaries() {
+    for seed in cases(200) {
+        let mut rng = Rng::new(seed);
+        let p = random_policy(&mut rng);
+        for phase in &p.schedule.phases {
+            let start = phase.range.start;
+            // step == start: the phase applies
+            for class in TensorClass::ALL {
+                let want = match &phase.over {
+                    Override::Blanket(cs) => cs,
+                    Override::PerClass(list) => list
+                        .iter()
+                        .find(|(c, _)| *c == class)
+                        .map(|(_, cs)| cs)
+                        .unwrap_or_else(|| p.class(class)),
+                };
+                assert_eq!(p.class_at(class, start), want, "seed {seed} step {start}");
+            }
+            // step == end: the phase no longer applies (half-open)
+            if let Some(end) = phase.range.end {
+                assert!(
+                    !phase.range.contains(end),
+                    "seed {seed}: range must be half-open"
+                );
+                if p.schedule.phase_at(end).is_none() {
+                    for class in TensorClass::ALL {
+                        assert_eq!(
+                            p.class_at(class, end),
+                            p.class(class),
+                            "seed {seed} step {end}: base must apply past the phase"
+                        );
+                    }
+                }
+            }
+            // one step before start falls outside this phase
+            if start > 0 && p.schedule.phase_at(start - 1).is_none() {
+                for class in TensorClass::ALL {
+                    assert_eq!(p.class_at(class, start - 1), p.class(class), "seed {seed}");
+                }
+            }
+        }
+        // the single-scan hot-path resolver agrees with the two-call form
+        // everywhere, including phase boundaries
+        let mut probes = vec![0usize, 1, 100, 10_000];
+        for phase in &p.schedule.phases {
+            probes.push(phase.range.start);
+            probes.push(phase.range.start.saturating_sub(1));
+            if let Some(e) = phase.range.end {
+                probes.push(e);
+                probes.push(e - 1);
+            }
+        }
+        for step in probes {
+            let (idx, wire) = p.wire_resolution_at(step);
+            assert_eq!(wire, p.wire_spec_at(step), "seed {seed} step {step}");
+            assert_eq!(
+                idx,
+                p.schedule.phase_at(step).map(|(i, _)| i),
+                "seed {seed} step {step}"
+            );
+        }
     }
 }
 
