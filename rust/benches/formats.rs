@@ -133,6 +133,48 @@ fn main() {
         acc.len()
     });
 
+    // ---- lane-blocked simd tier (compiled under `--features simd`) ----
+    #[cfg(feature = "simd")]
+    {
+        use fp4train::formats::{kernels, simd};
+        // NB: with the feature on, the PackedTensor rows above dispatch
+        // to the simd tier — pin the kernel tier here for honest ratios.
+        println!("\n-- simd tier vs kernel tier (16 MiB probe) --");
+        let kenc8 = bench("fp8:e4m3 encode kernel (pinned)", bytes, || {
+            kernels::pack_into(&xs, 1, n, spec8.format, spec8.granularity, &mut scratch8);
+            scratch8.data.len()
+        });
+        let kenc4 = bench("fp4:e2m1 pack kernel (pinned)", bytes, || {
+            kernels::pack_into(&xs, 1, n, spec4t.format, spec4t.granularity, &mut scratch4);
+            scratch4.data.len()
+        });
+        let senc8 = bench("fp8:e4m3 encode simd (pack_into)", bytes, || {
+            simd::pack_into(&xs, 1, n, spec8.format, spec8.granularity, &mut scratch8);
+            scratch8.data.len()
+        });
+        bench("fp8:e4m3 decode simd (unpack_into)", bytes, || {
+            simd::unpack_into(&packed8, &mut out);
+            out.len()
+        });
+        let senc4 = bench("fp4:e2m1 pack simd (pack_into)", bytes, || {
+            simd::pack_into(&xs, 1, n, spec4t.format, spec4t.granularity, &mut scratch4);
+            scratch4.data.len()
+        });
+        bench("fp4:e2m1/row qdq simd (qdq_into)", bytes, || {
+            simd::qdq_into(spec4.format, spec4.granularity, &xs, rows, cols, &mut qout);
+            qout.len()
+        });
+        bench("fp8:e4m3 unpack_accumulate simd", bytes, || {
+            simd::unpack_accumulate(&packed8, &mut acc, 0.25);
+            acc.len()
+        });
+        println!(
+            "simd/kernel ratios: fp8 encode {:.2}x, fp4 pack {:.2}x (CI gate: fp4 pack >=0.95)",
+            kenc8 / senc8,
+            kenc4 / senc4
+        );
+    }
+
     // single-thread view: a probe below the kernels' parallel threshold
     // (1M elements), so these ratios isolate the algorithmic gain
     // (integer-domain fp8 encode, threshold-table fp4) from the chunked

@@ -1,0 +1,12 @@
+//! Fuzz the codec round-trip: arbitrary bytes become (format,
+//! granularity, shape, raw f32 bit patterns); the oracle asserts
+//! storage == simulation bit-exactness, finite outputs, scratch reuse
+//! and clamped-pack rejection. See `fp4train::fuzzing` for the checks.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    fp4train::fuzzing::check_codec_roundtrip(data);
+});

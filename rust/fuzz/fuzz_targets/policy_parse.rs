@@ -1,0 +1,12 @@
+//! Fuzz the `PrecisionPolicy`/`Schedule` grammar: parse must never
+//! panic, accepted policies must satisfy `validate()` (no clamped
+//! wire/checkpoint specs, no overlapping phases), round-trip through
+//! `Display`, and resolve at arbitrary steps. See `fp4train::fuzzing`.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    fp4train::fuzzing::check_policy_parse(data);
+});

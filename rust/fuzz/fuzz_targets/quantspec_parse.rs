@@ -1,0 +1,11 @@
+//! Fuzz the `QuantSpec` string grammar: parse must never panic, and
+//! every accepted spec must round-trip through its canonical `Display`
+//! form. See `fp4train::fuzzing` for the checks.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    fp4train::fuzzing::check_quantspec_parse(data);
+});

@@ -426,14 +426,14 @@ impl QuantSpec {
             out.extend_from_slice(&q);
             return;
         }
-        kernels::qdq_into(self.format, self.granularity, xs, rows, cols, out);
+        kernels::auto_qdq_into(self.format, self.granularity, xs, rows, cols, out);
     }
 
     fn qdq_unclamped(&self, xs: &[f32], rows: usize, cols: usize) -> Vec<f32> {
         // single-pass fused kernel, monomorphized per format × granularity
         // (this is the dp-comm / repro hot path; see benches/formats.rs)
         let mut out = Vec::new();
-        kernels::qdq_into(self.format, self.granularity, xs, rows, cols, &mut out);
+        kernels::auto_qdq_into(self.format, self.granularity, xs, rows, cols, &mut out);
         out
     }
 }
@@ -464,7 +464,7 @@ pub fn scales_for(
     gran: Granularity,
 ) -> Vec<f32> {
     let mut out = Vec::new();
-    kernels::scales_into(format, xs, rows, cols, gran, &mut out);
+    kernels::auto_scales_into(format, xs, rows, cols, gran, &mut out);
     out
 }
 
@@ -542,7 +542,7 @@ impl PackedTensor {
         out: &mut PackedTensor,
     ) {
         assert_eq!(xs.len(), rows * cols, "shape mismatch");
-        kernels::pack_into(xs, rows, cols, format, granularity, out);
+        kernels::auto_pack_into(xs, rows, cols, format, granularity, out);
     }
 
     /// Decode back to f32. Bit-exact with [`QuantSpec::qdq`] (same codec,
@@ -556,7 +556,7 @@ impl PackedTensor {
     /// Zero-alloc variant of [`PackedTensor::unpack`]: decodes into
     /// caller-owned scratch (cleared and resized; capacity reused).
     pub fn unpack_into(&self, out: &mut Vec<f32>) {
-        kernels::unpack_into(self, out);
+        kernels::auto_unpack_into(self, out);
     }
 
     /// Fused decode-accumulate: `acc[i] += decode(i) * weight` without
@@ -564,7 +564,7 @@ impl PackedTensor {
     /// the data-parallel coordinator. `acc.len()` must equal
     /// [`PackedTensor::len`].
     pub fn unpack_accumulate(&self, acc: &mut [f32], weight: f32) {
-        kernels::unpack_accumulate(self, acc, weight);
+        kernels::auto_unpack_accumulate(self, acc, weight);
     }
 
     pub fn len(&self) -> usize {

@@ -29,6 +29,23 @@
 //!     chunks (no added dependencies — the offline image only vendors
 //!     `anyhow`/`xla`). Every element is independent, so the result is
 //!     bit-identical to the serial pass.
+//!
+//! # Three-tier dispatch
+//!
+//! The codec stack has three implementations of every hot path, each
+//! pinned bit-exact against the one below it:
+//!
+//!  * [`reference`] — the pre-kernel scalar loops, verbatim. The oracle.
+//!  * this module — the default monomorphized single-pass kernels.
+//!  * [`super::simd`] — the lane-blocked tier, compiled only under the
+//!    `simd` cargo feature.
+//!
+//! The `auto_*` functions below are the single dispatch point: the
+//! public `QuantSpec`/`PackedTensor` entry points route through them, so
+//! enabling the feature switches every call site (dp-sim comm,
+//! checkpoints, `repro perf`) with zero code changes. The tier entry
+//! points themselves stay `pub` so tests and benches can pin a specific
+//! tier for differential comparison.
 
 use super::codec::{Codec, Format, PackedTensor};
 use super::fp8::Fp8Spec;
@@ -64,10 +81,12 @@ macro_rules! per_gran {
         }
     }};
 }
+#[cfg(feature = "simd")]
+pub(crate) use per_gran;
 
 /// The Format-level sanitization contract: NaN quantizes as +0.0.
 #[inline(always)]
-fn san(t: f32) -> f32 {
+pub(crate) fn san(t: f32) -> f32 {
     if t.is_nan() {
         0.0
     } else {
@@ -91,7 +110,7 @@ fn fp4_code(thr: &[f32; 14], x: f32) -> u8 {
 /// ScaledF16 storage cast including the Format-level NaN→0 sanitization
 /// (±Inf saturates to the pinned absmax so the decode stays finite).
 #[inline(always)]
-fn scaled_f16_bits(t: f32) -> u16 {
+pub(crate) fn scaled_f16_bits(t: f32) -> u16 {
     let t = if t.is_nan() {
         0.0
     } else if t.is_infinite() {
@@ -104,13 +123,13 @@ fn scaled_f16_bits(t: f32) -> u16 {
 
 /// 256-entry FP8 decode table (exact: one `decode` per code, per tensor).
 #[inline]
-fn fp8_decode_lut(spec: &Fp8Spec) -> [f32; 256] {
+pub(crate) fn fp8_decode_lut(spec: &Fp8Spec) -> [f32; 256] {
     std::array::from_fn(|c| spec.decode(c as u8))
 }
 
 /// 16-entry FP4 decode table.
 #[inline]
-fn fp4_decode_lut(kind: Fp4Kind) -> [f32; 16] {
+pub(crate) fn fp4_decode_lut(kind: Fp4Kind) -> [f32; 16] {
     std::array::from_fn(|c| kind.decode(c as u8))
 }
 
@@ -123,7 +142,10 @@ fn fp4_decode_lut(kind: Fp4Kind) -> [f32; 16] {
 /// into the loop structure. Bit-exact with [`reference::scales`] (same
 /// per-group accumulation order; non-finite inputs skipped; all-zero
 /// groups get gamma = 1). Reuses `out`'s capacity.
-pub(crate) fn scales_into(
+///
+/// `pub` so tests/benches can pin the kernel tier explicitly (the public
+/// API routes through [`auto_scales_into`]).
+pub fn scales_into(
     format: Format,
     xs: &[f32],
     rows: usize,
@@ -181,7 +203,7 @@ pub(crate) fn scales_into(
 
 /// Fused quantize-dequantize into caller scratch: encode+decode collapse
 /// to a table lookup per element (no intermediate code buffer).
-pub(crate) fn qdq_into(
+pub fn qdq_into(
     format: Format,
     gran: Granularity,
     xs: &[f32],
@@ -208,7 +230,7 @@ pub(crate) fn qdq_into(
 
 /// Single-pass pack into a caller-owned [`PackedTensor`] (scales and code
 /// buffer reuse their capacity; every byte is overwritten).
-pub(crate) fn pack_into(
+pub fn pack_into(
     xs: &[f32],
     rows: usize,
     cols: usize,
@@ -238,7 +260,7 @@ pub(crate) fn pack_into(
 }
 
 /// Decode into caller scratch.
-pub(crate) fn unpack_into(p: &PackedTensor, out: &mut Vec<f32>) {
+pub fn unpack_into(p: &PackedTensor, out: &mut Vec<f32>) {
     let n = p.rows * p.cols;
     out.clear();
     out.resize(n, 0.0);
@@ -248,7 +270,7 @@ pub(crate) fn unpack_into(p: &PackedTensor, out: &mut Vec<f32>) {
 /// Fused decode-accumulate: `acc[i] += decode(i) * weight` without ever
 /// materializing the decoded tensor — the dp-sim all-reduce inner loop.
 /// Same decode loops as [`unpack_into`], only the sink differs.
-pub(crate) fn unpack_accumulate(p: &PackedTensor, acc: &mut [f32], weight: f32) {
+pub fn unpack_accumulate(p: &PackedTensor, acc: &mut [f32], weight: f32) {
     assert_eq!(acc.len(), p.rows * p.cols, "accumulator shape mismatch");
     decode_dispatch(p, acc, move |o, v| *o += v * weight);
 }
@@ -270,6 +292,97 @@ fn decode_dispatch(
         Format::Fp8(s) => decode8(s, &p.data, cols, p.granularity, &p.scales, out, sink),
         Format::F16 => decode16(&p.data, cols, p.granularity, &p.scales, out, sink),
         Format::F32 => decode32(&p.data, cols, p.granularity, &p.scales, out, sink),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Three-tier dispatch (reference → kernel → simd)
+// ---------------------------------------------------------------------------
+//
+// The public `QuantSpec`/`PackedTensor` entry points call these `auto_*`
+// functions; under `--features simd` they route to the lane-blocked tier
+// in `formats::simd`, otherwise to the kernel tier in this module. Both
+// tiers are bit-exact with `reference`, so the switch is observable only
+// as throughput.
+
+/// Auto-dispatched [`scales_into`].
+pub(crate) fn auto_scales_into(
+    format: Format,
+    xs: &[f32],
+    rows: usize,
+    cols: usize,
+    gran: Granularity,
+    out: &mut Vec<f32>,
+) {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::scales_into(format, xs, rows, cols, gran, out)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        scales_into(format, xs, rows, cols, gran, out)
+    }
+}
+
+/// Auto-dispatched [`qdq_into`].
+pub(crate) fn auto_qdq_into(
+    format: Format,
+    gran: Granularity,
+    xs: &[f32],
+    rows: usize,
+    cols: usize,
+    out: &mut Vec<f32>,
+) {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::qdq_into(format, gran, xs, rows, cols, out)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        qdq_into(format, gran, xs, rows, cols, out)
+    }
+}
+
+/// Auto-dispatched [`pack_into`].
+pub(crate) fn auto_pack_into(
+    xs: &[f32],
+    rows: usize,
+    cols: usize,
+    format: Format,
+    granularity: Granularity,
+    out: &mut PackedTensor,
+) {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::pack_into(xs, rows, cols, format, granularity, out)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        pack_into(xs, rows, cols, format, granularity, out)
+    }
+}
+
+/// Auto-dispatched [`unpack_into`].
+pub(crate) fn auto_unpack_into(p: &PackedTensor, out: &mut Vec<f32>) {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::unpack_into(p, out)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        unpack_into(p, out)
+    }
+}
+
+/// Auto-dispatched [`unpack_accumulate`].
+pub(crate) fn auto_unpack_accumulate(p: &PackedTensor, acc: &mut [f32], weight: f32) {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::unpack_accumulate(p, acc, weight)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        unpack_accumulate(p, acc, weight)
     }
 }
 
@@ -586,8 +699,9 @@ fn items_for(elems: usize, (num, den): (usize, usize)) -> usize {
 /// large ones. Chunk boundaries are aligned to the coarser of the two
 /// ratios' element granularities (so a byte of two fp4 nibbles is never
 /// split), and every element is written exactly once — the parallel and
-/// serial paths are bit-identical.
-fn chunked<I: Sync, O: Send, F>(
+/// serial paths are bit-identical. Shared with the `simd` tier, which
+/// plugs lane-blocked bodies into the same chunk/thread structure.
+pub(crate) fn chunked<I: Sync, O: Send, F>(
     n_elems: usize,
     inp: &[I],
     in_ratio: (usize, usize),

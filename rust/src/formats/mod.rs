@@ -30,17 +30,38 @@
 //! that is where run-level precision decisions live; this module stays
 //! the per-tensor substrate.
 //!
-//! # Kernel layer
+//! # Kernel layer: three-tier dispatch
 //!
-//! The tensor-level hot loops live in [`kernels`]: single-pass,
-//! monomorphized per (format × granularity), with `_into` variants
-//! (`QuantSpec::qdq_into`, `PackedTensor::pack_into` / `unpack_into` /
-//! `unpack_accumulate`) that write into caller-owned scratch so the
-//! gradient-communication and checkpoint paths allocate nothing per
-//! tensor. The kernels are **bit-exact** with the scalar per-element
-//! paths they replace; the pre-kernel scalar loops are retained verbatim
-//! in [`kernels::reference`] as the oracle for the property tests and the
-//! kernel-vs-scalar bench ratios (`benches/formats.rs`).
+//! The tensor-level hot loops exist in three tiers, each **bit-exact**
+//! with the one below it (pinned by `tests/property.rs` across every
+//! format × granularity pair, odd lengths, NaN/±Inf and
+//! non-lane-multiple tails):
+//!
+//!  1. [`kernels::reference`] — the pre-kernel scalar per-element loops,
+//!     retained verbatim. The oracle, and the baseline of the
+//!     kernel-vs-scalar speedup ratios (`benches/formats.rs`,
+//!     `repro perf`).
+//!  2. [`kernels`] — the default tier: single-pass, monomorphized per
+//!     (format × granularity), with `_into` variants
+//!     (`QuantSpec::qdq_into`, `PackedTensor::pack_into` / `unpack_into`
+//!     / `unpack_accumulate`) that write into caller-owned scratch so
+//!     the gradient-communication and checkpoint paths allocate nothing
+//!     per tensor.
+//!  3. `simd` (module compiled under the **`simd` cargo feature**) — the
+//!     portable lane-blocked tier: blocked absmax reduction, branchless
+//!     FP4 threshold classification, lane-pipelined FP8 encode and
+//!     blocked pack/unpack/unpack-accumulate, written as fixed-width
+//!     safe-Rust blocks the auto-vectorizer lowers to vector code.
+//!
+//! Dispatch is centralized in the `kernels::auto_*` functions: the
+//! public `QuantSpec`/`PackedTensor` entry points route through them, so
+//! building with `--features simd` switches `DpSim` gradient comm,
+//! checkpoint packing and `repro perf` to the lane tier with zero
+//! call-site changes. To add a target-specific lane (e.g. AVX-512 or
+//! NEON intrinsics), replace a block body in `formats/simd.rs` behind a
+//! `#[target_feature]` + runtime-detection guard and let the existing
+//! `--features simd` property suite pin it against the oracle — see the
+//! module docs of `formats/simd.rs` for the recipe.
 //!
 //! Rounding follows the paper's Appendix-A CUDA kernel exactly: nearest
 //! value with ties toward the *upper* neighbour (strict `<` thresholds at
@@ -51,6 +72,8 @@ pub mod codec;
 pub mod fp8;
 pub mod fp16;
 pub mod kernels;
+#[cfg(feature = "simd")]
+pub mod simd;
 
 pub use codec::{shape2d, ClampSpec, Codec, Format, PackedTensor, QuantSpec, ScaledF16};
 

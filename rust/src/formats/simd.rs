@@ -1,0 +1,615 @@
+//! Lane-blocked SIMD codec tier (`--features simd`), the third rung of
+//! the dispatch ladder `reference` → `kernels` → `simd`.
+//!
+//! `std::simd` is nightly-only and raw `core::arch` intrinsics would cost
+//! `unsafe` plus per-target code, so this tier is written as *portable*
+//! lane-blocked safe Rust: every hot loop processes fixed [`LANES`]-wide
+//! `[f32; LANES]` blocks with straight-line, branch-free lane bodies that
+//! the auto-vectorizer lowers to vector instructions on any target
+//! (SSE/AVX2 on x86-64, NEON on aarch64). The block bodies are exactly
+//! the shapes LLVM vectorizes: no early exits, no lane-crossing
+//! dependencies, masks instead of branches.
+//!
+//! What is blocked per tier component:
+//!
+//!  * **absmax / scale reduction** ([`scales_into`]) — per-granularity-
+//!    group blocked reduction over [`LANES`] partial maxima with a
+//!    branchless non-finite mask ([`finite_abs`]); the horizontal combine
+//!    and the `gamma = MAX / amax` epilogue are unchanged. `f32::max`
+//!    over non-negative finite values is associative and commutative, so
+//!    the blocked reduction is bit-identical to the sequential scalar
+//!    fold in `kernels::scales_into` / `reference::scales`.
+//!  * **FP4 classification** — branchless threshold counting: for a block
+//!    of 8 scaled values, all 14 grid thresholds are compared lane-wise
+//!    and the compare results summed into per-lane indices (the same
+//!    `14 - |{t : x < t}|` decision as [`Fp4Kind::index_for`], just
+//!    transposed so the lanes vectorize). Decode goes through the same
+//!    16-entry LUT as the kernel tier.
+//!  * **FP8 encode** — the prescale/sanitize/store pipeline runs lane-
+//!    blocked; the per-lane bit-twiddle is the shared integer-domain
+//!    [`Fp8Spec::encode`] core (one source of truth for the rounding, so
+//!    the tier cannot drift from the oracle).
+//!  * **pack / unpack / unpack-accumulate** — blocked nibble packing (a
+//!    block of 8 codes is 4 output bytes, so pairs never straddle a
+//!    block), blocked LUT decode, and a blocked fused `acc += dec * w`
+//!    sink.
+//!
+//! F16/F32 payloads are pure memory transforms with no classification to
+//! vectorize; they delegate to the kernel tier unchanged.
+//!
+//! Threading, chunk alignment and tail semantics are shared with the
+//! kernel tier via [`kernels::chunked`]; the sub-[`LANES`] tail of each
+//! chunk runs the scalar kernel body in the same element order, so
+//! odd lengths and non-multiple-of-lane-width tensors are bit-exact too
+//! (pinned by `tests/property.rs` under `--features simd`).
+//!
+//! # How to add a target-specific lane
+//!
+//! Keep the entry points and the block decomposition; replace a block
+//! body (e.g. the 14-threshold classify) with a `#[target_feature]`
+//! intrinsic version behind a runtime `is_x86_feature_detected!` check,
+//! falling back to the portable body. The property tests pin any such
+//! lane against `kernels::reference` bit-for-bit — a new lane is correct
+//! exactly when the existing `--features simd` test suite passes with it
+//! enabled.
+
+use super::codec::{Codec, Format, PackedTensor};
+use super::fp8::Fp8Spec;
+use super::kernels::{self, chunked, fp4_decode_lut, fp8_decode_lut, per_gran, san};
+use super::{Fp4Kind, Granularity};
+
+/// Block width of the portable lane tier: 8 × f32 = one AVX2 register,
+/// two NEON registers. Even, so FP4 nibble pairs never straddle a block.
+pub const LANES: usize = 8;
+
+/// Row-major (row, col) cursor used to materialize per-lane gamma blocks
+/// from the monomorphized granularity closure. For tensor granularity the
+/// closure ignores the counters and the whole cursor folds away.
+struct Pos {
+    r: usize,
+    c: usize,
+    cols: usize,
+}
+
+impl Pos {
+    #[inline(always)]
+    fn new(base: usize, cols: usize) -> Self {
+        Pos { r: base / cols, c: base % cols, cols }
+    }
+
+    /// Fill one gamma block, advancing the cursor by `gam.len()` elements.
+    #[inline(always)]
+    fn fill(&mut self, g: &impl Fn(usize, usize) -> f32, gam: &mut [f32; LANES]) {
+        for slot in gam.iter_mut() {
+            *slot = g(self.r, self.c);
+            self.step();
+        }
+    }
+
+    /// Gamma of the current element; advances the cursor by one.
+    #[inline(always)]
+    fn next(&mut self, g: &impl Fn(usize, usize) -> f32) -> f32 {
+        let gamma = g(self.r, self.c);
+        self.step();
+        gamma
+    }
+
+    #[inline(always)]
+    fn step(&mut self) {
+        self.c += 1;
+        if self.c == self.cols {
+            self.c = 0;
+            self.r += 1;
+        }
+    }
+}
+
+/// |x| with non-finite values mapped to 0.0 — branch-free (one compare +
+/// select on the bit pattern). 0.0 is the identity of the absmax fold, so
+/// this is bit-exact with the reference's skip-if-non-finite.
+#[inline(always)]
+fn finite_abs(x: f32) -> f32 {
+    let abs_bits = x.to_bits() & 0x7FFF_FFFF;
+    if abs_bits >= 0x7F80_0000 {
+        0.0
+    } else {
+        f32::from_bits(abs_bits)
+    }
+}
+
+/// Blocked absmax of one scale group ([`LANES`] partial maxima, then a
+/// horizontal combine and a scalar tail).
+fn absmax_block(xs: &[f32]) -> f32 {
+    let nb = xs.len() / LANES;
+    let mut m = [0.0f32; LANES];
+    for bi in 0..nb {
+        let blk = &xs[bi * LANES..][..LANES];
+        for j in 0..LANES {
+            m[j] = m[j].max(finite_abs(blk[j]));
+        }
+    }
+    let mut amax = 0.0f32;
+    for &v in &m {
+        amax = amax.max(v);
+    }
+    for &x in &xs[nb * LANES..] {
+        amax = amax.max(finite_abs(x));
+    }
+    amax
+}
+
+// ---------------------------------------------------------------------------
+// Entry points (same signatures as the kernel tier)
+// ---------------------------------------------------------------------------
+
+/// Lane-blocked per-group absmax scales; bit-exact with
+/// [`kernels::scales_into`].
+pub fn scales_into(
+    format: Format,
+    xs: &[f32],
+    rows: usize,
+    cols: usize,
+    gran: Granularity,
+    out: &mut Vec<f32>,
+) {
+    let n_groups = gran.n_groups(rows, cols);
+    out.clear();
+    out.resize(n_groups, 0.0);
+    if format == Format::F32 {
+        out.fill(1.0);
+        return;
+    }
+    match gran {
+        Granularity::Tensor => out[0] = absmax_block(xs),
+        Granularity::Row => {
+            for (a, row) in out.iter_mut().zip(xs.chunks(cols.max(1))) {
+                *a = absmax_block(row);
+            }
+        }
+        Granularity::Col => {
+            // column groups are contiguous within a row: the lane blocks
+            // run straight over the accumulator
+            for row in xs.chunks(cols.max(1)) {
+                for (a, &x) in out.iter_mut().zip(row) {
+                    *a = a.max(finite_abs(x));
+                }
+            }
+        }
+    }
+    let max = format.max_value();
+    for a in out.iter_mut() {
+        *a = if *a == 0.0 { 1.0 } else { max / *a };
+    }
+}
+
+/// Lane-blocked fused quantize-dequantize; bit-exact with
+/// [`kernels::qdq_into`]. F16/F32 delegate to the kernel tier.
+pub fn qdq_into(
+    format: Format,
+    gran: Granularity,
+    xs: &[f32],
+    rows: usize,
+    cols: usize,
+    out: &mut Vec<f32>,
+) {
+    let (kind4, spec8) = match format {
+        Format::Fp4(k) => (Some(k), None),
+        Format::Fp8(s) => (None, Some(s)),
+        Format::F16 | Format::F32 => {
+            return kernels::qdq_into(format, gran, xs, rows, cols, out)
+        }
+    };
+    out.clear();
+    out.resize(xs.len(), 0.0);
+    if xs.is_empty() {
+        return;
+    }
+    let mut scales = Vec::new();
+    scales_into(format, xs, rows, cols, gran, &mut scales);
+    let cols = cols.max(1);
+    let out = out.as_mut_slice();
+    match (kind4, spec8) {
+        (Some(k), _) => qdq4(k, xs, cols, gran, &scales, out),
+        (_, Some(s)) => qdq8(s, xs, cols, gran, &scales, out),
+        _ => unreachable!(),
+    }
+}
+
+/// Lane-blocked single-pass pack; bit-exact with [`kernels::pack_into`].
+/// F16/F32 delegate to the kernel tier.
+pub fn pack_into(
+    xs: &[f32],
+    rows: usize,
+    cols: usize,
+    format: Format,
+    granularity: Granularity,
+    out: &mut PackedTensor,
+) {
+    match format {
+        Format::Fp4(_) | Format::Fp8(_) => {}
+        Format::F16 | Format::F32 => {
+            return kernels::pack_into(xs, rows, cols, format, granularity, out)
+        }
+    }
+    out.format = format;
+    out.granularity = granularity;
+    out.rows = rows;
+    out.cols = cols;
+    scales_into(format, xs, rows, cols, granularity, &mut out.scales);
+    let bits = format.bits_per_element() as usize;
+    out.data.resize((xs.len() * bits).div_ceil(8), 0);
+    if xs.is_empty() {
+        return;
+    }
+    let cols = cols.max(1);
+    let data = out.data.as_mut_slice();
+    let scales = out.scales.as_slice();
+    match format {
+        Format::Fp4(k) => pack4(k, xs, cols, granularity, scales, data),
+        Format::Fp8(s) => pack8(s, xs, cols, granularity, scales, data),
+        Format::F16 | Format::F32 => unreachable!(),
+    }
+}
+
+/// Lane-blocked decode; bit-exact with [`kernels::unpack_into`].
+pub fn unpack_into(p: &PackedTensor, out: &mut Vec<f32>) {
+    match p.format {
+        Format::Fp4(_) | Format::Fp8(_) => {}
+        Format::F16 | Format::F32 => return kernels::unpack_into(p, out),
+    }
+    let n = p.rows * p.cols;
+    out.clear();
+    out.resize(n, 0.0);
+    decode_dispatch(p, out.as_mut_slice(), |o, v| *o = v);
+}
+
+/// Lane-blocked fused decode-accumulate; bit-exact with
+/// [`kernels::unpack_accumulate`].
+pub fn unpack_accumulate(p: &PackedTensor, acc: &mut [f32], weight: f32) {
+    match p.format {
+        Format::Fp4(_) | Format::Fp8(_) => {}
+        Format::F16 | Format::F32 => return kernels::unpack_accumulate(p, acc, weight),
+    }
+    assert_eq!(acc.len(), p.rows * p.cols, "accumulator shape mismatch");
+    decode_dispatch(p, acc, move |o, v| *o += v * weight);
+}
+
+fn decode_dispatch(
+    p: &PackedTensor,
+    out: &mut [f32],
+    sink: impl Fn(&mut f32, f32) + Copy + Sync,
+) {
+    if out.is_empty() {
+        return;
+    }
+    let cols = p.cols.max(1);
+    match p.format {
+        Format::Fp4(k) => decode4(k, &p.data, cols, p.granularity, &p.scales, out, sink),
+        Format::Fp8(s) => decode8(s, &p.data, cols, p.granularity, &p.scales, out, sink),
+        Format::F16 | Format::F32 => unreachable!("lane tier covers fp4/fp8 only"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FP4: branchless threshold classification
+// ---------------------------------------------------------------------------
+
+/// Scale + sanitize one block, then classify every lane against all 14
+/// thresholds (the vectorizable transpose of [`Fp4Kind::index_for`]).
+/// Returns the signed value indices (0..15).
+#[inline(always)]
+fn classify_block(
+    thr: &[f32; 14],
+    blk: &[f32],
+    gam: &[f32; LANES],
+    idx: &mut [usize; LANES],
+) {
+    let mut v = [0.0f32; LANES];
+    for j in 0..LANES {
+        v[j] = san(blk[j] * gam[j]);
+    }
+    let mut above = [0u32; LANES];
+    for &t in thr.iter() {
+        for j in 0..LANES {
+            above[j] += (v[j] < t) as u32;
+        }
+    }
+    for j in 0..LANES {
+        idx[j] = thr.len() - above[j] as usize;
+    }
+}
+
+fn qdq4(
+    kind: Fp4Kind,
+    xs: &[f32],
+    cols: usize,
+    gran: Granularity,
+    scales: &[f32],
+    out: &mut [f32],
+) {
+    let vals = kind.values();
+    let thr = kind.thresholds();
+    per_gran!(gran, scales, |g| {
+        chunked(xs.len(), xs, (1, 1), out, (1, 1), |base, xs, out| {
+            let mut pos = Pos::new(base, cols);
+            let nb = xs.len() / LANES;
+            let mut gam = [0.0f32; LANES];
+            let mut idx = [0usize; LANES];
+            for bi in 0..nb {
+                let blk = &xs[bi * LANES..][..LANES];
+                let ob = &mut out[bi * LANES..][..LANES];
+                pos.fill(&g, &mut gam);
+                classify_block(thr, blk, &gam, &mut idx);
+                for j in 0..LANES {
+                    ob[j] = vals[idx[j]] / gam[j];
+                }
+            }
+            let t0 = nb * LANES;
+            for (&x, o) in xs[t0..].iter().zip(out[t0..].iter_mut()) {
+                let gamma = pos.next(&g);
+                *o = vals[Fp4Kind::index_for(thr, san(x * gamma))] / gamma;
+            }
+        })
+    });
+}
+
+fn pack4(
+    kind: Fp4Kind,
+    xs: &[f32],
+    cols: usize,
+    gran: Granularity,
+    scales: &[f32],
+    data: &mut [u8],
+) {
+    let thr = kind.thresholds();
+    per_gran!(gran, scales, |g| {
+        chunked(xs.len(), xs, (1, 1), data, (1, 2), |base, xs, out| {
+            let mut pos = Pos::new(base, cols);
+            let nb = xs.len() / LANES;
+            let mut gam = [0.0f32; LANES];
+            let mut idx = [0usize; LANES];
+            for bi in 0..nb {
+                let blk = &xs[bi * LANES..][..LANES];
+                let ob = &mut out[bi * (LANES / 2)..][..LANES / 2];
+                pos.fill(&g, &mut gam);
+                classify_block(thr, blk, &gam, &mut idx);
+                for (k, byte) in ob.iter_mut().enumerate() {
+                    let lo = Fp4Kind::index_to_code(idx[2 * k]);
+                    let hi = Fp4Kind::index_to_code(idx[2 * k + 1]);
+                    *byte = lo | (hi << 4);
+                }
+            }
+            // scalar tail, kernel-identical: odd final element leaves the
+            // high nibble as 0 padding
+            let tail = &xs[nb * LANES..];
+            let tb = &mut out[nb * (LANES / 2)..];
+            for (pair, byte) in tail.chunks(2).zip(tb.iter_mut()) {
+                let lo = Fp4Kind::index_to_code(Fp4Kind::index_for(
+                    thr,
+                    san(pair[0] * pos.next(&g)),
+                ));
+                let hi = if let Some(&x1) = pair.get(1) {
+                    Fp4Kind::index_to_code(Fp4Kind::index_for(thr, san(x1 * pos.next(&g))))
+                } else {
+                    0
+                };
+                *byte = lo | (hi << 4);
+            }
+        })
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn decode4(
+    kind: Fp4Kind,
+    data: &[u8],
+    cols: usize,
+    gran: Granularity,
+    scales: &[f32],
+    out: &mut [f32],
+    sink: impl Fn(&mut f32, f32) + Copy + Sync,
+) {
+    let dec = fp4_decode_lut(kind);
+    per_gran!(gran, scales, |g| {
+        chunked(out.len(), data, (1, 2), out, (1, 1), |base, bytes, out| {
+            let mut pos = Pos::new(base, cols);
+            let nb = out.len() / LANES;
+            let mut gam = [0.0f32; LANES];
+            let mut codes = [0usize; LANES];
+            for bi in 0..nb {
+                let bb = &bytes[bi * (LANES / 2)..][..LANES / 2];
+                let ob = &mut out[bi * LANES..][..LANES];
+                pos.fill(&g, &mut gam);
+                for k in 0..LANES / 2 {
+                    codes[2 * k] = (bb[k] & 0xF) as usize;
+                    codes[2 * k + 1] = (bb[k] >> 4) as usize;
+                }
+                for j in 0..LANES {
+                    sink(&mut ob[j], dec[codes[j]] / gam[j]);
+                }
+            }
+            // chunk bases are pair-aligned, so local parity == global
+            let t0 = nb * LANES;
+            for (j, o) in out[t0..].iter_mut().enumerate() {
+                let jj = t0 + j;
+                let code = (bytes[jj >> 1] >> ((jj & 1) * 4)) & 0xF;
+                sink(o, dec[code as usize] / pos.next(&g));
+            }
+        })
+    });
+}
+
+// ---------------------------------------------------------------------------
+// FP8: lane-blocked prescale around the shared integer-domain encode
+// ---------------------------------------------------------------------------
+
+fn qdq8(
+    spec: Fp8Spec,
+    xs: &[f32],
+    cols: usize,
+    gran: Granularity,
+    scales: &[f32],
+    out: &mut [f32],
+) {
+    let dec = fp8_decode_lut(&spec);
+    per_gran!(gran, scales, |g| {
+        chunked(xs.len(), xs, (1, 1), out, (1, 1), |base, xs, out| {
+            let mut pos = Pos::new(base, cols);
+            let nb = xs.len() / LANES;
+            let mut gam = [0.0f32; LANES];
+            for bi in 0..nb {
+                let blk = &xs[bi * LANES..][..LANES];
+                let ob = &mut out[bi * LANES..][..LANES];
+                pos.fill(&g, &mut gam);
+                let mut v = [0.0f32; LANES];
+                for j in 0..LANES {
+                    v[j] = san(blk[j] * gam[j]);
+                }
+                for j in 0..LANES {
+                    ob[j] = dec[spec.encode(v[j]) as usize] / gam[j];
+                }
+            }
+            let t0 = nb * LANES;
+            for (&x, o) in xs[t0..].iter().zip(out[t0..].iter_mut()) {
+                let gamma = pos.next(&g);
+                *o = dec[spec.encode(san(x * gamma)) as usize] / gamma;
+            }
+        })
+    });
+}
+
+fn pack8(
+    spec: Fp8Spec,
+    xs: &[f32],
+    cols: usize,
+    gran: Granularity,
+    scales: &[f32],
+    data: &mut [u8],
+) {
+    per_gran!(gran, scales, |g| {
+        chunked(xs.len(), xs, (1, 1), data, (1, 1), |base, xs, out| {
+            let mut pos = Pos::new(base, cols);
+            let nb = xs.len() / LANES;
+            let mut gam = [0.0f32; LANES];
+            for bi in 0..nb {
+                let blk = &xs[bi * LANES..][..LANES];
+                let ob = &mut out[bi * LANES..][..LANES];
+                pos.fill(&g, &mut gam);
+                let mut v = [0.0f32; LANES];
+                for j in 0..LANES {
+                    v[j] = san(blk[j] * gam[j]);
+                }
+                for j in 0..LANES {
+                    ob[j] = spec.encode(v[j]);
+                }
+            }
+            let t0 = nb * LANES;
+            for (&x, o) in xs[t0..].iter().zip(out[t0..].iter_mut()) {
+                *o = spec.encode(san(x * pos.next(&g)));
+            }
+        })
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn decode8(
+    spec: Fp8Spec,
+    data: &[u8],
+    cols: usize,
+    gran: Granularity,
+    scales: &[f32],
+    out: &mut [f32],
+    sink: impl Fn(&mut f32, f32) + Copy + Sync,
+) {
+    let dec = fp8_decode_lut(&spec);
+    per_gran!(gran, scales, |g| {
+        chunked(out.len(), data, (1, 1), out, (1, 1), |base, bytes, out| {
+            let mut pos = Pos::new(base, cols);
+            let nb = out.len() / LANES;
+            let mut gam = [0.0f32; LANES];
+            for bi in 0..nb {
+                let bb = &bytes[bi * LANES..][..LANES];
+                let ob = &mut out[bi * LANES..][..LANES];
+                pos.fill(&g, &mut gam);
+                for j in 0..LANES {
+                    sink(&mut ob[j], dec[bb[j] as usize] / gam[j]);
+                }
+            }
+            let t0 = nb * LANES;
+            for (&b, o) in bytes[t0..].iter().zip(out[t0..].iter_mut()) {
+                sink(o, dec[b as usize] / pos.next(&g));
+            }
+        })
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    const FMTS: [Format; 5] = [
+        Format::Fp4(Fp4Kind::E2M1),
+        Format::Fp4(Fp4Kind::E1M2),
+        Format::Fp4(Fp4Kind::E3M0),
+        Format::Fp8(crate::formats::fp8::E4M3),
+        Format::Fp8(crate::formats::fp8::E5M2),
+    ];
+    const GRANS: [Granularity; 3] = [Granularity::Tensor, Granularity::Row, Granularity::Col];
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn lane_tier_matches_kernel_tier_odd_shapes() {
+        let mut rng = Rng::new(7);
+        for (rows, cols) in [(1, 1), (1, 7), (3, 5), (5, 17), (13, 9)] {
+            let mut xs = rng.normal_vec(rows * cols, 2.0);
+            if xs.len() > 3 {
+                xs[1] = f32::NAN;
+                xs[2] = f32::INFINITY;
+                xs[3] = f32::NEG_INFINITY;
+            }
+            for fmt in FMTS {
+                for gran in GRANS {
+                    let (mut a, mut b) = (Vec::new(), Vec::new());
+                    qdq_into(fmt, gran, &xs, rows, cols, &mut a);
+                    kernels::qdq_into(fmt, gran, &xs, rows, cols, &mut b);
+                    assert_eq!(bits(&a), bits(&b), "{fmt:?}/{gran:?} {rows}x{cols}");
+
+                    let mut p = PackedTensor::empty(fmt, gran);
+                    let mut q = PackedTensor::empty(fmt, gran);
+                    pack_into(&xs, rows, cols, fmt, gran, &mut p);
+                    kernels::pack_into(&xs, rows, cols, fmt, gran, &mut q);
+                    assert_eq!(p.data, q.data, "{fmt:?}/{gran:?} {rows}x{cols}");
+                    assert_eq!(bits(&p.scales), bits(&q.scales));
+
+                    unpack_into(&p, &mut a);
+                    kernels::unpack_into(&q, &mut b);
+                    assert_eq!(bits(&a), bits(&b));
+
+                    let mut acc1 = rng.normal_vec(rows * cols, 1.0);
+                    let mut acc2 = acc1.clone();
+                    unpack_accumulate(&p, &mut acc1, 0.37);
+                    kernels::unpack_accumulate(&q, &mut acc2, 0.37);
+                    assert_eq!(bits(&acc1), bits(&acc2));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_tier_empty_tensor_safe() {
+        for fmt in FMTS {
+            let mut out = Vec::new();
+            qdq_into(fmt, Granularity::Row, &[], 0, 4, &mut out);
+            assert!(out.is_empty());
+            let mut p = PackedTensor::empty(fmt, Granularity::Col);
+            pack_into(&[], 0, 4, fmt, Granularity::Col, &mut p);
+            unpack_into(&p, &mut out);
+            assert!(out.is_empty());
+            unpack_accumulate(&p, &mut [], 1.0);
+        }
+    }
+}

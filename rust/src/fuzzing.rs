@@ -1,0 +1,152 @@
+//! Shared fuzzing oracles: the property checks behind both the
+//! `cargo fuzz` targets in `fuzz/fuzz_targets/` and the fuzzer-free
+//! `tests/fuzz_smoke.rs` suite (which drives the same oracles from a
+//! seeded RNG on stable, so every CI run exercises them without
+//! libFuzzer). Each oracle takes an arbitrary byte string, derives a
+//! structured input from it, and panics on any invariant violation —
+//! panics are exactly what the fuzzer minimizes.
+//!
+//! The three surfaces are the ones where arbitrary input must uphold
+//! structural invariants:
+//!
+//!  * the codec round-trip (`QuantSpec`/`PackedTensor`): storage decode
+//!    must equal simulation qdq bit-for-bit, outputs stay finite, and
+//!    clamped specs are refused by `pack`;
+//!  * the `QuantSpec` string grammar: parse never panics and accepted
+//!    specs round-trip through `Display`;
+//!  * the `PrecisionPolicy`/`Schedule` grammar: parse never panics,
+//!    accepted policies satisfy `validate()` (clamped wire/checkpoint
+//!    rejection, schedule-overlap rejection), round-trip through
+//!    `Display`, and resolve without panicking at arbitrary steps.
+//!
+//! Doc-hidden: this is test infrastructure, not API.
+
+use crate::formats::{fp8, Format, Fp4Kind, Granularity, PackedTensor, QuantSpec};
+use crate::policy::PrecisionPolicy;
+
+/// All storage formats, indexable by a fuzz byte.
+const FORMATS: [Format; 7] = [
+    Format::Fp4(Fp4Kind::E2M1),
+    Format::Fp4(Fp4Kind::E1M2),
+    Format::Fp4(Fp4Kind::E3M0),
+    Format::Fp8(fp8::E4M3),
+    Format::Fp8(fp8::E5M2),
+    Format::F16,
+    Format::F32,
+];
+const GRANS: [Granularity; 3] = [Granularity::Tensor, Granularity::Row, Granularity::Col];
+
+fn bits_of(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Codec round-trip oracle. The first four bytes select format,
+/// granularity, rows and cols; the rest reinterpret as raw f32 bit
+/// patterns (the full adversarial range: NaN payloads, ±Inf, subnormals,
+/// -0.0), truncated or zero-padded to `rows * cols`.
+pub fn check_codec_roundtrip(data: &[u8]) {
+    if data.len() < 4 {
+        return;
+    }
+    let format = FORMATS[data[0] as usize % FORMATS.len()];
+    let gran = GRANS[data[1] as usize % GRANS.len()];
+    let rows = 1 + (data[2] as usize % 16);
+    let cols = 1 + (data[3] as usize % 48);
+    let mut xs: Vec<f32> = data[4..]
+        .chunks_exact(4)
+        .map(|b| f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])))
+        .take(rows * cols)
+        .collect();
+    xs.resize(rows * cols, 0.0);
+
+    let spec = QuantSpec::new(format, gran);
+    let q = spec.qdq(&xs, rows, cols);
+    assert!(
+        q.iter().all(|v| v.is_finite()),
+        "qdq emitted a non-finite value: {spec} {rows}x{cols}"
+    );
+    let mut q2 = Vec::new();
+    spec.qdq_into(&xs, rows, cols, &mut q2);
+    assert_eq!(bits_of(&q), bits_of(&q2), "qdq vs qdq_into: {spec}");
+
+    // storage == simulation, bit for bit
+    let p = spec.pack(&xs, rows, cols).expect("unclamped pack must succeed");
+    assert_eq!(bits_of(&p.unpack()), bits_of(&q), "unpack != qdq: {spec}");
+    assert_eq!(
+        p.wire_bytes(),
+        spec.wire_bytes(rows, cols),
+        "wire accounting: {spec}"
+    );
+
+    // fused accumulate with weight 1 into zeros is plain unpack
+    let mut acc = vec![0.0f32; rows * cols];
+    p.unpack_accumulate(&mut acc, 1.0);
+    let mut dec = Vec::new();
+    p.unpack_into(&mut dec);
+    assert_eq!(bits_of(&acc), bits_of(&dec), "accumulate(0, 1.0) != unpack: {spec}");
+
+    // pack_into into stale scratch must equal the one-shot pack
+    let mut reused = PackedTensor::empty(format, gran);
+    reused.scales = vec![3.0; 7];
+    reused.data = vec![0xAA; 5];
+    PackedTensor::pack_into(&xs, rows, cols, format, gran, &mut reused);
+    assert_eq!(reused.data, p.data, "pack_into scratch reuse: {spec}");
+    assert_eq!(bits_of(&reused.scales), bits_of(&p.scales), "{spec}");
+
+    // clamped specs: qdq must not panic on raw-bit input (the OCC
+    // quantile path is NaN-hardened) and pack must refuse
+    let alpha = 0.5 + 0.499 * f64::from(data[0]) / 255.0;
+    if alpha > 0.5 && alpha < 1.0 {
+        let clamped = spec.with_clamp(alpha, data[1] & 1 == 1);
+        let cq = clamped.qdq(&xs, rows, cols);
+        assert_eq!(cq.len(), xs.len(), "{clamped}");
+        assert!(
+            clamped.pack(&xs, rows, cols).is_err(),
+            "pack must reject clamped spec {clamped}"
+        );
+    }
+}
+
+/// `QuantSpec` grammar oracle: parse never panics; accepted specs render
+/// canonically and re-parse to the same spec.
+pub fn check_quantspec_parse(data: &[u8]) {
+    let s = String::from_utf8_lossy(data);
+    let Ok(spec) = QuantSpec::parse(&s) else {
+        return; // rejection is fine — we only require "no panic"
+    };
+    let canon = spec.to_string();
+    let back = QuantSpec::parse(&canon)
+        .unwrap_or_else(|e| panic!("canonical form {canon:?} rejected: {e}"));
+    assert_eq!(back, spec, "round-trip through {canon:?}");
+    assert_eq!(back.to_string(), canon, "display must be a fixed point");
+    // from_name is the same grammar
+    assert_eq!(QuantSpec::from_name(&canon).unwrap(), spec);
+}
+
+/// `PrecisionPolicy`/`Schedule` grammar oracle: parse never panics;
+/// accepted policies are valid (PR-2/PR-5 invariants: no clamped
+/// wire/checkpoint spec, no overlapping schedule phases), round-trip
+/// through `Display`, and resolve at arbitrary steps without panicking.
+pub fn check_policy_parse(data: &[u8]) {
+    let s = String::from_utf8_lossy(data);
+    let Ok(p) = PrecisionPolicy::parse(&s) else {
+        return;
+    };
+    p.validate()
+        .unwrap_or_else(|e| panic!("parse accepted an invalid policy {s:?}: {e}"));
+    let canon = p.to_string();
+    let back = PrecisionPolicy::parse(&canon)
+        .unwrap_or_else(|e| panic!("canonical form {canon:?} rejected: {e}"));
+    assert_eq!(back, p, "round-trip through {canon:?}");
+    assert_eq!(back.to_string(), canon, "display must be a fixed point");
+    for step in [0usize, 1, 7, 100, 10_000, 1 << 30] {
+        let (idx, wire) = p.wire_resolution_at(step);
+        assert_eq!(wire, p.wire_spec_at(step), "step {step}");
+        assert!(wire.clamp.is_none(), "clamped wire spec leaked at step {step}");
+        if let Some(ck) = p.ckpt_spec_at(step) {
+            assert!(ck.clamp.is_none(), "clamped checkpoint spec at step {step}");
+        }
+        let _ = idx;
+        let _ = p.phase_label_at(step);
+    }
+}

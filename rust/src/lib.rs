@@ -56,6 +56,8 @@ pub mod data;
 pub mod eval;
 pub mod experiments;
 pub mod formats;
+#[doc(hidden)]
+pub mod fuzzing;
 pub mod policy;
 pub mod quant;
 pub mod report;

@@ -221,6 +221,12 @@ fn cmd_dp(args: &Args) -> Result<()> {
 
 fn cmd_repro(args: &Args) -> Result<()> {
     let id = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    // `repro perf` handles its own context so it can degrade to the
+    // codec-only sections when artifacts are absent (the CI perf-
+    // trajectory job), and understands --gate / --baseline=<path>.
+    if id == "perf" {
+        return experiments::perf::perf_cmd(args);
+    }
     let artifacts = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let mut ctx = experiments::Ctx::new(&artifacts)?;
     if let Some(s) = args.get("seed") {

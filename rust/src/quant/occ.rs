@@ -166,6 +166,65 @@ pub fn residual_sparsity(xs: &[f32], alpha: f64) -> f64 {
     nnz as f64 / xs.len() as f64
 }
 
+#[doc(hidden)]
+pub mod reference {
+    //! Sort-based clamp oracle: the pre-quickselect implementation, kept
+    //! as the third leg of the `clamp_tensor_into` differential tests
+    //! (reference == fused kernel == whatever tier the codec dispatch
+    //! selects). Ordering uses `total_cmp` like the quickselect path, so
+    //! the two agree bit-for-bit even on NaN-contaminated input. Not part
+    //! of the public API.
+
+    use super::{interp, min_of, rank_of};
+
+    /// Sort-based signed quantile (full sort instead of selection). The
+    /// upper neighbour is a `min_of` fold over the whole tail — on clean
+    /// data that is exactly `sorted[i+1]`, and on NaN-contaminated data it
+    /// skips NaNs exactly like the selection path's `min_of(above)`, so
+    /// the two stay bit-identical even in the degenerate corners.
+    pub fn quantile_sorted(xs: &[f32], q: f64) -> f32 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(f32::total_cmp);
+        let (i, frac) = rank_of(q, sorted.len());
+        if i + 1 >= sorted.len() {
+            sorted[sorted.len() - 1]
+        } else {
+            interp(sorted[i], min_of(&sorted[i + 1..]), frac)
+        }
+    }
+
+    /// Sort-based [`super::clamp_tensor_into`]: independent quantiles for
+    /// both bounds (with the same lo>hi pass-through hardening), then the
+    /// same clamp/residual/nnz loop. Returns (clamped, delta, nnz).
+    pub fn clamp_tensor_sorted(xs: &[f32], alpha: f64) -> (Vec<f32>, Vec<f32>, usize) {
+        if xs.is_empty() {
+            return (Vec::new(), Vec::new(), 0);
+        }
+        let a = alpha.max(1.0 - alpha);
+        let hi = quantile_sorted(xs, a);
+        let lo = quantile_sorted(xs, 1.0 - a);
+        let (lo, hi) = if lo <= hi {
+            (lo, hi)
+        } else {
+            (f32::NEG_INFINITY, f32::INFINITY)
+        };
+        let mut clamped = Vec::with_capacity(xs.len());
+        let mut delta = Vec::with_capacity(xs.len());
+        let mut nnz = 0usize;
+        for &x in xs {
+            let c = x.clamp(lo, hi);
+            let d = x - c;
+            nnz += (d != 0.0) as usize;
+            clamped.push(c);
+            delta.push(d);
+        }
+        (clamped, delta, nnz)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,150 @@
+//! Fuzzer-free smoke suite over the `fp4train::fuzzing` oracles — the
+//! same invariant checks the `cargo fuzz` targets run under libFuzzer,
+//! driven here by a seeded RNG so they execute in every stable-toolchain
+//! CI run (proptest is unavailable offline; this mirrors the seeded
+//! harness idiom of `tests/property.rs`). Three input regimes per
+//! surface: raw random bytes, grammar-alphabet soup, and byte-level
+//! mutations of known-valid canonical strings (the near-miss region
+//! where parsers actually break).
+
+use fp4train::fuzzing;
+use fp4train::util::Rng;
+
+fn random_bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
+    let n = rng.below(max_len as u64 + 1) as usize;
+    (0..n).map(|_| rng.below(256) as u8).collect()
+}
+
+/// Bytes drawn from the spec/policy grammar alphabet — far denser in
+/// near-parseable strings than uniform bytes.
+fn grammar_soup(rng: &mut Rng, max_len: usize) -> Vec<u8> {
+    const ALPHABET: &[u8] = b"fp4fp8f16f32e2m1e4m3e5m2tensorrowcolclamp@+comp.0159/;,:=wagmcks.. ";
+    let n = rng.below(max_len as u64 + 1) as usize;
+    (0..n)
+        .map(|_| ALPHABET[rng.below(ALPHABET.len() as u64) as usize])
+        .collect()
+}
+
+/// Apply 1..=4 random byte edits (overwrite / insert / delete).
+fn mutate(rng: &mut Rng, base: &str) -> Vec<u8> {
+    let mut v = base.as_bytes().to_vec();
+    for _ in 0..1 + rng.below(4) {
+        match rng.below(3) {
+            0 if !v.is_empty() => {
+                let i = rng.below(v.len() as u64) as usize;
+                v[i] = rng.below(256) as u8;
+            }
+            1 => {
+                let i = rng.below(v.len() as u64 + 1) as usize;
+                v.insert(i, rng.below(256) as u8);
+            }
+            _ if !v.is_empty() => {
+                v.remove(rng.below(v.len() as u64) as usize);
+            }
+            _ => {}
+        }
+    }
+    v
+}
+
+const VALID_SPECS: &[&str] = &[
+    "f32",
+    "f16",
+    "fp8:e4m3",
+    "fp8:e5m2/row",
+    "fp4:e2m1",
+    "fp4:e2m1/col",
+    "fp4:e1m2/tensor",
+    "fp4:e3m0/row/clamp@0.999",
+    "fp4:e2m1/row/clamp@0.999+comp",
+    "fp8:e4m3/col/clamp@0.97",
+];
+
+const VALID_POLICIES: &[&str] = &[
+    "w=fp4:e2m1/col,a=fp4:e2m1/row,g=fp8:e5m2,wire=fp8:e4m3",
+    "w=fp4:e2m1/col+dge@k5,a=fp4:e2m1/row/clamp@0.999+comp",
+    "wire=fp8:e4m3;0..100:f32",
+    "a=fp4:e2m1;0..50:wire=f32;50..200:wire=fp8:e4m3",
+    "ckpt=fp8:e4m3,master=f32;1000..:a=fp4:e3m0/row",
+];
+
+#[test]
+fn smoke_codec_roundtrip_random_bytes() {
+    for seed in 0..400u64 {
+        let mut rng = Rng::new(0xFA11_0000 + seed);
+        fuzzing::check_codec_roundtrip(&random_bytes(&mut rng, 512));
+    }
+}
+
+#[test]
+fn smoke_codec_roundtrip_adversarial_patterns() {
+    // all-0x00, all-0xFF (NaN-payload floats), and alternating headers
+    // across every format/gran selector byte
+    for fmt_byte in 0u8..7 {
+        for gran_byte in 0u8..3 {
+            for fill in [0x00u8, 0xFF, 0x7F, 0x80] {
+                let mut data = vec![fmt_byte, gran_byte, 3, 5];
+                data.extend(std::iter::repeat(fill).take(64));
+                fuzzing::check_codec_roundtrip(&data);
+            }
+        }
+    }
+}
+
+#[test]
+fn smoke_quantspec_parse_three_regimes() {
+    for seed in 0..600u64 {
+        let mut rng = Rng::new(0xFA11_1000 + seed);
+        fuzzing::check_quantspec_parse(&random_bytes(&mut rng, 64));
+        fuzzing::check_quantspec_parse(&grammar_soup(&mut rng, 48));
+        let base = VALID_SPECS[rng.below(VALID_SPECS.len() as u64) as usize];
+        fuzzing::check_quantspec_parse(&mutate(&mut rng, base));
+    }
+    // the valid corpus itself must be accepted (the oracle then checks
+    // the round-trip invariants on it)
+    for s in VALID_SPECS {
+        assert!(
+            fp4train::formats::QuantSpec::parse(s).is_ok(),
+            "corpus spec {s:?} must parse"
+        );
+        fuzzing::check_quantspec_parse(s.as_bytes());
+    }
+}
+
+#[test]
+fn smoke_policy_parse_three_regimes() {
+    for seed in 0..600u64 {
+        let mut rng = Rng::new(0xFA11_2000 + seed);
+        fuzzing::check_policy_parse(&random_bytes(&mut rng, 96));
+        fuzzing::check_policy_parse(&grammar_soup(&mut rng, 80));
+        let base = VALID_POLICIES[rng.below(VALID_POLICIES.len() as u64) as usize];
+        fuzzing::check_policy_parse(&mutate(&mut rng, base));
+    }
+    for s in VALID_POLICIES {
+        assert!(
+            fp4train::policy::PrecisionPolicy::parse(s).is_ok(),
+            "corpus policy {s:?} must parse"
+        );
+        fuzzing::check_policy_parse(s.as_bytes());
+    }
+}
+
+#[test]
+fn smoke_policy_rejects_known_invalids_without_panic() {
+    // clamped wire/checkpoint and overlapping phases must be *rejected*
+    // (not accepted, not panicked on) — the PR-2/PR-5 invariants the
+    // fuzz oracle enforces for arbitrary input
+    for s in [
+        "wire=fp4:e2m1/row/clamp@0.99",
+        "ckpt=fp8:e4m3/clamp@0.999",
+        "a=f32;0..100:f16;50..150:f32",
+        "w=fp4:e2m1/clamp@1.5",
+        "w=fp4:e2m1/clamp@0.4",
+    ] {
+        fuzzing::check_policy_parse(s.as_bytes());
+        assert!(
+            fp4train::policy::PrecisionPolicy::parse(s).is_err(),
+            "must reject {s:?}"
+        );
+    }
+}

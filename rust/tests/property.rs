@@ -696,6 +696,192 @@ fn prop_schedule_resolution_exact_at_boundaries() {
 }
 
 // ---------------------------------------------------------------------------
+// Three-way tier differentials: scalar-reference == kernel == dispatched
+// tier (which is the simd tier under `--features simd`). The fused paths
+// PR 3 added without a third implementation — `occ::clamp_tensor_into`
+// and `unpack_accumulate` — get their cross-check here, including
+// empty-slice and single-element groups.
+// ---------------------------------------------------------------------------
+
+use fp4train::formats::kernels;
+
+fn bits_of(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn prop_unpack_accumulate_three_way_differential() {
+    // single-element groups first: 1x1 tensors, plus Row with cols=1 and
+    // Col with rows=1 (every scale group holds exactly one element)
+    let shapes = [(1usize, 1usize), (5, 1), (1, 5)];
+    for fmt in ALL_FORMATS {
+        for gran in ALL_GRANS {
+            // empty slice through all three implementations
+            let p = PackedTensor::pack(&[], 0, 0, fmt, gran);
+            p.unpack_accumulate(&mut [], 0.5);
+            kernels::unpack_accumulate(&p, &mut [], 0.5);
+            assert_eq!(reference::unpack(&p), Vec::<f32>::new());
+            for seed in cases(10) {
+                let mut rng = Rng::new(seed);
+                for (rows, cols) in shapes {
+                    let xs = rng.normal_vec(rows * cols, 2.0);
+                    let p = PackedTensor::pack(&xs, rows, cols, fmt, gran);
+                    let base = rng.normal_vec(rows * cols, 0.3);
+                    let w = 0.25 + rng.unit_f32();
+                    // dispatched public entry (simd tier under the feature)
+                    let mut acc_pub = base.clone();
+                    p.unpack_accumulate(&mut acc_pub, w);
+                    // explicit kernel tier
+                    let mut acc_k = base.clone();
+                    kernels::unpack_accumulate(&p, &mut acc_k, w);
+                    // scalar oracle: unpack then axpy
+                    let want: Vec<f32> = reference::unpack(&p)
+                        .iter()
+                        .zip(&base)
+                        .map(|(d, b)| b + d * w)
+                        .collect();
+                    assert_eq!(bits_of(&acc_pub), bits_of(&want), "seed {seed} {fmt} {gran:?} {rows}x{cols}");
+                    assert_eq!(bits_of(&acc_k), bits_of(&want), "seed {seed} {fmt} {gran:?} {rows}x{cols}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_clamp_tensor_into_matches_sort_reference() {
+    // empty slice
+    let (mut c, mut d) = (vec![9.0f32], vec![9.0f32]);
+    assert_eq!(occ::clamp_tensor_into(&[], 0.99, &mut c, &mut d), 0);
+    assert!(c.is_empty() && d.is_empty());
+    for seed in cases(60) {
+        let mut rng = Rng::new(seed);
+        // single-element and tiny slices are the degenerate ranks
+        let n = match rng.below(4) {
+            0 => 1,
+            1 => 2 + rng.below(6) as usize,
+            _ => 50 + rng.below(2000) as usize,
+        };
+        let mut xs = rng.normal_vec(n, 2.0);
+        for _ in 0..rng.below(4) {
+            let i = rng.below(n as u64) as usize;
+            xs[i] = match rng.below(3) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                _ => f32::NEG_INFINITY,
+            };
+        }
+        for alpha in [0.999f64, 0.99, 0.9, 0.75, 0.5] {
+            let (wc, wd, wn) = occ::reference::clamp_tensor_sorted(&xs, alpha);
+            let nnz = occ::clamp_tensor_into(&xs, alpha, &mut c, &mut d);
+            assert_eq!(nnz, wn, "seed {seed} n={n} alpha={alpha}");
+            assert_eq!(bits_of(&c), bits_of(&wc), "seed {seed} n={n} alpha={alpha}");
+            assert_eq!(bits_of(&d), bits_of(&wd), "seed {seed} n={n} alpha={alpha}");
+            // and the allocating wrapper is the same kernel
+            let (ac, ad) = occ::clamp_tensor(&xs, alpha);
+            assert_eq!(bits_of(&ac), bits_of(&c), "seed {seed}");
+            assert_eq!(bits_of(&ad), bits_of(&d), "seed {seed}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD tier differentials (compiled only under `--features simd`): the
+// lane-blocked tier must be bit-exact with the kernel tier — and hence,
+// via the kernel==reference properties above, with the scalar oracle —
+// across every format × granularity pair, odd lengths, NaN/±Inf and
+// non-lane-multiple tails.
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "simd")]
+mod simd_tier {
+    use super::*;
+    use fp4train::formats::simd;
+
+    #[test]
+    fn prop_simd_scales_bit_exact_with_kernel() {
+        for seed in cases(40) {
+            let mut rng = Rng::new(seed);
+            for fmt in ALL_FORMATS {
+                for gran in ALL_GRANS {
+                    let (rows, cols, xs) = adversarial_tensor(&mut rng);
+                    let (mut a, mut b) = (Vec::new(), Vec::new());
+                    simd::scales_into(fmt, &xs, rows, cols, gran, &mut a);
+                    kernels::scales_into(fmt, &xs, rows, cols, gran, &mut b);
+                    assert_eq!(bits_of(&a), bits_of(&b), "seed {seed} {fmt} {gran:?} {rows}x{cols}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_simd_qdq_bit_exact_with_kernel() {
+        for seed in cases(40) {
+            let mut rng = Rng::new(seed);
+            for fmt in ALL_FORMATS {
+                for gran in ALL_GRANS {
+                    let (rows, cols, xs) = adversarial_tensor(&mut rng);
+                    let (mut a, mut b) = (Vec::new(), Vec::new());
+                    simd::qdq_into(fmt, gran, &xs, rows, cols, &mut a);
+                    kernels::qdq_into(fmt, gran, &xs, rows, cols, &mut b);
+                    assert_eq!(bits_of(&a), bits_of(&b), "seed {seed} {fmt} {gran:?} {rows}x{cols}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_simd_pack_unpack_bit_exact_with_kernel() {
+        for seed in cases(40) {
+            let mut rng = Rng::new(seed);
+            for fmt in ALL_FORMATS {
+                for gran in ALL_GRANS {
+                    let (rows, cols, xs) = adversarial_tensor(&mut rng);
+                    let mut p = PackedTensor::empty(fmt, gran);
+                    let mut q = PackedTensor::empty(fmt, gran);
+                    simd::pack_into(&xs, rows, cols, fmt, gran, &mut p);
+                    kernels::pack_into(&xs, rows, cols, fmt, gran, &mut q);
+                    assert_eq!(p.data, q.data, "seed {seed} {fmt} {gran:?} {rows}x{cols}");
+                    assert_eq!(bits_of(&p.scales), bits_of(&q.scales), "seed {seed} {fmt} {gran:?}");
+                    let (mut a, mut b) = (Vec::new(), Vec::new());
+                    simd::unpack_into(&p, &mut a);
+                    kernels::unpack_into(&q, &mut b);
+                    assert_eq!(bits_of(&a), bits_of(&b), "seed {seed} {fmt} {gran:?}");
+                    let base = rng.normal_vec(rows * cols, 0.3);
+                    let w = 0.25 + rng.unit_f32();
+                    let mut acc1 = base.clone();
+                    let mut acc2 = base;
+                    simd::unpack_accumulate(&p, &mut acc1, w);
+                    kernels::unpack_accumulate(&q, &mut acc2, w);
+                    assert_eq!(bits_of(&acc1), bits_of(&acc2), "seed {seed} {fmt} {gran:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_simd_exact_on_lane_boundary_lengths() {
+        // lengths straddling the 8-wide block boundary: 1..=2*LANES+1
+        // exercises every tail size, including exact multiples
+        for n in 1usize..=17 {
+            let mut rng = Rng::new(0xBEEF + n as u64);
+            let xs = rng.normal_vec(n, 3.0);
+            for fmt in ALL_FORMATS {
+                let (mut a, mut b) = (Vec::new(), Vec::new());
+                simd::qdq_into(fmt, Granularity::Tensor, &xs, 1, n, &mut a);
+                kernels::qdq_into(fmt, Granularity::Tensor, &xs, 1, n, &mut b);
+                assert_eq!(bits_of(&a), bits_of(&b), "{fmt} n={n}");
+                let mut p = PackedTensor::empty(fmt, Granularity::Tensor);
+                let mut q = PackedTensor::empty(fmt, Granularity::Tensor);
+                simd::pack_into(&xs, 1, n, fmt, Granularity::Tensor, &mut p);
+                kernels::pack_into(&xs, 1, n, fmt, Granularity::Tensor, &mut q);
+                assert_eq!(p.data, q.data, "{fmt} n={n}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Manifest parser fuzz: generated manifests parse back to what was written
 // ---------------------------------------------------------------------------
 
