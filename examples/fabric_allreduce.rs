@@ -1,0 +1,89 @@
+//! Quantized all-reduce on a two-tier fabric — no artifacts needed.
+//!
+//! 64 simulated workers sit in 8 nodes of 8. The hierarchical all-reduce
+//! keeps the plentiful intra-node links at FP8 and squeezes the scarce
+//! inter-node links down to FP4 rows — one policy string:
+//!
+//! ```text
+//! wire=fp8:e4m3,wire.inter=fp4:e2m1/row
+//! ```
+//!
+//! The demo reduces a synthetic gradient through three wire policies on
+//! the same topology, prints the per-link-class byte ledger, and reports
+//! each arm's error against the exact f32 mean.
+//!
+//! ```bash
+//! cargo run --release --example fabric_allreduce
+//! ```
+
+use fp4train::fabric::{flat_reference_mean, Fabric, LinkClass, SyntheticSource, Topology};
+use fp4train::policy::PrecisionPolicy;
+
+fn rmse(a: &[f32], b: &[f32]) -> f64 {
+    let s: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum();
+    (s / a.len() as f64).sqrt()
+}
+
+fn main() -> anyhow::Result<()> {
+    let topology = Topology::parse("hier:8x8")?;
+    let n = 1 << 16; // one 64k-element gradient tensor, shaped 256x256
+    let (rows, cols) = (256, 256);
+    let src = SyntheticSource { workers: topology.workers(), len: n, seed: 42 };
+
+    let mut exact = Vec::new();
+    flat_reference_mean(&src, &mut exact);
+
+    println!("two-tier all-reduce on {topology}: {n} f32 grads per worker\n");
+    let arms = [
+        ("f32 everywhere", "wire=f32"),
+        ("fp8 everywhere", "wire=fp8:e4m3"),
+        ("fp8 intra / fp4 inter", "wire=fp8:e4m3,wire.inter=fp4:e2m1/row"),
+    ];
+    let mut baseline = 0u64;
+    for (name, policy_str) in arms {
+        let policy = PrecisionPolicy::parse(policy_str)?;
+        let (_, specs) = policy.link_resolution_at(0);
+
+        let mut fabric = Fabric::new(topology)?;
+        let mut out = Vec::new();
+        fabric.all_reduce_mean(&src, rows, cols, &specs, &mut out)?;
+
+        println!("{name}  ({policy_str})");
+        for link in LinkClass::ALL {
+            let l = fabric.stats.link(link);
+            if l.sends == 0 {
+                continue;
+            }
+            println!(
+                "  {:>5} links: {:>3} sends, {:>8.1} KB  ({:.2}x vs f32)",
+                link,
+                l.sends,
+                l.bytes as f64 / 1024.0,
+                l.bytes_f32_equiv as f64 / l.bytes as f64,
+            );
+        }
+        let total = fabric.stats.total_bytes();
+        if baseline == 0 {
+            baseline = total;
+        }
+        println!(
+            "  total {:>8.1} KB ({:.1}% of the f32 wire), rmse vs exact mean {:.2e}\n",
+            total as f64 / 1024.0,
+            100.0 * total as f64 / baseline as f64,
+            rmse(&out, &exact),
+        );
+    }
+    println!(
+        "the mixed policy pays FP8 only where links are cheap — the scarce \
+         inter-node tier ships FP4 rows (paper §4.1, FP8-LM comm pushed one \
+         format further)"
+    );
+    Ok(())
+}

@@ -10,27 +10,35 @@
 //! of gradient compression (including its accumulated rounding) is
 //! measured, not modeled, and wire bytes are counted exactly.
 //!
-//! The wire spec is the `Wire` class of a [`PrecisionPolicy`], resolved
-//! *per step* from the policy's schedule — an FP8→FP4 wire switch mid-run
-//! is one `-o precision=...` flag (e.g.
-//! `wire=fp4:e2m1/row;0..100:wire=fp8:e4m3`), not code. [`CommStats`]
-//! accounts bytes per schedule phase, so the summary shows exactly what
-//! each precision regime cost on the wire. Any clamp-free spec works:
-//! `fp8:e4m3` is the paper's FP8-LM scheme, `fp4:e2m1/row` halves the
-//! bytes again, `f32` is the exact baseline (clamped wire specs are
-//! rejected by [`PrecisionPolicy::validate`] — the ΔY residual is not
-//! transmitted).
+//! The all-reduce itself runs on a [`Fabric`]: the default flat topology
+//! reproduces the legacy hub reduction bit-for-bit (same kernel calls,
+//! same accumulation order, same byte counts — pinned by regression
+//! test), while [`DpSim::with_topology`] swaps in a ring, two-level
+//! hierarchy or broadcast tree (`-o topology=hier:4x8`) whose links
+//! requantize per hop and account bytes per
+//! [`LinkClass`](crate::policy::LinkClass).
 //!
-//! §Perf: the comm path is zero-alloc per step — each gradient owns a
-//! persistent [`PackedTensor`] wire buffer (`pack_into` reuses its
-//! capacity and re-stamps the format on a wire switch) and a persistent
-//! accumulator that the payload decodes straight into
-//! (`unpack_accumulate`, weighted by a precomputed `1/workers`
-//! reciprocal), so the decoded tensor is never materialized. Policy
-//! resolution is one schedule scan per step
-//! ([`PrecisionPolicy::wire_resolution_at`]), and the per-phase stats are
-//! keyed by phase index — labels are materialized once, on first entry
-//! into a phase.
+//! The wire spec is the `Wire` class of a [`PrecisionPolicy`], resolved
+//! *per step and per link class* from the policy's schedule — an FP8→FP4
+//! wire switch mid-run is one `-o precision=...` flag (e.g.
+//! `wire=fp4:e2m1/row;0..100:wire=fp8:e4m3`), and quantizing only the
+//! scarce inter-node links is `wire.inter=fp4:e2m1/row`, not code.
+//! [`CommStats`] accounts bytes per schedule phase, so the summary shows
+//! exactly what each precision regime cost on the wire. Any clamp-free
+//! spec works: `fp8:e4m3` is the paper's FP8-LM scheme, `fp4:e2m1/row`
+//! halves the bytes again, `f32` is the exact baseline (clamped wire
+//! specs are rejected by [`PrecisionPolicy::validate`] — the ΔY residual
+//! is not transmitted).
+//!
+//! §Perf: the comm path reuses persistent buffers per step — the fabric
+//! owns one wire [`PackedTensor`](crate::formats::PackedTensor) scratch
+//! (`pack_into` reuses its capacity and re-stamps the format on a wire
+//! switch) and each gradient keeps a persistent accumulator that flat
+//! payloads decode straight into (`unpack_accumulate`, weighted by a
+//! precomputed `1/workers` reciprocal). Policy resolution is one schedule
+//! scan per step ([`PrecisionPolicy::link_resolution_at`]), and the
+//! per-phase stats are keyed by phase index — labels are materialized
+//! once, on first entry into a phase.
 
 use std::sync::Arc;
 
@@ -39,7 +47,8 @@ use xla::Literal;
 
 use crate::data::corpus::Corpus;
 use crate::data::loader::{LoaderConfig, Sampler};
-use crate::formats::{shape2d, PackedTensor, QuantSpec};
+use crate::fabric::{Fabric, FabricStats, SliceSource, Topology};
+use crate::formats::{shape2d, QuantSpec};
 use crate::policy::PrecisionPolicy;
 use crate::runtime::{ConfigEntry, Engine, StepSpec};
 
@@ -105,14 +114,13 @@ pub struct DpSim {
     pub stats: CommStats,
     pub losses: Vec<f32>,
     /// Persistent all-reduce accumulators, one per gradient tensor
-    /// (zeroed per step — never reallocated).
+    /// (rewritten per step — capacity never shrinks).
     acc: Vec<Vec<f32>>,
-    /// Persistent wire payloads, one per gradient tensor: `pack_into`
-    /// reuses their code/scale buffers every step (§Perf: the old path
-    /// allocated pack + unpack + accumulate buffers per gradient per
-    /// worker per step). `pack_into` re-stamps format/granularity, so a
-    /// scheduled wire switch reuses the same buffers.
-    wire: Vec<PackedTensor>,
+    /// The comm fabric every all-reduce runs on. Defaults to
+    /// `flat:<workers>` (bit-for-bit the legacy hub reduction); swapped by
+    /// [`DpSim::with_topology`]. Owns the persistent wire scratch and the
+    /// per-link byte ledger.
+    fabric: Fabric,
 }
 
 impl DpSim {
@@ -128,6 +136,10 @@ impl DpSim {
         seed: i32,
         precision: PrecisionPolicy,
     ) -> Result<Self> {
+        anyhow::ensure!(
+            workers > 0,
+            "dp-sim needs at least one worker (got workers=0)"
+        );
         precision.validate()?;
         let (entry, state, n) = super::bootstrap_state(&engine, preset, policy, seed)?;
         let grad_spec = entry.step("grad")?.clone();
@@ -138,10 +150,7 @@ impl DpSim {
             .take(n)
             .map(|io| vec![0.0f32; io.elements()])
             .collect();
-        let wire0 = precision.wire_spec_at(0);
-        let wire = (0..n)
-            .map(|_| PackedTensor::empty(wire0.format, wire0.granularity))
-            .collect();
+        let fabric = Fabric::new(Topology::Flat { workers })?;
         let samplers = (0..workers)
             .map(|w| {
                 Sampler::new(
@@ -169,8 +178,33 @@ impl DpSim {
             stats: CommStats::default(),
             losses: Vec::new(),
             acc,
-            wire,
+            fabric,
         })
+    }
+
+    /// Rebuild the comm fabric on `topology` (worker count must match the
+    /// sim's). `flat:<workers>` is the default and reproduces the legacy
+    /// hub reduction bit-for-bit; any other topology changes the
+    /// reduction's hop structure, per-hop requantization, and per-link
+    /// byte accounting.
+    pub fn with_topology(mut self, topology: Topology) -> Result<Self> {
+        anyhow::ensure!(
+            topology.workers() == self.samplers.len(),
+            "topology {topology} has {} workers but the sim has {}",
+            topology.workers(),
+            self.samplers.len()
+        );
+        self.fabric = Fabric::new(topology)?;
+        Ok(self)
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.fabric.topology
+    }
+
+    /// Per-link byte/send accounting for every all-reduce so far.
+    pub fn fabric_stats(&self) -> &FabricStats {
+        &self.fabric.stats
     }
 
     pub fn n_params(&self) -> usize {
@@ -186,27 +220,30 @@ impl DpSim {
         self.precision.wire_spec_at(self.step)
     }
 
-    /// One data-parallel step: per-worker grads -> quantized all-reduce ->
-    /// Adam. The wire spec is resolved from the policy schedule at the
-    /// current step. Returns the mean worker loss.
+    /// One data-parallel step: per-worker grads -> all-reduce on the
+    /// fabric (quantized per link class) -> Adam. The wire specs are
+    /// resolved from the policy schedule at the current step. Returns the
+    /// mean worker loss.
     pub fn dp_step(&mut self) -> Result<f32> {
         let n = self.n_params();
         let workers = self.samplers.len();
         let tok_io = self.grad_spec.inputs.last().unwrap().clone();
-        // one schedule scan resolves both the wire spec and the phase key
-        let (phase_id, comm) = self.precision.wire_resolution_at(self.step);
-        // 1/workers hoisted out of the accumulate loop (one multiply per
-        // element instead of a divide)
-        let inv_workers = 1.0 / workers as f32;
+        // one schedule scan resolves the per-link wire specs and the
+        // phase key
+        let (phase_id, specs) = self.precision.link_resolution_at(self.step);
+        // the phase ledger is labeled with the topology's dominant link
+        // spec — on the default flat fabric that is exactly the Wire class
+        let label_spec = specs[self.fabric.topology.primary_link().index()];
 
-        // zero the persistent all-reduce accumulators (no reallocation)
-        for a in &mut self.acc {
-            a.fill(0.0);
-        }
         let mut loss_sum = 0.0f64;
-        let mut step_bytes = 0u64;
-        let mut step_equiv = 0u64;
-
+        // Gather every worker's gradients ([tensor][worker], so each
+        // tensor's slice feeds the fabric as one `GradSource`), then
+        // reduce tensor by tensor. On the flat topology the per-
+        // accumulator operation order is unchanged from the legacy
+        // worker-outer loop (workers 0..W in order), so results are
+        // bit-identical.
+        let mut grads: Vec<Vec<Vec<f32>>> =
+            (0..n).map(|_| Vec::with_capacity(workers)).collect();
         for w in 0..workers {
             let batch = self.samplers[w].next_batch();
             let tokens = Engine::tokens_literal(&tok_io, &batch.tokens)?;
@@ -214,40 +251,23 @@ impl DpSim {
             args.push(&tokens);
             let mut outs = self.engine.run(&self.grad_spec, &args)?;
             loss_sum += Engine::to_f32_scalar(&outs.pop().unwrap())? as f64;
-
-            let mut elems = 0u64;
             for (gi, lit) in outs.iter().enumerate() {
-                let g = Engine::to_f32_vec(lit)?;
-                elems += g.len() as u64;
-                if comm.is_raw() {
-                    step_bytes += 4 * g.len() as u64;
-                    for (a, &v) in self.acc[gi].iter_mut().zip(&g) {
-                        *a += v * inv_workers;
-                    }
-                } else {
-                    // real wire payload: packed codes + per-group f32
-                    // scales, encoded into the persistent per-gradient
-                    // buffer and decoded straight into the accumulator
-                    // (fused unpack-accumulate — the decoded tensor is
-                    // never materialized)
-                    let (rows, cols) = shape2d(&self.grad_spec.outputs[gi].shape, g.len());
-                    let wire = &mut self.wire[gi];
-                    PackedTensor::pack_into(
-                        &g,
-                        rows,
-                        cols,
-                        comm.format,
-                        comm.granularity,
-                        wire,
-                    );
-                    step_bytes += wire.wire_bytes();
-                    wire.unpack_accumulate(&mut self.acc[gi], inv_workers);
-                }
+                grads[gi].push(Engine::to_f32_vec(lit)?);
             }
-            // byte accounting hoisted out of the per-tensor loop
-            step_equiv += 4 * elems;
             self.stats.reduces += 1;
         }
+
+        let bytes_before = self.fabric.stats.total_bytes();
+        let equiv_before = self.fabric.stats.total_f32_equiv();
+        for (gi, per_worker) in grads.iter().enumerate() {
+            let len = per_worker[0].len();
+            let (rows, cols) = shape2d(&self.grad_spec.outputs[gi].shape, len);
+            let src = SliceSource { grads: per_worker };
+            self.fabric
+                .all_reduce_mean(&src, rows, cols, &specs, &mut self.acc[gi])?;
+        }
+        let step_bytes = self.fabric.stats.total_bytes() - bytes_before;
+        let step_equiv = self.fabric.stats.total_f32_equiv() - equiv_before;
         self.stats.bytes_sent += step_bytes;
         self.stats.bytes_f32_equiv += step_equiv;
         let precision = &self.precision;
@@ -257,7 +277,7 @@ impl DpSim {
                 None => "base".to_string(),
                 Some(i) => precision.schedule.phases[i].range.to_string(),
             },
-            &comm,
+            &label_spec,
         );
         phase.steps += 1;
         phase.bytes_sent += step_bytes;
@@ -308,6 +328,9 @@ impl DpSim {
             self.entry.key,
             self.wire_spec()
         );
+        if !matches!(self.fabric.topology, Topology::Flat { .. }) {
+            s.push_str(&format!(" topology={}", self.fabric.topology));
+        }
         if !self.precision.schedule.is_empty() {
             s.push_str(&format!(
                 " ({} scheduled phases)",

@@ -2,6 +2,20 @@
 //! (Table 5), the ideal FP4 speedup, and the DGE/OCC-overhead-adjusted
 //! speedup. Reproduced symbolically so `repro tab5` regenerates the
 //! paper's 3.12× / 2.95× numbers exactly.
+//!
+//! Beyond the paper's compute model, this module predicts the *comm* side
+//! from a `(Topology, PrecisionPolicy)` pair: [`bytes_per_step`] derives
+//! exact per-link-class wire bytes from each link's [`QuantSpec`] (no
+//! hardcoded fp4-vs-fp32 ratio — any format × granularity the policy
+//! names), mirroring the fabric collectives transmission-for-
+//! transmission so predictions match [`crate::fabric::FabricStats`]
+//! accounting *exactly* (asserted per arm by `repro fabric`), and
+//! [`step_time_us`] turns byte/send counts into a serialized alpha-beta
+//! step-time estimate with per-link-class latency/bandwidth parameters.
+
+use crate::fabric::Topology;
+use crate::formats::QuantSpec;
+use crate::policy::{LinkClass, PrecisionPolicy};
 
 /// One row of Table 5.
 #[derive(Clone, Debug)]
@@ -85,6 +99,147 @@ pub fn occ_overhead_share(h: f64, s: f64, alpha: f64) -> f64 {
     48.0 * (1.0 - alpha) * h / (6.0 * h + 5.0 * s + 36.0)
 }
 
+// ---------------------------------------------------------------------------
+// Policy-aware comm model: per-link bytes + alpha-beta step time
+
+/// Wire cost of one transmission of a `(1, cols)` payload under `spec`:
+/// bit-packed codes plus 4 bytes per f32 scale — except raw f32, which
+/// travels scale-free (`4*cols`), mirroring the fabric's transmit path.
+fn transmission_bytes(spec: &QuantSpec, cols: usize) -> u64 {
+    if spec.is_raw() {
+        4 * cols as u64
+    } else {
+        spec.wire_bytes(1, cols)
+    }
+}
+
+/// Exact per-link-class wire bytes one fabric mean all-reduce of a single
+/// `(1, n_params)` gradient tensor moves under `policy` at `step`,
+/// indexed by [`LinkClass::index`]. Enumerates the same transmissions
+/// (shapes, specs, counts) as the simulated collectives, so it equals
+/// `FabricStats::bytes_by_link()` exactly:
+///
+///  * `flat:W` — `W` full-tensor `inter` sends;
+///  * `ring:W` — per non-empty balanced shard, `W-1` reduce-scatter plus
+///    `W-1` all-gather `inter` hops of `(1, shard_len)`;
+///  * `hier:NxP` — `N*(P-1)` `intra` sends up and down, `N-1` `inter`
+///    sends up and down, full tensor each;
+///  * `tree:W@F` — `W-1` `up` and `W-1` `down` full-tensor sends.
+pub fn bytes_per_step_at(
+    policy: &PrecisionPolicy,
+    n_params: usize,
+    topology: Topology,
+    step: usize,
+) -> [u64; 4] {
+    let (_, specs) = policy.link_resolution_at(step);
+    let tb = |link: LinkClass, cols: usize| {
+        transmission_bytes(&specs[link.index()], cols)
+    };
+    let mut bytes = [0u64; 4];
+    match topology {
+        Topology::Flat { workers } => {
+            bytes[LinkClass::InterNode.index()] =
+                workers as u64 * tb(LinkClass::InterNode, n_params);
+        }
+        Topology::Ring { workers } => {
+            if workers > 1 {
+                let mut total = 0u64;
+                for s in 0..workers {
+                    let len_s = n_params / workers + usize::from(s < n_params % workers);
+                    if len_s > 0 {
+                        total += 2 * (workers as u64 - 1) * tb(LinkClass::InterNode, len_s);
+                    }
+                }
+                bytes[LinkClass::InterNode.index()] = total;
+            }
+        }
+        Topology::Hier { nodes, per_node } => {
+            bytes[LinkClass::IntraNode.index()] = 2
+                * (nodes * (per_node - 1)) as u64
+                * tb(LinkClass::IntraNode, n_params);
+            bytes[LinkClass::InterNode.index()] =
+                2 * (nodes as u64 - 1) * tb(LinkClass::InterNode, n_params);
+        }
+        Topology::Tree { workers, .. } => {
+            bytes[LinkClass::TreeUp.index()] =
+                (workers as u64 - 1) * tb(LinkClass::TreeUp, n_params);
+            bytes[LinkClass::TreeDown.index()] =
+                (workers as u64 - 1) * tb(LinkClass::TreeDown, n_params);
+        }
+    }
+    bytes
+}
+
+/// [`bytes_per_step_at`] at the policy's base (step 0) resolution.
+pub fn bytes_per_step(
+    policy: &PrecisionPolicy,
+    n_params: usize,
+    topology: Topology,
+) -> [u64; 4] {
+    bytes_per_step_at(policy, n_params, topology, 0)
+}
+
+/// Transmission counts per link class for one all-reduce of a `(1,
+/// n_params)` tensor — the alpha (latency) side of the time estimate.
+pub fn sends_per_step(n_params: usize, topology: Topology) -> [u64; 4] {
+    let mut sends = [0u64; 4];
+    match topology {
+        Topology::Flat { workers } => {
+            sends[LinkClass::InterNode.index()] = workers as u64;
+        }
+        Topology::Ring { workers } => {
+            if workers > 1 {
+                let nonzero = workers.min(n_params) as u64;
+                sends[LinkClass::InterNode.index()] = 2 * (workers as u64 - 1) * nonzero;
+            }
+        }
+        Topology::Hier { nodes, per_node } => {
+            sends[LinkClass::IntraNode.index()] = 2 * (nodes * (per_node - 1)) as u64;
+            sends[LinkClass::InterNode.index()] = 2 * (nodes as u64 - 1);
+        }
+        Topology::Tree { workers, .. } => {
+            sends[LinkClass::TreeUp.index()] = workers as u64 - 1;
+            sends[LinkClass::TreeDown.index()] = workers as u64 - 1;
+        }
+    }
+    sends
+}
+
+/// Alpha-beta parameters of one link class: per-transmission launch
+/// latency and sustained bandwidth.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkParams {
+    pub alpha_us: f64,
+    /// Sustained gigabytes per second.
+    pub gbps: f64,
+}
+
+impl LinkParams {
+    /// NVLink-class node-local link.
+    pub const INTRA: LinkParams = LinkParams { alpha_us: 2.0, gbps: 300.0 };
+    /// IB-class cross-node link (also the tree up/down default).
+    pub const INTER: LinkParams = LinkParams { alpha_us: 5.0, gbps: 50.0 };
+
+    /// Defaults per link class, indexed by [`LinkClass::index`].
+    pub fn defaults() -> [LinkParams; 4] {
+        [Self::INTRA, Self::INTER, Self::INTER, Self::INTER]
+    }
+}
+
+/// Serialized alpha-beta step-time estimate in microseconds: every
+/// transmission pays its link's launch latency, bytes drain at the
+/// link's bandwidth, no compute/comm overlap. A deliberate lower-fidelity
+/// model — its value is ranking (topology, policy) arms, and its inputs
+/// (`sends`, `bytes` per link class) are exact.
+pub fn step_time_us(sends: &[u64; 4], bytes: &[u64; 4], params: &[LinkParams; 4]) -> f64 {
+    (0..4)
+        .map(|i| {
+            sends[i] as f64 * params[i].alpha_us
+                + bytes[i] as f64 / (params[i].gbps * 1e3)
+        })
+        .sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,5 +298,105 @@ mod tests {
         // GeMM share grows with h, so FP4 gains grow (paper's motivation
         // for larger models benefiting more).
         assert!(ideal_speedup(8192.0, 2048.0) > ideal_speedup(1024.0, 2048.0));
+    }
+
+    // -- policy-aware comm model --
+
+    use crate::fabric::{Fabric, SyntheticSource};
+
+    #[test]
+    fn flat_bytes_derive_from_the_wire_spec_not_a_hardcoded_ratio() {
+        let n = 1000;
+        let topo = Topology::Flat { workers: 4 };
+        // fp8 tensor-wise: 1 byte/elem + one 4-byte scale, x4 workers
+        let fp8 = PrecisionPolicy::parse("wire=fp8:e4m3").unwrap();
+        assert_eq!(bytes_per_step(&fp8, n, topo), [0, 4 * (1000 + 4), 0, 0]);
+        // fp4 row-wise on a (1, n) tensor: n/2 bytes + one scale
+        let fp4 = PrecisionPolicy::parse("wire=fp4:e2m1/row").unwrap();
+        assert_eq!(bytes_per_step(&fp4, n, topo), [0, 4 * (500 + 4), 0, 0]);
+        // raw f32 travels scale-free
+        let f32p = PrecisionPolicy::parse("wire=f32").unwrap();
+        assert_eq!(bytes_per_step(&f32p, n, topo), [0, 4 * 4000, 0, 0]);
+    }
+
+    #[test]
+    fn per_link_overrides_split_the_prediction_by_class() {
+        let p = PrecisionPolicy::parse("wire=fp8:e4m3,wire.inter=fp4:e2m1/row").unwrap();
+        let n = 1024;
+        let b = bytes_per_step(&p, n, Topology::Hier { nodes: 4, per_node: 8 });
+        // intra (fp8): 2*4*7 sends x (1024 + 4) bytes
+        assert_eq!(b[LinkClass::IntraNode.index()], 56 * 1028);
+        // inter (fp4/row on (1,n)): 2*3 sends x (512 + 4) bytes
+        assert_eq!(b[LinkClass::InterNode.index()], 6 * 516);
+        assert_eq!(b[LinkClass::TreeUp.index()], 0);
+    }
+
+    #[test]
+    fn scheduled_wire_switch_moves_the_prediction() {
+        let p = PrecisionPolicy::parse("wire=fp4:e2m1;0..10:wire=f32").unwrap();
+        let topo = Topology::Flat { workers: 2 };
+        let warm = bytes_per_step_at(&p, 100, topo, 0);
+        let steady = bytes_per_step_at(&p, 100, topo, 10);
+        assert_eq!(warm[LinkClass::InterNode.index()], 2 * 400);
+        assert_eq!(steady[LinkClass::InterNode.index()], 2 * (50 + 4));
+    }
+
+    #[test]
+    fn predictions_match_simulated_accounting_exactly() {
+        // the repro-fabric acceptance invariant, in miniature: every
+        // (topology, policy) pair's simulated per-link bytes equal the
+        // analytic prediction, including odd shard sizes (n % W != 0)
+        let n = 1001;
+        let policies = [
+            "wire=f32",
+            "wire=fp8:e4m3",
+            "wire=fp8:e4m3,wire.inter=fp4:e2m1/row,wire.up=fp4:e2m1/row,\
+             wire.down=fp4:e2m1/row",
+        ];
+        let topos = ["flat:7", "ring:7", "hier:3x5", "tree:13@3", "ring:3", "tree:5@1"];
+        for ps in policies {
+            let policy = PrecisionPolicy::parse(ps).unwrap();
+            let (_, specs) = policy.link_resolution_at(0);
+            for ts in topos {
+                let topo = Topology::parse(ts).unwrap();
+                let src = SyntheticSource { workers: topo.workers(), len: n, seed: 42 };
+                let mut fabric = Fabric::new(topo).unwrap();
+                let mut out = Vec::new();
+                fabric.all_reduce_mean(&src, 1, n, &specs, &mut out).unwrap();
+                assert_eq!(
+                    fabric.stats.bytes_by_link(),
+                    bytes_per_step(&policy, n, topo),
+                    "{ts} x {ps}"
+                );
+                assert_eq!(
+                    fabric.stats.links.map(|l| l.sends),
+                    sends_per_step(n, topo),
+                    "{ts} x {ps}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn step_time_prefers_hierarchy_at_scale() {
+        // 256 workers, 1M params: a flat hub serializes 256 full-tensor
+        // sends; the two-level hierarchy crosses nodes only 2*(N-1) times
+        let p = PrecisionPolicy::parse("wire=fp8:e4m3").unwrap();
+        let n = 1 << 20;
+        let params = LinkParams::defaults();
+        let t = |topo: Topology| {
+            step_time_us(&sends_per_step(n, topo), &bytes_per_step(&p, n, topo), &params)
+        };
+        let flat = t(Topology::Flat { workers: 256 });
+        let hier = t(Topology::Hier { nodes: 32, per_node: 8 });
+        assert!(hier < flat, "hier {hier} vs flat {flat}");
+        // and cutting inter-node links to fp4 cuts the hier estimate further
+        let p4 = PrecisionPolicy::parse("wire=fp8:e4m3,wire.inter=fp4:e2m1/row").unwrap();
+        let hier4 = step_time_us(
+            &sends_per_step(n, Topology::Hier { nodes: 32, per_node: 8 }),
+            &bytes_per_step(&p4, n, Topology::Hier { nodes: 32, per_node: 8 }),
+            &params,
+        );
+        assert!(hier4 < hier, "fp4-inter {hier4} vs fp8 {hier}");
     }
 }

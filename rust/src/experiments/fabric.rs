@@ -1,0 +1,204 @@
+//! `repro fabric` — topology × wire-policy sweep on the comm fabric.
+//!
+//! For every (worker scale, topology, wire policy) arm this driver runs
+//! one all-reduce of a synthetic gradient on a real [`Fabric`] (actual
+//! packed codecs, per-hop requantization), then:
+//!
+//!  * checks the simulated per-link byte counts against
+//!    [`costmodel::bytes_per_step`] — *exactly*, erroring on any
+//!    mismatch (the acceptance gate tying the analytical comm model to
+//!    the simulation);
+//!  * checks per-link send counts against [`costmodel::sends_per_step`]
+//!    the same way;
+//!  * measures end-to-end fidelity (RMSE of the reduced tensor vs the
+//!    exact flat f32 reference) — this is where multi-hop requantization
+//!    shows up, which the byte accounting alone cannot;
+//!  * converts (sends, bytes) into an alpha-beta step-time estimate
+//!    ([`costmodel::step_time_us`]) so arms are comparable as "estimated
+//!    comm time", not just bytes.
+//!
+//! Swept arms: workers 8/64/256/1024 (8/64 under `--quick`) × topologies
+//! `flat:W`, `ring:W`, `hier:(W/8)x8`, `tree:W@2` × wire policies `f32`,
+//! `fp8` everywhere, and `fp8` intra-node with `fp4:e2m1/row` on every
+//! cross-node link class (`wire.inter`/`wire.up`/`wire.down`) — the
+//! FP4-All-the-Way-style arm that compresses the scarce links hardest.
+//!
+//! Outputs the summary table on stdout and a machine-readable trajectory
+//! to `results/perf/BENCH_fabric.json` (same line-oriented dialect as
+//! `BENCH_codec.json`; byte counts are deterministic, so any drift is a
+//! real behavior change, not timer noise). Knobs: `-o n=<elems>`
+//! (gradient size, default 32768; 4096 under `--quick`), `-o seed=<u64>`,
+//! `-o results=<dir>`.
+//!
+//! Engine-free: like the codec half of `repro perf`, this driver needs no
+//! AOT artifacts, so CI can run it as-is.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Result};
+
+use crate::cli::Args;
+use crate::costmodel::{self, LinkParams};
+use crate::fabric::{flat_reference_mean, Fabric, LinkClass, SyntheticSource, Topology};
+use crate::policy::PrecisionPolicy;
+use crate::report::{f2, Table};
+
+/// The swept wire policies: name -> policy string.
+const POLICIES: &[(&str, &str)] = &[
+    ("f32", "wire=f32"),
+    ("fp8", "wire=fp8:e4m3"),
+    (
+        "fp4-xnode",
+        "wire=fp8:e4m3,wire.inter=fp4:e2m1/row,wire.up=fp4:e2m1/row,\
+         wire.down=fp4:e2m1/row",
+    ),
+];
+
+/// CLI entry point (see `cmd_repro`): parses knobs and runs the sweep.
+pub fn fabric_cmd(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let n = args.get_usize("n", if quick { 1 << 12 } else { 1 << 15 })?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    let results = PathBuf::from(args.get("results").unwrap_or("results"));
+    let scales: &[usize] = if quick { &[8, 64] } else { &[8, 64, 256, 1024] };
+    run_sweep(n, seed, scales, &results)
+}
+
+/// The topology arms at one worker scale.
+fn topologies(workers: usize) -> [Topology; 4] {
+    let per_node = workers.min(8);
+    [
+        Topology::Flat { workers },
+        Topology::Ring { workers },
+        Topology::Hier { nodes: (workers / per_node).max(1), per_node },
+        Topology::Tree { workers, fanout: 2 },
+    ]
+}
+
+pub fn run_sweep(n: usize, seed: u64, scales: &[usize], results: &Path) -> Result<()> {
+    let mut t = Table::new(&[
+        "workers", "topology", "policy", "KB/step", "intra KB", "inter KB", "tree KB",
+        "x wire", "rmse", "est us",
+    ]);
+    let mut json_rows: Vec<(String, f64)> = Vec::new();
+    let params = LinkParams::defaults();
+    let mut out = Vec::new();
+    let mut reference = Vec::new();
+    let mut arms = 0usize;
+
+    for &workers in scales {
+        let src = SyntheticSource { workers, len: n, seed };
+        flat_reference_mean(&src, &mut reference);
+        for topology in topologies(workers) {
+            for (name, pol) in POLICIES {
+                let policy = PrecisionPolicy::parse(pol)?;
+                let (_, specs) = policy.link_resolution_at(0);
+                let mut fabric = Fabric::new(topology)?;
+                fabric.all_reduce_mean(&src, 1, n, &specs, &mut out)?;
+
+                // acceptance gate: the analytical model must predict the
+                // simulated accounting exactly, per link class
+                let bytes = fabric.stats.bytes_by_link();
+                let predicted = costmodel::bytes_per_step(&policy, n, topology);
+                ensure!(
+                    bytes == predicted,
+                    "cost-model byte mismatch for {topology} {name}: \
+                     simulated {bytes:?} vs predicted {predicted:?}"
+                );
+                let sends = fabric.stats.links.map(|l| l.sends);
+                let predicted_sends = costmodel::sends_per_step(n, topology);
+                ensure!(
+                    sends == predicted_sends,
+                    "cost-model send mismatch for {topology} {name}: \
+                     simulated {sends:?} vs predicted {predicted_sends:?}"
+                );
+
+                let rmse = rmse(&out, &reference);
+                let est = costmodel::step_time_us(&sends, &bytes, &params);
+                let total = fabric.stats.total_bytes();
+                let kb = |b: u64| f2(b as f64 / 1e3);
+                t.row(&[
+                    workers.to_string(),
+                    topology.to_string(),
+                    name.to_string(),
+                    kb(total),
+                    kb(bytes[LinkClass::IntraNode.index()]),
+                    kb(bytes[LinkClass::InterNode.index()]),
+                    kb(bytes[LinkClass::TreeUp.index()] + bytes[LinkClass::TreeDown.index()]),
+                    f2(fabric.stats.compression()),
+                    format!("{rmse:.1e}"),
+                    f2(est),
+                ]);
+                json_rows.push((format!("{topology} {name} bytes"), total as f64));
+                json_rows.push((format!("{topology} {name} est_us"), est));
+                arms += 1;
+            }
+        }
+    }
+
+    println!("{}", t.render());
+    println!("all {arms} arms matched costmodel::bytes_per_step / sends_per_step exactly");
+    let json_path = results.join("perf").join("BENCH_fabric.json");
+    write_bench_json(&json_path, n, &json_rows)?;
+    println!("wrote {}", json_path.display());
+    Ok(())
+}
+
+fn rmse(a: &[f32], b: &[f32]) -> f64 {
+    let se: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum();
+    (se / a.len().max(1) as f64).sqrt()
+}
+
+/// Same hand-built dialect as `BENCH_codec.json` (no serde offline):
+/// names are plain ASCII, so `{:?}` escaping yields valid JSON strings.
+fn write_bench_json(path: &Path, n_params: usize, rows: &[(String, f64)]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut s = String::from("{\n  \"bench\": \"fabric\",\n");
+    s.push_str(&format!("  \"n_params\": {n_params},\n"));
+    s.push_str("  \"unit\": \"bytes/step or us/step\",\n");
+    s.push_str("  \"provenance\": \"computed\",\n");
+    s.push_str("  \"arms\": {\n");
+    for (i, (name, v)) in rows.iter().enumerate() {
+        let sep = if i + 1 == rows.len() { "" } else { "," };
+        s.push_str(&format!("    {:?}: {:.1}{}\n", name, v, sep));
+    }
+    s.push_str("  }\n}\n");
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_validates_costmodel_and_writes_json() {
+        // tiny sweep; odd n exercises non-dividing ring shards. Any
+        // prediction/simulation divergence fails inside run_sweep.
+        let dir = std::env::temp_dir().join("fp4train_fabric_sweep_test");
+        run_sweep(257, 3, &[5, 8], &dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("perf/BENCH_fabric.json")).unwrap();
+        assert!(text.contains("\"bench\": \"fabric\""));
+        assert!(text.contains("hier:1x5 fp4-xnode bytes"));
+        assert!(text.contains("tree:8@2 fp8 est_us"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn topology_arms_cover_every_kind() {
+        let kinds: Vec<String> =
+            topologies(64).iter().map(|t| t.to_string()).collect();
+        assert_eq!(kinds, vec!["flat:64", "ring:64", "hier:8x8", "tree:64@2"]);
+        // sub-node scales degrade to a single node
+        assert_eq!(topologies(5)[2].to_string(), "hier:1x5");
+    }
+}

@@ -6,6 +6,7 @@
 //! under `runs/`, so drivers that share arms (fig5 / tab2 / tab3) train
 //! each (preset, policy) pair once.
 
+pub mod fabric;
 pub mod figs;
 pub mod perf;
 pub mod tabs;
@@ -174,6 +175,14 @@ pub fn run(id: &str, ctx: &mut Ctx, quick: bool) -> Result<()> {
         "tab5" => tabs::tab5(),
         "dists" => tabs::dists(ctx, quick),
         "perf" => perf::perf(ctx),
+        // normally dispatched engine-free in `cmd_repro`; this arm keeps
+        // programmatic `experiments::run` calls working with defaults
+        "fabric" => fabric::run_sweep(
+            if quick { 1 << 12 } else { 1 << 15 },
+            7,
+            if quick { &[8, 64] } else { &[8, 64, 256, 1024] },
+            &ctx.results,
+        ),
         "all" => {
             for id in [
                 "tab4", "tab5", "fig3", "fig1", "fig6a", "fig6b", "fig6c", "fig6d",
@@ -186,7 +195,7 @@ pub fn run(id: &str, ctx: &mut Ctx, quick: bool) -> Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment {other:?}; ids: fig1 fig3 fig4 fig5 fig6a-d \
-             tab1-5 fig7 dists perf all"
+             tab1-5 fig7 dists perf fabric all"
         ),
     }
 }

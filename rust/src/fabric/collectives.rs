@@ -1,0 +1,571 @@
+//! The collective algorithms a [`Fabric`](super::Fabric) can run, all
+//! built on one transmission primitive that encodes through the real
+//! packed codecs and accounts every byte on its link class.
+//!
+//! Algorithm shapes (W workers, tensor of n elements):
+//!
+//!  * **flat** — W full-tensor sends on `inter` links into an ideal
+//!    reducer, accumulated with weight `1/W` (the legacy `DpSim` comm
+//!    model, bit-for-bit).
+//!  * **ring** — per contiguous shard `s` (balanced `(1, len_s)` slices):
+//!    a W-1-hop reduce-scatter chain in worker order (each hop
+//!    re-encodes the running partial, the receiver adds its own chunk),
+//!    a single `1/W` scale at the chain's end, then a W-1-hop all-gather
+//!    chain that re-encodes at every hop. Empty shards (n < W) transmit
+//!    nothing. All hops are `inter`.
+//!  * **hier** — per node: leaf gradients stream into the node leader
+//!    over `intra` links (weight 1.0); node partials stream into the
+//!    root leader over `inter` links; one `1/W` scale at the root; then
+//!    the mean broadcasts root→leaders (`inter`) and leaders→leaves
+//!    (`intra`), re-encoded at each level.
+//!  * **tree** — post-order reduce: each node's subtree partial travels
+//!    one `up` hop to its parent (heap order, children of `i` are
+//!    `F*i+1..=F*i+F`); one `1/W` scale at the root; then a level-by-
+//!    level `down` broadcast. Every node at one depth receives an
+//!    identical payload (same encoded bytes), so one decode per level
+//!    models all replicas while bytes are counted per child link.
+//!
+//! Summation order is fixed (worker order / post-order). The chain
+//! topologies (ring/hier/tree) sum unweighted partials and scale by `1/W`
+//! once at the root — with an exact `f32` wire and integer-valued
+//! gradients they are bit-identical to [`super::flat_reference_mean`]
+//! for *any* worker count (pinned by test). Flat keeps the legacy
+//! per-term `1/W` weighting instead (bit-identical to the pre-fabric
+//! `DpSim`; identical to the reference whenever `1/W` is a power of
+//! two). The returned tensor is the most-requantized replica (the end of
+//! the longest decode chain).
+
+use crate::formats::{PackedTensor, QuantSpec};
+use crate::policy::LinkClass;
+
+use super::{Fabric, FabricStats, GradSource, Topology};
+
+/// Transmission context: the accounting plus the one reusable packed
+/// payload every send encodes into.
+struct Ctx<'a> {
+    stats: &'a mut FabricStats,
+    wire: &'a mut PackedTensor,
+}
+
+impl Ctx<'_> {
+    /// One transmission of `payload` (shaped `rows x cols` for scale
+    /// granularity) over a `link`-class hop: encode, account, and
+    /// accumulate the *decoded* values into `acc` with `weight`. Raw f32
+    /// specs transmit scale-free (`4*len` bytes, exact values).
+    #[allow(clippy::too_many_arguments)]
+    fn send_accumulate(
+        &mut self,
+        payload: &[f32],
+        rows: usize,
+        cols: usize,
+        spec: QuantSpec,
+        link: LinkClass,
+        acc: &mut [f32],
+        weight: f32,
+    ) {
+        let l = &mut self.stats.links[link.index()];
+        l.sends += 1;
+        l.bytes_f32_equiv += 4 * payload.len() as u64;
+        if spec.is_raw() {
+            l.bytes += 4 * payload.len() as u64;
+            for (a, &v) in acc.iter_mut().zip(payload) {
+                *a += v * weight;
+            }
+        } else {
+            PackedTensor::pack_into(payload, rows, cols, spec.format, spec.granularity, self.wire);
+            l.bytes += self.wire.wire_bytes();
+            self.wire.unpack_accumulate(acc, weight);
+        }
+    }
+
+    /// One transmission whose receiver *replaces* its copy with the
+    /// decoded payload (chain hops): `dst` becomes what arrived.
+    fn send_replace(
+        &mut self,
+        payload: &[f32],
+        rows: usize,
+        cols: usize,
+        spec: QuantSpec,
+        link: LinkClass,
+        dst: &mut Vec<f32>,
+    ) {
+        self.broadcast_replace(payload, rows, cols, spec, link, 1, dst);
+    }
+
+    /// One encode fanned out to `receivers` identical links: the payload
+    /// is packed once (all receivers decode the same bytes) but its cost
+    /// is counted once per link, like a switch would carry it. `dst`
+    /// becomes the decoded value every receiver holds.
+    #[allow(clippy::too_many_arguments)]
+    fn broadcast_replace(
+        &mut self,
+        payload: &[f32],
+        rows: usize,
+        cols: usize,
+        spec: QuantSpec,
+        link: LinkClass,
+        receivers: u64,
+        dst: &mut Vec<f32>,
+    ) {
+        let l = &mut self.stats.links[link.index()];
+        l.sends += receivers;
+        l.bytes_f32_equiv += receivers * 4 * payload.len() as u64;
+        if spec.is_raw() {
+            l.bytes += receivers * 4 * payload.len() as u64;
+            dst.clear();
+            dst.extend_from_slice(payload);
+        } else {
+            PackedTensor::pack_into(payload, rows, cols, spec.format, spec.granularity, self.wire);
+            l.bytes += receivers * self.wire.wire_bytes();
+            self.wire.unpack_into(dst);
+        }
+    }
+}
+
+/// Dispatch one mean all-reduce over the fabric's topology. Arguments are
+/// pre-validated by [`Fabric::all_reduce_mean`].
+pub(crate) fn run(
+    fabric: &mut Fabric,
+    src: &dyn GradSource,
+    rows: usize,
+    cols: usize,
+    specs: &[QuantSpec; 4],
+    out: &mut Vec<f32>,
+) {
+    let (topology, stats, wire, buf_a, buf_b) = fabric.parts();
+    let mut ctx = Ctx { stats, wire };
+    let spec_of = |link: LinkClass| specs[link.index()];
+    match topology {
+        Topology::Flat { workers } => {
+            flat(&mut ctx, src, workers, rows, cols, spec_of(LinkClass::InterNode), out, buf_a)
+        }
+        Topology::Ring { workers } => {
+            ring(&mut ctx, src, workers, spec_of(LinkClass::InterNode), out, buf_a, buf_b)
+        }
+        Topology::Hier { nodes, per_node } => hier(
+            &mut ctx,
+            src,
+            nodes,
+            per_node,
+            rows,
+            cols,
+            spec_of(LinkClass::IntraNode),
+            spec_of(LinkClass::InterNode),
+            out,
+            buf_a,
+            buf_b,
+        ),
+        Topology::Tree { workers, fanout } => tree(
+            &mut ctx,
+            src,
+            workers,
+            fanout,
+            rows,
+            cols,
+            spec_of(LinkClass::TreeUp),
+            spec_of(LinkClass::TreeDown),
+            out,
+            buf_a,
+        ),
+    }
+}
+
+/// The legacy hub model: every worker's full gradient is encoded once
+/// and accumulated into the reducer with weight `1/W` — the exact
+/// pre-fabric `DpSim` op sequence (same kernel calls, same order), so a
+/// flat fabric reproduces its losses and wire bytes bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn flat(
+    ctx: &mut Ctx,
+    src: &dyn GradSource,
+    workers: usize,
+    rows: usize,
+    cols: usize,
+    spec: QuantSpec,
+    out: &mut Vec<f32>,
+    scratch: &mut Vec<f32>,
+) {
+    let n = src.len();
+    let inv_w = 1.0 / workers as f32;
+    out.clear();
+    out.resize(n, 0.0);
+    scratch.clear();
+    scratch.resize(n, 0.0);
+    for w in 0..workers {
+        src.write(w, 0..n, scratch);
+        ctx.send_accumulate(scratch, rows, cols, spec, LinkClass::InterNode, out, inv_w);
+    }
+}
+
+/// Reduce-scatter + all-gather ring over balanced contiguous shards.
+fn ring(
+    ctx: &mut Ctx,
+    src: &dyn GradSource,
+    workers: usize,
+    spec: QuantSpec,
+    out: &mut Vec<f32>,
+    partial: &mut Vec<f32>,
+    chunk: &mut Vec<f32>,
+) {
+    let n = src.len();
+    let inv_w = 1.0 / workers as f32;
+    out.clear();
+    out.resize(n, 0.0);
+    if workers == 1 {
+        // no links: the mean of one worker is its own gradient
+        src.write(0, 0..n, out);
+        return;
+    }
+    let mut start = 0;
+    for s in 0..workers {
+        let len_s = n / workers + usize::from(s < n % workers);
+        if len_s == 0 {
+            continue;
+        }
+        let range = start..start + len_s;
+        // reduce-scatter chain, worker order: the running partial is
+        // re-encoded at every hop, the receiver adds its own chunk
+        partial.clear();
+        partial.resize(len_s, 0.0);
+        src.write(0, range.clone(), partial);
+        for w in 1..workers {
+            ctx.send_replace(partial, 1, len_s, spec, LinkClass::InterNode, chunk);
+            std::mem::swap(partial, chunk);
+            chunk.clear();
+            chunk.resize(len_s, 0.0);
+            src.write(w, range.clone(), chunk);
+            for (p, &v) in partial.iter_mut().zip(chunk.iter()) {
+                *p += v;
+            }
+        }
+        // fully reduced at the chain's end: one scale to the mean
+        for p in partial.iter_mut() {
+            *p *= inv_w;
+        }
+        // all-gather chain: W-1 hops, re-encoded at each; keep the last
+        // receiver's copy (the most-requantized replica)
+        for _ in 1..workers {
+            ctx.send_replace(partial, 1, len_s, spec, LinkClass::InterNode, chunk);
+            std::mem::swap(partial, chunk);
+        }
+        out[range].copy_from_slice(partial);
+        start += len_s;
+    }
+}
+
+/// Two-level all-reduce: intra-node reduce into node leaders, inter-node
+/// reduce into the root, scale, then broadcast back down both levels.
+#[allow(clippy::too_many_arguments)]
+fn hier(
+    ctx: &mut Ctx,
+    src: &dyn GradSource,
+    nodes: usize,
+    per_node: usize,
+    rows: usize,
+    cols: usize,
+    intra: QuantSpec,
+    inter: QuantSpec,
+    out: &mut Vec<f32>,
+    partial: &mut Vec<f32>,
+    member: &mut Vec<f32>,
+) {
+    let n = src.len();
+    let inv_w = 1.0 / (nodes * per_node) as f32;
+    out.clear();
+    out.resize(n, 0.0);
+    member.clear();
+    member.resize(n, 0.0);
+    // reduce up: one node partial lives at a time (streamed into the
+    // root total), so memory stays O(n) regardless of node count
+    for node in 0..nodes {
+        let leader = node * per_node;
+        partial.clear();
+        partial.resize(n, 0.0);
+        src.write(leader, 0..n, partial);
+        for m in 1..per_node {
+            src.write(leader + m, 0..n, member);
+            ctx.send_accumulate(member, rows, cols, intra, LinkClass::IntraNode, partial, 1.0);
+        }
+        if node == 0 {
+            out.copy_from_slice(partial);
+        } else {
+            ctx.send_accumulate(partial, rows, cols, inter, LinkClass::InterNode, out, 1.0);
+        }
+    }
+    for v in out.iter_mut() {
+        *v *= inv_w;
+    }
+    // broadcast down: root -> other leaders (one encode, nodes-1 links),
+    // then leaders -> leaves. Every leader holds the identical decoded
+    // value, so their re-encodings are identical too: one encode models
+    // all of them while bytes count per leaf link.
+    if nodes > 1 {
+        ctx.broadcast_replace(
+            out,
+            rows,
+            cols,
+            inter,
+            LinkClass::InterNode,
+            (nodes - 1) as u64,
+            member,
+        );
+    } else {
+        member.clear();
+        member.extend_from_slice(out);
+    }
+    if per_node > 1 {
+        ctx.broadcast_replace(
+            member,
+            rows,
+            cols,
+            intra,
+            LinkClass::IntraNode,
+            (nodes * (per_node - 1)) as u64,
+            partial,
+        );
+        out.copy_from_slice(partial);
+    } else {
+        out.copy_from_slice(member);
+    }
+}
+
+/// Post-order subtree reduce for [`tree`]: returns node `i`'s partial
+/// (its own gradient plus its children's decoded partials). At most one
+/// buffer per tree level is live at a time (O(depth · n) memory).
+#[allow(clippy::too_many_arguments)]
+fn tree_reduce(
+    ctx: &mut Ctx,
+    src: &dyn GradSource,
+    i: usize,
+    workers: usize,
+    fanout: usize,
+    rows: usize,
+    cols: usize,
+    up: QuantSpec,
+) -> Vec<f32> {
+    let n = src.len();
+    let mut buf = vec![0.0f32; n];
+    src.write(i, 0..n, &mut buf);
+    let first = fanout * i + 1;
+    for c in first..(first + fanout).min(workers) {
+        let child = tree_reduce(ctx, src, c, workers, fanout, rows, cols, up);
+        ctx.send_accumulate(&child, rows, cols, up, LinkClass::TreeUp, &mut buf, 1.0);
+    }
+    buf
+}
+
+/// Tree all-reduce: reduce up the heap-ordered tree, scale at the root,
+/// broadcast back down level by level.
+#[allow(clippy::too_many_arguments)]
+fn tree(
+    ctx: &mut Ctx,
+    src: &dyn GradSource,
+    workers: usize,
+    fanout: usize,
+    rows: usize,
+    cols: usize,
+    up: QuantSpec,
+    down: QuantSpec,
+    out: &mut Vec<f32>,
+    next: &mut Vec<f32>,
+) {
+    let n = src.len();
+    let inv_w = 1.0 / workers as f32;
+    let total = tree_reduce(ctx, src, 0, workers, fanout, rows, cols, up);
+    out.clear();
+    out.extend_from_slice(&total);
+    for v in out.iter_mut() {
+        *v *= inv_w;
+    }
+    // broadcast down, level by level: all parents at one depth hold the
+    // identical value (they decoded the same bytes), so one encode and
+    // one decode per level model every replica; bytes count per child
+    // link. `out` ends as the deepest level's copy.
+    let (mut lo, mut hi) = (0usize, 1usize);
+    loop {
+        let clo = fanout * lo + 1;
+        let chi = (fanout * hi + 1).min(workers);
+        if clo >= chi {
+            break;
+        }
+        ctx.broadcast_replace(
+            out,
+            rows,
+            cols,
+            down,
+            LinkClass::TreeDown,
+            (chi - clo) as u64,
+            next,
+        );
+        std::mem::swap(out, next);
+        (lo, hi) = (clo, chi);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{flat_reference_mean, Fabric, SliceSource, Topology};
+    use super::*;
+    use crate::formats::QuantSpec;
+
+    fn f32_specs() -> [QuantSpec; 4] {
+        [QuantSpec::parse("f32").unwrap(); 4]
+    }
+
+    /// Integer-valued grads: every partial sum is exactly representable,
+    /// so any summation order gives bit-identical results.
+    fn int_grads(workers: usize, n: usize) -> Vec<Vec<f32>> {
+        (0..workers)
+            .map(|w| (0..n).map(|i| ((w * 31 + i * 7) % 17) as f32 - 8.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn every_topology_matches_flat_reference_on_f32_wire() {
+        // W=16 is a power of two, so even flat's *per-term* `1/W`
+        // weighting is exact on integer grads (int * 2^-4 is exact) and
+        // matches the reference's sum-then-scale order bit-for-bit; the
+        // chain topologies sum unweighted and scale once, so they are
+        // exact for any W (pinned with non-power-of-two W below).
+        let grads = int_grads(16, 37);
+        let src = SliceSource { grads: &grads };
+        let mut want = Vec::new();
+        flat_reference_mean(&src, &mut want);
+        for topo in ["flat:16", "ring:16", "hier:4x4", "hier:2x8", "tree:16@2", "tree:16@3"] {
+            let mut fabric = Fabric::new(Topology::parse(topo).unwrap()).unwrap();
+            let mut out = Vec::new();
+            fabric.all_reduce_mean(&src, 1, 37, &f32_specs(), &mut out).unwrap();
+            assert_eq!(out, want, "{topo}");
+        }
+    }
+
+    #[test]
+    fn chain_topologies_match_reference_for_non_power_of_two_workers() {
+        // ring/hier/tree sum exact integer partials in a fixed order and
+        // scale by 1/W once at the end — exactly what the reference does,
+        // so they are bit-identical even when 1/W is inexact (W=12)
+        let grads = int_grads(12, 37);
+        let src = SliceSource { grads: &grads };
+        let mut want = Vec::new();
+        flat_reference_mean(&src, &mut want);
+        for topo in ["ring:12", "hier:3x4", "hier:4x3", "tree:12@2", "tree:12@3"] {
+            let mut fabric = Fabric::new(Topology::parse(topo).unwrap()).unwrap();
+            let mut out = Vec::new();
+            fabric.all_reduce_mean(&src, 1, 37, &f32_specs(), &mut out).unwrap();
+            assert_eq!(out, want, "{topo}");
+        }
+    }
+
+    #[test]
+    fn single_worker_is_identity_on_every_topology() {
+        let grads = vec![vec![1.5f32, -2.25, 0.0, 7.0]];
+        let src = SliceSource { grads: &grads };
+        for topo in ["flat:1", "ring:1", "hier:1x1", "tree:1@2"] {
+            let mut fabric = Fabric::new(Topology::parse(topo).unwrap()).unwrap();
+            let mut out = Vec::new();
+            fabric.all_reduce_mean(&src, 1, 4, &f32_specs(), &mut out).unwrap();
+            assert_eq!(out, grads[0], "{topo}");
+        }
+    }
+
+    #[test]
+    fn ring_handles_fewer_elements_than_workers() {
+        // n=3 over 5 workers: two shards are empty and transmit nothing
+        let grads = int_grads(5, 3);
+        let src = SliceSource { grads: &grads };
+        let mut want = Vec::new();
+        flat_reference_mean(&src, &mut want);
+        let mut fabric = Fabric::new(Topology::parse("ring:5").unwrap()).unwrap();
+        let mut out = Vec::new();
+        fabric.all_reduce_mean(&src, 1, 3, &f32_specs(), &mut out).unwrap();
+        assert_eq!(out, want);
+        // 3 non-empty shards x (W-1) hops x 2 directions
+        assert_eq!(fabric.stats.link(LinkClass::InterNode).sends, 3 * 4 * 2);
+    }
+
+    #[test]
+    fn send_counts_match_the_algorithm_shapes() {
+        let grads = int_grads(12, 24);
+        let src = SliceSource { grads: &grads };
+        let mut out = Vec::new();
+        let count = |topo: &str| {
+            let mut fabric = Fabric::new(Topology::parse(topo).unwrap()).unwrap();
+            fabric.all_reduce_mean(&src, 1, 24, &f32_specs(), &mut out).unwrap();
+            fabric.stats.links.map(|l| l.sends)
+        };
+        // [intra, inter, up, down]
+        assert_eq!(count("flat:12"), [0, 12, 0, 0]);
+        assert_eq!(count("ring:12"), [0, 12 * 11 * 2, 0, 0]);
+        // hier 3x4: up 3*(4-1) intra + 2 inter; down 2 inter + 3*(4-1) intra
+        assert_eq!(count("hier:3x4"), [9 + 9, 2 + 2, 0, 0]);
+        // tree: W-1 up, W-1 down
+        assert_eq!(count("tree:12@2"), [0, 0, 11, 11]);
+        assert_eq!(count("tree:12@3"), [0, 0, 11, 11]);
+    }
+
+    #[test]
+    fn quantized_wire_stays_close_and_counts_fewer_bytes() {
+        let grads: Vec<Vec<f32>> = (0..8)
+            .map(|w| (0..64).map(|i| ((w * 131 + i * 17) % 97) as f32 / 97.0 - 0.5).collect())
+            .collect();
+        let src = SliceSource { grads: &grads };
+        let mut want = Vec::new();
+        flat_reference_mean(&src, &mut want);
+        let fp8 = [QuantSpec::parse("fp8:e4m3").unwrap(); 4];
+        for topo in ["flat:8", "ring:8", "hier:2x4", "tree:8@2"] {
+            let mut fabric = Fabric::new(Topology::parse(topo).unwrap()).unwrap();
+            let mut out = Vec::new();
+            fabric.all_reduce_mean(&src, 1, 64, &fp8, &mut out).unwrap();
+            let rmse = (out
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / want.len() as f64)
+                .sqrt();
+            // fp8:e4m3 keeps ~3 mantissa bits; even the 2(W-1)-requant
+            // ring chain should stay well under the signal's ~0.3 rms
+            assert!(rmse < 0.1, "{topo}: rmse {rmse}");
+            let s = &fabric.stats;
+            assert!(s.total_bytes() < s.total_f32_equiv(), "{topo}");
+            assert!(s.compression() > 1.0, "{topo}");
+        }
+    }
+
+    #[test]
+    fn per_link_specs_route_to_their_links() {
+        // fp4 on inter, f32 on intra: intra bytes = raw, inter compressed
+        let grads = int_grads(8, 32);
+        let src = SliceSource { grads: &grads };
+        let mut specs = f32_specs();
+        specs[LinkClass::InterNode.index()] = QuantSpec::parse("fp4:e2m1/row").unwrap();
+        let mut fabric = Fabric::new(Topology::parse("hier:2x4").unwrap()).unwrap();
+        let mut out = Vec::new();
+        fabric.all_reduce_mean(&src, 1, 32, &specs, &mut out).unwrap();
+        let intra = fabric.stats.link(LinkClass::IntraNode);
+        let inter = fabric.stats.link(LinkClass::InterNode);
+        assert_eq!(intra.bytes, intra.bytes_f32_equiv);
+        assert!(inter.bytes < inter.bytes_f32_equiv);
+    }
+
+    #[test]
+    fn clamped_wire_spec_rejected() {
+        let grads = int_grads(2, 4);
+        let src = SliceSource { grads: &grads };
+        let mut specs = f32_specs();
+        specs[0] = QuantSpec::parse("fp4:e2m1/clamp@0.99").unwrap();
+        let mut fabric = Fabric::new(Topology::parse("flat:2").unwrap()).unwrap();
+        let mut out = Vec::new();
+        let err = fabric.all_reduce_mean(&src, 1, 4, &specs, &mut out).unwrap_err();
+        assert!(err.to_string().contains("not transmitted"), "{err}");
+    }
+
+    #[test]
+    fn worker_mismatch_rejected() {
+        let grads = int_grads(3, 4);
+        let src = SliceSource { grads: &grads };
+        let mut fabric = Fabric::new(Topology::parse("flat:4").unwrap()).unwrap();
+        let mut out = Vec::new();
+        assert!(fabric.all_reduce_mean(&src, 1, 4, &f32_specs(), &mut out).is_err());
+    }
+}

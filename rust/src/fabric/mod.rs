@@ -1,0 +1,460 @@
+//! Topology-aware comm fabric: sharded collective simulation with a
+//! quantized wire per link class.
+//!
+//! The paper's framework (§4.1, following FP8-LM) treats gradient
+//! communication as a first-order training cost, but a single flat
+//! all-reduce over N workers models none of the structure that makes
+//! multi-node comm expensive: intra-node links (NVLink-class) and
+//! inter-node links (IB-class) differ by an order of magnitude in both
+//! latency and bandwidth, and reduction algorithms (ring, two-level
+//! hierarchical, tree) move very different byte volumes across each.
+//! This module gives the byte accounting and the Appendix-B cost model a
+//! realistic substrate — and, following FP4-All-the-Way's motivation,
+//! lets quantization be pushed into *every* link of the reduction, not
+//! just the leaf hop.
+//!
+//! # Topology model
+//!
+//! A [`Topology`] arranges `W` simulated workers (grammar in
+//! [`Topology::parse`], round-tripping through `Display`):
+//!
+//!  * `flat:W` — the legacy hub model: every worker encodes its full
+//!    gradient once toward an ideal reducer. Reproduces the pre-fabric
+//!    `DpSim` comm path bit-for-bit (pinned by test).
+//!  * `ring:W` — reduce-scatter + all-gather ring: the tensor splits
+//!    into `W` contiguous shards; each shard takes `W-1` hops per
+//!    direction, re-encoded at every hop.
+//!  * `hier:NxP` — two-level all-reduce over `N` nodes × `P` workers
+//!    per node: leaf→leader intra-node reduce, leader→root inter-node
+//!    reduce, then broadcast back down both levels.
+//!  * `tree:W@F` — fan-out-`F` reduction tree in heap order (children
+//!    of `i` are `F*i+1 ..= F*i+F`): leaf-to-root reduce, then a
+//!    root-to-leaf broadcast.
+//!
+//! Every transmission belongs to a [`LinkClass`] (`intra | inter | up |
+//! down`), and each class resolves its own wire [`QuantSpec`] through
+//! the policy grammar's `wire.<link>=` overrides (see [`crate::policy`])
+//! — e.g. `wire=fp8:e4m3,wire.inter=fp4:e2m1/row` keeps FP8 on the
+//! plentiful intra-node links and drops the scarce inter-node links to
+//! FP4.
+//!
+//! # Requantization semantics
+//!
+//! Transmissions are simulated with the real storage codecs
+//! ([`PackedTensor::pack_into`] / `unpack_accumulate` — actual packed
+//! codes plus per-group f32 scales, zero-alloc on the hot path), so a
+//! multi-hop reduction *re-quantizes at every hop*: a receiver only ever
+//! sees the decoded (lossy) payload, and anything it forwards is
+//! re-encoded from that. Ring shards travel as 1-D `(1, shard_len)`
+//! tensors, so group scales are re-derived per shard. A raw `f32` wire
+//! spec transmits scale-free (`4*len` bytes, exact values) — identical
+//! to the legacy raw accounting. Where a broadcast fans the same encoded
+//! payload to several receivers, the payload is packed once but its
+//! bytes are counted once per link, like a real switch would carry them.
+//! The returned tensor is the most-requantized replica (the copy at the
+//! end of the longest decode chain) — the conservative choice for
+//! fidelity measurements.
+//!
+//! [`FabricStats`] generalizes the flat `CommStats`: exact per-link-class
+//! send/byte accounting (validated against `costmodel::bytes_per_step`
+//! predictions, exactly, in `repro fabric`), which
+//! [`crate::costmodel::step_time_us`] turns into an alpha-beta step-time
+//! estimate.
+
+pub mod collectives;
+
+use std::fmt;
+use std::ops::Range;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::formats::{PackedTensor, QuantSpec};
+pub use crate::policy::LinkClass;
+
+/// Worker arrangement of the simulated fabric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Legacy hub: every worker sends its full gradient once (the
+    /// pre-fabric `DpSim` model). All sends are `inter` class.
+    Flat { workers: usize },
+    /// Reduce-scatter + all-gather ring; all hops are `inter` class.
+    Ring { workers: usize },
+    /// Two-level all-reduce: `nodes` × `per_node` workers. Leaf↔leader
+    /// hops are `intra`, leader↔root hops are `inter`.
+    Hier { nodes: usize, per_node: usize },
+    /// Reduction tree in heap order with the given fan-out. Reduce hops
+    /// are `up`, broadcast hops are `down`.
+    Tree { workers: usize, fanout: usize },
+}
+
+impl Topology {
+    /// Parse `flat:W`, `ring:W`, `hier:NxP` or `tree:W[@F]` (fan-out
+    /// defaults to 2). Round-trips through `Display`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (kind, rest) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("bad topology {s:?} (expected kind:shape)"))?;
+        let t = match kind {
+            "flat" => Topology::Flat { workers: parse_count(rest, s)? },
+            "ring" => Topology::Ring { workers: parse_count(rest, s)? },
+            "hier" => {
+                let (n, p) = rest.split_once('x').ok_or_else(|| {
+                    anyhow::anyhow!("bad topology {s:?} (expected hier:NODESxPER_NODE)")
+                })?;
+                Topology::Hier { nodes: parse_count(n, s)?, per_node: parse_count(p, s)? }
+            }
+            "tree" => match rest.split_once('@') {
+                Some((w, f)) => Topology::Tree {
+                    workers: parse_count(w, s)?,
+                    fanout: parse_count(f, s)?,
+                },
+                None => Topology::Tree { workers: parse_count(rest, s)?, fanout: 2 },
+            },
+            other => bail!("unknown topology kind {other:?} (expected flat, ring, hier or tree)"),
+        };
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// Total simulated workers.
+    pub fn workers(&self) -> usize {
+        match *self {
+            Topology::Flat { workers } | Topology::Ring { workers } => workers,
+            Topology::Hier { nodes, per_node } => nodes * per_node,
+            Topology::Tree { workers, .. } => workers,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.workers() > 0, "topology {self} has no workers");
+        if let Topology::Tree { fanout, .. } = self {
+            ensure!(*fanout > 0, "tree fan-out must be positive");
+        }
+        Ok(())
+    }
+
+    /// The link class carrying this topology's dominant traffic — used to
+    /// label per-phase wire accounting in the dp-sim.
+    pub fn primary_link(&self) -> LinkClass {
+        match self {
+            Topology::Flat { .. } | Topology::Ring { .. } | Topology::Hier { .. } => {
+                LinkClass::InterNode
+            }
+            Topology::Tree { .. } => LinkClass::TreeUp,
+        }
+    }
+}
+
+fn parse_count(s: &str, whole: &str) -> Result<usize> {
+    s.parse::<usize>()
+        .map_err(|_| anyhow::anyhow!("bad worker count {s:?} in topology {whole:?}"))
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Topology::Flat { workers } => write!(f, "flat:{workers}"),
+            Topology::Ring { workers } => write!(f, "ring:{workers}"),
+            Topology::Hier { nodes, per_node } => write!(f, "hier:{nodes}x{per_node}"),
+            Topology::Tree { workers, fanout } => write!(f, "tree:{workers}@{fanout}"),
+        }
+    }
+}
+
+/// Per-link-class accounting for one fabric.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkStats {
+    /// Number of transmissions over links of this class.
+    pub sends: u64,
+    /// Exact bytes carried (packed codes + scales; raw f32 = `4*len`).
+    pub bytes: u64,
+    /// What the same transmissions would carry at raw f32 (`4*len` each).
+    pub bytes_f32_equiv: u64,
+}
+
+/// Exact per-link byte/send accounting across all collectives a fabric
+/// has run — the fabric generalization of the flat `CommStats`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FabricStats {
+    /// Indexed by [`LinkClass::index`].
+    pub links: [LinkStats; 4],
+    /// Completed all-reduce operations.
+    pub reduces: u64,
+}
+
+impl FabricStats {
+    pub fn link(&self, link: LinkClass) -> &LinkStats {
+        &self.links[link.index()]
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.links.iter().map(|l| l.bytes).sum()
+    }
+
+    pub fn total_f32_equiv(&self) -> u64 {
+        self.links.iter().map(|l| l.bytes_f32_equiv).sum()
+    }
+
+    /// Per-link byte totals, indexed by [`LinkClass::index`] — the shape
+    /// `costmodel::bytes_per_step` predicts.
+    pub fn bytes_by_link(&self) -> [u64; 4] {
+        self.links.map(|l| l.bytes)
+    }
+
+    /// Compression achieved across all links (1.0 when nothing was sent).
+    pub fn compression(&self) -> f64 {
+        let sent = self.total_bytes();
+        if sent == 0 {
+            return 1.0;
+        }
+        self.total_f32_equiv() as f64 / sent as f64
+    }
+}
+
+/// Random-access gradient provider: the fabric pulls any worker's values
+/// for any flat range, so collectives never need all `W` gradients
+/// materialized at once (a `tree:1024` sweep stays memory-bounded).
+pub trait GradSource {
+    fn workers(&self) -> usize;
+    /// Flat element count of the gradient tensor (same for every worker).
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Write worker `w`'s values for `range` into `out`
+    /// (`out.len() == range.len()`).
+    fn write(&self, w: usize, range: Range<usize>, out: &mut [f32]);
+}
+
+/// [`GradSource`] over fully materialized per-worker gradients (the
+/// `DpSim` path: one `Vec<f32>` per worker for the tensor being reduced).
+pub struct SliceSource<'a> {
+    pub grads: &'a [Vec<f32>],
+}
+
+impl GradSource for SliceSource<'_> {
+    fn workers(&self) -> usize {
+        self.grads.len()
+    }
+
+    fn len(&self) -> usize {
+        self.grads.first().map_or(0, |g| g.len())
+    }
+
+    fn write(&self, w: usize, range: Range<usize>, out: &mut [f32]) {
+        out.copy_from_slice(&self.grads[w][range]);
+    }
+}
+
+/// Stateless synthetic gradients: value `(w, i)` is a splitmix64 hash of
+/// the coordinates, so a 1024-worker sweep materializes nothing. Values
+/// are uniform in `[-1, 1)`.
+pub struct SyntheticSource {
+    pub workers: usize,
+    pub len: usize,
+    pub seed: u64,
+}
+
+impl SyntheticSource {
+    fn value(&self, w: usize, i: usize) -> f32 {
+        let mut z = self
+            .seed
+            .wrapping_add((w as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add((i as u64).wrapping_mul(0xD1B5_4A32_D192_ED03));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        // 24 high bits -> [0, 2) -> [-1, 1), exactly representable
+        (z >> 40) as f32 / (1u64 << 23) as f32 - 1.0
+    }
+}
+
+impl GradSource for SyntheticSource {
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn write(&self, w: usize, range: Range<usize>, out: &mut [f32]) {
+        for (o, i) in out.iter_mut().zip(range) {
+            *o = self.value(w, i);
+        }
+    }
+}
+
+/// The flat reference reduction every topology is validated against:
+/// in-worker-order f32 summation of the full tensors, scaled by `1/W`
+/// once at the end. With an exact (`f32`) wire and integer-valued
+/// gradients, the chain topologies (ring/hier/tree) are bit-identical to
+/// this for any worker count; flat's legacy per-term `1/W` weighting
+/// matches it whenever `1/W` is a power of two (see
+/// [`collectives`] module docs).
+pub fn flat_reference_mean(src: &dyn GradSource, out: &mut Vec<f32>) {
+    let n = src.len();
+    let inv_w = 1.0 / src.workers() as f32;
+    out.clear();
+    out.resize(n, 0.0);
+    let mut scratch = vec![0.0f32; n];
+    for w in 0..src.workers() {
+        src.write(w, 0..n, &mut scratch);
+        for (a, &v) in out.iter_mut().zip(&scratch) {
+            *a += v;
+        }
+    }
+    for a in out.iter_mut() {
+        *a *= inv_w;
+    }
+}
+
+/// A topology plus its accounting and reusable codec scratch: the object
+/// `DpSim` (and the `repro fabric` driver) runs collectives on.
+pub struct Fabric {
+    pub topology: Topology,
+    pub stats: FabricStats,
+    /// Reusable packed payload; `pack_into` re-stamps format/granularity,
+    /// so one buffer serves every link spec.
+    wire: PackedTensor,
+    /// Reusable f32 staging buffers for partials/decodes.
+    buf_a: Vec<f32>,
+    buf_b: Vec<f32>,
+}
+
+impl Fabric {
+    pub fn new(topology: Topology) -> Result<Self> {
+        topology.validate()?;
+        Ok(Fabric {
+            topology,
+            stats: FabricStats::default(),
+            wire: PackedTensor::empty(
+                crate::formats::Format::F32,
+                crate::formats::Granularity::Tensor,
+            ),
+            buf_a: Vec::new(),
+            buf_b: Vec::new(),
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.topology.workers()
+    }
+
+    /// Mean all-reduce of `src` into `out` (resized to `src.len()`),
+    /// encoding every transmission with the wire spec of its link class
+    /// (`specs` indexed by [`LinkClass::index`], as produced by
+    /// [`crate::policy::PrecisionPolicy::link_resolution_at`]). The
+    /// `(rows, cols)` shape drives scale granularity for full-tensor
+    /// transmissions; ring shards re-derive scales as `(1, shard_len)`.
+    ///
+    /// Byte/send accounting accumulates into [`Fabric::stats`].
+    pub fn all_reduce_mean(
+        &mut self,
+        src: &dyn GradSource,
+        rows: usize,
+        cols: usize,
+        specs: &[QuantSpec; 4],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        ensure!(
+            src.workers() == self.topology.workers(),
+            "source has {} workers, topology {} expects {}",
+            src.workers(),
+            self.topology,
+            self.topology.workers()
+        );
+        ensure!(
+            rows * cols == src.len(),
+            "shape {rows}x{cols} does not match gradient length {}",
+            src.len()
+        );
+        for spec in specs {
+            ensure!(
+                spec.clamp.is_none(),
+                "wire spec {spec} carries a clamp: the ΔY residual is not transmitted"
+            );
+        }
+        collectives::run(self, src, rows, cols, specs, out);
+        self.stats.reduces += 1;
+        Ok(())
+    }
+
+    /// Internal transmission plumbing handed to the collectives.
+    pub(crate) fn parts(
+        &mut self,
+    ) -> (Topology, &mut FabricStats, &mut PackedTensor, &mut Vec<f32>, &mut Vec<f32>) {
+        (self.topology, &mut self.stats, &mut self.wire, &mut self.buf_a, &mut self.buf_b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_parse_display_round_trip() {
+        for s in ["flat:8", "ring:64", "hier:4x8", "tree:16@2", "tree:31@4", "flat:1"] {
+            let t = Topology::parse(s).unwrap();
+            assert_eq!(t.to_string(), s, "{s}");
+            assert_eq!(Topology::parse(&t.to_string()).unwrap(), t);
+        }
+        // bare tree defaults to fan-out 2 and canonicalizes with it
+        assert_eq!(
+            Topology::parse("tree:16").unwrap(),
+            Topology::Tree { workers: 16, fanout: 2 }
+        );
+        assert_eq!(Topology::parse("tree:16").unwrap().to_string(), "tree:16@2");
+    }
+
+    #[test]
+    fn topology_rejects_malformed_and_empty() {
+        for bad in [
+            "", "flat", "flat:", "flat:0", "ring:x", "hier:4", "hier:0x8", "hier:4x0",
+            "tree:8@0", "tree:0", "mesh:4", "flat:8x2",
+        ] {
+            assert!(Topology::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn topology_worker_counts() {
+        assert_eq!(Topology::parse("flat:8").unwrap().workers(), 8);
+        assert_eq!(Topology::parse("hier:4x8").unwrap().workers(), 32);
+        assert_eq!(Topology::parse("tree:31@4").unwrap().workers(), 31);
+    }
+
+    #[test]
+    fn synthetic_source_is_stateless_and_bounded() {
+        let s = SyntheticSource { workers: 4, len: 100, seed: 7 };
+        let mut a = vec![0.0; 100];
+        let mut b = vec![0.0; 100];
+        s.write(2, 0..100, &mut a);
+        s.write(2, 0..100, &mut b);
+        assert_eq!(a, b);
+        // range writes agree with full writes
+        let mut c = vec![0.0; 10];
+        s.write(2, 40..50, &mut c);
+        assert_eq!(&a[40..50], &c[..]);
+        assert!(a.iter().all(|v| (-1.0..1.0).contains(v)));
+        // distinct workers see distinct tensors
+        s.write(3, 0..100, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn flat_reference_mean_is_in_order_sum_then_scale() {
+        let grads = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let src = SliceSource { grads: &grads };
+        let mut out = Vec::new();
+        flat_reference_mean(&src, &mut out);
+        assert_eq!(out, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn stats_compression_well_defined_when_idle() {
+        let stats = FabricStats::default();
+        assert_eq!(stats.compression(), 1.0);
+        assert_eq!(stats.total_bytes(), 0);
+    }
+}

@@ -148,5 +148,22 @@ pub fn check_policy_parse(data: &[u8]) {
         }
         let _ = idx;
         let _ = p.phase_label_at(step);
+        // per-link wire resolution (PR-7): the one-scan resolver agrees
+        // with the single-link accessor, and no link ever resolves to a
+        // clamped spec — links are transport, the residual never ships
+        let (lidx, specs) = p.link_resolution_at(step);
+        assert_eq!(lidx, idx, "phase key mismatch wire vs link at step {step}");
+        for link in crate::policy::LinkClass::ALL {
+            let spec = specs[link.index()];
+            assert_eq!(
+                spec,
+                p.wire_spec_for_link_at(link, step),
+                "link {link} resolver disagreement at step {step}"
+            );
+            assert!(
+                spec.clamp.is_none(),
+                "clamped wire spec leaked on link {link} at step {step}"
+            );
+        }
     }
 }

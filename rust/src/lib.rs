@@ -38,12 +38,24 @@
 //!   background prefetching batch loader.
 //! - [`runtime`]  — manifest parsing, artifact loading/compilation cache,
 //!   typed step execution over PJRT.
+//! - [`fabric`]   — topology-aware comm fabric: `Topology` (`flat:W`,
+//!   `ring:W`, `hier:NxP`, `tree:W@F`) over simulated workers, collective
+//!   algorithms (flat hub, reduce-scatter+all-gather ring, two-level
+//!   hierarchical all-reduce, tree reduce/broadcast) built on the real
+//!   packed codecs with *per-hop requantization*, and a wire spec per
+//!   [`policy::LinkClass`] (`wire.inter=fp4:e2m1/row` quantizes only
+//!   inter-node links). `FabricStats` accounts every byte per link class,
+//!   exactly matching the `costmodel` predictions.
 //! - [`coordinator`] — the training orchestrator: single-process trainer
 //!   (fused or burst stepping), simulated data-parallel workers with
 //!   spec-driven gradient compression on the all-reduce wire (f32 / FP8 /
-//!   FP4 per `-o comm=<spec>`), raw or packed checkpoints, metric logs.
+//!   FP4 per `-o comm=<spec>`), running on a `fabric` topology
+//!   (`-o topology=hier:4x8`; flat reproduces the legacy path
+//!   bit-for-bit), raw or packed checkpoints, metric logs.
 //! - [`eval`]     — perplexity + zero-shot multiple-choice harness.
-//! - [`costmodel`] — Appendix B analytical FLOPs/speedup model (Table 5).
+//! - [`costmodel`] — Appendix B analytical FLOPs/speedup model (Table 5),
+//!   plus per-link byte predictions and alpha-beta step-time estimates
+//!   for a `(Topology, PrecisionPolicy)` pair.
 //! - [`stats`]    — histograms / channel statistics for Figs. 4, 8-14.
 //! - [`report`]   — table renderers + CSV writers for every experiment.
 //! - [`experiments`] — `fp4train repro <id>` drivers (fig1..fig14, tab1-5).
@@ -55,6 +67,7 @@ pub mod costmodel;
 pub mod data;
 pub mod eval;
 pub mod experiments;
+pub mod fabric;
 pub mod formats;
 #[doc(hidden)]
 pub mod fuzzing;

@@ -4,8 +4,10 @@
 //! fp4train train  [-o preset=.. -o policy=.. -o steps=.. -o corpus=..
 //!                  -o precision=<policy> | -o ckpt_format=<spec>]
 //! fp4train eval   [-o preset=.. -o policy=..]      held-out ppl + zero-shot
-//! fp4train dp     [-o workers=4 -o precision=<policy> | -o comm=<spec>]
-//! fp4train repro  <fig1|fig3|fig4|fig5|fig6a..d|tab1..tab5|fig7|dists|perf|all>
+//! fp4train dp     [-o workers=4 -o topology=hier:2x2 -o precision=<policy>
+//!                  | -o comm=<spec>]
+//! fp4train repro  <fig1|fig3|fig4|fig5|fig6a..d|tab1..tab5|fig7|dists|perf|
+//!                  fabric|all>
 //! fp4train formats                                  print FP4 tables
 //! fp4train info                                     manifest inventory
 //! ```
@@ -28,6 +30,7 @@ use fp4train::coordinator::Trainer;
 use fp4train::data::corpus::{Corpus, CorpusKind};
 use fp4train::data::loader::{BatchLoader, LoaderConfig, Sampler};
 use fp4train::experiments;
+use fp4train::fabric::{LinkClass, Topology};
 use fp4train::runtime::Engine;
 
 fn main() -> Result<()> {
@@ -56,13 +59,19 @@ commands:
   eval     held-out perplexity + zero-shot MC for a trained arm
   dp       simulated data-parallel training with quantized all-reduce
            -o workers=4 -o precision=<policy> (or -o comm=<spec>) -o steps=..
+           -o topology=flat:4|ring:4|hier:2x2|tree:4@2 (comm fabric; flat
+           reproduces the hub all-reduce bit-for-bit)
   repro    regenerate a paper table/figure: fig1 fig3 fig4 fig5 fig6a-d
-           tab1 tab2 tab3 tab4 tab5 fig7 dists perf all   [--quick]
+           tab1 tab2 tab3 tab4 tab5 fig7 dists perf fabric all   [--quick]
+           (fabric = engine-free topology x wire-policy comm sweep;
+           -o n=.. -o seed=..; writes results/perf/BENCH_fabric.json)
   formats  print the FP4 value tables (Appendix A, Table 4)
   info     list artifacts in the manifest
 
 precision policy: -o precision=<class>=<spec>[+dge@k<K>[c<CLIP>]],...[;<range>:<override>]
   classes  w a g wire ckpt master; ranges LO..HI, LO.. or warmup=N
+  per-link wire: wire.<intra|inter|up|down>=<spec> quantizes one fabric
+  link class, e.g. -o precision='wire=fp8:e4m3,wire.inter=fp4:e2m1/row'
   e.g. -o precision='wire=fp4:e2m1/row;0..100:wire=fp8:e4m3'
        (FP8 wire warmup, one-flag mid-run switch to FP4)
   aliases: -o comm=<spec> sets wire, -o ckpt_format=<spec> sets ckpt
@@ -75,7 +84,7 @@ run `make artifacts` (and `make artifacts-repro` for repro) first.";
 fn run_config(args: &Args) -> Result<RunConfig> {
     let mut cfg = RunConfig::default();
     for (k, v) in &args.overrides {
-        if !matches!(k.as_str(), "workers" | "quick") {
+        if !matches!(k.as_str(), "workers" | "quick" | "topology") {
             cfg.set(k, v)?;
         }
     }
@@ -188,6 +197,9 @@ fn cmd_dp(args: &Args) -> Result<()> {
         cfg.seed,
         cfg.precision.clone(),
     )?;
+    if let Some(t) = args.get("topology") {
+        sim = sim.with_topology(Topology::parse(t)?)?;
+    }
     println!("dp-sim: {}", sim.context_label());
     println!("precision policy: {}", sim.precision);
     for step in 0..cfg.steps {
@@ -216,6 +228,20 @@ fn cmd_dp(args: &Args) -> Result<()> {
             p.bytes_f32_equiv as f64 / p.bytes_sent.max(1) as f64,
         );
     }
+    // per-link-class accounting: one line per link class the fabric used
+    // (only the flat hub keeps everything on one class)
+    for link in LinkClass::ALL {
+        let l = sim.fabric_stats().link(link);
+        if l.sends > 0 {
+            println!(
+                "link {:>5}: {} sends, {:.2} MB sent ({:.2}x vs f32)",
+                link,
+                l.sends,
+                l.bytes as f64 / 1e6,
+                l.bytes_f32_equiv as f64 / l.bytes.max(1) as f64,
+            );
+        }
+    }
     Ok(())
 }
 
@@ -226,6 +252,11 @@ fn cmd_repro(args: &Args) -> Result<()> {
     // trajectory job), and understands --gate / --baseline=<path>.
     if id == "perf" {
         return experiments::perf::perf_cmd(args);
+    }
+    // `repro fabric` is engine-free (synthetic gradients on the comm
+    // fabric), so it skips Ctx::new and needs no artifacts either.
+    if id == "fabric" {
+        return experiments::fabric::fabric_cmd(args);
     }
     let artifacts = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let mut ctx = experiments::Ctx::new(&artifacts)?;

@@ -29,20 +29,42 @@
 //! `Display` exactly like [`QuantSpec`] does — `parse(display(p)) == p`:
 //!
 //! ```text
-//! policy    := classes (";" phase)*
+//! policy    := targets (";" phase)*
 //!            | phase (";" phase)*       -- schedule-only: defaults + phases
-//! classes   := class "=" classspec ("," class "=" classspec)*
+//! targets   := target "=" classspec ("," target "=" classspec)*
+//! target    := class | "wire." link
 //! class     := "w" | "a" | "g" | "wire" | "ckpt" | "master"
 //!              -- long aliases accepted on parse: weight, activation,
 //!              -- act, gradient, grad, comm, checkpoint, opt
+//! link      := "intra" | "inter" | "up" | "down"
+//!              -- long aliases: intra_node, inter_node, tree_up, tree_down
 //! classspec := quantspec [ "+dge@k" K [ "c" CLIP ] ]
 //!              -- quantspec per formats::codec (fp4:e2m1/row/clamp@0.999+comp)
 //! phase     := range ":" override
 //! range     := LO ".." [HI]            -- steps [LO, HI), HI omitted = open
 //!            | "warmup=" N             -- sugar for 0..N
-//! override  := classes                 -- targeted per-class overrides
+//! override  := targets                 -- targeted per-target overrides
 //!            | classspec               -- blanket: every class
 //! ```
+//!
+//! # Per-link-class wire overrides
+//!
+//! The comm fabric ([`crate::fabric`]) distinguishes four [`LinkClass`]es
+//! (`intra` node-local hops, `inter` cross-node hops, tree `up` / `down`
+//! hops). `wire.<link>=<spec>` pins one link class to its own wire
+//! encoding — e.g. `wire.inter=fp4:e2m1/row` quantizes only the scarce
+//! inter-node links to FP4 while intra-node hops keep the base `wire`
+//! spec. Resolution precedence at a step, most specific first:
+//!
+//!  1. a blanket phase override covering the step;
+//!  2. a `wire.<link>` entry in a targeted phase override;
+//!  3. a `wire` entry in a targeted phase override (a scheduled wire
+//!     switch applies to every link unless the phase names it);
+//!  4. the base `wire.<link>` override;
+//!  5. the base `wire` class.
+//!
+//! Like the `wire`/`ckpt` classes, per-link specs must be clamp-free (the
+//! ΔY residual is not transmitted).
 //!
 //! Examples (missing classes take the paper defaults of
 //! [`PrecisionPolicy::default`]):
@@ -150,6 +172,109 @@ impl fmt::Display for TensorClass {
     }
 }
 
+/// The four link roles a comm-fabric topology distinguishes (see
+/// [`crate::fabric`]). Each resolves its own wire spec through
+/// `wire.<link>=` policy overrides, falling back to the `wire` class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Hops between workers on the same node (NVLink-like).
+    IntraNode,
+    /// Hops between node leaders / flat-ring peers (IB-like).
+    InterNode,
+    /// Child→parent hops of a tree reduction.
+    TreeUp,
+    /// Parent→child hops of a tree broadcast.
+    TreeDown,
+}
+
+impl LinkClass {
+    /// All link classes, in canonical display order.
+    pub const ALL: [LinkClass; 4] = [
+        LinkClass::IntraNode,
+        LinkClass::InterNode,
+        LinkClass::TreeUp,
+        LinkClass::TreeDown,
+    ];
+
+    /// Canonical short name (what `Display` renders after `wire.`).
+    pub fn name(self) -> &'static str {
+        match self {
+            LinkClass::IntraNode => "intra",
+            LinkClass::InterNode => "inter",
+            LinkClass::TreeUp => "up",
+            LinkClass::TreeDown => "down",
+        }
+    }
+
+    /// Parse a link name; long aliases accepted, unknown names are hard
+    /// errors.
+    pub fn from_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "intra" | "intra_node" => LinkClass::IntraNode,
+            "inter" | "inter_node" => LinkClass::InterNode,
+            "up" | "tree_up" => LinkClass::TreeUp,
+            "down" | "tree_down" => LinkClass::TreeDown,
+            other => bail!(
+                "unknown link class {other:?} (expected intra, inter, up or down)"
+            ),
+        })
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            LinkClass::IntraNode => 0,
+            LinkClass::InterNode => 1,
+            LinkClass::TreeUp => 2,
+            LinkClass::TreeDown => 3,
+        }
+    }
+}
+
+impl fmt::Display for LinkClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `pad`, not `write_str`: summary tables align on `{:>5}`
+        f.pad(self.name())
+    }
+}
+
+/// Anything a `target=spec` policy entry can address: one of the six
+/// tensor classes, or one fabric link class of the wire
+/// (`wire.inter=...`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyTarget {
+    Class(TensorClass),
+    WireLink(LinkClass),
+}
+
+impl PolicyTarget {
+    /// Parse a target name: `wire.<link>` addresses a link class, any
+    /// other name a tensor class (so bare `wire` stays the Wire class).
+    pub fn from_name(s: &str) -> Result<Self> {
+        if let Some(link) = s.strip_prefix("wire.") {
+            return Ok(PolicyTarget::WireLink(LinkClass::from_name(link)?));
+        }
+        Ok(PolicyTarget::Class(TensorClass::from_name(s)?))
+    }
+
+    /// Canonical sort key: the six classes first (in `TensorClass::ALL`
+    /// order), then the link classes (in `LinkClass::ALL` order).
+    pub(crate) fn index(self) -> usize {
+        match self {
+            PolicyTarget::Class(c) => c.index(),
+            PolicyTarget::WireLink(l) => TensorClass::ALL.len() + l.index(),
+        }
+    }
+}
+
+impl fmt::Display for PolicyTarget {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PolicyTarget::Class(c) => write!(f, "{c}"),
+            PolicyTarget::WireLink(l) => write!(f, "wire.{l}"),
+        }
+    }
+}
+
 /// DGE surrogate parameters (Eqs. 7-8, Appendix C): the interpolation
 /// power `k` and the derivative clip (Appendix C.3, default 3.0).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -247,6 +372,10 @@ impl fmt::Display for ClassSpec {
 #[derive(Clone, Debug, PartialEq)]
 pub struct PrecisionPolicy {
     classes: [ClassSpec; 6],
+    /// Per-link-class wire overrides (`wire.<link>=`), indexed by
+    /// [`LinkClass::index`]; `None` = the link falls back to the `wire`
+    /// class.
+    wire_links: [Option<ClassSpec>; 4],
     pub schedule: Schedule,
 }
 
@@ -265,6 +394,7 @@ impl Default for PrecisionPolicy {
         let fp4 = Format::Fp4(Fp4Kind::E2M1);
         let mut p = PrecisionPolicy {
             classes: [ClassSpec::raw(Format::F32); 6],
+            wire_links: [None; 4],
             schedule: Schedule::empty(),
         };
         p.classes[TensorClass::Weight.index()] = ClassSpec {
@@ -297,8 +427,13 @@ impl PrecisionPolicy {
         });
         if !first_is_phase {
             let base = segments.next().unwrap_or("");
-            for (class, cs) in parse_class_list(base)? {
-                p.classes[class.index()] = cs;
+            for (target, cs) in parse_target_list(base)? {
+                match target {
+                    PolicyTarget::Class(class) => p.classes[class.index()] = cs,
+                    PolicyTarget::WireLink(link) => {
+                        p.wire_links[link.index()] = Some(cs)
+                    }
+                }
             }
         }
         for seg in segments {
@@ -326,9 +461,21 @@ impl PrecisionPolicy {
         self
     }
 
+    /// Builder: pin one wire link class to its own spec (`wire.<link>=`).
+    /// Does not validate.
+    pub fn with_wire_link(mut self, link: LinkClass, cs: ClassSpec) -> Self {
+        self.wire_links[link.index()] = Some(cs);
+        self
+    }
+
     /// The base (un-scheduled) spec of a class.
     pub fn class(&self, class: TensorClass) -> &ClassSpec {
         &self.classes[class.index()]
+    }
+
+    /// The base (un-scheduled) per-link wire override, if one is set.
+    pub fn wire_link(&self, link: LinkClass) -> Option<&ClassSpec> {
+        self.wire_links[link.index()].as_ref()
     }
 
     /// The spec of a class at a given training step, after applying any
@@ -341,7 +488,8 @@ impl PrecisionPolicy {
             match &phase.over {
                 Override::Blanket(cs) => return cs,
                 Override::PerClass(list) => {
-                    if let Some((_, cs)) = list.iter().find(|(c, _)| *c == class) {
+                    let want = PolicyTarget::Class(class);
+                    if let Some((_, cs)) = list.iter().find(|(t, _)| *t == want) {
                         return cs;
                     }
                 }
@@ -369,11 +517,52 @@ impl PrecisionPolicy {
                     Override::Blanket(cs) => cs,
                     Override::PerClass(list) => list
                         .iter()
-                        .find(|(c, _)| *c == TensorClass::Wire)
+                        .find(|(t, _)| *t == PolicyTarget::Class(TensorClass::Wire))
                         .map(|(_, cs)| cs)
                         .unwrap_or_else(|| self.class(TensorClass::Wire)),
                 };
                 (Some(i), cs.spec)
+            }
+        }
+    }
+
+    /// The wire spec one fabric link class uses at a step (clamp-free by
+    /// validation). Precedence, most specific first: blanket phase
+    /// override > phase `wire.<link>` > phase `wire` > base `wire.<link>`
+    /// > base `wire` — i.e. a scheduled wire switch applies to every link
+    /// unless the phase names the link explicitly.
+    pub fn wire_spec_for_link_at(&self, link: LinkClass, step: usize) -> QuantSpec {
+        self.link_resolution_at(step).1[link.index()]
+    }
+
+    /// One-scan per-link resolution for the fabric hot path: the
+    /// schedule-phase index covering `step` (`None` = base policy) plus
+    /// the wire spec of every link class, indexed by [`LinkClass::index`].
+    pub fn link_resolution_at(&self, step: usize) -> (Option<usize>, [QuantSpec; 4]) {
+        let base_wire = self.class(TensorClass::Wire).spec;
+        let base_of = |link: LinkClass| {
+            self.wire_links[link.index()].map(|cs| cs.spec).unwrap_or(base_wire)
+        };
+        match self.schedule.phase_at(step) {
+            None => (None, LinkClass::ALL.map(base_of)),
+            Some((i, phase)) => {
+                let specs = match &phase.over {
+                    Override::Blanket(cs) => [cs.spec; 4],
+                    Override::PerClass(list) => {
+                        let phase_wire = list
+                            .iter()
+                            .find(|(t, _)| *t == PolicyTarget::Class(TensorClass::Wire))
+                            .map(|(_, cs)| cs.spec);
+                        LinkClass::ALL.map(|link| {
+                            list.iter()
+                                .find(|(t, _)| *t == PolicyTarget::WireLink(link))
+                                .map(|(_, cs)| cs.spec)
+                                .or(phase_wire)
+                                .unwrap_or_else(|| base_of(link))
+                        })
+                    }
+                };
+                (Some(i), specs)
             }
         }
     }
@@ -407,6 +596,11 @@ impl PrecisionPolicy {
         for (class, cs) in TensorClass::ALL.iter().zip(&self.classes) {
             validate_class(*class, cs)?;
         }
+        for (link, cs) in LinkClass::ALL.iter().zip(&self.wire_links) {
+            if let Some(cs) = cs {
+                validate_target(PolicyTarget::WireLink(*link), cs)?;
+            }
+        }
         self.schedule.validate()?;
         for phase in &self.schedule.phases {
             match &phase.over {
@@ -418,8 +612,8 @@ impl PrecisionPolicy {
                     }
                 }
                 Override::PerClass(list) => {
-                    for (class, cs) in list {
-                        validate_class(*class, cs)?;
+                    for (target, cs) in list {
+                        validate_target(*target, cs)?;
                     }
                 }
             }
@@ -456,26 +650,51 @@ fn validate_class(class: TensorClass, cs: &ClassSpec) -> Result<()> {
     Ok(())
 }
 
-/// Parse `class=classspec,...`, rejecting unknown and duplicate classes.
+/// Target-level invariants: link-class wire specs are transport specs and
+/// share the Wire class's clamp-free rule.
+fn validate_target(target: PolicyTarget, cs: &ClassSpec) -> Result<()> {
+    match target {
+        PolicyTarget::Class(class) => validate_class(class, cs),
+        PolicyTarget::WireLink(link) => {
+            ensure!(
+                cs.spec.clamp.is_none(),
+                "wire.{link} spec {} carries a clamp: the ΔY residual is not transmitted",
+                cs.spec
+            );
+            if let Some(d) = &cs.dge {
+                ensure!(
+                    d.k > 0.0 && d.clip > 0.0,
+                    "wire.{link}: dge params must be positive (k={}, clip={})",
+                    d.k,
+                    d.clip
+                );
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Parse `target=classspec,...`, rejecting unknown and duplicate targets.
 /// Returned in input order; callers overlay onto defaults or sort.
-pub(crate) fn parse_class_list(s: &str) -> Result<Vec<(TensorClass, ClassSpec)>> {
-    let mut out: Vec<(TensorClass, ClassSpec)> = Vec::new();
+pub(crate) fn parse_target_list(s: &str) -> Result<Vec<(PolicyTarget, ClassSpec)>> {
+    let mut out: Vec<(PolicyTarget, ClassSpec)> = Vec::new();
     for item in s.split(',') {
         let (name, spec) = item
             .split_once('=')
             .ok_or_else(|| anyhow::anyhow!("expected class=spec, got {item:?}"))?;
-        let class = TensorClass::from_name(name.trim())?;
+        let target = PolicyTarget::from_name(name.trim())?;
         ensure!(
-            !out.iter().any(|(c, _)| *c == class),
-            "duplicate class {class} in {s:?}"
+            !out.iter().any(|(t, _)| *t == target),
+            "duplicate target {target} in {s:?}"
         );
-        out.push((class, ClassSpec::parse(spec)?));
+        out.push((target, ClassSpec::parse(spec)?));
     }
     Ok(out)
 }
 
 impl fmt::Display for PrecisionPolicy {
     /// Canonical long form: all six classes in [`TensorClass::ALL`] order,
+    /// then any set `wire.<link>` overrides in [`LinkClass::ALL`] order,
     /// then each schedule phase. `parse(display(p)) == p`.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         for (i, class) in TensorClass::ALL.iter().enumerate() {
@@ -483,6 +702,11 @@ impl fmt::Display for PrecisionPolicy {
                 f.write_str(",")?;
             }
             write!(f, "{class}={}", self.classes[class.index()])?;
+        }
+        for link in LinkClass::ALL {
+            if let Some(cs) = &self.wire_links[link.index()] {
+                write!(f, ",wire.{link}={cs}")?;
+            }
         }
         for phase in &self.schedule.phases {
             write!(f, ";{phase}")?;
@@ -708,5 +932,123 @@ mod tests {
         let p = PrecisionPolicy::parse("weight=f32,activation=f32,comm=fp4:e2m1/row").unwrap();
         assert!(p.class(TensorClass::Weight).spec.is_raw());
         assert_eq!(p.wire_spec_at(0), QuantSpec::parse("fp4:e2m1/row").unwrap());
+    }
+
+    #[test]
+    fn wire_link_overrides_parse_resolve_and_round_trip() {
+        let p = PrecisionPolicy::parse("wire=fp8:e4m3,wire.inter=fp4:e2m1/row").unwrap();
+        let fp8 = QuantSpec::parse("fp8:e4m3").unwrap();
+        let fp4 = QuantSpec::parse("fp4:e2m1/row").unwrap();
+        // the named link gets its own spec; every other link falls back
+        assert_eq!(p.wire_spec_for_link_at(LinkClass::InterNode, 0), fp4);
+        assert_eq!(p.wire_spec_for_link_at(LinkClass::IntraNode, 0), fp8);
+        assert_eq!(p.wire_spec_for_link_at(LinkClass::TreeUp, 0), fp8);
+        // the flat wire class is untouched by link overrides
+        assert_eq!(p.wire_spec_at(0), fp8);
+        // long aliases
+        let q = PrecisionPolicy::parse("wire.inter_node=fp4:e2m1/row").unwrap();
+        assert_eq!(q.wire_link(LinkClass::InterNode), p.wire_link(LinkClass::InterNode));
+        // canonical Display lists links after the classes and round-trips
+        let s = p.to_string();
+        assert!(s.contains(",wire.inter=fp4:e2m1/row"), "{s}");
+        let back = PrecisionPolicy::parse(&s).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.to_string(), s);
+    }
+
+    #[test]
+    fn wire_link_resolution_precedence_across_phases() {
+        // base wire.inter=fp4; a phase switching `wire=` applies to every
+        // link unless the phase names the link itself
+        let p = PrecisionPolicy::parse(
+            "wire=fp8:e4m3,wire.inter=fp4:e2m1/row;\
+             0..10:wire=f32;10..20:wire=f32,wire.inter=fp8:e5m2;20..30:f16",
+        )
+        .unwrap();
+        let inter = LinkClass::InterNode;
+        let intra = LinkClass::IntraNode;
+        // phase 0..10: plain wire switch overrides the base link spec too
+        assert!(p.wire_spec_for_link_at(inter, 0).is_raw());
+        assert!(p.wire_spec_for_link_at(intra, 0).is_raw());
+        // phase 10..20: the phase names wire.inter explicitly
+        assert_eq!(
+            p.wire_spec_for_link_at(inter, 10),
+            QuantSpec::parse("fp8:e5m2").unwrap()
+        );
+        assert!(p.wire_spec_for_link_at(intra, 10).is_raw());
+        // phase 20..30: blanket override covers every link
+        assert_eq!(p.wire_spec_for_link_at(inter, 20), QuantSpec::parse("f16").unwrap());
+        assert_eq!(p.wire_spec_for_link_at(intra, 20), QuantSpec::parse("f16").unwrap());
+        // past the schedule: base wire.inter beats base wire
+        assert_eq!(
+            p.wire_spec_for_link_at(inter, 30),
+            QuantSpec::parse("fp4:e2m1/row").unwrap()
+        );
+        assert_eq!(
+            p.wire_spec_for_link_at(intra, 30),
+            QuantSpec::parse("fp8:e4m3").unwrap()
+        );
+        // the one-scan resolver agrees with the per-link calls everywhere
+        for step in [0, 9, 10, 19, 20, 29, 30, 1_000_000] {
+            let (idx, specs) = p.link_resolution_at(step);
+            assert_eq!(idx, p.schedule.phase_at(step).map(|(i, _)| i), "step {step}");
+            for link in LinkClass::ALL {
+                assert_eq!(
+                    specs[link.index()],
+                    p.wire_spec_for_link_at(link, step),
+                    "step {step} link {link}"
+                );
+            }
+        }
+        assert_eq!(PrecisionPolicy::parse(&p.to_string()).unwrap(), p);
+    }
+
+    #[test]
+    fn wire_links_default_to_the_wire_class() {
+        let p = PrecisionPolicy::default();
+        for link in LinkClass::ALL {
+            assert_eq!(p.wire_link(link), None);
+            assert_eq!(p.wire_spec_for_link_at(link, 0), p.wire_spec_at(0));
+        }
+        // link overrides don't change the canonical default rendering
+        assert!(!p.to_string().contains("wire."));
+    }
+
+    #[test]
+    fn clamped_and_bogus_wire_links_rejected() {
+        // clamp-free rule applies to link specs, base and scheduled
+        let err = PrecisionPolicy::parse("wire.inter=fp4:e2m1/clamp@0.99")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not transmitted"), "{err}");
+        assert!(
+            PrecisionPolicy::parse("w=f32;0..10:wire.up=fp4:e2m1/clamp@0.99").is_err()
+        );
+        // unknown link names are hard errors, not silently the wire class
+        assert!(PrecisionPolicy::parse("wire.bogus=f32").is_err());
+        assert!(PrecisionPolicy::parse("wire.=f32").is_err());
+        // duplicate link targets rejected like duplicate classes
+        assert!(PrecisionPolicy::parse("wire.inter=f32,wire.inter=f16").is_err());
+        // hand-built policies fail identically through validate()
+        let p = PrecisionPolicy::default().with_wire_link(
+            LinkClass::TreeDown,
+            ClassSpec::of(QuantSpec::parse("fp4:e2m1/clamp@0.99").unwrap()),
+        );
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn scheduled_wire_link_override_round_trips_canonically() {
+        let p = PrecisionPolicy::parse("0..10:wire.down=f32,wire.up=f16").unwrap();
+        // targets sort canonically: up (TreeUp) before down (TreeDown)
+        let s = p.to_string();
+        assert!(s.contains(";0..10:wire.up=f16/tensor,wire.down=f32/tensor"), "{s}");
+        assert_eq!(PrecisionPolicy::parse(&s).unwrap(), p);
+        assert_eq!(p.wire_spec_for_link_at(LinkClass::TreeUp, 5), QuantSpec::parse("f16").unwrap());
+        // other links keep the default wire during the phase
+        assert_eq!(
+            p.wire_spec_for_link_at(LinkClass::IntraNode, 5),
+            PrecisionPolicy::default().wire_spec_at(0)
+        );
     }
 }

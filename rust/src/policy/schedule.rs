@@ -12,7 +12,7 @@
 //! ```text
 //! phase := range ":" override
 //! range := LO ".." [HI] | "warmup=" N        -- warmup=N canonicalizes to 0..N
-//! override := class "=" classspec ("," ...)  -- targeted
+//! override := target "=" classspec ("," ...) -- targeted (class or wire.<link>)
 //!           | classspec                      -- blanket (no '=' present)
 //! ```
 
@@ -20,7 +20,7 @@ use std::fmt;
 
 use anyhow::{ensure, Result};
 
-use super::{parse_class_list, ClassSpec, TensorClass};
+use super::{parse_target_list, ClassSpec, PolicyTarget};
 
 /// Half-open step range `[start, end)`; `end == None` means open-ended.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -82,13 +82,14 @@ impl fmt::Display for StepRange {
     }
 }
 
-/// What a phase changes: everything, or specific classes.
+/// What a phase changes: everything, or specific targets.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Override {
-    /// One spec for every tensor class (e.g. an f32 warmup).
+    /// One spec for every tensor class and link (e.g. an f32 warmup).
     Blanket(ClassSpec),
-    /// Targeted per-class overrides; unlisted classes keep the base spec.
-    PerClass(Vec<(TensorClass, ClassSpec)>),
+    /// Targeted overrides — tensor classes or `wire.<link>` link classes;
+    /// unlisted targets keep the base spec.
+    PerClass(Vec<(PolicyTarget, ClassSpec)>),
 }
 
 /// One step-ranged override.
@@ -104,11 +105,11 @@ impl fmt::Display for Phase {
         match &self.over {
             Override::Blanket(cs) => write!(f, "{cs}"),
             Override::PerClass(list) => {
-                for (i, (class, cs)) in list.iter().enumerate() {
+                for (i, (target, cs)) in list.iter().enumerate() {
                     if i > 0 {
                         f.write_str(",")?;
                     }
-                    write!(f, "{class}={cs}")?;
+                    write!(f, "{target}={cs}")?;
                 }
                 Ok(())
             }
@@ -125,8 +126,8 @@ pub(crate) fn parse_phase(s: &str) -> Result<Phase> {
         .ok_or_else(|| anyhow::anyhow!("bad schedule phase {s:?} (expected range:override)"))?;
     let range = StepRange::parse(range_str)?;
     let over = if over_str.contains('=') {
-        let mut list = parse_class_list(over_str)?;
-        list.sort_by_key(|(c, _)| c.index()); // canonical order for Display
+        let mut list = parse_target_list(over_str)?;
+        list.sort_by_key(|(t, _)| t.index()); // canonical order for Display
         Override::PerClass(list)
     } else {
         Override::Blanket(ClassSpec::parse(over_str)?)

@@ -18,7 +18,8 @@ fn random_bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
 /// Bytes drawn from the spec/policy grammar alphabet — far denser in
 /// near-parseable strings than uniform bytes.
 fn grammar_soup(rng: &mut Rng, max_len: usize) -> Vec<u8> {
-    const ALPHABET: &[u8] = b"fp4fp8f16f32e2m1e4m3e5m2tensorrowcolclamp@+comp.0159/;,:=wagmcks.. ";
+    const ALPHABET: &[u8] =
+        b"fp4fp8f16f32e2m1e4m3e5m2tensorrowcolclamp@+comp.0159/;,:=wagmcks.. wire.intraupdown";
     let n = rng.below(max_len as u64 + 1) as usize;
     (0..n)
         .map(|_| ALPHABET[rng.below(ALPHABET.len() as u64) as usize])
@@ -66,6 +67,10 @@ const VALID_POLICIES: &[&str] = &[
     "wire=fp8:e4m3;0..100:f32",
     "a=fp4:e2m1;0..50:wire=f32;50..200:wire=fp8:e4m3",
     "ckpt=fp8:e4m3,master=f32;1000..:a=fp4:e3m0/row",
+    // per-link-class wire overrides (PR-7 fabric grammar)
+    "wire=fp8:e4m3,wire.inter=fp4:e2m1/row,wire.up=fp4:e2m1/row",
+    "wire.intra=f16,wire.down=fp8:e5m2/col;0..10:wire.up=f16",
+    "wire=fp4:e2m1/row;0..100:wire=fp8:e4m3,wire.inter=fp4:e2m1/row",
 ];
 
 #[test]

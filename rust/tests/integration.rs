@@ -9,6 +9,8 @@ use fp4train::coordinator::dp::DpSim;
 use fp4train::coordinator::{checkpoint, Trainer};
 use fp4train::data::corpus::{Corpus, CorpusKind};
 use fp4train::data::loader::{BatchLoader, LoaderConfig, Sampler};
+use fp4train::fabric::{LinkClass, Topology};
+use fp4train::formats::{shape2d, QuantSpec};
 use fp4train::policy::PrecisionPolicy;
 use fp4train::runtime::Engine;
 
@@ -259,6 +261,104 @@ fn dp_mid_run_wire_switch_runs_via_one_policy_string() {
         warm.bytes_sent + base.bytes_sent,
         "phase totals must partition the run total"
     );
+}
+
+#[test]
+fn dp_rejects_zero_workers_with_a_clear_error() {
+    let Some(engine) = engine() else { return };
+    let c = corpus();
+    let err = DpSim::new(engine, "nano", "bf16", &c, 0, 0, spec("fp8:e4m3"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("at least one worker"), "unhelpful error: {err}");
+}
+
+#[test]
+fn dp_compression_is_well_defined_before_any_step() {
+    let Some(engine) = engine() else { return };
+    let c = corpus();
+    let sim = DpSim::new(engine, "nano", "bf16", &c, 2, 0, spec("fp8:e4m3")).unwrap();
+    assert_eq!(sim.compression(), 1.0, "no traffic yet means no compression");
+    assert_eq!(sim.stats.bytes_sent, 0);
+    assert_eq!(sim.fabric_stats().compression(), 1.0);
+}
+
+#[test]
+fn dp_flat_fabric_reproduces_legacy_losses_and_bytes_bit_for_bit() {
+    let Some(engine) = engine() else { return };
+    // Regression pin for the fabric rework: the default fabric IS the
+    // legacy hub reduction. An explicitly requested flat topology changes
+    // nothing (losses bit-identical), and the wire-byte total equals the
+    // legacy closed form: steps * workers * sum_tensors wire_bytes(shape).
+    let c = corpus();
+    let mut a = DpSim::new(engine.clone(), "nano", "bf16", &c, 2, 0, spec("fp8:e4m3")).unwrap();
+    let mut b = DpSim::new(engine.clone(), "nano", "bf16", &c, 2, 0, spec("fp8:e4m3"))
+        .unwrap()
+        .with_topology(Topology::parse("flat:2").unwrap())
+        .unwrap();
+    let steps = 3u64;
+    for _ in 0..steps {
+        let la = a.dp_step().unwrap();
+        let lb = b.dp_step().unwrap();
+        assert_eq!(la.to_bits(), lb.to_bits(), "flat fabric must be the legacy path");
+    }
+    assert_eq!(a.stats.bytes_sent, b.stats.bytes_sent);
+    assert_eq!(a.stats.bytes_f32_equiv, b.stats.bytes_f32_equiv);
+
+    let ws = QuantSpec::parse("fp8:e4m3").unwrap();
+    let grad = a.entry.step("grad").unwrap();
+    let per_worker: u64 = grad
+        .outputs
+        .iter()
+        .take(a.n_params())
+        .map(|io| {
+            let (r, cl) = shape2d(&io.shape, io.elements());
+            ws.wire_bytes(r, cl)
+        })
+        .sum();
+    assert_eq!(a.stats.bytes_sent, steps * 2 * per_worker, "legacy byte accounting");
+    // all flat traffic rides the inter-node link class
+    assert_eq!(a.fabric_stats().link(LinkClass::InterNode).bytes, a.stats.bytes_sent);
+    assert_eq!(a.fabric_stats().link(LinkClass::IntraNode).bytes, 0);
+
+    // a mismatched topology is refused up front
+    let err = DpSim::new(engine, "nano", "bf16", &c, 2, 0, spec("fp8:e4m3"))
+        .unwrap()
+        .with_topology(Topology::parse("hier:2x4").unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("8 workers"), "unhelpful error: {err}");
+}
+
+#[test]
+fn dp_hierarchical_topology_trains_with_per_link_accounting() {
+    let Some(engine) = engine() else { return };
+    // The acceptance scenario for per-link wire policies: fp8 on the
+    // plentiful intra-node links, fp4 rows on the scarce inter-node ones —
+    // one policy string, one topology knob.
+    let c = corpus();
+    let policy = PrecisionPolicy::parse("wire=fp8:e4m3,wire.inter=fp4:e2m1/row").unwrap();
+    let mut sim = DpSim::new(engine, "nano", "bf16", &c, 4, 0, policy)
+        .unwrap()
+        .with_topology(Topology::parse("hier:2x2").unwrap())
+        .unwrap();
+    for _ in 0..3 {
+        let l = sim.dp_step().unwrap();
+        assert!(l.is_finite());
+    }
+    let fs = sim.fabric_stats();
+    let intra = fs.link(LinkClass::IntraNode);
+    let inter = fs.link(LinkClass::InterNode);
+    assert!(intra.sends > 0 && inter.sends > 0, "both tiers must carry traffic");
+    // each link compresses at its own spec's rate
+    let intra_ratio = intra.bytes_f32_equiv as f64 / intra.bytes as f64;
+    let inter_ratio = inter.bytes_f32_equiv as f64 / inter.bytes as f64;
+    assert!(intra_ratio > 3.9 && intra_ratio <= 4.0, "fp8 intra ratio {intra_ratio}");
+    assert!(inter_ratio > 5.5, "fp4 row inter ratio {inter_ratio}");
+    // the comm stats totals are the fabric ledger, summed over links
+    assert_eq!(sim.stats.bytes_sent, fs.total_bytes());
+    assert_eq!(sim.stats.bytes_f32_equiv, fs.total_f32_equiv());
+    assert!(sim.context_label().contains("topology=hier:2x2"));
 }
 
 #[test]

@@ -2,9 +2,12 @@
 //! offline). Each property runs over hundreds of randomized cases; a
 //! failing case prints its seed for replay.
 
+use fp4train::fabric::{flat_reference_mean, Fabric, SliceSource, Topology};
 use fp4train::formats::{self, fp16, fp8, Format, Fp4Kind, Granularity, QuantSpec};
 use fp4train::policy::schedule::{Override, Phase, Schedule, StepRange};
-use fp4train::policy::{ClassSpec, DgeParams, PrecisionPolicy, TensorClass};
+use fp4train::policy::{
+    ClassSpec, DgeParams, LinkClass, PolicyTarget, PrecisionPolicy, TensorClass,
+};
 use fp4train::quant::{self, occ};
 use fp4train::runtime::Manifest;
 use fp4train::util::Rng;
@@ -551,15 +554,27 @@ fn random_schedule(rng: &mut Rng) -> Schedule {
         let over = if rng.below(2) == 0 {
             Override::Blanket(random_class_spec(rng, TensorClass::Wire))
         } else {
+            // targets pushed in index order (classes, then wire links) so
+            // the generated list is already in the canonical sort order
+            // `parse` produces — round-trip equality stays exact
             let mut list = Vec::new();
             for class in TensorClass::ALL {
                 if rng.below(3) == 0 {
-                    list.push((class, random_class_spec(rng, class)));
+                    list.push((PolicyTarget::Class(class), random_class_spec(rng, class)));
+                }
+            }
+            for link in LinkClass::ALL {
+                if rng.below(4) == 0 {
+                    // link specs are transport: clamp-free like Wire
+                    list.push((
+                        PolicyTarget::WireLink(link),
+                        random_class_spec(rng, TensorClass::Wire),
+                    ));
                 }
             }
             if list.is_empty() {
                 list.push((
-                    TensorClass::Weight,
+                    PolicyTarget::Class(TensorClass::Weight),
                     random_class_spec(rng, TensorClass::Weight),
                 ));
             }
@@ -575,6 +590,11 @@ fn random_policy(rng: &mut Rng) -> PrecisionPolicy {
     for class in TensorClass::ALL {
         if rng.below(2) == 0 {
             p = p.with_class(class, random_class_spec(rng, class));
+        }
+    }
+    for link in LinkClass::ALL {
+        if rng.below(4) == 0 {
+            p = p.with_wire_link(link, random_class_spec(rng, TensorClass::Wire));
         }
     }
     p.with_schedule(random_schedule(rng))
@@ -643,7 +663,7 @@ fn prop_schedule_resolution_exact_at_boundaries() {
                     Override::Blanket(cs) => cs,
                     Override::PerClass(list) => list
                         .iter()
-                        .find(|(c, _)| *c == class)
+                        .find(|(t, _)| *t == PolicyTarget::Class(class))
                         .map(|(_, cs)| cs)
                         .unwrap_or_else(|| p.class(class)),
                 };
@@ -691,6 +711,153 @@ fn prop_schedule_resolution_exact_at_boundaries() {
                 p.schedule.phase_at(step).map(|(i, _)| i),
                 "seed {seed} step {step}"
             );
+        }
+    }
+}
+
+#[test]
+fn prop_link_resolution_follows_documented_precedence() {
+    // oracle: blanket phase > phase wire.<link> > phase wire > base
+    // wire.<link> > base wire, re-derived here by explicit lookup
+    for seed in cases(200) {
+        let mut rng = Rng::new(seed);
+        let p = random_policy(&mut rng);
+        let base_of = |link: LinkClass| {
+            p.wire_link(link)
+                .map(|cs| cs.spec)
+                .unwrap_or(p.class(TensorClass::Wire).spec)
+        };
+        let mut probes = vec![0usize, 1, 100, 10_000];
+        for phase in &p.schedule.phases {
+            probes.push(phase.range.start);
+            probes.push(phase.range.start.saturating_sub(1));
+            if let Some(e) = phase.range.end {
+                probes.push(e);
+                probes.push(e - 1);
+            }
+        }
+        for step in probes {
+            let (idx, specs) = p.link_resolution_at(step);
+            assert_eq!(
+                idx,
+                p.schedule.phase_at(step).map(|(i, _)| i),
+                "seed {seed} step {step}"
+            );
+            for link in LinkClass::ALL {
+                let want = match p.schedule.phase_at(step) {
+                    None => base_of(link),
+                    Some((_, phase)) => match &phase.over {
+                        Override::Blanket(cs) => cs.spec,
+                        Override::PerClass(list) => list
+                            .iter()
+                            .find(|(t, _)| *t == PolicyTarget::WireLink(link))
+                            .or_else(|| {
+                                list.iter().find(|(t, _)| {
+                                    *t == PolicyTarget::Class(TensorClass::Wire)
+                                })
+                            })
+                            .map(|(_, cs)| cs.spec)
+                            .unwrap_or_else(|| base_of(link)),
+                    },
+                };
+                assert_eq!(
+                    specs[link.index()],
+                    want,
+                    "seed {seed} step {step} link {link}"
+                );
+                assert_eq!(
+                    p.wire_spec_for_link_at(link, step),
+                    want,
+                    "seed {seed} step {step} link {link}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Comm fabric: chain topologies reduce bit-identically to the flat f32
+// reference (odd shards, non-dividing worker counts, single worker), and
+// per-link byte accounting matches the analytical cost model exactly for
+// every wire format x granularity
+// ---------------------------------------------------------------------------
+
+/// Integer-valued gradients: every partial sum up to `W * 100` is exactly
+/// representable in f32, so a fixed summation order is bit-deterministic.
+fn random_int_grads(rng: &mut Rng, workers: usize, n: usize) -> Vec<Vec<f32>> {
+    (0..workers)
+        .map(|_| (0..n).map(|_| rng.below(201) as f32 - 100.0).collect())
+        .collect()
+}
+
+/// Random topology arms at one worker scale: ring, a random-fan-out tree,
+/// a random divisor split hierarchy, and — only when `1/W` is exact in
+/// f32 — flat (flat weights per term instead of scaling once, so its
+/// reduction only matches the reference bitwise for power-of-two W).
+fn random_topologies(rng: &mut Rng, workers: usize) -> Vec<Topology> {
+    let divs: Vec<usize> = (1..=workers).filter(|d| workers % d == 0).collect();
+    let per_node = divs[rng.below(divs.len() as u64) as usize];
+    let mut ts = vec![
+        Topology::Ring { workers },
+        Topology::Tree { workers, fanout: 1 + rng.below(4) as usize },
+        Topology::Hier { nodes: workers / per_node, per_node },
+    ];
+    if workers.is_power_of_two() {
+        ts.push(Topology::Flat { workers });
+    }
+    ts
+}
+
+#[test]
+fn prop_fabric_topologies_match_flat_reference_bitwise() {
+    for seed in cases(60) {
+        let mut rng = Rng::new(seed);
+        let workers = 1 + rng.below(17) as usize; // includes 1 and primes
+        let n = 1 + rng.below(97) as usize; // includes n < W (empty shards)
+        let grads = random_int_grads(&mut rng, workers, n);
+        let src = SliceSource { grads: &grads };
+        let mut want = Vec::new();
+        flat_reference_mean(&src, &mut want);
+        let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        let f32s = [QuantSpec::parse("f32").unwrap(); 4];
+        for topology in random_topologies(&mut rng, workers) {
+            let mut fabric = Fabric::new(topology).unwrap();
+            let mut out = Vec::new();
+            fabric.all_reduce_mean(&src, 1, n, &f32s, &mut out).unwrap();
+            let out_bits: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(
+                out_bits, want_bits,
+                "seed {seed} {topology} W={workers} n={n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_fabric_bytes_match_cost_model_for_every_format_granularity() {
+    let mut rng = Rng::new(0xFAB);
+    for fmt in ALL_FORMATS {
+        for gran in ALL_GRANS {
+            let spec = QuantSpec::new(fmt, gran);
+            let policy =
+                PrecisionPolicy::default().with_class_spec(TensorClass::Wire, spec);
+            let (_, specs) = policy.link_resolution_at(0);
+            for _ in 0..4 {
+                let workers = 1 + rng.below(13) as usize;
+                let n = 1 + rng.below(301) as usize; // odd shards likely
+                let grads = random_int_grads(&mut rng, workers, n);
+                let src = SliceSource { grads: &grads };
+                for topology in random_topologies(&mut rng, workers) {
+                    let mut fabric = Fabric::new(topology).unwrap();
+                    let mut out = Vec::new();
+                    fabric.all_reduce_mean(&src, 1, n, &specs, &mut out).unwrap();
+                    assert_eq!(
+                        fabric.stats.bytes_by_link(),
+                        fp4train::costmodel::bytes_per_step(&policy, n, topology),
+                        "{spec} {topology} W={workers} n={n}"
+                    );
+                }
+            }
         }
     }
 }
