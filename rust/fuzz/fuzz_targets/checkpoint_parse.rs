@@ -1,0 +1,12 @@
+//! Fuzz the checkpoint binary format: `read_from` must never panic on
+//! arbitrary bytes, a freshly written v3 file must load back, and any
+//! single-byte corruption of the CRC-framed body must be rejected (not
+//! garbage-decoded). See `fp4train::fuzzing`.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    fp4train::fuzzing::check_checkpoint_parse(data);
+});

@@ -1,0 +1,12 @@
+//! Fuzz the `FaultPlan` grammar: parse must never panic, accepted plans
+//! must satisfy `validate()`, round-trip through `Display`, and drive
+//! bit-identical `FaultState` draws — the determinism contract of the
+//! resilience layer. See `fp4train::fuzzing`.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    fp4train::fuzzing::check_fault_plan_parse(data);
+});

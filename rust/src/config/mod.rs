@@ -17,6 +17,7 @@ use std::path::PathBuf;
 use crate::data::corpus::CorpusKind;
 use crate::formats::QuantSpec;
 use crate::policy::{ClassSpec, PrecisionPolicy, TensorClass};
+use crate::resilience::FaultPlan;
 
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -37,6 +38,14 @@ pub struct RunConfig {
     /// step schedule. Defaults match the pre-policy knobs exactly
     /// (FP8 E4M3 wire, raw f32 checkpoints).
     pub precision: PrecisionPolicy,
+    /// Deterministic fault plan for the dp sim's comm fabric
+    /// (`-o faults=drop:w1@20,flip:inter@0.01,seed:7`; default
+    /// [`FaultPlan::none`] — the fault-free fast path, bit-identical to
+    /// the pre-resilience fabric).
+    pub fault_plan: FaultPlan,
+    /// Arm the numeric sentinel on the dp sim (`-o sentinel=true`):
+    /// loss/grad guardrails, snapshot rollback, precision escalation.
+    pub sentinel: bool,
 }
 
 impl Default for RunConfig {
@@ -53,6 +62,8 @@ impl Default for RunConfig {
             eval_every: 50,
             out_dir: PathBuf::from("runs"),
             precision: PrecisionPolicy::default(),
+            fault_plan: FaultPlan::none(),
+            sentinel: false,
         }
     }
 }
@@ -79,6 +90,14 @@ impl RunConfig {
             "precision" => self.precision = PrecisionPolicy::parse(value)?,
             "comm" => self.set_class(TensorClass::Wire, value)?,
             "ckpt_format" => self.set_class(TensorClass::Checkpoint, value)?,
+            "faults" => self.fault_plan = FaultPlan::parse(value)?,
+            "sentinel" => {
+                self.sentinel = match value {
+                    "true" | "1" | "on" => true,
+                    "false" | "0" | "off" => false,
+                    other => anyhow::bail!("sentinel={other:?} (expected true/false)"),
+                }
+            }
             other => anyhow::bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -172,5 +191,24 @@ mod tests {
         // aliases compose with a full policy: comm rewrites only Wire
         c.set("comm", "f32").unwrap();
         assert!(c.precision.wire_spec_at(10).is_raw());
+    }
+
+    #[test]
+    fn resilience_keys_parse_through_the_real_grammars() {
+        let mut c = RunConfig::default();
+        assert!(c.fault_plan.is_none() && !c.sentinel);
+        c.set("faults", "drop:w1@20,flip:inter@0.01,seed:7").unwrap();
+        assert_eq!(c.fault_plan.max_worker(), Some(1));
+        // malformed plans are hard errors, not silent defaults
+        assert!(c.set("faults", "flip:inter@2.0").is_err());
+        assert!(c.set("faults", "explode:w1@3").is_err());
+        c.set("sentinel", "true").unwrap();
+        assert!(c.sentinel);
+        c.set("sentinel", "off").unwrap();
+        assert!(!c.sentinel);
+        assert!(c.set("sentinel", "maybe").is_err());
+        // `faults=none` is the explicit fault-free plan
+        c.set("faults", "none").unwrap();
+        assert!(c.fault_plan.is_none());
     }
 }

@@ -1,28 +1,45 @@
-//! Self-contained binary checkpoints for trainer state.
+//! Self-contained binary checkpoints for trainer state, with an
+//! integrity footer and a self-describing precision policy.
 //!
-//! Version 1 (raw f32, little-endian):
+//! Version 3 (current, written by every `save*` entry point):
 //! ```text
-//! magic  b"FP4TCKPT"          8 bytes
-//! version u32                 (1)
+//! magic  b"FP4TCKPT"          8 bytes (excluded from the CRC)
+//! version u32                 (3)
+//! flags   u8                  bit0: tensors are packed
 //! step    u64
+//! policy_len u16, policy bytes   canonical PrecisionPolicy string
+//!                                (empty = none recorded)
 //! count   u32                 number of tensors
 //! per tensor:
 //!   name_len u16, name bytes (utf-8)
 //!   ndims    u8,  dims u64 × ndims
-//!   data     f32 × prod(dims)
+//!   raw    (flags bit0 clear): data f32 × prod(dims)
+//!   packed (flags bit0 set):
+//!     spec_len u16, spec bytes    canonical QuantSpec string
+//!     rows u64, cols u64          shape2d collapse used for the scales
+//!     n_scales u32, scales f32 ×  per-group gammas
+//!     data_len u64, data bytes    bit-packed codes
+//! crc32   u32                 IEEE CRC-32 of every byte after magic
 //! ```
 //!
-//! Version 2 (compressed via [`PackedTensor`], written by [`save_packed`])
-//! replaces the raw data block of each tensor with:
-//! ```text
-//!   spec_len u16, spec bytes    canonical QuantSpec string (fmt + gran)
-//!   rows u64, cols u64          shape2d collapse used for the scales
-//!   n_scales u32, scales f32 ×  per-group gammas
-//!   data_len u64, data bytes    bit-packed codes
-//! ```
-//! Loading a v2 checkpoint decodes back to f32 (lossy by exactly the
+//! The trailing CRC (the same hand-rolled [`crate::resilience::crc32`]
+//! that frames fabric hops) makes corruption *loud*: a truncated file, a
+//! flipped byte, or a bad length field fails [`load`] with a specific
+//! error instead of garbage-decoding into a "successfully restored"
+//! trainer. Reads are incremental and length-validated, so a corrupt
+//! header cannot demand a huge allocation either. Legacy v1 (raw f32)
+//! and v2 (packed, no footer) files still load.
+//!
+//! The embedded policy string answers the ROADMAP mid-phase-restore
+//! question by *data* instead of trust: [`validate_policy_compat`]
+//! re-parses it and requires the active [`PrecisionPolicy`] to resolve
+//! the same checkpoint spec at the stored step, so a run restored under
+//! a different precision regime fails up front (see
+//! `Trainer::replace_state_checked`).
+//!
+//! Loading a packed checkpoint decodes back to f32 (lossy by exactly the
 //! codec's quantization error), so `to_literals` works identically for
-//! both versions. Tensor names come from the manifest IO descriptors, so
+//! every version. Tensor names come from the manifest IO descriptors, so
 //! a checkpoint written by one process can re-seed a Trainer in another
 //! (restore validates name/shape agreement).
 
@@ -33,18 +50,24 @@ use anyhow::{bail, ensure, Context, Result};
 use xla::Literal;
 
 use crate::formats::{shape2d, PackedTensor, QuantSpec};
+use crate::policy::PrecisionPolicy;
+use crate::resilience::Crc32;
 use crate::runtime::{Engine, IoDesc};
 
 const MAGIC: &[u8; 8] = b"FP4TCKPT";
+const FLAG_PACKED: u8 = 1;
 
 pub struct Checkpoint {
     pub step: u64,
+    /// Canonical string of the policy the run was saved under (v3 files;
+    /// `None` for legacy versions or when no policy was recorded).
+    pub policy: Option<String>,
     pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
 }
 
 /// Save per a policy's `Checkpoint`-class spec: `None` (or a raw f32
-/// spec upstream, via [`PrecisionPolicy::ckpt_spec_at`]) writes a raw v1
-/// checkpoint, anything else a packed v2. This is the one entry point the
+/// spec upstream, via [`PrecisionPolicy::ckpt_spec_at`]) writes raw f32
+/// tensors, anything else packed tensors. This is the one entry point the
 /// CLI and drivers use, so the encoding is data (a policy), not a code
 /// path per call site.
 ///
@@ -56,53 +79,33 @@ pub fn save_with_spec(
     literals: &[Literal],
     spec: Option<&QuantSpec>,
 ) -> Result<()> {
-    match spec {
-        None => save(path, step, ios, literals),
-        Some(s) if s.is_raw() => save(path, step, ios, literals),
-        Some(s) => save_packed(path, step, ios, literals, s),
-    }
+    save_literals(path, step, ios, literals, None, spec)
 }
 
-pub fn save(
+/// Like [`save_with_spec`], but resolves the spec from `policy` at `step`
+/// and embeds the policy's canonical string so restores can be validated
+/// against the active policy ([`validate_policy_compat`]).
+pub fn save_with_policy(
     path: impl AsRef<Path>,
     step: u64,
     ios: &[IoDesc],
     literals: &[Literal],
+    policy: &PrecisionPolicy,
 ) -> Result<()> {
-    if ios.len() != literals.len() {
-        bail!("checkpoint arity mismatch: {} ios vs {} tensors", ios.len(), literals.len());
-    }
-    if let Some(dir) = path.as_ref().parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&1u32.to_le_bytes())?;
-    f.write_all(&step.to_le_bytes())?;
-    f.write_all(&(ios.len() as u32).to_le_bytes())?;
-    for (io, lit) in ios.iter().zip(literals) {
-        let name = io.name.as_bytes();
-        f.write_all(&(name.len() as u16).to_le_bytes())?;
-        f.write_all(name)?;
-        f.write_all(&[io.shape.len() as u8])?;
-        for &d in &io.shape {
-            f.write_all(&(d as u64).to_le_bytes())?;
-        }
-        let data = Engine::to_f32_vec(lit)?;
-        if data.len() != io.elements() {
-            bail!("{}: literal has {} elems, manifest says {}", io.name, data.len(), io.elements());
-        }
-        for v in data {
-            f.write_all(&v.to_le_bytes())?;
-        }
-    }
-    Ok(())
+    let spec = policy.ckpt_spec_at(step as usize);
+    let policy_str = policy.to_string();
+    save_literals(path, step, ios, literals, Some(&policy_str), spec.as_ref())
 }
 
-/// Like [`save`], but stores each tensor as a [`PackedTensor`] in the
-/// given wire format — e.g. `fp8:e4m3` quarters checkpoint size at ~2^-4
-/// relative error, `fp4:e2m1/row` is 8x smaller still coarser. Lossy;
-/// clamped specs are rejected (the residual is not stored).
+/// Raw f32 tensors, no policy recorded.
+pub fn save(path: impl AsRef<Path>, step: u64, ios: &[IoDesc], literals: &[Literal]) -> Result<()> {
+    save_literals(path, step, ios, literals, None, None)
+}
+
+/// Packed tensors in the given wire format — e.g. `fp8:e4m3` quarters
+/// checkpoint size at ~2^-4 relative error, `fp4:e2m1/row` is 8x smaller
+/// still coarser. Lossy; clamped specs are rejected (the residual is not
+/// stored).
 pub fn save_packed(
     path: impl AsRef<Path>,
     step: u64,
@@ -110,50 +113,130 @@ pub fn save_packed(
     literals: &[Literal],
     spec: &QuantSpec,
 ) -> Result<()> {
+    save_literals(path, step, ios, literals, None, Some(spec))
+}
+
+fn save_literals(
+    path: impl AsRef<Path>,
+    step: u64,
+    ios: &[IoDesc],
+    literals: &[Literal],
+    policy: Option<&str>,
+    spec: Option<&QuantSpec>,
+) -> Result<()> {
     ensure!(
-        spec.clamp.is_none(),
-        "checkpoint spec {spec} carries a clamp: the ΔY residual is not stored"
+        ios.len() == literals.len(),
+        "checkpoint arity mismatch: {} ios vs {} tensors",
+        ios.len(),
+        literals.len()
     );
-    if ios.len() != literals.len() {
-        bail!("checkpoint arity mismatch: {} ios vs {} tensors", ios.len(), literals.len());
+    let mut tensors = Vec::with_capacity(ios.len());
+    for (io, lit) in ios.iter().zip(literals) {
+        let data = Engine::to_f32_vec(lit)?;
+        ensure!(
+            data.len() == io.elements(),
+            "{}: literal has {} elems, manifest says {}",
+            io.name,
+            data.len(),
+            io.elements()
+        );
+        tensors.push((io.name.clone(), io.shape.clone(), data));
     }
+    save_tensors(path, step, policy, spec, &tensors)
+}
+
+/// Engine-free save of plain `(name, shape, data)` tensors — the entry
+/// point the resilience drill harness writes real checkpoint files
+/// through. `spec: None` or a raw spec writes raw f32 tensors.
+pub fn save_tensors(
+    path: impl AsRef<Path>,
+    step: u64,
+    policy: Option<&str>,
+    spec: Option<&QuantSpec>,
+    tensors: &[(String, Vec<usize>, Vec<f32>)],
+) -> Result<()> {
     if let Some(dir) = path.as_ref().parent() {
         std::fs::create_dir_all(dir)?;
     }
-    let spec_str = spec.to_string(); // canonical form; clamp-free per the guard above
     let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&2u32.to_le_bytes())?;
+    write_v3(&mut f, step, policy, spec, tensors)?;
+    f.flush()?;
+    Ok(())
+}
+
+/// Write one complete v3 checkpoint stream (format in the module docs).
+/// Public so the fuzz oracle can build valid in-memory corpora.
+pub fn write_v3(
+    w: &mut impl Write,
+    step: u64,
+    policy: Option<&str>,
+    spec: Option<&QuantSpec>,
+    tensors: &[(String, Vec<usize>, Vec<f32>)],
+) -> Result<()> {
+    let spec = match spec {
+        Some(s) if !s.is_raw() => {
+            ensure!(
+                s.clamp.is_none(),
+                "checkpoint spec {s} carries a clamp: the ΔY residual is not stored"
+            );
+            Some(s)
+        }
+        _ => None,
+    };
+    let policy = policy.unwrap_or("");
+    ensure!(policy.len() <= u16::MAX as usize, "policy string too long for the v3 header");
+    w.write_all(MAGIC)?;
+    let mut f = CrcWriter { inner: w, crc: Crc32::new() };
+    f.write_all(&3u32.to_le_bytes())?;
+    f.write_all(&[if spec.is_some() { FLAG_PACKED } else { 0 }])?;
     f.write_all(&step.to_le_bytes())?;
-    f.write_all(&(ios.len() as u32).to_le_bytes())?;
+    f.write_all(&(policy.len() as u16).to_le_bytes())?;
+    f.write_all(policy.as_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
     // one pack scratch reused across every tensor (pack_into keeps the
     // code/scale buffer capacity of the largest tensor seen)
-    let mut packed = PackedTensor::empty(spec.format, spec.granularity);
-    for (io, lit) in ios.iter().zip(literals) {
-        let name = io.name.as_bytes();
-        f.write_all(&(name.len() as u16).to_le_bytes())?;
-        f.write_all(name)?;
-        f.write_all(&[io.shape.len() as u8])?;
-        for &d in &io.shape {
+    let mut packed = spec.map(|s| PackedTensor::empty(s.format, s.granularity));
+    for (name, shape, data) in tensors {
+        let elems: usize = shape.iter().product::<usize>().max(1);
+        ensure!(
+            data.len() == elems,
+            "{name}: {} values for shape {shape:?} ({elems} elements)",
+            data.len()
+        );
+        let bytes = name.as_bytes();
+        ensure!(bytes.len() <= u16::MAX as usize, "{name:?}: tensor name too long");
+        ensure!(shape.len() <= u8::MAX as usize, "{name}: too many dims");
+        f.write_all(&(bytes.len() as u16).to_le_bytes())?;
+        f.write_all(bytes)?;
+        f.write_all(&[shape.len() as u8])?;
+        for &d in shape {
             f.write_all(&(d as u64).to_le_bytes())?;
         }
-        let data = Engine::to_f32_vec(lit)?;
-        if data.len() != io.elements() {
-            bail!("{}: literal has {} elems, manifest says {}", io.name, data.len(), io.elements());
+        match (spec, &mut packed) {
+            (Some(s), Some(p)) => {
+                let spec_str = s.to_string();
+                let (rows, cols) = shape2d(shape, data.len());
+                PackedTensor::pack_into(data, rows, cols, s.format, s.granularity, p);
+                f.write_all(&(spec_str.len() as u16).to_le_bytes())?;
+                f.write_all(spec_str.as_bytes())?;
+                f.write_all(&(rows as u64).to_le_bytes())?;
+                f.write_all(&(cols as u64).to_le_bytes())?;
+                f.write_all(&(p.scales.len() as u32).to_le_bytes())?;
+                for sc in &p.scales {
+                    f.write_all(&sc.to_le_bytes())?;
+                }
+                f.write_all(&(p.data.len() as u64).to_le_bytes())?;
+                f.write_all(&p.data)?;
+            }
+            _ => {
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
         }
-        let (rows, cols) = shape2d(&io.shape, data.len());
-        PackedTensor::pack_into(&data, rows, cols, spec.format, spec.granularity, &mut packed);
-        f.write_all(&(spec_str.len() as u16).to_le_bytes())?;
-        f.write_all(spec_str.as_bytes())?;
-        f.write_all(&(rows as u64).to_le_bytes())?;
-        f.write_all(&(cols as u64).to_le_bytes())?;
-        f.write_all(&(packed.scales.len() as u32).to_le_bytes())?;
-        for s in &packed.scales {
-            f.write_all(&s.to_le_bytes())?;
-        }
-        f.write_all(&(packed.data.len() as u64).to_le_bytes())?;
-        f.write_all(&packed.data)?;
     }
+    let crc = f.crc.digest();
+    f.inner.write_all(&crc.to_le_bytes())?;
     Ok(())
 }
 
@@ -161,82 +244,168 @@ pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(&path).with_context(|| format!("opening {:?}", path.as_ref()))?,
     );
+    read_from(&mut f).with_context(|| format!("loading checkpoint {:?}", path.as_ref()))
+}
+
+/// Like [`load`], but additionally checks the stored policy against the
+/// active one ([`validate_policy_compat`]).
+pub fn load_validated(path: impl AsRef<Path>, active: &PrecisionPolicy) -> Result<Checkpoint> {
+    let ckpt = load(&path)?;
+    validate_policy_compat(&ckpt, active).with_context(|| {
+        format!("checkpoint {:?} incompatible with the active policy", path.as_ref())
+    })?;
+    Ok(ckpt)
+}
+
+/// Parse one checkpoint from a byte stream (all versions). Every length
+/// field is validated before use and payloads are read incrementally, so
+/// corrupt or truncated input errors early instead of over-allocating or
+/// garbage-decoding; v3 input is additionally verified against its CRC
+/// footer. Never panics on arbitrary bytes (fuzz-pinned by the
+/// `checkpoint_parse` target).
+pub fn read_from(r: &mut impl Read) -> Result<Checkpoint> {
     let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
+    r.read_exact(&mut magic).context("reading checkpoint magic")?;
     if &magic != MAGIC {
         bail!("not a fp4train checkpoint");
     }
+    let mut f = CrcReader { inner: r, crc: Crc32::new() };
     let version = read_u32(&mut f)?;
-    if version != 1 && version != 2 {
-        bail!("unsupported checkpoint version {version}");
+    match version {
+        1 | 2 => read_legacy(&mut f, version),
+        3 => read_v3(&mut f),
+        other => bail!("unsupported checkpoint version {other}"),
     }
-    let step = read_u64(&mut f)?;
-    let count = read_u32(&mut f)? as usize;
-    let mut tensors = Vec::with_capacity(count);
+}
+
+fn read_legacy(f: &mut impl Read, version: u32) -> Result<Checkpoint> {
+    let step = read_u64(f)?;
+    let count = read_u32(f)? as usize;
+    let tensors = read_tensor_blocks(f, count, version == 2)?;
+    Ok(Checkpoint { step, policy: None, tensors })
+}
+
+fn read_v3<R: Read>(f: &mut CrcReader<'_, R>) -> Result<Checkpoint> {
+    let mut flags = [0u8; 1];
+    f.read_exact(&mut flags).context("reading checkpoint flags")?;
+    ensure!(flags[0] & !FLAG_PACKED == 0, "unknown checkpoint flags {:#x}", flags[0]);
+    let step = read_u64(f)?;
+    let policy_len = read_u16(f)? as usize;
+    let policy = String::from_utf8(read_bytes(f, policy_len, "policy string")?)
+        .context("checkpoint policy string is not utf-8")?;
+    let count = read_u32(f)? as usize;
+    let tensors = read_tensor_blocks(f, count, flags[0] & FLAG_PACKED != 0)?;
+    // everything up to here fed the CRC; the stored footer did not
+    let want = f.crc.digest();
+    let stored = read_u32(f.inner).context("reading checkpoint CRC footer (truncated?)")?;
+    ensure!(
+        stored == want,
+        "checkpoint CRC mismatch: stored {stored:#010x}, computed {want:#010x} — corrupt file"
+    );
+    let policy = if policy.is_empty() { None } else { Some(policy) };
+    Ok(Checkpoint { step, policy, tensors })
+}
+
+fn read_tensor_blocks(
+    f: &mut impl Read,
+    count: usize,
+    packed: bool,
+) -> Result<Vec<(String, Vec<usize>, Vec<f32>)>> {
+    // capacity grows as tensors actually parse — a corrupt count field
+    // cannot demand a huge allocation up front
+    let mut tensors = Vec::with_capacity(count.min(1024));
     for _ in 0..count {
-        let name_len = read_u16(&mut f)? as usize;
-        let mut name = vec![0u8; name_len];
-        f.read_exact(&mut name)?;
-        let name = String::from_utf8(name)?;
+        let name_len = read_u16(f)? as usize;
+        let name = String::from_utf8(read_bytes(f, name_len, "tensor name")?)
+            .context("tensor name is not utf-8")?;
         let mut ndims = [0u8; 1];
-        f.read_exact(&mut ndims)?;
+        f.read_exact(&mut ndims).with_context(|| format!("{name}: reading dims"))?;
         let mut shape = Vec::with_capacity(ndims[0] as usize);
+        let mut elems = 1usize;
         for _ in 0..ndims[0] {
-            shape.push(read_u64(&mut f)? as usize);
+            let d = read_u64(f)? as usize;
+            elems = elems
+                .checked_mul(d)
+                .with_context(|| format!("{name}: shape {shape:?}x{d} overflows"))?;
+            shape.push(d);
         }
-        let n: usize = shape.iter().product::<usize>().max(1);
-        let data = if version == 1 {
-            let mut data = vec![0f32; n];
-            let mut buf = [0u8; 4];
-            for v in data.iter_mut() {
-                f.read_exact(&mut buf)?;
-                *v = f32::from_le_bytes(buf);
-            }
-            data
+        let n = elems.max(1);
+        let data = if packed {
+            read_packed_tensor(f, &name, n)?
         } else {
-            let spec_len = read_u16(&mut f)? as usize;
-            let mut spec = vec![0u8; spec_len];
-            f.read_exact(&mut spec)?;
-            let spec = QuantSpec::parse(std::str::from_utf8(&spec)?)
-                .with_context(|| format!("{name}: bad packed-tensor spec"))?;
-            let rows = read_u64(&mut f)? as usize;
-            let cols = read_u64(&mut f)? as usize;
-            ensure!(rows * cols == n, "{name}: packed shape {rows}x{cols} != {n} elements");
-            let n_scales = read_u32(&mut f)? as usize;
-            ensure!(
-                n_scales == spec.granularity.n_groups(rows, cols),
-                "{name}: {n_scales} scales for {rows}x{cols} {spec}"
-            );
-            let mut scales = vec![0f32; n_scales];
-            let mut buf = [0u8; 4];
-            for s in scales.iter_mut() {
-                f.read_exact(&mut buf)?;
-                *s = f32::from_le_bytes(buf);
-            }
-            let data_len = read_u64(&mut f)?;
-            // validate against the exactly computable packed size BEFORE
-            // allocating, so a corrupt length field errors instead of
-            // attempting a huge allocation
-            let expect = (n as u64 * u64::from(spec.bits_per_element())).div_ceil(8);
-            ensure!(
-                data_len == expect,
-                "{name}: packed payload is {data_len} bytes, expected {expect}"
-            );
-            let mut data = vec![0u8; data_len as usize];
-            f.read_exact(&mut data)?;
-            let packed = PackedTensor {
-                format: spec.format,
-                granularity: spec.granularity,
-                rows,
-                cols,
-                scales,
-                data,
-            };
-            packed.unpack()
+            read_f32s(f, n).with_context(|| format!("{name}: reading raw f32 data"))?
         };
         tensors.push((name, shape, data));
     }
-    Ok(Checkpoint { step, tensors })
+    Ok(tensors)
+}
+
+fn read_packed_tensor(f: &mut impl Read, name: &str, n: usize) -> Result<Vec<f32>> {
+    let spec_len = read_u16(f)? as usize;
+    let spec = String::from_utf8(read_bytes(f, spec_len, "packed-tensor spec")?)
+        .with_context(|| format!("{name}: packed-tensor spec is not utf-8"))?;
+    let spec =
+        QuantSpec::parse(&spec).with_context(|| format!("{name}: bad packed-tensor spec"))?;
+    let rows = read_u64(f)? as usize;
+    let cols = read_u64(f)? as usize;
+    ensure!(
+        rows.checked_mul(cols) == Some(n),
+        "{name}: packed shape {rows}x{cols} != {n} elements"
+    );
+    let n_scales = read_u32(f)? as usize;
+    ensure!(
+        n_scales == spec.granularity.n_groups(rows, cols),
+        "{name}: {n_scales} scales for {rows}x{cols} {spec}"
+    );
+    let scales = read_f32s(f, n_scales).with_context(|| format!("{name}: reading scales"))?;
+    let data_len = read_u64(f)?;
+    // validate against the exactly computable packed size BEFORE
+    // allocating, so a corrupt length field errors instead of attempting
+    // a huge allocation
+    let expect = (n as u64 * u64::from(spec.bits_per_element())).div_ceil(8);
+    ensure!(data_len == expect, "{name}: packed payload is {data_len} bytes, expected {expect}");
+    let data = read_bytes(f, data_len as usize, "packed payload")
+        .with_context(|| format!("{name}: reading packed payload"))?;
+    let packed = PackedTensor {
+        format: spec.format,
+        granularity: spec.granularity,
+        rows,
+        cols,
+        scales,
+        data,
+    };
+    Ok(packed.unpack())
+}
+
+/// Check the stored policy (if any) against the active one: the stored
+/// string must still parse, and both policies must resolve the same
+/// checkpoint spec at the stored step — the thing that decides how the
+/// state on disk was encoded. Legacy checkpoints (no recorded policy)
+/// pass vacuously, as before this field existed.
+pub fn validate_policy_compat(ckpt: &Checkpoint, active: &PrecisionPolicy) -> Result<()> {
+    let Some(stored) = &ckpt.policy else {
+        return Ok(());
+    };
+    let stored_policy = PrecisionPolicy::parse(stored)
+        .with_context(|| format!("checkpoint carries unparseable policy {stored:?}"))?;
+    let step = ckpt.step as usize;
+    let stored_spec = stored_policy.ckpt_spec_at(step);
+    let active_spec = active.ckpt_spec_at(step);
+    ensure!(
+        stored_spec == active_spec,
+        "checkpoint at step {step} was written under policy {stored:?} (ckpt class {}), \
+         but the active policy resolves {} there — restore would misread the state encoding",
+        fmt_spec(&stored_spec),
+        fmt_spec(&active_spec)
+    );
+    Ok(())
+}
+
+fn fmt_spec(spec: &Option<QuantSpec>) -> String {
+    match spec {
+        None => "raw f32".to_string(),
+        Some(s) => s.to_string(),
+    }
 }
 
 /// Rebuild literals in the order required by `ios`, validating shapes.
@@ -256,19 +425,86 @@ pub fn to_literals(ckpt: &Checkpoint, ios: &[IoDesc]) -> Result<Vec<Literal>> {
     Ok(out)
 }
 
+struct CrcWriter<'a, W: Write> {
+    inner: &'a mut W,
+    crc: Crc32,
+}
+
+impl<W: Write> Write for CrcWriter<'_, W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.crc.update(&buf[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+struct CrcReader<'a, R: Read> {
+    inner: &'a mut R,
+    crc: Crc32,
+}
+
+impl<R: Read> Read for CrcReader<'_, R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.crc.update(&buf[..n]);
+        Ok(n)
+    }
+}
+
+/// Read exactly `len` bytes in bounded chunks: memory grows only with
+/// bytes actually present, so a corrupt length field against a truncated
+/// stream errors instead of allocating `len` up front.
+fn read_bytes(f: &mut impl Read, len: usize, what: &str) -> Result<Vec<u8>> {
+    const CHUNK: usize = 1 << 16;
+    let mut out = Vec::with_capacity(len.min(CHUNK));
+    let mut remaining = len;
+    let mut buf = [0u8; CHUNK];
+    while remaining > 0 {
+        let take = remaining.min(CHUNK);
+        f.read_exact(&mut buf[..take])
+            .with_context(|| format!("truncated checkpoint: {what} ({remaining} bytes missing)"))?;
+        out.extend_from_slice(&buf[..take]);
+        remaining -= take;
+    }
+    Ok(out)
+}
+
+/// Read `n` little-endian f32 values in bounded chunks (see
+/// [`read_bytes`] for the rationale).
+fn read_f32s(f: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    const CHUNK: usize = 1 << 14;
+    let mut out = Vec::with_capacity(n.min(CHUNK));
+    let mut buf = [0u8; CHUNK * 4];
+    let mut remaining = n;
+    while remaining > 0 {
+        let take = remaining.min(CHUNK);
+        f.read_exact(&mut buf[..take * 4])
+            .with_context(|| format!("truncated checkpoint: {remaining} f32 values missing"))?;
+        for b in buf[..take * 4].chunks_exact(4) {
+            out.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        remaining -= take;
+    }
+    Ok(out)
+}
+
 fn read_u16(f: &mut impl Read) -> Result<u16> {
     let mut b = [0u8; 2];
-    f.read_exact(&mut b)?;
+    f.read_exact(&mut b).context("truncated checkpoint (u16 field)")?;
     Ok(u16::from_le_bytes(b))
 }
 fn read_u32(f: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
-    f.read_exact(&mut b)?;
+    f.read_exact(&mut b).context("truncated checkpoint (u32 field)")?;
     Ok(u32::from_le_bytes(b))
 }
 fn read_u64(f: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
-    f.read_exact(&mut b)?;
+    f.read_exact(&mut b).context("truncated checkpoint (u64 field)")?;
     Ok(u64::from_le_bytes(b))
 }
 
@@ -279,6 +515,16 @@ mod tests {
 
     fn io(name: &str, shape: Vec<usize>) -> IoDesc {
         IoDesc { name: name.into(), dtype: Dtype::F32, shape, role: "param".into() }
+    }
+
+    fn sample_bytes(policy: Option<&str>, spec: Option<&QuantSpec>) -> Vec<u8> {
+        let tensors = vec![
+            ("w".to_string(), vec![2, 4], (0..8).map(|i| i as f32 * 0.5 - 2.0).collect()),
+            ("b".to_string(), vec![4], vec![-1.0, 0.5, 0.0, 9.25]),
+        ];
+        let mut out = Vec::new();
+        write_v3(&mut out, 42, policy, spec, &tensors).unwrap();
+        out
     }
 
     #[test]
@@ -293,6 +539,7 @@ mod tests {
         save(&path, 42, &ios, &lits).unwrap();
         let ck = load(&path).unwrap();
         assert_eq!(ck.step, 42);
+        assert_eq!(ck.policy, None);
         assert_eq!(ck.tensors.len(), 2);
         assert_eq!(ck.tensors[0].2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         let back = to_literals(&ck, &ios).unwrap();
@@ -348,17 +595,16 @@ mod tests {
 
     #[test]
     fn save_with_spec_dispatches_on_rawness() {
-        use crate::policy::PrecisionPolicy;
         let dir = std::env::temp_dir().join("fp4train_ckpt_test_spec");
         let ios = vec![io("a", vec![2, 2])];
         let xs = [1.5f32, -0.25, 3.0, 0.125];
         let lits = vec![Engine::f32_literal(&ios[0], &xs).unwrap()];
-        // default policy: raw v1 — exact round trip
+        // default policy: raw — exact round trip
         let p1 = dir.join("raw.ckpt");
         let policy = PrecisionPolicy::default();
         save_with_spec(&p1, 1, &ios, &lits, policy.ckpt_spec_at(1).as_ref()).unwrap();
         assert_eq!(load(&p1).unwrap().tensors[0].2, xs);
-        // packed class spec: v2, lossy by exactly the codec qdq
+        // packed class spec: lossy by exactly the codec qdq
         let spec = QuantSpec::parse("fp8:e4m3/row").unwrap();
         let p2 = dir.join("packed.ckpt");
         save_with_spec(&p2, 2, &ios, &lits, Some(&spec)).unwrap();
@@ -373,6 +619,122 @@ mod tests {
         let path = dir.join("bad.ckpt");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_v1_still_loads() {
+        // handcraft a v1 stream: magic, version, step, count, one tensor
+        let mut raw = Vec::new();
+        raw.extend_from_slice(MAGIC);
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.extend_from_slice(&9u64.to_le_bytes());
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.extend_from_slice(&1u16.to_le_bytes());
+        raw.push(b'a');
+        raw.push(1); // ndims
+        raw.extend_from_slice(&2u64.to_le_bytes());
+        for v in [3.5f32, -4.25] {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        let ck = read_from(&mut raw.as_slice()).unwrap();
+        assert_eq!(ck.step, 9);
+        assert_eq!(ck.policy, None);
+        assert_eq!(ck.tensors, vec![("a".to_string(), vec![2], vec![3.5, -4.25])]);
+    }
+
+    #[test]
+    fn v3_policy_string_round_trips() {
+        let policy = "wire=fp4:e2m1/row,ckpt=fp8:e4m3";
+        let bytes = sample_bytes(Some(policy), None);
+        let ck = read_from(&mut bytes.as_slice()).unwrap();
+        assert_eq!(ck.step, 42);
+        assert_eq!(ck.policy.as_deref(), Some(policy));
+        assert_eq!(ck.tensors[1].2, vec![-1.0, 0.5, 0.0, 9.25]);
+    }
+
+    #[test]
+    fn truncation_at_every_length_fails_loudly() {
+        let bytes = sample_bytes(Some("ckpt=fp8:e4m3"), None);
+        for len in 0..bytes.len() {
+            let err = read_from(&mut &bytes[..len]).map(|_| ());
+            assert!(err.is_err(), "accepted a {len}-byte prefix of {} bytes", bytes.len());
+        }
+        assert!(read_from(&mut bytes.as_slice()).is_ok());
+    }
+
+    #[test]
+    fn bad_header_fails_loudly() {
+        let mut bytes = sample_bytes(None, None);
+        // magic
+        bytes[0] ^= 0x20;
+        let err = read_from(&mut bytes.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("not a fp4train checkpoint"), "{err}");
+        // version
+        let mut bytes = sample_bytes(None, None);
+        bytes[8] = 99;
+        let err = read_from(&mut bytes.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("unsupported checkpoint version"), "{err}");
+    }
+
+    #[test]
+    fn every_payload_byte_flip_is_detected() {
+        // raw and packed variants: flipping any single byte after the
+        // version field must error (CRC mismatch or an earlier
+        // validation), never silently load altered state
+        let spec = QuantSpec::parse("fp8:e4m3/row").unwrap();
+        for bytes in [sample_bytes(Some("ckpt=fp8:e4m3"), None), sample_bytes(None, Some(&spec))] {
+            for at in 12..bytes.len() {
+                let mut bad = bytes.clone();
+                bad[at] ^= 0x01;
+                assert!(
+                    read_from(&mut bad.as_slice()).is_err(),
+                    "flip at byte {at}/{} loaded successfully",
+                    bytes.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn policy_compat_gates_restore() {
+        let active = PrecisionPolicy::parse("ckpt=fp8:e4m3").unwrap();
+        // same resolved ckpt class: compatible
+        let bytes = sample_bytes(Some("ckpt=fp8:e4m3"), None);
+        let ck = read_from(&mut bytes.as_slice()).unwrap();
+        validate_policy_compat(&ck, &active).unwrap();
+        // raw-ckpt policy vs packed-ckpt active: rejected with the specs
+        let bytes = sample_bytes(Some("wire=fp8:e4m3"), None);
+        let ck = read_from(&mut bytes.as_slice()).unwrap();
+        let err = validate_policy_compat(&ck, &active).unwrap_err();
+        assert!(err.to_string().contains("raw f32"), "{err}");
+        // unparseable stored policy: rejected
+        let bytes = sample_bytes(Some("ckpt=banana"), None);
+        let ck = read_from(&mut bytes.as_slice()).unwrap();
+        assert!(validate_policy_compat(&ck, &active).is_err());
+        // legacy (no policy): vacuously compatible
+        let bytes = sample_bytes(None, None);
+        let ck = read_from(&mut bytes.as_slice()).unwrap();
+        validate_policy_compat(&ck, &active).unwrap();
+    }
+
+    #[test]
+    fn save_with_policy_embeds_the_canonical_string() {
+        let dir = std::env::temp_dir().join("fp4train_ckpt_test_pol");
+        let path = dir.join("t.ckpt");
+        let ios = vec![io("a", vec![2, 2])];
+        let xs = [1.5f32, -0.25, 3.0, 0.125];
+        let lits = vec![Engine::f32_literal(&ios[0], &xs).unwrap()];
+        let policy = PrecisionPolicy::parse("ckpt=fp8:e4m3/row").unwrap();
+        save_with_policy(&path, 3, &ios, &lits, &policy).unwrap();
+        let ck = load_validated(&path, &policy).unwrap();
+        assert_eq!(ck.policy.as_deref(), Some(policy.to_string().as_str()));
+        // packed per the policy's ckpt class
+        let spec = QuantSpec::parse("fp8:e4m3/row").unwrap();
+        assert_eq!(ck.tensors[0].2, spec.qdq(&xs, 2, 2));
+        // a different active policy is rejected at load
+        let other = PrecisionPolicy::default();
+        assert!(load_validated(&path, &other).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -30,6 +30,15 @@
 //! specs are rejected by [`PrecisionPolicy::validate`] — the ΔY residual
 //! is not transmitted).
 //!
+//! Resilience: [`DpSim::with_fault_plan`] arms a deterministic
+//! [`FaultPlan`] (wire faults run inside the fabric; `nan:` faults poison
+//! the named workers' local gradients here, before the wire) and
+//! [`DpSim::with_sentinel`] arms per-step numeric guardrails — on a trip
+//! the step's apply is skipped, the optimizer state rewinds to the last
+//! in-memory snapshot (banked every [`SNAPSHOT_EVERY`] healthy steps),
+//! and wire precision is temporarily escalated while training
+//! restabilizes (see [`crate::resilience`]).
+//!
 //! §Perf: the comm path reuses persistent buffers per step — the fabric
 //! owns one wire [`PackedTensor`](crate::formats::PackedTensor) scratch
 //! (`pack_into` reuses its capacity and re-stamps the format on a wire
@@ -47,10 +56,14 @@ use xla::Literal;
 
 use crate::data::corpus::Corpus;
 use crate::data::loader::{LoaderConfig, Sampler};
-use crate::fabric::{Fabric, FabricStats, SliceSource, Topology};
+use crate::fabric::{Fabric, FabricStats, FaultPlan, SliceSource, Topology};
 use crate::formats::{shape2d, QuantSpec};
 use crate::policy::PrecisionPolicy;
+use crate::resilience::{Sentinel, SentinelConfig};
 use crate::runtime::{ConfigEntry, Engine, StepSpec};
+
+/// Optimizer-state snapshot cadence when a [`Sentinel`] is armed (steps).
+const SNAPSHOT_EVERY: usize = 8;
 
 /// Wire accounting for one schedule phase (one precision regime).
 #[derive(Clone, Debug)]
@@ -121,6 +134,15 @@ pub struct DpSim {
     /// [`DpSim::with_topology`]. Owns the persistent wire scratch and the
     /// per-link byte ledger.
     fabric: Fabric,
+    /// The active fault plan (mirrors the fabric's; kept for the
+    /// compute-side `nan:` faults the wire path cannot see).
+    plan: FaultPlan,
+    /// Numeric guardrails; `None` (the default) observes nothing.
+    sentinel: Option<Sentinel>,
+    /// Last known-good optimizer state `(step, 3n host tensors)`,
+    /// refreshed every [`SNAPSHOT_EVERY`] healthy steps while a sentinel
+    /// is armed. Rollback target when the sentinel trips.
+    snapshot: Option<(usize, Vec<Vec<f32>>)>,
 }
 
 impl DpSim {
@@ -179,6 +201,9 @@ impl DpSim {
             losses: Vec::new(),
             acc,
             fabric,
+            plan: FaultPlan::none(),
+            sentinel: None,
+            snapshot: None,
         })
     }
 
@@ -194,8 +219,34 @@ impl DpSim {
             topology.workers(),
             self.samplers.len()
         );
-        self.fabric = Fabric::new(topology)?;
+        self.fabric = Fabric::with_faults(topology, self.plan.clone())?;
         Ok(self)
+    }
+
+    /// Arm a deterministic fault plan (`-o faults=<plan>`): the fabric
+    /// injects wire faults per hop and this sim injects the compute-side
+    /// `nan:` faults into the named workers' local gradients.
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Result<Self> {
+        self.fabric = Fabric::with_faults(self.fabric.topology, plan.clone())?;
+        self.plan = plan;
+        Ok(self)
+    }
+
+    /// Arm the numeric sentinel: per-step loss/grad-absmax guardrails,
+    /// rollback to the last in-memory snapshot on a trip, and temporary
+    /// wire-precision escalation while training restabilizes.
+    pub fn with_sentinel(mut self, cfg: SentinelConfig) -> Self {
+        self.sentinel = Some(Sentinel::new(cfg));
+        self
+    }
+
+    pub fn sentinel(&self) -> Option<&Sentinel> {
+        self.sentinel.as_ref()
+    }
+
+    /// The armed fault plan ([`FaultPlan::none`] by default).
+    pub fn fault_plan(&self) -> &FaultPlan {
+        &self.plan
     }
 
     pub fn topology(&self) -> Topology {
@@ -228,9 +279,13 @@ impl DpSim {
         let n = self.n_params();
         let workers = self.samplers.len();
         let tok_io = self.grad_spec.inputs.last().unwrap().clone();
+        self.fabric.begin_step(self.step);
         // one schedule scan resolves the per-link wire specs and the
-        // phase key
-        let (phase_id, specs) = self.precision.link_resolution_at(self.step);
+        // phase key; an active sentinel escalation overrides per link
+        let (phase_id, mut specs) = self.precision.link_resolution_at(self.step);
+        if let Some(s) = &self.sentinel {
+            s.escalate_specs(self.step, &mut specs);
+        }
         // the phase ledger is labeled with the topology's dominant link
         // spec — on the default flat fabric that is exactly the Wire class
         let label_spec = specs[self.fabric.topology.primary_link().index()];
@@ -255,6 +310,35 @@ impl DpSim {
                 grads[gi].push(Engine::to_f32_vec(lit)?);
             }
             self.stats.reduces += 1;
+        }
+
+        // compute-side faults: named workers emit NaN local gradients
+        // this step (codecs saturate NaN away, so injection must happen
+        // before the wire — see `crate::resilience` module docs)
+        for w in self.plan.nan_workers_at(self.step) {
+            for per_worker in grads.iter_mut() {
+                per_worker[w].fill(f32::NAN);
+            }
+        }
+
+        if let Some(verdict) = self.observe_guards(&grads, loss_sum / workers as f64) {
+            if verdict {
+                // tripped: restore the last good snapshot, skip the
+                // apply, keep the step clock monotonic
+                self.restore_snapshot()?;
+                let step = self.step;
+                self.sentinel.as_mut().unwrap().note_rollback(step)?;
+                self.step += 1;
+                let loss = (loss_sum / workers as f64) as f32;
+                self.losses.push(loss);
+                return Ok(loss);
+            } else if self.step % SNAPSHOT_EVERY == 0 {
+                // healthy on the snapshot cadence: bank the pre-update
+                // state as the rollback target
+                let host: Vec<Vec<f32>> =
+                    self.state.iter().map(Engine::to_f32_vec).collect::<Result<_>>()?;
+                self.snapshot = Some((self.step, host));
+            }
         }
 
         let bytes_before = self.fabric.stats.total_bytes();
@@ -304,6 +388,55 @@ impl DpSim {
         let loss = (loss_sum / workers as f64) as f32;
         self.losses.push(loss);
         Ok(loss)
+    }
+
+    /// Run the sentinel's guards over this step's local gradients:
+    /// `None` when no sentinel is armed, otherwise `Some(tripped)`.
+    /// The grad absmax is scanned over *alive* workers only (a dead
+    /// worker's stale buffer must not trip the guard) and is sticky-NaN,
+    /// so a poisoned gradient is seen here — before any saturating wire
+    /// codec could mask it.
+    fn observe_guards(&mut self, grads: &[Vec<Vec<f32>>], mean_loss: f64) -> Option<bool> {
+        self.sentinel.as_ref()?;
+        let workers = self.samplers.len();
+        let mut absmax = 0.0f32;
+        'scan: for w in 0..workers {
+            if self.fabric.faults().is_dead(w) {
+                continue;
+            }
+            for per_worker in grads {
+                for &v in &per_worker[w] {
+                    if !v.is_finite() {
+                        absmax = f32::NAN;
+                        break 'scan;
+                    }
+                    absmax = absmax.max(v.abs());
+                }
+            }
+        }
+        let step = self.step;
+        let s = self.sentinel.as_mut().unwrap();
+        Some(s.observe(step, mean_loss as f32, absmax, None).tripped())
+    }
+
+    /// Rewind the optimizer state to the last banked snapshot. With no
+    /// snapshot yet the trip is still safe: the guard runs *before* the
+    /// apply, so skipping the update already preserves the last good
+    /// state.
+    fn restore_snapshot(&mut self) -> Result<()> {
+        let Some((_, host)) = &self.snapshot else {
+            return Ok(());
+        };
+        anyhow::ensure!(host.len() == self.state.len(), "snapshot arity changed underfoot");
+        let state: Vec<Literal> = self
+            .apply_spec
+            .outputs
+            .iter()
+            .zip(host)
+            .map(|(io, v)| Engine::f32_literal(io, v))
+            .collect::<Result<_>>()?;
+        self.state = state;
+        Ok(())
     }
 
     /// Compression ratio achieved on the wire so far.

@@ -70,6 +70,26 @@ impl Trainer {
         Ok(())
     }
 
+    /// Restore from a loaded checkpoint with the full validation chain:
+    /// the stored policy must be compatible with `active`
+    /// ([`checkpoint::validate_policy_compat`] — not a trusted flag), and
+    /// names/shapes must match the manifest `ios`. Rewinds the step
+    /// counter to the checkpoint's.
+    ///
+    /// [`checkpoint::validate_policy_compat`]: super::checkpoint::validate_policy_compat
+    pub fn replace_state_checked(
+        &mut self,
+        ckpt: &super::checkpoint::Checkpoint,
+        ios: &[crate::runtime::IoDesc],
+        active: &crate::policy::PrecisionPolicy,
+    ) -> Result<()> {
+        super::checkpoint::validate_policy_compat(ckpt, active)?;
+        let state = super::checkpoint::to_literals(ckpt, ios)?;
+        self.replace_state(state)?;
+        self.step = ckpt.step as usize;
+        Ok(())
+    }
+
     /// Run `steps` optimizer steps. Prefers the burst artifact unless
     /// `force_single_step` is set; `steps` not divisible by `burst_k`
     /// rounds *up* to whole bursts (the LR schedule is step-indexed inside

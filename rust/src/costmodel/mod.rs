@@ -16,6 +16,7 @@
 use crate::fabric::Topology;
 use crate::formats::QuantSpec;
 use crate::policy::{LinkClass, PrecisionPolicy};
+use crate::resilience::{FaultPlan, MAX_ATTEMPTS};
 
 /// One row of Table 5.
 #[derive(Clone, Debug)]
@@ -240,6 +241,41 @@ pub fn step_time_us(sends: &[u64; 4], bytes: &[u64; 4], params: &[LinkParams; 4]
         .sum()
 }
 
+// ---------------------------------------------------------------------------
+// Resilience overhead model
+
+/// Expected transmissions per hop when each attempt is independently
+/// corrupted with probability `flip_rate`, under the fabric's bounded
+/// retry (at most [`MAX_ATTEMPTS`] attempts, then the hop fails loudly):
+/// `E[A] = Σ_{k=0}^{MAX_ATTEMPTS-1} p^k`. Rate 0 gives exactly 1 attempt;
+/// rate 1 gives the full `MAX_ATTEMPTS` (all of them corrupt — the run
+/// aborts, but every attempt still crossed the wire).
+pub fn expected_attempts(flip_rate: f64) -> f64 {
+    (0..MAX_ATTEMPTS).map(|k| flip_rate.powi(k as i32)).sum()
+}
+
+/// Expected *extra* wire bytes per step (per link class, indexed by
+/// [`LinkClass::index`]) that `plan`'s flip faults add to one all-reduce:
+/// the fault-free [`bytes_per_step_at`] prediction scaled by
+/// `expected_attempts(rate) - 1` for each link's resolved flip rate.
+/// Matches the mean of `FabricStats::retry_bytes` over many seeds; a
+/// plan with no flips returns all zeros.
+pub fn expected_retry_bytes(
+    policy: &PrecisionPolicy,
+    n_params: usize,
+    topology: Topology,
+    step: usize,
+    plan: &FaultPlan,
+) -> [f64; 4] {
+    let base = bytes_per_step_at(policy, n_params, topology, step);
+    let mut extra = [0.0f64; 4];
+    for link in LinkClass::ALL {
+        let i = link.index();
+        extra[i] = base[i] as f64 * (expected_attempts(plan.flip_rate(link)) - 1.0);
+    }
+    extra
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -398,5 +434,41 @@ mod tests {
             &params,
         );
         assert!(hier4 < hier, "fp4-inter {hier4} vs fp8 {hier}");
+    }
+
+    // -- resilience overhead model --
+
+    #[test]
+    fn expected_attempts_bounds() {
+        assert_eq!(expected_attempts(0.0), 1.0);
+        assert_eq!(expected_attempts(1.0), MAX_ATTEMPTS as f64);
+        // geometric partial sum at p = 0.5, 5 attempts
+        let want = 1.0 + 0.5 + 0.25 + 0.125 + 0.0625;
+        assert!((expected_attempts(0.5) - want).abs() < 1e-12);
+        // monotone in the rate
+        assert!(expected_attempts(0.01) < expected_attempts(0.1));
+    }
+
+    #[test]
+    fn retry_bytes_scale_the_fault_free_prediction_per_link() {
+        let p = PrecisionPolicy::parse("wire=fp8:e4m3,wire.inter=fp4:e2m1/row").unwrap();
+        let n = 1024;
+        let topo = Topology::Hier { nodes: 4, per_node: 8 };
+        let base = bytes_per_step(&p, n, topo);
+        // no flips -> zero overhead everywhere
+        let none = expected_retry_bytes(&p, n, topo, 0, &FaultPlan::none());
+        assert_eq!(none, [0.0; 4]);
+        // inter-only flips leave intra untouched
+        let plan = FaultPlan::parse("flip:inter@0.1").unwrap();
+        let extra = expected_retry_bytes(&p, n, topo, 0, &plan);
+        assert_eq!(extra[LinkClass::IntraNode.index()], 0.0);
+        let factor = expected_attempts(0.1) - 1.0;
+        let want = base[LinkClass::InterNode.index()] as f64 * factor;
+        assert!((extra[LinkClass::InterNode.index()] - want).abs() < 1e-9);
+        // an `any` flip hits every link the topology uses
+        let any = FaultPlan::parse("flip:any@0.1").unwrap();
+        let all = expected_retry_bytes(&p, n, topo, 0, &any);
+        assert!(all[LinkClass::IntraNode.index()] > 0.0);
+        assert!(all[LinkClass::InterNode.index()] > 0.0);
     }
 }

@@ -9,6 +9,7 @@
 pub mod fabric;
 pub mod figs;
 pub mod perf;
+pub mod resilience;
 pub mod tabs;
 
 use std::collections::HashMap;
@@ -183,6 +184,13 @@ pub fn run(id: &str, ctx: &mut Ctx, quick: bool) -> Result<()> {
             if quick { &[8, 64] } else { &[8, 64, 256, 1024] },
             &ctx.results,
         ),
+        "resilience" => resilience::run_sweep(
+            if quick { 30 } else { 60 },
+            64,
+            7,
+            if quick { &[0.0, 0.02] } else { &[0.0, 0.01, 0.05] },
+            &ctx.results,
+        ),
         "all" => {
             for id in [
                 "tab4", "tab5", "fig3", "fig1", "fig6a", "fig6b", "fig6c", "fig6d",
@@ -195,7 +203,7 @@ pub fn run(id: &str, ctx: &mut Ctx, quick: bool) -> Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment {other:?}; ids: fig1 fig3 fig4 fig5 fig6a-d \
-             tab1-5 fig7 dists perf fabric all"
+             tab1-5 fig7 dists perf fabric resilience all"
         ),
     }
 }

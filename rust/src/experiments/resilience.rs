@@ -1,0 +1,181 @@
+//! `repro resilience` — fault-rate × topology × wire-policy sweep on the
+//! recovery drill.
+//!
+//! For every arm this driver runs one [`run_drill`] scenario: a
+//! quadratic-bowl model trained over a real [`Fabric`] with a seeded
+//! [`FaultPlan`] (wire corruption, a mid-run worker kill, one poisoned
+//! NaN gradient), real v3 checkpoints on disk, and the [`Sentinel`]
+//! guardrails armed. Every run must *complete* — that is the acceptance
+//! gate: corruption is detected and retried (never silently averaged
+//! in), the killed worker's survivors renormalize the mean, and the NaN
+//! step rolls back to the last good checkpoint and escalates wire
+//! precision instead of diverging.
+//!
+//! Swept arms: fault rates `0 / 0.01 / 0.05` (`0 / 0.02` under
+//! `--quick`) × topologies `flat:8`, `ring:8`, `hier:2x4`, `tree:8@2` ×
+//! wire policies `f32` and `fp4-xnode` (fp8 everywhere, `fp4:e2m1/row`
+//! on inter-node links). Faulted arms use the plan
+//! `flip:any@<rate>,drop:w1@<steps/2>,nan:w0@<steps/4>,seed:<seed>`.
+//!
+//! Outputs the summary table on stdout and
+//! `results/perf/BENCH_resilience.json` (same line-oriented dialect as
+//! `BENCH_fabric.json`): per arm the final loss, rollback count, re-done
+//! recovery steps, retry bytes, evicted workers, and the loss delta vs
+//! the fault-free arm of the same (topology, policy) — the price of the
+//! faults, which stays small because recovery works. Deterministic in
+//! `-o seed=`, so any drift is a behavior change.
+//!
+//! Knobs: `-o steps=` (default 60; 30 under `--quick`), `-o dim=`
+//! (default 64), `-o seed=`, `-o results=<dir>`. Engine-free: no AOT
+//! artifacts needed, so CI runs it as-is.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::cli::Args;
+use crate::fabric::{FaultPlan, Topology};
+use crate::policy::PrecisionPolicy;
+use crate::report::{f2, Table};
+use crate::resilience::harness::{run_drill, DrillConfig};
+
+/// The swept wire policies: name -> policy string.
+const POLICIES: &[(&str, &str)] = &[
+    ("f32", "wire=f32"),
+    ("fp4-xnode", "wire=fp8:e4m3,wire.inter=fp4:e2m1/row"),
+];
+
+const TOPOLOGIES: &[&str] = &["flat:8", "ring:8", "hier:2x4", "tree:8@2"];
+
+/// CLI entry point (see `cmd_repro`): parses knobs and runs the sweep.
+pub fn resilience_cmd(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let steps = args.get_usize("steps", if quick { 30 } else { 60 })?;
+    let dim = args.get_usize("dim", 64)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    let results = PathBuf::from(args.get("results").unwrap_or("results"));
+    let rates: &[f64] = if quick { &[0.0, 0.02] } else { &[0.0, 0.01, 0.05] };
+    run_sweep(steps, dim, seed, rates, &results)
+}
+
+/// The fault plan of one faulted arm: wire corruption at `rate` on every
+/// link, worker 1 killed mid-run, worker 0 emitting one NaN gradient.
+fn plan_for(rate: f64, steps: usize, seed: u64) -> Result<FaultPlan> {
+    if rate == 0.0 {
+        return Ok(FaultPlan::none());
+    }
+    let s = format!("flip:any@{rate},drop:w1@{},nan:w0@{},seed:{seed}", steps / 2, steps / 4);
+    FaultPlan::parse(&s)
+}
+
+pub fn run_sweep(steps: usize, dim: usize, seed: u64, rates: &[f64], results: &Path) -> Result<()> {
+    let mut t = Table::new(&[
+        "rate", "topology", "policy", "final loss", "d vs clean", "rollbacks", "recov steps",
+        "retry KB", "evicted",
+    ]);
+    let mut json_rows: Vec<(String, f64)> = Vec::new();
+    let mut baselines: HashMap<String, f32> = HashMap::new();
+    let ckpt_dir = std::env::temp_dir().join(format!("fp4train_resilience_{seed}"));
+    let mut arms = 0usize;
+
+    for &rate in rates {
+        for ts in TOPOLOGIES {
+            for (name, pol) in POLICIES {
+                let mut cfg = DrillConfig::new(
+                    Topology::parse(ts)?,
+                    ckpt_dir.join(format!("{rate}_{ts}_{name}.ckpt")),
+                );
+                cfg.policy = PrecisionPolicy::parse(pol)?;
+                cfg.plan = plan_for(rate, steps, seed)?;
+                cfg.dim = dim;
+                cfg.steps = steps;
+                cfg.seed = seed;
+                let report = run_drill(&cfg)
+                    .with_context(|| format!("arm rate={rate} {ts} {name} did not complete"))?;
+
+                let arm = format!("{ts} {name}");
+                let delta = match baselines.get(&arm) {
+                    None => {
+                        baselines.insert(arm.clone(), report.final_loss);
+                        0.0
+                    }
+                    Some(clean) => (report.final_loss - clean) as f64,
+                };
+                t.row(&[
+                    format!("{rate}"),
+                    ts.to_string(),
+                    name.to_string(),
+                    format!("{:.2e}", report.final_loss),
+                    format!("{delta:+.2e}"),
+                    report.rollbacks.to_string(),
+                    report.recovery_steps.to_string(),
+                    f2(report.stats.retry_bytes as f64 / 1e3),
+                    report.stats.evicted.to_string(),
+                ]);
+                let key = format!("{rate} {arm}");
+                json_rows.push((format!("{key} final_loss"), report.final_loss as f64));
+                json_rows.push((format!("{key} loss_delta"), delta));
+                json_rows.push((format!("{key} rollbacks"), report.rollbacks as f64));
+                json_rows.push((format!("{key} recovery_steps"), report.recovery_steps as f64));
+                json_rows.push((format!("{key} retry_bytes"), report.stats.retry_bytes as f64));
+                json_rows.push((format!("{key} evicted"), report.stats.evicted as f64));
+                arms += 1;
+            }
+        }
+    }
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+
+    println!("{}", t.render());
+    println!("all {arms} arms completed (faults detected, retried, survived)");
+    let json_path = results.join("perf").join("BENCH_resilience.json");
+    write_bench_json(&json_path, steps, dim, &json_rows)?;
+    println!("wrote {}", json_path.display());
+    Ok(())
+}
+
+/// Same hand-built dialect as `BENCH_fabric.json` (no serde offline):
+/// names are plain ASCII, so `{:?}` escaping yields valid JSON strings.
+fn write_bench_json(path: &Path, steps: usize, dim: usize, rows: &[(String, f64)]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut s = String::from("{\n  \"bench\": \"resilience\",\n");
+    s.push_str(&format!("  \"steps\": {steps},\n  \"dim\": {dim},\n"));
+    s.push_str("  \"unit\": \"loss or count or bytes\",\n");
+    s.push_str("  \"provenance\": \"computed\",\n");
+    s.push_str("  \"arms\": {\n");
+    for (i, (name, v)) in rows.iter().enumerate() {
+        let sep = if i + 1 == rows.len() { "" } else { "," };
+        s.push_str(&format!("    {:?}: {:.6}{}\n", name, v, sep));
+    }
+    s.push_str("  }\n}\n");
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_completes_every_arm_and_writes_json() {
+        let dir = std::env::temp_dir().join("fp4train_resilience_sweep_test");
+        run_sweep(24, 32, 11, &[0.0, 0.02], &dir).unwrap();
+        let text =
+            std::fs::read_to_string(dir.join("perf/BENCH_resilience.json")).unwrap();
+        assert!(text.contains("\"bench\": \"resilience\""));
+        assert!(text.contains("\"provenance\": \"computed\""));
+        // the faulted hier arm records its evicted worker
+        assert!(text.contains("0.02 hier:2x4 fp4-xnode evicted"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn faulted_plans_parse_and_name_real_events() {
+        let p = plan_for(0.05, 60, 7).unwrap();
+        assert_eq!(p.max_worker(), Some(1));
+        assert_eq!(p.nan_workers_at(15), vec![0]);
+        assert!(plan_for(0.0, 60, 7).unwrap().is_none());
+    }
+}

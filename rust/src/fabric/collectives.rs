@@ -34,24 +34,153 @@
 //! `DpSim`; identical to the reference whenever `1/W` is a power of
 //! two). The returned tensor is the most-requantized replica (the end of
 //! the longest decode chain).
+//!
+//! # Self-healing hops
+//!
+//! Every transmission is framed with an IEEE CRC32 over its wire bytes
+//! (packed codes + scales, or raw f32 words). Under an active
+//! [`FaultPlan`](crate::resilience::FaultPlan), each attempt draws a
+//! deterministic corruption verdict; a corrupted attempt is *detected*
+//! by the CRC mismatch — never silently averaged in — counted, backed
+//! off exponentially ([`BACKOFF_BASE_US`]` << retry`), and
+//! retransmitted, with the retry bytes re-counted on the link and in
+//! `FabricStats::retry_bytes`. After [`MAX_ATTEMPTS`] consecutive
+//! corruptions the collective fails loudly. The corrupted attempt's
+//! payload is never decoded (a real receiver discards a bad frame), so
+//! delivered values are identical to the fault-free run's — retries cost
+//! bytes and backoff, not fidelity. Worker evictions are handled one
+//! level up (see [`Fabric::all_reduce_mean`]): survivors re-run the
+//! algorithms over a compacted rank space, or [`run_hier_masked`] for
+//! `hier`, which keeps survivors on their physical nodes.
+
+use anyhow::{ensure, Result};
 
 use crate::formats::{PackedTensor, QuantSpec};
 use crate::policy::LinkClass;
+use crate::resilience::{Crc32, FaultState, BACKOFF_BASE_US, MAX_ATTEMPTS};
 
 use super::{Fabric, FabricStats, GradSource, Topology};
 
+/// The bytes one hop carries, for CRC framing.
+enum Payload<'p> {
+    Raw(&'p [f32]),
+    Packed(&'p PackedTensor),
+}
+
+impl Payload<'_> {
+    fn byte_len(&self) -> usize {
+        match self {
+            Payload::Raw(vals) => 4 * vals.len(),
+            Payload::Packed(p) => p.wire_bytes() as usize,
+        }
+    }
+
+    fn crc(&self) -> u32 {
+        self.crc_with(None)
+    }
+
+    fn crc_with_flip(&self, byte: usize, bit: u8) -> u32 {
+        self.crc_with(Some((byte, bit)))
+    }
+
+    /// CRC over the wire bytes, optionally with one bit XORed in: the
+    /// in-flight corruption is simulated on the checksum stream, never on
+    /// the payload buffer — a corrupted attempt is discarded before
+    /// decode, so its bytes are never materialized.
+    fn crc_with(&self, flip: Option<(usize, u8)>) -> u32 {
+        let mut crc = Crc32::new();
+        let mut pos = 0usize;
+        let mut feed = |crc: &mut Crc32, bytes: &[u8]| {
+            match flip {
+                Some((at, bit)) if pos <= at && at < pos + bytes.len() => {
+                    let i = at - pos;
+                    crc.update(&bytes[..i]);
+                    crc.update(&[bytes[i] ^ bit]);
+                    crc.update(&bytes[i + 1..]);
+                }
+                _ => crc.update(bytes),
+            }
+            pos += bytes.len();
+        };
+        match self {
+            Payload::Raw(vals) => {
+                for v in *vals {
+                    feed(&mut crc, &v.to_le_bytes());
+                }
+            }
+            Payload::Packed(p) => {
+                feed(&mut crc, &p.data);
+                for s in &p.scales {
+                    feed(&mut crc, &s.to_le_bytes());
+                }
+            }
+        }
+        crc.finish()
+    }
+}
+
+/// Frame one logical transmission (of `sends` link-level sends carrying
+/// `bytes` wire bytes total) with a CRC32 and clear it through the fault
+/// plan. Returns once a clean attempt is delivered; each corrupted
+/// attempt re-counts its sends/bytes on the link, accumulates backoff,
+/// and redraws under a fresh sequence number. Inactive plans cost one
+/// CRC frame and nothing else — delivered values are untouched either
+/// way, so `FaultPlan::none()` stays bit-identical to the pre-resilience
+/// path.
+fn clear_hop(
+    stats: &mut FabricStats,
+    faults: &mut FaultState,
+    payload: Payload<'_>,
+    link: LinkClass,
+    sends: u64,
+    bytes: u64,
+    f32_equiv: u64,
+) -> Result<()> {
+    let framed = payload.crc();
+    if !faults.active() || payload.byte_len() == 0 {
+        return Ok(());
+    }
+    if faults.straggle_factor(link) > 1.0 {
+        stats.straggled += sends;
+    }
+    for attempt in 0..MAX_ATTEMPTS {
+        let Some((byte_seed, bit)) = faults.draw_corrupt(link) else {
+            // clean delivery: the receiver's CRC matches the frame
+            return Ok(());
+        };
+        let received = payload.crc_with_flip(byte_seed as usize % payload.byte_len(), bit);
+        ensure!(received != framed, "CRC32 failed to detect a single-bit flip");
+        stats.corruptions += 1;
+        ensure!(
+            attempt + 1 < MAX_ATTEMPTS,
+            "link {link}: payload still corrupt after {MAX_ATTEMPTS} attempts (seq {})",
+            faults.seq()
+        );
+        stats.retries += 1;
+        stats.retry_bytes += bytes;
+        stats.backoff_us += BACKOFF_BASE_US << attempt;
+        let l = &mut stats.links[link.index()];
+        l.sends += sends;
+        l.bytes += bytes;
+        l.bytes_f32_equiv += f32_equiv;
+    }
+    unreachable!("retry loop is bounded by MAX_ATTEMPTS")
+}
+
 /// Transmission context: the accounting plus the one reusable packed
-/// payload every send encodes into.
+/// payload every send encodes into, plus the fault bookkeeping.
 struct Ctx<'a> {
     stats: &'a mut FabricStats,
     wire: &'a mut PackedTensor,
+    faults: &'a mut FaultState,
 }
 
 impl Ctx<'_> {
     /// One transmission of `payload` (shaped `rows x cols` for scale
-    /// granularity) over a `link`-class hop: encode, account, and
-    /// accumulate the *decoded* values into `acc` with `weight`. Raw f32
-    /// specs transmit scale-free (`4*len` bytes, exact values).
+    /// granularity) over a `link`-class hop: encode, account, clear the
+    /// fault plan, and accumulate the *decoded* values into `acc` with
+    /// `weight`. Raw f32 specs transmit scale-free (`4*len` bytes, exact
+    /// values).
     #[allow(clippy::too_many_arguments)]
     fn send_accumulate(
         &mut self,
@@ -62,20 +191,43 @@ impl Ctx<'_> {
         link: LinkClass,
         acc: &mut [f32],
         weight: f32,
-    ) {
-        let l = &mut self.stats.links[link.index()];
-        l.sends += 1;
-        l.bytes_f32_equiv += 4 * payload.len() as u64;
+    ) -> Result<()> {
+        let raw_bytes = 4 * payload.len() as u64;
+        {
+            let l = &mut self.stats.links[link.index()];
+            l.sends += 1;
+            l.bytes_f32_equiv += raw_bytes;
+        }
         if spec.is_raw() {
-            l.bytes += 4 * payload.len() as u64;
+            self.stats.links[link.index()].bytes += raw_bytes;
+            clear_hop(
+                self.stats,
+                self.faults,
+                Payload::Raw(payload),
+                link,
+                1,
+                raw_bytes,
+                raw_bytes,
+            )?;
             for (a, &v) in acc.iter_mut().zip(payload) {
                 *a += v * weight;
             }
         } else {
             PackedTensor::pack_into(payload, rows, cols, spec.format, spec.granularity, self.wire);
-            l.bytes += self.wire.wire_bytes();
+            let wire_bytes = self.wire.wire_bytes();
+            self.stats.links[link.index()].bytes += wire_bytes;
+            clear_hop(
+                self.stats,
+                self.faults,
+                Payload::Packed(self.wire),
+                link,
+                1,
+                wire_bytes,
+                raw_bytes,
+            )?;
             self.wire.unpack_accumulate(acc, weight);
         }
+        Ok(())
     }
 
     /// One transmission whose receiver *replaces* its copy with the
@@ -88,14 +240,16 @@ impl Ctx<'_> {
         spec: QuantSpec,
         link: LinkClass,
         dst: &mut Vec<f32>,
-    ) {
-        self.broadcast_replace(payload, rows, cols, spec, link, 1, dst);
+    ) -> Result<()> {
+        self.broadcast_replace(payload, rows, cols, spec, link, 1, dst)
     }
 
     /// One encode fanned out to `receivers` identical links: the payload
     /// is packed once (all receivers decode the same bytes) but its cost
     /// is counted once per link, like a switch would carry it. `dst`
-    /// becomes the decoded value every receiver holds.
+    /// becomes the decoded value every receiver holds. A corrupted
+    /// broadcast attempt is retransmitted whole (every receiver link
+    /// re-counts).
     #[allow(clippy::too_many_arguments)]
     fn broadcast_replace(
         &mut self,
@@ -106,34 +260,59 @@ impl Ctx<'_> {
         link: LinkClass,
         receivers: u64,
         dst: &mut Vec<f32>,
-    ) {
-        let l = &mut self.stats.links[link.index()];
-        l.sends += receivers;
-        l.bytes_f32_equiv += receivers * 4 * payload.len() as u64;
+    ) -> Result<()> {
+        let raw_bytes = receivers * 4 * payload.len() as u64;
+        {
+            let l = &mut self.stats.links[link.index()];
+            l.sends += receivers;
+            l.bytes_f32_equiv += raw_bytes;
+        }
         if spec.is_raw() {
-            l.bytes += receivers * 4 * payload.len() as u64;
+            self.stats.links[link.index()].bytes += raw_bytes;
+            clear_hop(
+                self.stats,
+                self.faults,
+                Payload::Raw(payload),
+                link,
+                receivers,
+                raw_bytes,
+                raw_bytes,
+            )?;
             dst.clear();
             dst.extend_from_slice(payload);
         } else {
             PackedTensor::pack_into(payload, rows, cols, spec.format, spec.granularity, self.wire);
-            l.bytes += receivers * self.wire.wire_bytes();
+            let wire_bytes = receivers * self.wire.wire_bytes();
+            self.stats.links[link.index()].bytes += wire_bytes;
+            clear_hop(
+                self.stats,
+                self.faults,
+                Payload::Packed(self.wire),
+                link,
+                receivers,
+                wire_bytes,
+                raw_bytes,
+            )?;
             self.wire.unpack_into(dst);
         }
+        Ok(())
     }
 }
 
-/// Dispatch one mean all-reduce over the fabric's topology. Arguments are
-/// pre-validated by [`Fabric::all_reduce_mean`].
+/// Dispatch one mean all-reduce over `topology` (the fabric's own, or a
+/// survivor-compacted override). Arguments are pre-validated by
+/// [`Fabric::all_reduce_mean`].
 pub(crate) fn run(
     fabric: &mut Fabric,
+    topology: Topology,
     src: &dyn GradSource,
     rows: usize,
     cols: usize,
     specs: &[QuantSpec; 4],
     out: &mut Vec<f32>,
-) {
-    let (topology, stats, wire, buf_a, buf_b) = fabric.parts();
-    let mut ctx = Ctx { stats, wire };
+) -> Result<()> {
+    let (stats, wire, buf_a, buf_b, faults) = fabric.parts();
+    let mut ctx = Ctx { stats, wire, faults };
     let spec_of = |link: LinkClass| specs[link.index()];
     match topology {
         Topology::Flat { workers } => {
@@ -170,6 +349,75 @@ pub(crate) fn run(
     }
 }
 
+/// Hierarchical all-reduce over the surviving members of each physical
+/// node (`groups`: alive original worker ids grouped by node, in worker
+/// order, empty nodes omitted). Leaders are each group's first survivor;
+/// the root scales by `1/alive` — the survivors' `1/(W-k)`
+/// renormalization. With every worker alive this reproduces [`hier`]
+/// byte- and bit-exactly.
+pub(crate) fn run_hier_masked(
+    fabric: &mut Fabric,
+    groups: &[Vec<usize>],
+    src: &dyn GradSource,
+    rows: usize,
+    cols: usize,
+    specs: &[QuantSpec; 4],
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let (stats, wire, buf_a, buf_b, faults) = fabric.parts();
+    let mut ctx = Ctx { stats, wire, faults };
+    let intra = specs[LinkClass::IntraNode.index()];
+    let inter = specs[LinkClass::InterNode.index()];
+    let n = src.len();
+    let alive: usize = groups.iter().map(|g| g.len()).sum();
+    debug_assert!(alive > 0 && groups.iter().all(|g| !g.is_empty()));
+    let inv_w = 1.0 / alive as f32;
+    let (partial, member) = (buf_a, buf_b);
+    out.clear();
+    out.resize(n, 0.0);
+    member.clear();
+    member.resize(n, 0.0);
+    for (gi, g) in groups.iter().enumerate() {
+        partial.clear();
+        partial.resize(n, 0.0);
+        src.write(g[0], 0..n, partial);
+        for &m in &g[1..] {
+            src.write(m, 0..n, member);
+            ctx.send_accumulate(member, rows, cols, intra, LinkClass::IntraNode, partial, 1.0)?;
+        }
+        if gi == 0 {
+            out.copy_from_slice(partial);
+        } else {
+            ctx.send_accumulate(partial, rows, cols, inter, LinkClass::InterNode, out, 1.0)?;
+        }
+    }
+    for v in out.iter_mut() {
+        *v *= inv_w;
+    }
+    let leaves = (alive - groups.len()) as u64;
+    if groups.len() > 1 {
+        ctx.broadcast_replace(
+            out,
+            rows,
+            cols,
+            inter,
+            LinkClass::InterNode,
+            (groups.len() - 1) as u64,
+            member,
+        )?;
+    } else {
+        member.clear();
+        member.extend_from_slice(out);
+    }
+    if leaves > 0 {
+        ctx.broadcast_replace(member, rows, cols, intra, LinkClass::IntraNode, leaves, partial)?;
+        out.copy_from_slice(partial);
+    } else {
+        out.copy_from_slice(member);
+    }
+    Ok(())
+}
+
 /// The legacy hub model: every worker's full gradient is encoded once
 /// and accumulated into the reducer with weight `1/W` — the exact
 /// pre-fabric `DpSim` op sequence (same kernel calls, same order), so a
@@ -184,7 +432,7 @@ fn flat(
     spec: QuantSpec,
     out: &mut Vec<f32>,
     scratch: &mut Vec<f32>,
-) {
+) -> Result<()> {
     let n = src.len();
     let inv_w = 1.0 / workers as f32;
     out.clear();
@@ -193,8 +441,9 @@ fn flat(
     scratch.resize(n, 0.0);
     for w in 0..workers {
         src.write(w, 0..n, scratch);
-        ctx.send_accumulate(scratch, rows, cols, spec, LinkClass::InterNode, out, inv_w);
+        ctx.send_accumulate(scratch, rows, cols, spec, LinkClass::InterNode, out, inv_w)?;
     }
+    Ok(())
 }
 
 /// Reduce-scatter + all-gather ring over balanced contiguous shards.
@@ -206,7 +455,7 @@ fn ring(
     out: &mut Vec<f32>,
     partial: &mut Vec<f32>,
     chunk: &mut Vec<f32>,
-) {
+) -> Result<()> {
     let n = src.len();
     let inv_w = 1.0 / workers as f32;
     out.clear();
@@ -214,7 +463,7 @@ fn ring(
     if workers == 1 {
         // no links: the mean of one worker is its own gradient
         src.write(0, 0..n, out);
-        return;
+        return Ok(());
     }
     let mut start = 0;
     for s in 0..workers {
@@ -229,7 +478,7 @@ fn ring(
         partial.resize(len_s, 0.0);
         src.write(0, range.clone(), partial);
         for w in 1..workers {
-            ctx.send_replace(partial, 1, len_s, spec, LinkClass::InterNode, chunk);
+            ctx.send_replace(partial, 1, len_s, spec, LinkClass::InterNode, chunk)?;
             std::mem::swap(partial, chunk);
             chunk.clear();
             chunk.resize(len_s, 0.0);
@@ -245,12 +494,13 @@ fn ring(
         // all-gather chain: W-1 hops, re-encoded at each; keep the last
         // receiver's copy (the most-requantized replica)
         for _ in 1..workers {
-            ctx.send_replace(partial, 1, len_s, spec, LinkClass::InterNode, chunk);
+            ctx.send_replace(partial, 1, len_s, spec, LinkClass::InterNode, chunk)?;
             std::mem::swap(partial, chunk);
         }
         out[range].copy_from_slice(partial);
         start += len_s;
     }
+    Ok(())
 }
 
 /// Two-level all-reduce: intra-node reduce into node leaders, inter-node
@@ -268,7 +518,7 @@ fn hier(
     out: &mut Vec<f32>,
     partial: &mut Vec<f32>,
     member: &mut Vec<f32>,
-) {
+) -> Result<()> {
     let n = src.len();
     let inv_w = 1.0 / (nodes * per_node) as f32;
     out.clear();
@@ -284,12 +534,12 @@ fn hier(
         src.write(leader, 0..n, partial);
         for m in 1..per_node {
             src.write(leader + m, 0..n, member);
-            ctx.send_accumulate(member, rows, cols, intra, LinkClass::IntraNode, partial, 1.0);
+            ctx.send_accumulate(member, rows, cols, intra, LinkClass::IntraNode, partial, 1.0)?;
         }
         if node == 0 {
             out.copy_from_slice(partial);
         } else {
-            ctx.send_accumulate(partial, rows, cols, inter, LinkClass::InterNode, out, 1.0);
+            ctx.send_accumulate(partial, rows, cols, inter, LinkClass::InterNode, out, 1.0)?;
         }
     }
     for v in out.iter_mut() {
@@ -308,7 +558,7 @@ fn hier(
             LinkClass::InterNode,
             (nodes - 1) as u64,
             member,
-        );
+        )?;
     } else {
         member.clear();
         member.extend_from_slice(out);
@@ -322,11 +572,12 @@ fn hier(
             LinkClass::IntraNode,
             (nodes * (per_node - 1)) as u64,
             partial,
-        );
+        )?;
         out.copy_from_slice(partial);
     } else {
         out.copy_from_slice(member);
     }
+    Ok(())
 }
 
 /// Post-order subtree reduce for [`tree`]: returns node `i`'s partial
@@ -342,16 +593,16 @@ fn tree_reduce(
     rows: usize,
     cols: usize,
     up: QuantSpec,
-) -> Vec<f32> {
+) -> Result<Vec<f32>> {
     let n = src.len();
     let mut buf = vec![0.0f32; n];
     src.write(i, 0..n, &mut buf);
     let first = fanout * i + 1;
     for c in first..(first + fanout).min(workers) {
-        let child = tree_reduce(ctx, src, c, workers, fanout, rows, cols, up);
-        ctx.send_accumulate(&child, rows, cols, up, LinkClass::TreeUp, &mut buf, 1.0);
+        let child = tree_reduce(ctx, src, c, workers, fanout, rows, cols, up)?;
+        ctx.send_accumulate(&child, rows, cols, up, LinkClass::TreeUp, &mut buf, 1.0)?;
     }
-    buf
+    Ok(buf)
 }
 
 /// Tree all-reduce: reduce up the heap-ordered tree, scale at the root,
@@ -368,10 +619,10 @@ fn tree(
     down: QuantSpec,
     out: &mut Vec<f32>,
     next: &mut Vec<f32>,
-) {
+) -> Result<()> {
     let n = src.len();
     let inv_w = 1.0 / workers as f32;
-    let total = tree_reduce(ctx, src, 0, workers, fanout, rows, cols, up);
+    let total = tree_reduce(ctx, src, 0, workers, fanout, rows, cols, up)?;
     out.clear();
     out.extend_from_slice(&total);
     for v in out.iter_mut() {
@@ -396,15 +647,16 @@ fn tree(
             LinkClass::TreeDown,
             (chi - clo) as u64,
             next,
-        );
+        )?;
         std::mem::swap(out, next);
         (lo, hi) = (clo, chi);
     }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::{flat_reference_mean, Fabric, SliceSource, Topology};
+    use super::super::{flat_reference_mean, Fabric, FaultPlan, SliceSource, Topology};
     use super::*;
     use crate::formats::QuantSpec;
 
@@ -567,5 +819,146 @@ mod tests {
         let mut fabric = Fabric::new(Topology::parse("flat:4").unwrap()).unwrap();
         let mut out = Vec::new();
         assert!(fabric.all_reduce_mean(&src, 1, 4, &f32_specs(), &mut out).is_err());
+    }
+
+    // --- resilience ------------------------------------------------------
+
+    #[test]
+    fn none_plan_is_bit_identical_to_plain_fabric() {
+        let grads: Vec<Vec<f32>> = (0..8)
+            .map(|w| (0..48).map(|i| ((w * 53 + i * 13) % 89) as f32 / 89.0 - 0.5).collect())
+            .collect();
+        let src = SliceSource { grads: &grads };
+        let specs = [QuantSpec::parse("fp8:e4m3").unwrap(); 4];
+        for topo in ["flat:8", "ring:8", "hier:2x4", "tree:8@2"] {
+            let t = Topology::parse(topo).unwrap();
+            let mut plain = Fabric::new(t).unwrap();
+            let mut faulted = Fabric::with_faults(t, FaultPlan::none()).unwrap();
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            for step in 0..3 {
+                faulted.begin_step(step);
+                plain.all_reduce_mean(&src, 1, 48, &specs, &mut a).unwrap();
+                faulted.all_reduce_mean(&src, 1, 48, &specs, &mut b).unwrap();
+                assert_eq!(a, b, "{topo} step {step}");
+            }
+            assert_eq!(plain.stats, faulted.stats, "{topo}");
+            assert!(faulted.faults().trace.is_empty());
+        }
+    }
+
+    #[test]
+    fn flips_are_detected_retried_and_do_not_alter_values() {
+        let grads = int_grads(8, 32);
+        let src = SliceSource { grads: &grads };
+        let specs = f32_specs();
+        let plan = FaultPlan::parse("flip:any@0.1,seed:11").unwrap();
+        let mut clean = Fabric::new(Topology::parse("flat:8").unwrap()).unwrap();
+        let mut faulted = Fabric::with_faults(Topology::parse("flat:8").unwrap(), plan).unwrap();
+        let (mut want, mut got) = (Vec::new(), Vec::new());
+        for step in 0..20 {
+            faulted.begin_step(step);
+            clean.all_reduce_mean(&src, 1, 32, &specs, &mut want).unwrap();
+            faulted.all_reduce_mean(&src, 1, 32, &specs, &mut got).unwrap();
+            // a corrupted attempt is discarded before decode: delivered
+            // values are identical to the fault-free run's
+            assert_eq!(got, want, "step {step}");
+        }
+        let s = &faulted.stats;
+        assert!(s.corruptions > 0, "160 draws at rate 0.1 produced none");
+        assert_eq!(s.corruptions, s.retries, "no exhaustion expected at this rate");
+        assert!(s.retry_bytes > 0 && s.backoff_us > 0);
+        // retries re-count on the link: more bytes than the clean run
+        assert!(s.total_bytes() > clean.stats.total_bytes());
+        assert_eq!(
+            s.total_bytes() - clean.stats.total_bytes(),
+            s.retry_bytes,
+            "retry bytes account exactly for the byte overhead"
+        );
+        // the trace replays identically under the same plan
+        let plan2 = FaultPlan::parse("flip:any@0.1,seed:11").unwrap();
+        let mut replay = Fabric::with_faults(Topology::parse("flat:8").unwrap(), plan2).unwrap();
+        let mut out = Vec::new();
+        for step in 0..20 {
+            replay.begin_step(step);
+            replay.all_reduce_mean(&src, 1, 32, &specs, &mut out).unwrap();
+        }
+        assert_eq!(replay.faults().trace, faulted.faults().trace);
+        assert_eq!(replay.stats, faulted.stats);
+    }
+
+    #[test]
+    fn certain_corruption_fails_loudly_after_bounded_retries() {
+        let grads = int_grads(2, 8);
+        let src = SliceSource { grads: &grads };
+        let plan = FaultPlan::parse("flip:any@1").unwrap();
+        let mut fabric = Fabric::with_faults(Topology::parse("flat:2").unwrap(), plan).unwrap();
+        let mut out = Vec::new();
+        let err = fabric.all_reduce_mean(&src, 1, 8, &f32_specs(), &mut out).unwrap_err();
+        assert!(err.to_string().contains("still corrupt"), "{err}");
+        assert_eq!(fabric.stats.corruptions, u64::from(MAX_ATTEMPTS));
+        assert_eq!(fabric.stats.retries, u64::from(MAX_ATTEMPTS) - 1);
+    }
+
+    #[test]
+    fn straggle_counts_affected_sends() {
+        let grads = int_grads(4, 16);
+        let src = SliceSource { grads: &grads };
+        let plan = FaultPlan::parse("straggle:inter@2x").unwrap();
+        let mut fabric = Fabric::with_faults(Topology::parse("flat:4").unwrap(), plan).unwrap();
+        let mut out = Vec::new();
+        fabric.all_reduce_mean(&src, 1, 16, &f32_specs(), &mut out).unwrap();
+        assert_eq!(fabric.stats.straggled, 4);
+        assert_eq!(fabric.stats.corruptions, 0);
+    }
+
+    #[test]
+    fn evicted_workers_renormalize_the_mean_over_survivors() {
+        // kill w1 and w6 of 8 at step 5: survivors re-form the collective
+        // and the mean is over the 6 survivors, not 8
+        let grads = int_grads(8, 33);
+        let src = SliceSource { grads: &grads };
+        let survivors: Vec<Vec<f32>> =
+            [0usize, 2, 3, 4, 5, 7].iter().map(|&w| grads[w].clone()).collect();
+        let ssrc = SliceSource { grads: &survivors };
+        let mut want = Vec::new();
+        flat_reference_mean(&ssrc, &mut want);
+        for topo in ["ring:8", "hier:2x4", "tree:8@2"] {
+            let plan = FaultPlan::parse("drop:w1@5,drop:w6@5").unwrap();
+            let mut fabric =
+                Fabric::with_faults(Topology::parse(topo).unwrap(), plan).unwrap();
+            let mut out = Vec::new();
+            // before the drop step: full-fleet mean, chains exact at W=8
+            fabric.begin_step(0);
+            fabric.all_reduce_mean(&src, 1, 33, &f32_specs(), &mut out).unwrap();
+            let mut full = Vec::new();
+            flat_reference_mean(&src, &mut full);
+            assert_eq!(out, full, "{topo} pre-drop");
+            // after: survivor-renormalized, bit-exact to the survivor
+            // reference (chain topologies sum in order, scale 1/(W-k))
+            fabric.begin_step(5);
+            fabric.all_reduce_mean(&src, 1, 33, &f32_specs(), &mut out).unwrap();
+            assert_eq!(out, want, "{topo} post-drop");
+            assert_eq!(fabric.stats.evicted, 2, "{topo}");
+        }
+    }
+
+    #[test]
+    fn all_workers_dead_fails_loudly() {
+        let grads = int_grads(2, 4);
+        let src = SliceSource { grads: &grads };
+        let plan = FaultPlan::parse("drop:w0@1,drop:w1@1").unwrap();
+        let mut fabric = Fabric::with_faults(Topology::parse("flat:2").unwrap(), plan).unwrap();
+        fabric.begin_step(1);
+        let mut out = Vec::new();
+        let err = fabric.all_reduce_mean(&src, 1, 4, &f32_specs(), &mut out).unwrap_err();
+        assert!(err.to_string().contains("evicted all"), "{err}");
+    }
+
+    #[test]
+    fn plan_naming_out_of_range_worker_rejected() {
+        let topo = Topology::parse("flat:4").unwrap();
+        let plan = FaultPlan::parse("drop:w4@0").unwrap();
+        let err = Fabric::with_faults(topo, plan).unwrap_err();
+        assert!(err.to_string().contains("only 4 workers"), "{err}");
     }
 }

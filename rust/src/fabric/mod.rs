@@ -60,6 +60,25 @@
 //! predictions, exactly, in `repro fabric`), which
 //! [`crate::costmodel::step_time_us`] turns into an alpha-beta step-time
 //! estimate.
+//!
+//! # Resilience
+//!
+//! A fabric built with [`Fabric::with_faults`] carries a deterministic
+//! [`FaultPlan`] (grammar in [`crate::resilience`]) and consults it per
+//! hop. Every hop is CRC32-framed; a drawn `flip:` corruption is
+//! *detected* by the frame (never silently averaged in), retried with
+//! exponential backoff, and fails the reduce after
+//! [`crate::resilience::MAX_ATTEMPTS`] attempts. `drop:` events evict
+//! workers permanently once the fault clock ([`Fabric::begin_step`])
+//! passes their step: the collective then runs over the survivors in
+//! original worker order and the root renormalizes by `1/(W-k)` —
+//! bit-exact to [`flat_reference_mean`] over the survivors wherever the
+//! full-fleet reduction is bit-exact over the full fleet (property-
+//! tested per topology × wire format). [`FaultPlan::none`] is
+//! bit-identical to a plain [`Fabric::new`] fabric, pinned by
+//! regression test. Retry/corruption/eviction counters accumulate in
+//! [`FabricStats`]; `costmodel::expected_retry_bytes` predicts the
+//! retry overhead in expectation.
 
 pub mod collectives;
 
@@ -70,6 +89,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::formats::{PackedTensor, QuantSpec};
 pub use crate::policy::LinkClass;
+pub use crate::resilience::{FaultEvent, FaultPlan, FaultState};
 
 /// Worker arrangement of the simulated fabric.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -180,6 +200,20 @@ pub struct FabricStats {
     pub links: [LinkStats; 4],
     /// Completed all-reduce operations.
     pub reduces: u64,
+    /// Corrupted transmissions detected by the CRC frame.
+    pub corruptions: u64,
+    /// Retransmissions performed after a detected corruption.
+    pub retries: u64,
+    /// Bytes carried by those retransmissions — included in the per-link
+    /// `bytes` (they really crossed the link) and tracked separately as
+    /// the resilience overhead.
+    pub retry_bytes: u64,
+    /// Simulated exponential backoff paid before retries, microseconds.
+    pub backoff_us: u64,
+    /// Transmissions delayed by a `straggle:` fault.
+    pub straggled: u64,
+    /// Workers permanently evicted by `drop:` faults.
+    pub evicted: u64,
 }
 
 impl FabricStats {
@@ -309,6 +343,29 @@ pub fn flat_reference_mean(src: &dyn GradSource, out: &mut Vec<f32>) {
     }
 }
 
+/// Survivor view after evictions: dense rank `v` maps to original worker
+/// id `members[v]`, so the unchanged collective algorithms run over
+/// `0..alive` and scale by `1/alive` — the `1/(W-k)` renormalization.
+/// `members` is sorted, so summation stays in original worker order.
+struct SurvivorView<'a> {
+    inner: &'a dyn GradSource,
+    members: &'a [usize],
+}
+
+impl GradSource for SurvivorView<'_> {
+    fn workers(&self) -> usize {
+        self.members.len()
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn write(&self, w: usize, range: Range<usize>, out: &mut [f32]) {
+        self.inner.write(self.members[w], range, out);
+    }
+}
+
 /// A topology plus its accounting and reusable codec scratch: the object
 /// `DpSim` (and the `repro fabric` driver) runs collectives on.
 pub struct Fabric {
@@ -320,6 +377,8 @@ pub struct Fabric {
     /// Reusable f32 staging buffers for partials/decodes.
     buf_a: Vec<f32>,
     buf_b: Vec<f32>,
+    /// Deterministic fault bookkeeping (inactive for `Fabric::new`).
+    faults: FaultState,
 }
 
 impl Fabric {
@@ -334,7 +393,45 @@ impl Fabric {
             ),
             buf_a: Vec::new(),
             buf_b: Vec::new(),
+            faults: FaultState::new(FaultPlan::none()),
         })
+    }
+
+    /// A fabric that consults `plan` on every hop (see the module docs'
+    /// Resilience section). `FaultPlan::none()` yields a fabric
+    /// bit-identical to [`Fabric::new`] — regression-pinned.
+    pub fn with_faults(topology: Topology, plan: FaultPlan) -> Result<Self> {
+        plan.validate()?;
+        if let Some(w) = plan.max_worker() {
+            ensure!(
+                w < topology.workers(),
+                "fault plan names worker w{w}, but topology {topology} has only {} workers",
+                topology.workers()
+            );
+        }
+        let mut fabric = Fabric::new(topology)?;
+        fabric.faults = FaultState::new(plan);
+        Ok(fabric)
+    }
+
+    /// Advance the fault clock (no-op without an active plan): `drop:`
+    /// events at or before `step` evict their workers, `nan:` events at
+    /// exactly `step` arm. `DpSim` and the drill harness call this once
+    /// per training step; a fabric that never does runs every reduce at
+    /// step 0.
+    pub fn begin_step(&mut self, step: usize) {
+        let before = self.faults.trace.len();
+        self.faults.begin_step(step, self.topology.workers());
+        for ev in &self.faults.trace[before..] {
+            if let FaultEvent::Evict { .. } = ev {
+                self.stats.evicted += 1;
+            }
+        }
+    }
+
+    /// The fault bookkeeping (plan, clock, dead mask, event trace).
+    pub fn faults(&self) -> &FaultState {
+        &self.faults
     }
 
     pub fn workers(&self) -> usize {
@@ -375,16 +472,67 @@ impl Fabric {
                 "wire spec {spec} carries a clamp: the ΔY residual is not transmitted"
             );
         }
-        collectives::run(self, src, rows, cols, specs, out);
+        let topo = self.topology;
+        if !self.faults.active() {
+            collectives::run(self, topo, src, rows, cols, specs, out)?;
+            self.stats.reduces += 1;
+            return Ok(());
+        }
+        // sync the dead mask with the fault clock even if the caller never
+        // advanced it (idempotent per step)
+        self.begin_step(self.faults.step());
+        let workers = self.topology.workers();
+        let members = self.faults.alive(workers);
+        ensure!(
+            !members.is_empty(),
+            "fault plan evicted all {workers} workers by step {}",
+            self.faults.step()
+        );
+        if members.len() == workers {
+            collectives::run(self, topo, src, rows, cols, specs, out)?;
+        } else {
+            // graceful degradation: survivors re-form the collective in
+            // original worker order and renormalize by 1/(W-k)
+            match topo {
+                Topology::Hier { per_node, .. } => {
+                    // survivors keep their physical node; empty nodes drop
+                    // out of the reduction entirely
+                    let mut groups: Vec<Vec<usize>> = Vec::new();
+                    let mut last_node = usize::MAX;
+                    for &w in &members {
+                        let node = w / per_node;
+                        if node != last_node {
+                            groups.push(Vec::new());
+                            last_node = node;
+                        }
+                        groups.last_mut().expect("pushed above").push(w);
+                    }
+                    collectives::run_hier_masked(self, &groups, src, rows, cols, specs, out)?;
+                }
+                topo => {
+                    let eff = match topo {
+                        Topology::Flat { .. } => Topology::Flat { workers: members.len() },
+                        Topology::Ring { .. } => Topology::Ring { workers: members.len() },
+                        Topology::Tree { fanout, .. } => {
+                            Topology::Tree { workers: members.len(), fanout }
+                        }
+                        Topology::Hier { .. } => unreachable!("handled above"),
+                    };
+                    let view = SurvivorView { inner: src, members: &members };
+                    collectives::run(self, eff, &view, rows, cols, specs, out)?;
+                }
+            }
+        }
         self.stats.reduces += 1;
         Ok(())
     }
 
     /// Internal transmission plumbing handed to the collectives.
+    #[allow(clippy::type_complexity)]
     pub(crate) fn parts(
         &mut self,
-    ) -> (Topology, &mut FabricStats, &mut PackedTensor, &mut Vec<f32>, &mut Vec<f32>) {
-        (self.topology, &mut self.stats, &mut self.wire, &mut self.buf_a, &mut self.buf_b)
+    ) -> (&mut FabricStats, &mut PackedTensor, &mut Vec<f32>, &mut Vec<f32>, &mut FaultState) {
+        (&mut self.stats, &mut self.wire, &mut self.buf_a, &mut self.buf_b, &mut self.faults)
     }
 }
 

@@ -6,7 +6,7 @@
 //! structured input from it, and panics on any invariant violation —
 //! panics are exactly what the fuzzer minimizes.
 //!
-//! The three surfaces are the ones where arbitrary input must uphold
+//! The five surfaces are the ones where arbitrary input must uphold
 //! structural invariants:
 //!
 //!  * the codec round-trip (`QuantSpec`/`PackedTensor`): storage decode
@@ -17,12 +17,20 @@
 //!  * the `PrecisionPolicy`/`Schedule` grammar: parse never panics,
 //!    accepted policies satisfy `validate()` (clamped wire/checkpoint
 //!    rejection, schedule-overlap rejection), round-trip through
-//!    `Display`, and resolve without panicking at arbitrary steps.
+//!    `Display`, and resolve without panicking at arbitrary steps;
+//!  * the checkpoint binary format: `read_from` never panics on
+//!    arbitrary bytes, a freshly written v3 file loads, and any
+//!    single-byte corruption of the CRC-framed body is rejected;
+//!  * the `FaultPlan` grammar: parse never panics, accepted plans are
+//!    valid, round-trip through `Display`, and two `FaultState`s built
+//!    from equal plans draw bit-identical fault verdicts.
 //!
 //! Doc-hidden: this is test infrastructure, not API.
 
+use crate::coordinator::checkpoint;
 use crate::formats::{fp8, Format, Fp4Kind, Granularity, PackedTensor, QuantSpec};
-use crate::policy::PrecisionPolicy;
+use crate::policy::{LinkClass, PrecisionPolicy};
+use crate::resilience::{FaultPlan, FaultState};
 
 /// All storage formats, indexable by a fuzz byte.
 const FORMATS: [Format; 7] = [
@@ -166,4 +174,83 @@ pub fn check_policy_parse(data: &[u8]) {
             );
         }
     }
+}
+
+/// Checkpoint binary-format oracle (PR-8). Three properties:
+///
+///  1. `read_from` never panics on arbitrary bytes — truncated files,
+///     bad magic, absurd counts/shapes/lengths all *error*;
+///  2. a freshly written v3 checkpoint (shape, packing, policy and step
+///     all fuzz-derived) loads back intact;
+///  3. flipping one bit anywhere in the CRC-framed body (offset >= 12:
+///     flags, step, policy, tensors, CRC footer) makes the load fail —
+///     corruption is detected, never garbage-decoded.
+pub fn check_checkpoint_parse(data: &[u8]) {
+    // arbitrary bytes: reject or accept, but never panic
+    let _ = checkpoint::read_from(&mut &data[..]);
+
+    if data.len() < 4 {
+        return;
+    }
+    let n = 1 + (data[0] as usize % 17);
+    let vals: Vec<f32> = (0..n).map(|i| (i as f32 - 3.5) * 0.25).collect();
+    let tensors = vec![("t".to_string(), vec![n], vals)];
+    let spec = (data[1] & 1 == 1).then(|| QuantSpec::parse("fp8:e4m3").unwrap());
+    let policy = (data[1] & 2 == 2).then_some("ckpt=fp8:e4m3");
+    let mut bytes = Vec::new();
+    checkpoint::write_v3(&mut bytes, data[2] as u64, policy, spec.as_ref(), &tensors)
+        .expect("in-memory write cannot fail");
+    let ck = checkpoint::read_from(&mut &bytes[..]).expect("fresh v3 must load");
+    assert_eq!(ck.step, data[2] as u64);
+    assert_eq!(ck.tensors.len(), 1, "tensor count survived the round trip");
+
+    let body = bytes.len() - 12;
+    let off = 12 + (u16::from_le_bytes([data[2], data[3]]) as usize % body);
+    let mut corrupt = bytes.clone();
+    corrupt[off] ^= 1 << (data[0] % 8);
+    assert!(
+        checkpoint::read_from(&mut &corrupt[..]).is_err(),
+        "bit flip at offset {off} of {} went undetected",
+        bytes.len()
+    );
+    // header corruption (version field) must also never panic
+    let mut header = bytes;
+    header[8 + (data[3] as usize % 4)] ^= 1 << (data[0] % 8);
+    let _ = checkpoint::read_from(&mut &header[..]);
+}
+
+/// `FaultPlan` grammar oracle (PR-8): parse never panics; accepted plans
+/// satisfy `validate()`, render canonically (`Display` is a fixed
+/// point), and — the determinism contract — two `FaultState`s built from
+/// equal plans produce bit-identical fault draws and traces.
+pub fn check_fault_plan_parse(data: &[u8]) {
+    let s = String::from_utf8_lossy(data);
+    let Ok(p) = FaultPlan::parse(&s) else {
+        return;
+    };
+    p.validate()
+        .unwrap_or_else(|e| panic!("parse accepted an invalid plan {s:?}: {e}"));
+    let canon = p.to_string();
+    let back = FaultPlan::parse(&canon)
+        .unwrap_or_else(|e| panic!("canonical form {canon:?} rejected: {e}"));
+    assert_eq!(back, p, "round-trip through {canon:?}");
+    assert_eq!(back.to_string(), canon, "display must be a fixed point");
+
+    // same plan => identical fault schedule, draw for draw
+    let workers = p.max_worker().map_or(4, |m| m + 1).max(4);
+    let mut a = FaultState::new(p.clone());
+    let mut b = FaultState::new(back);
+    for step in 0..4 {
+        a.begin_step(step, workers);
+        b.begin_step(step, workers);
+        for link in LinkClass::ALL {
+            assert_eq!(a.draw_corrupt(link), b.draw_corrupt(link), "draw at step {step}");
+            let fa = a.straggle_factor(link);
+            assert_eq!(fa.to_bits(), b.straggle_factor(link).to_bits());
+            assert!(fa >= 1.0, "straggle factor below 1 leaked through validate");
+        }
+        assert_eq!(a.alive(workers), b.alive(workers), "survivors at step {step}");
+    }
+    assert_eq!(a.trace, b.trace, "fault traces diverged");
+    assert_eq!(a.seq(), b.seq(), "draw sequence counters diverged");
 }

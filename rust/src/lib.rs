@@ -46,6 +46,15 @@
 //!   [`policy::LinkClass`] (`wire.inter=fp4:e2m1/row` quantizes only
 //!   inter-node links). `FabricStats` accounts every byte per link class,
 //!   exactly matching the `costmodel` predictions.
+//! - [`resilience`] — deterministic fault injection + recovery: a seeded
+//!   [`resilience::FaultPlan`] grammar
+//!   (`drop:w3@120,flip:inter@0.001,straggle:inter@2x,nan:w0@5,seed:7`)
+//!   the fabric consults per hop (same seed ⇒ identical fault trace),
+//!   CRC32-framed self-healing hops (detect, retry with backoff, evict,
+//!   survivors renormalize the mean), and a [`resilience::Sentinel`]
+//!   watching loss / grad-absmax / clamp rate that rolls training back
+//!   to the last good checkpoint and temporarily escalates wire
+//!   precision (e.g. FP4 → FP8 for N steps) before resuming the policy.
 //! - [`coordinator`] — the training orchestrator: single-process trainer
 //!   (fused or burst stepping), simulated data-parallel workers with
 //!   spec-driven gradient compression on the all-reduce wire (f32 / FP8 /
@@ -74,6 +83,7 @@ pub mod fuzzing;
 pub mod policy;
 pub mod quant;
 pub mod report;
+pub mod resilience;
 pub mod runtime;
 pub mod stats;
 pub mod util;

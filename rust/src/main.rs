@@ -5,9 +5,9 @@
 //!                  -o precision=<policy> | -o ckpt_format=<spec>]
 //! fp4train eval   [-o preset=.. -o policy=..]      held-out ppl + zero-shot
 //! fp4train dp     [-o workers=4 -o topology=hier:2x2 -o precision=<policy>
-//!                  | -o comm=<spec>]
+//!                  | -o comm=<spec> -o faults=<plan> -o sentinel=true]
 //! fp4train repro  <fig1|fig3|fig4|fig5|fig6a..d|tab1..tab5|fig7|dists|perf|
-//!                  fabric|all>
+//!                  fabric|resilience|all>
 //! fp4train formats                                  print FP4 tables
 //! fp4train info                                     manifest inventory
 //! ```
@@ -61,10 +61,18 @@ commands:
            -o workers=4 -o precision=<policy> (or -o comm=<spec>) -o steps=..
            -o topology=flat:4|ring:4|hier:2x2|tree:4@2 (comm fabric; flat
            reproduces the hub all-reduce bit-for-bit)
+           -o faults=<plan> injects deterministic faults (grammar:
+           drop:w<I>@<S>,flip:<link|any>@<RATE>,straggle:<link|any>@<F>x,
+           nan:w<I>@<S>,seed:<U64>); -o sentinel=true arms the numeric
+           guardrails (rollback + temporary precision escalation)
   repro    regenerate a paper table/figure: fig1 fig3 fig4 fig5 fig6a-d
-           tab1 tab2 tab3 tab4 tab5 fig7 dists perf fabric all   [--quick]
+           tab1 tab2 tab3 tab4 tab5 fig7 dists perf fabric resilience all
+           [--quick]
            (fabric = engine-free topology x wire-policy comm sweep;
            -o n=.. -o seed=..; writes results/perf/BENCH_fabric.json)
+           (resilience = engine-free fault-rate x topology recovery drill;
+           -o steps=.. -o dim=.. -o seed=..;
+           writes results/perf/BENCH_resilience.json)
   formats  print the FP4 value tables (Appendix A, Table 4)
   info     list artifacts in the manifest
 
@@ -131,17 +139,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     trainer.write_history_csv(&out)?;
     let ckpt = cfg.out_dir.join(format!("{}_{}.ckpt", cfg.preset, cfg.policy));
     let init_spec = trainer.entry.step("init")?.clone();
-    // Checkpoint-class spec of the precision policy, resolved at the
-    // final step: raw v1 when f32, packed v2 otherwise.
-    let ckpt_spec = cfg.ckpt_format(trainer.step);
-    fp4train::coordinator::checkpoint::save_with_spec(
+    // v3 checkpoint: the Checkpoint-class spec of the precision policy
+    // decides raw vs packed tensors, and the canonical policy string is
+    // embedded so restore can *verify* compatibility instead of trusting
+    // whatever flags the restoring run was launched with.
+    fp4train::coordinator::checkpoint::save_with_policy(
         &ckpt,
         trainer.step as u64,
         &init_spec.outputs,
         trainer.state(),
-        ckpt_spec.as_ref(),
+        &cfg.precision,
     )?;
-    if let Some(spec) = &ckpt_spec {
+    if let Some(spec) = &cfg.ckpt_format(trainer.step) {
         println!("checkpoint packed as {spec}");
     }
     println!("run precision policy: {}", cfg.precision);
@@ -156,12 +165,11 @@ fn cmd_eval(args: &Args) -> Result<()> {
     // restore if a checkpoint exists
     let ckpt = cfg.out_dir.join(format!("{}_{}.ckpt", cfg.preset, cfg.policy));
     if ckpt.exists() {
+        // restore through the validation chain: stored policy string
+        // checked against the active policy, not trusted flags
         let ck = fp4train::coordinator::checkpoint::load(&ckpt)?;
         let spec = trainer.entry.step("init")?.clone();
-        trainer.replace_state(fp4train::coordinator::checkpoint::to_literals(
-            &ck,
-            &spec.outputs,
-        )?)?;
+        trainer.replace_state_checked(&ck, &spec.outputs, &cfg.precision)?;
         println!("restored {ckpt:?} (step {})", ck.step);
     } else {
         println!("no checkpoint at {ckpt:?}; evaluating the random init");
@@ -199,6 +207,14 @@ fn cmd_dp(args: &Args) -> Result<()> {
     )?;
     if let Some(t) = args.get("topology") {
         sim = sim.with_topology(Topology::parse(t)?)?;
+    }
+    if !cfg.fault_plan.is_none() {
+        sim = sim.with_fault_plan(cfg.fault_plan.clone())?;
+        println!("fault plan: {}", cfg.fault_plan);
+    }
+    if cfg.sentinel {
+        sim = sim.with_sentinel(Default::default());
+        println!("sentinel armed (rollback + precision escalation)");
     }
     println!("dp-sim: {}", sim.context_label());
     println!("precision policy: {}", sim.precision);
@@ -242,6 +258,33 @@ fn cmd_dp(args: &Args) -> Result<()> {
             );
         }
     }
+    // resilience accounting: only printed when something actually happened
+    let fs = sim.fabric_stats();
+    if fs.corruptions + fs.retries + fs.evicted + fs.straggled > 0 {
+        println!(
+            "faults: {} corruptions detected, {} retries ({:.2} KB resent, \
+             {} us backoff), {} workers evicted, {} straggled sends",
+            fs.corruptions,
+            fs.retries,
+            fs.retry_bytes as f64 / 1e3,
+            fs.backoff_us,
+            fs.evicted,
+            fs.straggled,
+        );
+    }
+    if let Some(s) = sim.sentinel() {
+        for (step, why) in &s.trips {
+            println!("sentinel trip at step {step}: {why}");
+        }
+        if s.rollbacks > 0 {
+            println!(
+                "sentinel: {} rollbacks, {} escalations (wire temporarily at {})",
+                s.rollbacks,
+                s.escalations,
+                s.config().escalation,
+            );
+        }
+    }
     Ok(())
 }
 
@@ -257,6 +300,11 @@ fn cmd_repro(args: &Args) -> Result<()> {
     // fabric), so it skips Ctx::new and needs no artifacts either.
     if id == "fabric" {
         return experiments::fabric::fabric_cmd(args);
+    }
+    // `repro resilience` is engine-free too (quadratic-bowl drill on the
+    // fabric with real checkpoints): the CI resilience-smoke job runs it.
+    if id == "resilience" {
+        return experiments::resilience::resilience_cmd(args);
     }
     let artifacts = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let mut ctx = experiments::Ctx::new(&artifacts)?;

@@ -66,6 +66,14 @@
 //! Like the `wire`/`ckpt` classes, per-link specs must be clamp-free (the
 //! ΔY residual is not transmitted).
 //!
+//! One consumer post-processes resolved wire specs *outside* the policy:
+//! the resilience [`Sentinel`](crate::resilience::Sentinel)'s temporary
+//! precision escalation (FP4 wire → FP8 for N steps after a rollback)
+//! upgrades the `[QuantSpec; 4]` array returned by
+//! [`PrecisionPolicy::link_resolution_at`] in place. The overlay never
+//! mutates the policy itself, so the grammar and its `Display` fixed
+//! point stay exactly as specified here (fuzz-pinned).
+//!
 //! Examples (missing classes take the paper defaults of
 //! [`PrecisionPolicy::default`]):
 //!

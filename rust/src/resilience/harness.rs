@@ -1,0 +1,308 @@
+//! Engine-free resilience drill: a quadratic-bowl model trained over a
+//! real [`Fabric`] with real checkpoint files, so every resilience
+//! mechanism — fault injection, CRC retry, survivor renormalization,
+//! sentinel rollback, precision escalation — runs end-to-end without AOT
+//! artifacts. Powers `repro resilience` and the recovery tests.
+//!
+//! The model is `loss(x) = mean((x - target)^2)` with per-coordinate
+//! gradient `2 (x_i - target_i)` plus small per-worker noise (a
+//! stateless hash of `(seed, worker, step, i)`, so runs are bit-
+//! reproducible). Each step:
+//!
+//!  1. advance the fault clock ([`Fabric::begin_step`]),
+//!  2. compute per-worker gradients, poisoning workers named by `nan:`
+//!     terms (the compute-side fault — see [`crate::resilience`]),
+//!  3. run the local guard (grad absmax over *alive* workers) and the
+//!     loss through the [`Sentinel`]; on a trip, reload the last good
+//!     checkpoint, rewind the state (never the clock — step-indexed
+//!     faults do not replay), and open the escalation window,
+//!  4. otherwise checkpoint on schedule (v3, policy string embedded,
+//!     validated on every reload), resolve the per-link wire specs,
+//!     apply the escalation overlay, all-reduce on the fabric, descend.
+//!
+//! The run fails loudly if the fabric cannot deliver (all workers dead,
+//! unrecoverable corruption) or the sentinel exhausts its rollback
+//! budget — `repro resilience` asserts every swept run completes.
+
+use std::path::PathBuf;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::checkpoint;
+use crate::fabric::{Fabric, FabricStats, FaultEvent, FaultPlan, SliceSource, Topology};
+use crate::policy::PrecisionPolicy;
+use crate::resilience::{Sentinel, SentinelConfig, TripReason};
+use crate::util::Rng;
+
+/// One drill scenario: model size, schedule, faults, guardrails.
+#[derive(Clone, Debug)]
+pub struct DrillConfig {
+    pub topology: Topology,
+    pub policy: PrecisionPolicy,
+    pub plan: FaultPlan,
+    pub sentinel: SentinelConfig,
+    /// Parameter count of the quadratic bowl.
+    pub dim: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// Checkpoint cadence in steps (a step-0 checkpoint is always
+    /// written, so a trip on the very first step can recover).
+    pub ckpt_every: usize,
+    pub ckpt_path: PathBuf,
+}
+
+impl DrillConfig {
+    /// A small, convergent default drill on the given topology; callers
+    /// override the fault plan / policy / path per scenario.
+    pub fn new(topology: Topology, ckpt_path: PathBuf) -> Self {
+        DrillConfig {
+            topology,
+            policy: PrecisionPolicy::default(),
+            plan: FaultPlan::none(),
+            sentinel: SentinelConfig::default(),
+            dim: 64,
+            steps: 40,
+            lr: 0.1,
+            seed: 0x5EED,
+            ckpt_every: 4,
+            ckpt_path,
+        }
+    }
+}
+
+/// What one drill run did (all fields deterministic in the config).
+#[derive(Clone, Debug)]
+pub struct DrillReport {
+    pub steps: usize,
+    pub initial_loss: f32,
+    pub final_loss: f32,
+    /// Per-step observed loss (pre-update; tripped steps record the loss
+    /// that tripped).
+    pub losses: Vec<f32>,
+    pub rollbacks: usize,
+    /// Steps of progress re-done after rollbacks (Σ trip step − ckpt step).
+    pub recovery_steps: usize,
+    /// Steps that ran with at least one wire link escalated.
+    pub escalated_steps: usize,
+    pub trips: Vec<(usize, TripReason)>,
+    pub stats: FabricStats,
+    pub trace: Vec<FaultEvent>,
+}
+
+/// Stateless per-worker gradient noise in `[-scale, scale)`: hash of
+/// `(seed, worker, step, coordinate)` with the splitmix64 finalizer.
+fn noise(seed: u64, w: usize, step: usize, i: usize, scale: f32) -> f32 {
+    let mut z = seed
+        .wrapping_add((w as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add((step as u64).wrapping_mul(0xD1B5_4A32_D192_ED03))
+        .wrapping_add((i as u64).wrapping_mul(0xA24B_AED4_963E_E407));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    ((z >> 40) as f32 / (1u64 << 23) as f32 - 1.0) * scale
+}
+
+fn mean_sq_err(x: &[f32], target: &[f32]) -> f32 {
+    let s: f64 = x.iter().zip(target).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+    (s / x.len() as f64) as f32
+}
+
+/// Run one drill to completion (see the module docs for the step loop).
+pub fn run_drill(cfg: &DrillConfig) -> Result<DrillReport> {
+    ensure!(cfg.dim > 0 && cfg.steps > 0, "drill needs dim > 0 and steps > 0");
+    ensure!(cfg.ckpt_every > 0, "ckpt_every must be positive");
+    ensure!(cfg.lr > 0.0 && cfg.lr < 0.5, "drill lr {} outside (0, 0.5)", cfg.lr);
+    cfg.policy.validate()?;
+    let workers = cfg.topology.workers();
+    let mut fabric = Fabric::with_faults(cfg.topology, cfg.plan.clone())?;
+    let mut sentinel = Sentinel::new(cfg.sentinel.clone());
+    let policy_str = cfg.policy.to_string();
+
+    let target = Rng::new(cfg.seed).normal_vec(cfg.dim, 1.0);
+    let mut x = vec![0.0f32; cfg.dim];
+    let initial_loss = mean_sq_err(&x, &target);
+
+    let save = |step: usize, x: &[f32]| -> Result<()> {
+        let tensors = vec![("x".to_string(), vec![cfg.dim], x.to_vec())];
+        checkpoint::save_tensors(
+            &cfg.ckpt_path,
+            step as u64,
+            Some(&policy_str),
+            cfg.policy.ckpt_spec_at(step).as_ref(),
+            &tensors,
+        )
+        .with_context(|| format!("drill checkpoint at step {step}"))
+    };
+    save(0, &x)?;
+
+    let mut grads: Vec<Vec<f32>> = vec![vec![0.0f32; cfg.dim]; workers];
+    let mut reduced = Vec::new();
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let mut recovery_steps = 0usize;
+    let mut escalated_steps = 0usize;
+
+    for step in 0..cfg.steps {
+        fabric.begin_step(step);
+        let dead: Vec<bool> = (0..workers).map(|w| fabric.faults().is_dead(w)).collect();
+        let poisoned = cfg.plan.nan_workers_at(step);
+        for (w, g) in grads.iter_mut().enumerate() {
+            if poisoned.contains(&w) {
+                g.fill(f32::NAN);
+            } else {
+                for (i, gi) in g.iter_mut().enumerate() {
+                    *gi = 2.0 * (x[i] - target[i]) + noise(cfg.seed, w, step, i, 0.01);
+                }
+            }
+        }
+        // local guard: a NaN producer is visible here, before any
+        // saturating wire codec could mask it (see module docs)
+        let mut absmax = 0.0f32;
+        'scan: for (w, g) in grads.iter().enumerate() {
+            if dead[w] {
+                continue;
+            }
+            for &v in g {
+                if !v.is_finite() {
+                    absmax = f32::NAN;
+                    break 'scan;
+                }
+                absmax = absmax.max(v.abs());
+            }
+        }
+        let loss = mean_sq_err(&x, &target);
+        losses.push(loss);
+        if sentinel.observe(step, loss, absmax, None).tripped() {
+            // roll back to the last good checkpoint: state rewinds, the
+            // step clock does not (step-indexed faults never replay)
+            let ck = checkpoint::load(&cfg.ckpt_path)
+                .with_context(|| format!("rollback at step {step}"))?;
+            checkpoint::validate_policy_compat(&ck, &cfg.policy)?;
+            ensure!(
+                ck.tensors.len() == 1 && ck.tensors[0].2.len() == cfg.dim,
+                "drill checkpoint shape changed underfoot"
+            );
+            x.copy_from_slice(&ck.tensors[0].2);
+            recovery_steps += step - ck.step as usize;
+            sentinel.note_rollback(step)?;
+            continue;
+        }
+        if step > 0 && step % cfg.ckpt_every == 0 {
+            save(step, &x)?;
+        }
+        let (_, mut specs) = cfg.policy.link_resolution_at(step);
+        if sentinel.escalate_specs(step, &mut specs) {
+            escalated_steps += 1;
+        }
+        let src = SliceSource { grads: &grads };
+        fabric.all_reduce_mean(&src, 1, cfg.dim, &specs, &mut reduced)?;
+        for (xi, g) in x.iter_mut().zip(&reduced) {
+            *xi -= cfg.lr * g;
+        }
+    }
+
+    let final_loss = mean_sq_err(&x, &target);
+    ensure!(final_loss.is_finite(), "drill diverged: final loss {final_loss}");
+    Ok(DrillReport {
+        steps: cfg.steps,
+        initial_loss,
+        final_loss,
+        losses,
+        rollbacks: sentinel.rollbacks,
+        recovery_steps,
+        escalated_steps,
+        trips: sentinel.trips.clone(),
+        stats: fabric.stats.clone(),
+        trace: fabric.faults().trace.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(name: &str, topo: &str) -> DrillConfig {
+        let dir = std::env::temp_dir().join("fp4train_drill_tests");
+        DrillConfig::new(
+            Topology::parse(topo).unwrap(),
+            dir.join(format!("{name}.ckpt")),
+        )
+    }
+
+    #[test]
+    fn fault_free_drill_converges() {
+        let report = run_drill(&cfg("clean", "flat:4")).unwrap();
+        assert!(report.trips.is_empty() && report.rollbacks == 0);
+        assert!(report.final_loss < report.initial_loss / 100.0, "{report:?}");
+        assert_eq!(report.losses.len(), 40);
+    }
+
+    #[test]
+    fn nan_gradient_trips_rolls_back_escalates_and_completes() {
+        let mut c = cfg("nan", "flat:4");
+        c.policy = PrecisionPolicy::parse("wire=fp4:e2m1/row").unwrap();
+        c.plan = FaultPlan::parse("nan:w0@5").unwrap();
+        let report = run_drill(&c).unwrap();
+        // detected within the injected step itself
+        assert_eq!(report.trips, vec![(5, TripReason::NonFiniteGrad)]);
+        assert_eq!(report.rollbacks, 1);
+        // last good checkpoint was step 4 -> exactly one step re-done
+        assert_eq!(report.recovery_steps, 1);
+        assert!(report.escalated_steps > 0, "{report:?}");
+        assert!(report.final_loss < report.initial_loss, "{report:?}");
+        assert!(report.losses.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn killed_worker_mid_run_completes_with_survivors() {
+        let mut c = cfg("drop", "ring:6");
+        c.plan = FaultPlan::parse("drop:w2@6").unwrap();
+        let report = run_drill(&c).unwrap();
+        assert!(report.trips.is_empty(), "{report:?}");
+        assert_eq!(report.stats.evicted, 1);
+        assert!(report.trace.contains(&FaultEvent::Evict { worker: 2, step: 6 }));
+        assert!(report.final_loss < report.initial_loss / 100.0, "{report:?}");
+    }
+
+    #[test]
+    fn corrupt_links_retry_and_still_converge() {
+        let mut c = cfg("flip", "hier:2x3");
+        c.policy = PrecisionPolicy::parse("wire=fp8:e4m3").unwrap();
+        c.plan = FaultPlan::parse("flip:any@0.05,seed:3").unwrap();
+        let report = run_drill(&c).unwrap();
+        assert!(report.stats.corruptions > 0, "{report:?}");
+        assert_eq!(report.stats.corruptions, report.stats.retries);
+        assert!(report.stats.retry_bytes > 0);
+        assert!(report.final_loss < report.initial_loss / 100.0, "{report:?}");
+    }
+
+    #[test]
+    fn drill_is_deterministic_in_the_plan_seed() {
+        let mut c = cfg("det_a", "flat:4");
+        c.policy = PrecisionPolicy::parse("wire=fp8:e4m3").unwrap();
+        c.plan = FaultPlan::parse("flip:any@0.02,nan:w1@3,seed:5").unwrap();
+        let a = run_drill(&c).unwrap();
+        let mut c2 = c.clone();
+        c2.ckpt_path = cfg("det_b", "flat:4").ckpt_path;
+        let b = run_drill(&c2).unwrap();
+        assert_eq!(a.losses, b.losses);
+        assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.trips, b.trips);
+        assert_eq!(a.recovery_steps, b.recovery_steps);
+    }
+
+    #[test]
+    fn rollback_budget_exhaustion_fails_loudly() {
+        let mut c = cfg("budget", "flat:2");
+        // a NaN every step can never stabilize
+        c.plan = FaultPlan::parse(
+            "nan:w0@1,nan:w0@2,nan:w0@3,nan:w0@4,nan:w0@5,nan:w0@6,nan:w0@7,nan:w0@8,nan:w0@9",
+        )
+        .unwrap();
+        c.sentinel.max_rollbacks = 3;
+        let err = run_drill(&c).unwrap_err();
+        assert!(err.to_string().contains("cannot stabilize"), "{err}");
+    }
+}

@@ -1,0 +1,717 @@
+//! Resilience layer: deterministic fault injection, self-healing
+//! collective support, and numeric guardrails with checkpoint rollback.
+//!
+//! The paper's central operational risk is that low-bit runs die or
+//! silently diverge: quantization error accumulates until the loss
+//! spikes, a corrupted wire payload is averaged into every replica, or a
+//! single NaN gradient poisons the run. FP8-LM (PAPERS.md) makes the
+//! systems point explicit — production low-bit training only works when
+//! the distributed layer *detects* and *survives* such events. This
+//! module turns that into mechanism, in three pieces:
+//!
+//!  1. **[`FaultPlan`]** — a seeded, deterministic fault schedule with a
+//!     string grammar in the style of the policy/topology grammars
+//!     (parse/`Display` round-trip, canonical fixed point). Comma
+//!     separated terms:
+//!
+//!     | term                      | meaning                                  |
+//!     |---------------------------|------------------------------------------|
+//!     | `drop:w<I>@<STEP>`        | worker `I` dies permanently at `STEP`    |
+//!     | `flip:<link\|any>@<RATE>` | per-transmission corruption probability  |
+//!     | `straggle:<link\|any>@<F>x` | transmissions on the link run `F`x slow |
+//!     | `nan:w<I>@<STEP>`         | worker `I` emits a NaN gradient at `STEP`|
+//!     | `seed:<N>`                | fault stream seed (default 0)            |
+//!
+//!     e.g. `drop:w3@120,flip:inter@0.001,straggle:inter@2x,seed:7`.
+//!     Links are the fabric's [`LinkClass`] names (`intra|inter|up|down`);
+//!     a specific link term overrides an `any` term for that link.
+//!
+//!  2. **[`FaultState`]** — the mutable bookkeeping a
+//!     [`Fabric`](crate::fabric::Fabric) carries: the current step, the
+//!     dead-worker mask, and a global transmission sequence number. Every
+//!     fault draw is a pure splitmix64 hash of `(plan seed, sequence)` —
+//!     no mutable RNG state — so the same plan always yields the same
+//!     [`FaultEvent`] trace (pinned by test and fuzz oracle). Transport
+//!     faults (`drop`/`flip`/`straggle`) are consumed by the fabric:
+//!     CRC-framed hops, bounded retry with exponential backoff, and
+//!     survivor renormalization (see `fabric::collectives`). Compute
+//!     faults (`nan`) are consumed by the training layer (`DpSim`, the
+//!     drill harness), which poisons the named worker's local gradient —
+//!     where a real NaN producer is visible to a local grad-norm check,
+//!     *before* a saturating wire codec could mask it.
+//!
+//!  3. **[`Sentinel`]** (see [`sentinel`]) — the numeric guardrail state
+//!     machine: per-step loss / grad-absmax / clamp-rate checks, rollback
+//!     bookkeeping, and a temporary precision-escalation overlay that
+//!     upgrades low-bit wire links (e.g. FP4 → FP8) for a bounded window
+//!     after a trip, then lets the `PrecisionPolicy` resume untouched.
+//!     The overlay deliberately lives here and not in the policy: the
+//!     policy grammar's canonical parse/`Display` fixed point is
+//!     fuzz-pinned and its schedule phases must stay disjoint.
+//!
+//! [`harness`] wires all three into an engine-free training drill
+//! (quadratic-bowl model over a real `Fabric` with real checkpoint
+//! files) that powers `repro resilience` and the end-to-end recovery
+//! tests. The hand-rolled IEEE [`crc32`] here also backs the v3
+//! checkpoint integrity footer (`coordinator::checkpoint`) — the image
+//! is offline, so no `crc` crate.
+
+pub mod harness;
+pub mod sentinel;
+
+pub use sentinel::{Sentinel, SentinelConfig, TripReason, Verdict};
+
+use std::fmt;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::policy::LinkClass;
+
+/// Maximum transmission attempts per hop (1 initial + retries) before a
+/// corrupt link fails the collective.
+pub const MAX_ATTEMPTS: u32 = 5;
+
+/// Simulated exponential backoff before retry `r` (0-based):
+/// `BACKOFF_BASE_US << r` microseconds, accumulated in
+/// `FabricStats::backoff_us`.
+pub const BACKOFF_BASE_US: u64 = 50;
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE, reflected 0xEDB88320) — hand-rolled, table-driven.
+
+fn crc_table() -> &'static [u32; 256] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// Streaming IEEE CRC-32 — the frame on every fabric hop and the
+/// integrity footer of v3 checkpoints.
+#[derive(Clone, Copy, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    #[inline]
+    pub fn update(&mut self, bytes: &[u8]) {
+        let t = crc_table();
+        for &b in bytes {
+            self.state = t[((self.state ^ b as u32) & 0xFF) as usize] ^ (self.state >> 8);
+        }
+    }
+
+    /// The digest so far, without consuming the stream state.
+    pub fn digest(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+
+    pub fn finish(self) -> u32 {
+        self.digest()
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot CRC-32 of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Fault plan grammar.
+
+/// What a `flip:` or `straggle:` term targets: one link class or all.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultTarget {
+    Link(LinkClass),
+    Any,
+}
+
+impl FaultTarget {
+    fn parse(s: &str) -> Result<Self> {
+        if s == "any" {
+            Ok(FaultTarget::Any)
+        } else {
+            Ok(FaultTarget::Link(LinkClass::from_name(s)?))
+        }
+    }
+}
+
+impl fmt::Display for FaultTarget {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultTarget::Any => f.write_str("any"),
+            FaultTarget::Link(l) => write!(f, "{l}"),
+        }
+    }
+}
+
+/// `drop:w<I>@<STEP>` — permanent worker death.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DropEvent {
+    pub worker: usize,
+    pub step: usize,
+}
+
+/// `flip:<tgt>@<RATE>` — per-transmission bit-flip probability.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlipEvent {
+    pub target: FaultTarget,
+    pub rate: f64,
+}
+
+/// `straggle:<tgt>@<F>x` — the link runs `F`x slower than modeled.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StraggleEvent {
+    pub target: FaultTarget,
+    pub factor: f64,
+}
+
+/// `nan:w<I>@<STEP>` — the worker's local gradient is NaN at `STEP`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NanEvent {
+    pub worker: usize,
+    pub step: usize,
+}
+
+/// A deterministic, seeded fault schedule (grammar in the module docs).
+/// Parse and `Display` round-trip; `Display` is canonical (terms grouped
+/// `drop, flip, straggle, nan, seed`, `seed:0` omitted) and a fixed
+/// point under re-parsing — both fuzz-pinned.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub drops: Vec<DropEvent>,
+    pub flips: Vec<FlipEvent>,
+    pub straggles: Vec<StraggleEvent>,
+    pub nans: Vec<NanEvent>,
+    pub seed: u64,
+}
+
+/// Parse `w<I>@<S>` (shared by `drop:` and `nan:`).
+fn parse_worker_at(rest: &str, whole: &str) -> Result<(usize, usize)> {
+    let (w, at) = rest
+        .split_once('@')
+        .ok_or_else(|| anyhow::anyhow!("bad fault term {whole:?} (expected w<I>@<STEP>)"))?;
+    let id = w
+        .strip_prefix('w')
+        .and_then(|n| n.parse::<usize>().ok())
+        .ok_or_else(|| anyhow::anyhow!("bad worker {w:?} in fault term {whole:?}"))?;
+    let step = at
+        .parse::<usize>()
+        .map_err(|_| anyhow::anyhow!("bad step {at:?} in fault term {whole:?}"))?;
+    Ok((id, step))
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults, bit-identical fabric behavior
+    /// (regression-pinned in `fabric::collectives` tests).
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// True when the plan schedules no fault at all (the seed alone does
+    /// nothing). The fabric treats such a plan as fully inactive.
+    pub fn is_none(&self) -> bool {
+        self.drops.is_empty()
+            && self.flips.is_empty()
+            && self.straggles.is_empty()
+            && self.nans.is_empty()
+    }
+
+    /// Parse the grammar in the module docs. `none` (and the canonical
+    /// `Display` of every valid plan) is accepted; the plan is validated
+    /// before being returned, so parse-accepted implies valid.
+    pub fn parse(s: &str) -> Result<Self> {
+        ensure!(!s.trim().is_empty(), "empty fault plan (use \"none\")");
+        if s == "none" {
+            return Ok(FaultPlan::none());
+        }
+        let mut p = FaultPlan::default();
+        for term in s.split(',') {
+            let (kind, rest) = term
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("bad fault term {term:?} (expected kind:args)"))?;
+            match kind {
+                "drop" => {
+                    let (worker, step) = parse_worker_at(rest, term)?;
+                    p.drops.push(DropEvent { worker, step });
+                }
+                "nan" => {
+                    let (worker, step) = parse_worker_at(rest, term)?;
+                    p.nans.push(NanEvent { worker, step });
+                }
+                "flip" => {
+                    let (tgt, rate) = rest.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("bad fault term {term:?} (expected flip:<link|any>@<RATE>)")
+                    })?;
+                    let rate = rate
+                        .parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("bad rate {rate:?} in fault term {term:?}"))?;
+                    p.flips.push(FlipEvent { target: FaultTarget::parse(tgt)?, rate });
+                }
+                "straggle" => {
+                    let (tgt, factor) = rest.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "bad fault term {term:?} (expected straggle:<link|any>@<F>x)"
+                        )
+                    })?;
+                    let factor = factor
+                        .strip_suffix('x')
+                        .and_then(|f| f.parse::<f64>().ok())
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("bad factor {factor:?} in fault term {term:?}")
+                        })?;
+                    p.straggles.push(StraggleEvent { target: FaultTarget::parse(tgt)?, factor });
+                }
+                "seed" => {
+                    p.seed = rest
+                        .parse::<u64>()
+                        .map_err(|_| anyhow::anyhow!("bad seed {rest:?} in fault plan"))?;
+                }
+                other => bail!(
+                    "unknown fault kind {other:?} (expected drop, flip, straggle, nan or seed)"
+                ),
+            }
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Invariant checks: rates in `(0, 1]`, straggle factors `>= 1` and
+    /// finite, no duplicate targets within a category (a specific link
+    /// term plus an `any` term is fine — the specific one wins).
+    pub fn validate(&self) -> Result<()> {
+        for f in &self.flips {
+            ensure!(
+                f.rate.is_finite() && f.rate > 0.0 && f.rate <= 1.0,
+                "flip rate {} for {} outside (0, 1]",
+                f.rate,
+                f.target
+            );
+        }
+        for s in &self.straggles {
+            ensure!(
+                s.factor.is_finite() && s.factor >= 1.0,
+                "straggle factor {} for {} must be >= 1",
+                s.factor,
+                s.target
+            );
+        }
+        for (i, a) in self.flips.iter().enumerate() {
+            ensure!(
+                !self.flips[..i].iter().any(|b| b.target == a.target),
+                "duplicate flip target {}",
+                a.target
+            );
+        }
+        for (i, a) in self.straggles.iter().enumerate() {
+            ensure!(
+                !self.straggles[..i].iter().any(|b| b.target == a.target),
+                "duplicate straggle target {}",
+                a.target
+            );
+        }
+        for (i, a) in self.drops.iter().enumerate() {
+            ensure!(
+                !self.drops[..i].iter().any(|b| b.worker == a.worker),
+                "duplicate drop for worker w{}",
+                a.worker
+            );
+        }
+        for (i, a) in self.nans.iter().enumerate() {
+            ensure!(
+                !self.nans[..i].iter().any(|b| *b == *a),
+                "duplicate nan event w{}@{}",
+                a.worker,
+                a.step
+            );
+        }
+        Ok(())
+    }
+
+    /// Per-attempt corruption probability on `link`: a specific link term
+    /// overrides `any`; 0 with neither.
+    pub fn flip_rate(&self, link: LinkClass) -> f64 {
+        let mut any = 0.0;
+        for f in &self.flips {
+            match f.target {
+                FaultTarget::Link(l) if l == link => return f.rate,
+                FaultTarget::Any => any = f.rate,
+                FaultTarget::Link(_) => {}
+            }
+        }
+        any
+    }
+
+    /// Slowdown factor on `link` (1.0 = nominal); same precedence as
+    /// [`FaultPlan::flip_rate`].
+    pub fn straggle_factor(&self, link: LinkClass) -> f64 {
+        let mut any = 1.0;
+        for s in &self.straggles {
+            match s.target {
+                FaultTarget::Link(l) if l == link => return s.factor,
+                FaultTarget::Any => any = s.factor,
+                FaultTarget::Link(_) => {}
+            }
+        }
+        any
+    }
+
+    /// Largest worker id any `drop:`/`nan:` term names — validated
+    /// against the topology by `Fabric::with_faults`.
+    pub fn max_worker(&self) -> Option<usize> {
+        self.drops
+            .iter()
+            .map(|d| d.worker)
+            .chain(self.nans.iter().map(|n| n.worker))
+            .max()
+    }
+
+    /// Workers whose local gradient is poisoned to NaN at `step` — the
+    /// training layer applies this to its own gradients *before* the
+    /// reduce (module docs explain why the compute side owns this).
+    pub fn nan_workers_at(&self, step: usize) -> Vec<usize> {
+        self.nans.iter().filter(|n| n.step == step).map(|n| n.worker).collect()
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_none() && self.seed == 0 {
+            return f.write_str("none");
+        }
+        let mut sep = "";
+        let mut put = |f: &mut fmt::Formatter<'_>, args: fmt::Arguments<'_>| -> fmt::Result {
+            f.write_str(sep)?;
+            sep = ",";
+            f.write_fmt(args)
+        };
+        for d in &self.drops {
+            put(f, format_args!("drop:w{}@{}", d.worker, d.step))?;
+        }
+        for fl in &self.flips {
+            put(f, format_args!("flip:{}@{}", fl.target, fl.rate))?;
+        }
+        for s in &self.straggles {
+            put(f, format_args!("straggle:{}@{}x", s.target, s.factor))?;
+        }
+        for n in &self.nans {
+            put(f, format_args!("nan:w{}@{}", n.worker, n.step))?;
+        }
+        if self.seed != 0 {
+            put(f, format_args!("seed:{}", self.seed))?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic fault draws.
+
+/// Stateless splitmix64-style mix (the `SyntheticSource` finalizer):
+/// draws are keyed by `(seed, sequence)`, never by mutable RNG state, so
+/// the fault trace is a pure function of the plan.
+fn mix(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Uniform in `[0, 1)` from 53 high bits of a hash.
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// One observed fault, in occurrence order. Two runs of the same plan
+/// produce identical traces (pinned by test and by the
+/// `fault_plan_parse` fuzz oracle).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Transmission `seq` on `link` was corrupted in flight (detected by
+    /// the CRC frame, then retried).
+    Corrupt { seq: u64, link: LinkClass },
+    /// `worker` was permanently evicted, first observed at `step`.
+    Evict { worker: usize, step: usize },
+    /// `worker`'s local gradient was poisoned to NaN at `step`.
+    Poison { worker: usize, step: usize },
+}
+
+/// Mutable fault bookkeeping a `Fabric` carries: the plan, the fault
+/// clock, the global transmission sequence number, the dead-worker mask,
+/// and the observed [`FaultEvent`] trace.
+#[derive(Clone, Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    step: usize,
+    last_step: Option<usize>,
+    seq: u64,
+    dead: Vec<bool>,
+    pub trace: Vec<FaultEvent>,
+    /// Per-link rates/factors resolved once, indexed by `LinkClass::index`.
+    flip_rate: [f64; 4],
+    straggle: [f64; 4],
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> Self {
+        let flip_rate = LinkClass::ALL.map(|l| plan.flip_rate(l));
+        let straggle = LinkClass::ALL.map(|l| plan.straggle_factor(l));
+        FaultState {
+            plan,
+            step: 0,
+            last_step: None,
+            seq: 0,
+            dead: Vec::new(),
+            trace: Vec::new(),
+            flip_rate,
+            straggle,
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// An inactive state never draws, never kills and never delays — the
+    /// fabric's fault-free fast path.
+    pub fn active(&self) -> bool {
+        !self.plan.is_none()
+    }
+
+    pub fn step(&self) -> usize {
+        self.step
+    }
+
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Advance the fault clock to `step` over `workers` workers: `drop`
+    /// events with `at <= step` take effect (each eviction is recorded
+    /// once, when first observed) and `nan` events firing exactly at
+    /// `step` are recorded. Idempotent per step.
+    pub fn begin_step(&mut self, step: usize, workers: usize) {
+        if self.last_step == Some(step) && self.dead.len() == workers {
+            self.step = step;
+            return;
+        }
+        self.step = step;
+        self.last_step = Some(step);
+        if !self.active() {
+            return;
+        }
+        self.dead.resize(workers, false);
+        for d in &self.plan.drops {
+            if d.step <= step && d.worker < workers && !self.dead[d.worker] {
+                self.dead[d.worker] = true;
+                self.trace.push(FaultEvent::Evict { worker: d.worker, step });
+            }
+        }
+        for n in &self.plan.nans {
+            if n.step == step && n.worker < workers {
+                self.trace.push(FaultEvent::Poison { worker: n.worker, step });
+            }
+        }
+    }
+
+    pub fn is_dead(&self, w: usize) -> bool {
+        self.dead.get(w).copied().unwrap_or(false)
+    }
+
+    pub fn dead_count(&self) -> usize {
+        self.dead.iter().filter(|&&d| d).count()
+    }
+
+    /// Original ids of surviving workers, in worker order.
+    pub fn alive(&self, workers: usize) -> Vec<usize> {
+        (0..workers).filter(|&w| !self.is_dead(w)).collect()
+    }
+
+    pub fn straggle_factor(&self, link: LinkClass) -> f64 {
+        self.straggle[link.index()]
+    }
+
+    /// Draw the fault verdict for one transmission attempt on `link`.
+    /// Consumes one sequence number; `Some((byte_seed, bit_mask))` means
+    /// the payload was corrupted in flight (the caller turns `byte_seed`
+    /// into a byte offset modulo the payload length). Pure in
+    /// `(plan seed, seq)` — retries redraw under fresh sequence numbers,
+    /// so the schedule stays deterministic across them.
+    pub fn draw_corrupt(&mut self, link: LinkClass) -> Option<(u64, u8)> {
+        let seq = self.seq;
+        self.seq += 1;
+        let rate = self.flip_rate[link.index()];
+        if rate <= 0.0 {
+            return None;
+        }
+        let h = mix(self.plan.seed ^ 0x5EED_FA17_0000_0001, seq);
+        if unit(h) >= rate {
+            return None;
+        }
+        self.trace.push(FaultEvent::Corrupt { seq, link });
+        let h2 = mix(h, 0xC0FF_EE00_0000_0001);
+        Some((h2, 1u8 << ((h2 >> 56) & 7)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // the standard IEEE check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // streaming == one-shot
+        let mut c = Crc32::new();
+        c.update(b"1234");
+        c.update(b"56789");
+        assert_eq!(c.finish(), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn crc32_detects_single_bit_flips() {
+        let data = b"the quick brown fox jumps over the lazy dog".to_vec();
+        let want = crc32(&data);
+        for byte in 0..data.len() {
+            for bit in 0..8 {
+                let mut bad = data.clone();
+                bad[byte] ^= 1 << bit;
+                assert_ne!(crc32(&bad), want, "missed flip at {byte}.{bit}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_parse_display_round_trip() {
+        for s in [
+            "none",
+            "drop:w3@120",
+            "flip:inter@0.001",
+            "straggle:inter@2x",
+            "nan:w0@7",
+            "drop:w3@120,flip:inter@0.001,straggle:inter@2x,seed:7",
+            "flip:any@0.05,flip:inter@0.5",
+            "drop:w0@0,drop:w1@10,nan:w2@5,seed:42",
+        ] {
+            let p = FaultPlan::parse(s).unwrap();
+            assert_eq!(p.to_string(), s, "{s}");
+            assert_eq!(FaultPlan::parse(&p.to_string()).unwrap(), p);
+        }
+        // non-canonical inputs canonicalize to a fixed point
+        let p = FaultPlan::parse("seed:5,flip:up@1e-3,straggle:any@2.0x").unwrap();
+        let shown = p.to_string();
+        assert_eq!(shown, "flip:up@0.001,straggle:any@2x,seed:5");
+        assert_eq!(FaultPlan::parse(&shown).unwrap().to_string(), shown);
+    }
+
+    #[test]
+    fn plan_rejects_malformed() {
+        for bad in [
+            "",
+            "drop",
+            "drop:3@1",
+            "drop:w@1",
+            "drop:w1",
+            "drop:w1@",
+            "flip:inter",
+            "flip:inter@0",
+            "flip:inter@1.5",
+            "flip:inter@nan",
+            "flip:bogus@0.1",
+            "straggle:inter@2",
+            "straggle:inter@0.5x",
+            "nan:w1@x",
+            "seed:abc",
+            "explode:w1@2",
+            "drop:w1@2,drop:w1@9",
+            "flip:any@0.1,flip:any@0.2",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn rate_resolution_specific_overrides_any() {
+        let p = FaultPlan::parse("flip:any@0.05,flip:inter@0.5,straggle:up@3x").unwrap();
+        assert_eq!(p.flip_rate(LinkClass::InterNode), 0.5);
+        assert_eq!(p.flip_rate(LinkClass::IntraNode), 0.05);
+        assert_eq!(p.straggle_factor(LinkClass::TreeUp), 3.0);
+        assert_eq!(p.straggle_factor(LinkClass::TreeDown), 1.0);
+    }
+
+    #[test]
+    fn none_plan_is_inactive_and_draw_free() {
+        let mut st = FaultState::new(FaultPlan::none());
+        assert!(!st.active());
+        st.begin_step(0, 8);
+        assert_eq!(st.alive(8), (0..8).collect::<Vec<_>>());
+        assert!(st.trace.is_empty());
+    }
+
+    #[test]
+    fn draws_are_deterministic_in_seed_and_seq() {
+        let plan = FaultPlan::parse("flip:any@0.3,seed:9").unwrap();
+        let mut a = FaultState::new(plan.clone());
+        let mut b = FaultState::new(plan);
+        let mut corrupted = 0;
+        let link = LinkClass::InterNode;
+        for _ in 0..200 {
+            let (da, db) = (a.draw_corrupt(link), b.draw_corrupt(link));
+            assert_eq!(da, db);
+            corrupted += usize::from(da.is_some());
+        }
+        assert_eq!(a.trace, b.trace);
+        // rate 0.3 over 200 draws: some but not all corrupt
+        assert!(corrupted > 20 && corrupted < 120, "corrupted {corrupted}");
+        // a different seed yields a different trace
+        let mut c = FaultState::new(FaultPlan::parse("flip:any@0.3,seed:10").unwrap());
+        for _ in 0..200 {
+            c.draw_corrupt(LinkClass::InterNode);
+        }
+        assert_ne!(a.trace, c.trace);
+    }
+
+    #[test]
+    fn begin_step_evicts_once_and_records_poison() {
+        let plan = FaultPlan::parse("drop:w2@3,nan:w1@4").unwrap();
+        let mut st = FaultState::new(plan);
+        st.begin_step(0, 4);
+        assert!(st.trace.is_empty());
+        assert_eq!(st.alive(4), vec![0, 1, 2, 3]);
+        st.begin_step(3, 4);
+        assert_eq!(st.trace, vec![FaultEvent::Evict { worker: 2, step: 3 }]);
+        // idempotent within a step, sticky across steps
+        st.begin_step(3, 4);
+        assert_eq!(st.trace.len(), 1);
+        st.begin_step(4, 4);
+        assert!(st.is_dead(2));
+        assert_eq!(st.alive(4), vec![0, 1, 3]);
+        assert_eq!(st.trace[1], FaultEvent::Poison { worker: 1, step: 4 });
+        assert_eq!(st.plan().nan_workers_at(4), vec![1]);
+        assert_eq!(st.plan().nan_workers_at(5), Vec::<usize>::new());
+    }
+}

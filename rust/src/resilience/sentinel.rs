@@ -1,0 +1,312 @@
+//! Numeric guardrails with rollback bookkeeping and a temporary
+//! precision-escalation overlay.
+//!
+//! The [`Sentinel`] is a pure state machine: the training layer
+//! (`Trainer`, `DpSim`, the drill harness) feeds it one observation per
+//! step — loss, gradient absmax, and optionally the OCC clamp rate — and
+//! acts on the verdict. A trip means "this step's state transition must
+//! not be trusted": the caller rolls back to its last good checkpoint,
+//! reports the rollback here (which opens the escalation window and
+//! enforces the rollback budget), and continues.
+//!
+//! Trip conditions, checked in order:
+//!
+//!  1. non-finite loss (NaN/Inf),
+//!  2. non-finite gradient absmax — where a NaN-producing worker is
+//!     caught *locally*, before a saturating wire codec could mask it,
+//!  3. gradient absmax above `absmax_limit`,
+//!  4. OCC clamp rate above `clamp_rate_limit` (when observed),
+//!  5. loss above `spike_factor ×` the trailing-window mean (the window
+//!     only accumulates healthy steps, so a spike cannot poison its own
+//!     baseline; the check arms once 4 healthy steps are banked).
+//!
+//! **Escalation overlay.** After a rollback the sentinel upgrades every
+//! wire link whose spec carries fewer bits than `escalation` to the
+//! escalation spec (e.g. FP4 → FP8) for `escalate_steps` steps, then the
+//! `PrecisionPolicy` resumes untouched. The overlay is applied by
+//! consumers to the *resolved* spec array ([`Sentinel::escalate_specs`]
+//! after `PrecisionPolicy::link_resolution_at`) rather than spliced into
+//! the policy's schedule: schedule phases must stay disjoint and the
+//! policy grammar's parse/`Display` fixed point is fuzz-pinned, so a
+//! transient override must never mutate the policy itself.
+
+use std::collections::VecDeque;
+use std::fmt;
+
+use anyhow::{ensure, Result};
+
+use crate::formats::QuantSpec;
+
+/// Guardrail thresholds and escalation shape. The defaults are
+/// deliberately loose — guardrails should fire on genuine instability,
+/// not on ordinary training noise.
+#[derive(Clone, Debug)]
+pub struct SentinelConfig {
+    /// Trailing healthy-loss window backing the spike baseline.
+    pub window: usize,
+    /// Trip when `loss > spike_factor * trailing mean`.
+    pub spike_factor: f32,
+    /// Trip when the gradient absmax exceeds this.
+    pub absmax_limit: f32,
+    /// Trip when the observed OCC clamp rate exceeds this fraction.
+    pub clamp_rate_limit: f32,
+    /// Length of the precision-escalation window after a rollback.
+    pub escalate_steps: usize,
+    /// Wire spec low-bit links are upgraded to during escalation.
+    pub escalation: QuantSpec,
+    /// Hard budget: a run that keeps tripping must fail loudly, not loop.
+    pub max_rollbacks: usize,
+}
+
+impl Default for SentinelConfig {
+    fn default() -> Self {
+        SentinelConfig {
+            window: 16,
+            spike_factor: 3.0,
+            absmax_limit: 1e4,
+            clamp_rate_limit: 0.5,
+            escalate_steps: 32,
+            escalation: QuantSpec::parse("fp8:e4m3").expect("default escalation spec"),
+            max_rollbacks: 8,
+        }
+    }
+}
+
+/// Why a step was rejected.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TripReason {
+    NonFiniteLoss { loss: f32 },
+    NonFiniteGrad,
+    GradAbsmax { absmax: f32, limit: f32 },
+    ClampRate { rate: f32, limit: f32 },
+    LossSpike { loss: f32, baseline: f32 },
+}
+
+impl fmt::Display for TripReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TripReason::NonFiniteLoss { loss } => write!(f, "non-finite loss ({loss})"),
+            TripReason::NonFiniteGrad => write!(f, "non-finite gradient"),
+            TripReason::GradAbsmax { absmax, limit } => {
+                write!(f, "grad absmax {absmax} > limit {limit}")
+            }
+            TripReason::ClampRate { rate, limit } => {
+                write!(f, "clamp rate {rate} > limit {limit}")
+            }
+            TripReason::LossSpike { loss, baseline } => {
+                write!(f, "loss {loss} spiked over baseline {baseline}")
+            }
+        }
+    }
+}
+
+/// One step's judgment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Verdict {
+    Ok,
+    Trip(TripReason),
+}
+
+impl Verdict {
+    pub fn tripped(&self) -> bool {
+        matches!(self, Verdict::Trip(_))
+    }
+}
+
+/// The guardrail state machine (see module docs).
+#[derive(Clone, Debug)]
+pub struct Sentinel {
+    cfg: SentinelConfig,
+    recent: VecDeque<f32>,
+    escalate_until: Option<usize>,
+    /// Completed rollbacks (bounded by `cfg.max_rollbacks`).
+    pub rollbacks: usize,
+    /// Escalation windows opened.
+    pub escalations: usize,
+    /// Every trip, in step order.
+    pub trips: Vec<(usize, TripReason)>,
+}
+
+impl Sentinel {
+    pub fn new(cfg: SentinelConfig) -> Self {
+        Sentinel {
+            cfg,
+            recent: VecDeque::new(),
+            escalate_until: None,
+            rollbacks: 0,
+            escalations: 0,
+            trips: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &SentinelConfig {
+        &self.cfg
+    }
+
+    /// Judge one step. A healthy step extends the trailing baseline; a
+    /// tripped step does not (and is recorded in [`Sentinel::trips`]).
+    pub fn observe(
+        &mut self,
+        step: usize,
+        loss: f32,
+        grad_absmax: f32,
+        clamp_rate: Option<f32>,
+    ) -> Verdict {
+        match self.judge(loss, grad_absmax, clamp_rate) {
+            Some(reason) => {
+                self.trips.push((step, reason));
+                Verdict::Trip(reason)
+            }
+            None => {
+                self.recent.push_back(loss);
+                while self.recent.len() > self.cfg.window.max(1) {
+                    self.recent.pop_front();
+                }
+                Verdict::Ok
+            }
+        }
+    }
+
+    fn judge(&self, loss: f32, absmax: f32, clamp_rate: Option<f32>) -> Option<TripReason> {
+        if !loss.is_finite() {
+            return Some(TripReason::NonFiniteLoss { loss });
+        }
+        if !absmax.is_finite() {
+            return Some(TripReason::NonFiniteGrad);
+        }
+        if absmax > self.cfg.absmax_limit {
+            return Some(TripReason::GradAbsmax { absmax, limit: self.cfg.absmax_limit });
+        }
+        if let Some(rate) = clamp_rate {
+            if rate > self.cfg.clamp_rate_limit {
+                return Some(TripReason::ClampRate { rate, limit: self.cfg.clamp_rate_limit });
+            }
+        }
+        if self.recent.len() >= 4 {
+            let baseline = self.recent.iter().sum::<f32>() / self.recent.len() as f32;
+            if baseline > 0.0 && loss > self.cfg.spike_factor * baseline {
+                return Some(TripReason::LossSpike { loss, baseline });
+            }
+        }
+        None
+    }
+
+    /// Record a completed rollback at `step`: opens (or extends) the
+    /// escalation window and enforces the rollback budget — a run that
+    /// cannot stabilize fails loudly instead of looping.
+    pub fn note_rollback(&mut self, step: usize) -> Result<()> {
+        self.rollbacks += 1;
+        ensure!(
+            self.rollbacks <= self.cfg.max_rollbacks,
+            "sentinel: {} rollbacks exceed the budget of {} — the run cannot stabilize",
+            self.rollbacks,
+            self.cfg.max_rollbacks
+        );
+        self.escalate_until = Some(step + self.cfg.escalate_steps);
+        self.escalations += 1;
+        Ok(())
+    }
+
+    pub fn escalation_active(&self, step: usize) -> bool {
+        self.escalate_until.is_some_and(|until| step < until)
+    }
+
+    /// Apply the temporary schedule override to a resolved per-link spec
+    /// array: while escalation is active, every link carrying fewer bits
+    /// per element than the escalation spec is upgraded to it (never
+    /// downgraded — an f32 wire stays f32). Returns whether any link
+    /// changed.
+    pub fn escalate_specs(&self, step: usize, specs: &mut [QuantSpec; 4]) -> bool {
+        if !self.escalation_active(step) {
+            return false;
+        }
+        let esc = self.cfg.escalation;
+        let mut changed = false;
+        for s in specs.iter_mut() {
+            if s.bits_per_element() < esc.bits_per_element() {
+                *s = esc;
+                changed = true;
+            }
+        }
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sentinel() -> Sentinel {
+        Sentinel::new(SentinelConfig::default())
+    }
+
+    #[test]
+    fn healthy_steps_pass_and_bank_the_baseline() {
+        let mut s = sentinel();
+        for step in 0..10 {
+            assert_eq!(s.observe(step, 1.0, 0.5, Some(0.01)), Verdict::Ok);
+        }
+        assert!(s.trips.is_empty());
+    }
+
+    #[test]
+    fn non_finite_trips_immediately() {
+        let mut s = sentinel();
+        assert!(s.observe(0, f32::NAN, 0.5, None).tripped());
+        assert!(s.observe(1, 1.0, f32::NAN, None).tripped());
+        assert!(s.observe(2, f32::INFINITY, 0.5, None).tripped());
+        assert_eq!(s.trips.len(), 3);
+        assert_eq!(s.trips[1], (1, TripReason::NonFiniteGrad));
+    }
+
+    #[test]
+    fn absmax_and_clamp_limits_trip() {
+        let mut s = sentinel();
+        assert!(s.observe(0, 1.0, 1e5, None).tripped());
+        assert!(s.observe(1, 1.0, 0.5, Some(0.9)).tripped());
+        assert_eq!(s.observe(2, 1.0, 0.5, None), Verdict::Ok);
+    }
+
+    #[test]
+    fn spike_arms_after_four_healthy_steps_and_spares_its_baseline() {
+        let mut s = sentinel();
+        // spikes before the window arms pass through
+        assert_eq!(s.observe(0, 100.0, 0.1, None), Verdict::Ok);
+        let mut st = sentinel();
+        for step in 0..4 {
+            assert_eq!(st.observe(step, 1.0, 0.1, None), Verdict::Ok);
+        }
+        let v = st.observe(4, 10.0, 0.1, None);
+        assert!(matches!(v, Verdict::Trip(TripReason::LossSpike { .. })), "{v:?}");
+        // the tripped loss did not enter the window: a normal step passes
+        assert_eq!(st.observe(5, 1.1, 0.1, None), Verdict::Ok);
+    }
+
+    #[test]
+    fn escalation_upgrades_low_bit_links_only_and_expires() {
+        let mut s = sentinel();
+        s.note_rollback(10).unwrap();
+        assert!(s.escalation_active(10));
+        assert!(s.escalation_active(10 + s.config().escalate_steps - 1));
+        assert!(!s.escalation_active(10 + s.config().escalate_steps));
+        let fp4 = QuantSpec::parse("fp4:e2m1/row").unwrap();
+        let f32s = QuantSpec::parse("f32").unwrap();
+        let fp8 = s.config().escalation;
+        let mut specs = [fp4, f32s, fp4, fp8];
+        assert!(s.escalate_specs(12, &mut specs));
+        assert_eq!(specs, [fp8, f32s, fp8, fp8]);
+        // outside the window the policy's own resolution stands
+        let mut specs2 = [fp4, f32s, fp4, fp8];
+        assert!(!s.escalate_specs(10 + s.config().escalate_steps, &mut specs2));
+        assert_eq!(specs2, [fp4, f32s, fp4, fp8]);
+    }
+
+    #[test]
+    fn rollback_budget_is_enforced() {
+        let mut s = Sentinel::new(SentinelConfig { max_rollbacks: 2, ..Default::default() });
+        s.note_rollback(1).unwrap();
+        s.note_rollback(2).unwrap();
+        let err = s.note_rollback(3).unwrap_err();
+        assert!(err.to_string().contains("cannot stabilize"), "{err}");
+    }
+}

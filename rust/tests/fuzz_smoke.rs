@@ -5,7 +5,8 @@
 //! harness idiom of `tests/property.rs`). Three input regimes per
 //! surface: raw random bytes, grammar-alphabet soup, and byte-level
 //! mutations of known-valid canonical strings (the near-miss region
-//! where parsers actually break).
+//! where parsers actually break). The checkpoint surface swaps soup for
+//! structured near-misses: mutations of real serialized v3 files.
 
 use fp4train::fuzzing;
 use fp4train::util::Rng;
@@ -73,6 +74,15 @@ const VALID_POLICIES: &[&str] = &[
     "wire=fp4:e2m1/row;0..100:wire=fp8:e4m3,wire.inter=fp4:e2m1/row",
 ];
 
+const VALID_FAULT_PLANS: &[&str] = &[
+    "none",
+    "drop:w3@120,flip:inter@0.001,straggle:inter@2x",
+    "flip:any@0.05,drop:w1@30,nan:w0@15,seed:7",
+    "straggle:intra@1.5x,straggle:any@3x,flip:up@1,flip:down@0.000001",
+    "nan:w2@0,nan:w2@1,seed:18446744073709551615",
+    "drop:w0@0",
+];
+
 #[test]
 fn smoke_codec_roundtrip_random_bytes() {
     for seed in 0..400u64 {
@@ -131,6 +141,77 @@ fn smoke_policy_parse_three_regimes() {
             "corpus policy {s:?} must parse"
         );
         fuzzing::check_policy_parse(s.as_bytes());
+    }
+}
+
+#[test]
+fn smoke_fault_plan_parse_three_regimes() {
+    // the grammar alphabet, extended with the fault-plan keywords
+    const FAULT_ALPHABET: &[u8] =
+        b"dropflipstragglenanseedany:w@x.,0159intrainterupdownnone ";
+    let fault_soup = |rng: &mut Rng, max_len: usize| -> Vec<u8> {
+        let n = rng.below(max_len as u64 + 1) as usize;
+        (0..n)
+            .map(|_| FAULT_ALPHABET[rng.below(FAULT_ALPHABET.len() as u64) as usize])
+            .collect()
+    };
+    for seed in 0..600u64 {
+        let mut rng = Rng::new(0xFA11_3000 + seed);
+        fuzzing::check_fault_plan_parse(&random_bytes(&mut rng, 96));
+        fuzzing::check_fault_plan_parse(&fault_soup(&mut rng, 64));
+        let base = VALID_FAULT_PLANS[rng.below(VALID_FAULT_PLANS.len() as u64) as usize];
+        fuzzing::check_fault_plan_parse(&mutate(&mut rng, base));
+    }
+    for s in VALID_FAULT_PLANS {
+        assert!(
+            fp4train::resilience::FaultPlan::parse(s).is_ok(),
+            "corpus plan {s:?} must parse"
+        );
+        fuzzing::check_fault_plan_parse(s.as_bytes());
+    }
+}
+
+#[test]
+fn smoke_checkpoint_parse_three_regimes() {
+    for seed in 0..400u64 {
+        let mut rng = Rng::new(0xFA11_4000 + seed);
+        // regime 1: raw random bytes straight into the reader
+        fuzzing::check_checkpoint_parse(&random_bytes(&mut rng, 256));
+        // regime 2: structured near-misses — a real v3 file, mutated
+        // (the oracle itself writes the file from its input bytes and
+        // checks single-bit corruption; feeding it varied small inputs
+        // sweeps shapes, packing, policy presence and flip offsets)
+        fuzzing::check_checkpoint_parse(&random_bytes(&mut rng, 8));
+    }
+    // regime 3: boundary selector values (packed/raw x policy on/off,
+    // min/max tensor sizes) hit deterministically
+    for b in [[0u8, 0, 0, 0], [16, 3, 255, 255], [7, 1, 42, 0], [3, 2, 0, 99]] {
+        fuzzing::check_checkpoint_parse(&b);
+    }
+}
+
+#[test]
+fn smoke_fault_plan_rejects_known_invalids_without_panic() {
+    // out-of-range rates/factors, duplicates, unknown kinds: must be
+    // *rejected* (not accepted, not panicked on)
+    for s in [
+        "flip:inter@0",
+        "flip:inter@1.5",
+        "flip:inter@nan",
+        "straggle:any@0.5x",
+        "straggle:any@2",
+        "drop:w1@3,drop:w1@9",
+        "flip:any@0.1,flip:any@0.2",
+        "nan:w0@5,nan:w0@5",
+        "explode:w1@3",
+        "drop:x1@3",
+        "",
+    ] {
+        fuzzing::check_fault_plan_parse(s.as_bytes());
+        assert!(
+            fp4train::resilience::FaultPlan::parse(s).is_err(),
+            "must reject {s:?}"
+        );
     }
 }
 

@@ -2,7 +2,7 @@
 //! offline). Each property runs over hundreds of randomized cases; a
 //! failing case prints its seed for replay.
 
-use fp4train::fabric::{flat_reference_mean, Fabric, SliceSource, Topology};
+use fp4train::fabric::{flat_reference_mean, Fabric, FaultPlan, SliceSource, Topology};
 use fp4train::formats::{self, fp16, fp8, Format, Fp4Kind, Granularity, QuantSpec};
 use fp4train::policy::schedule::{Override, Phase, Schedule, StepRange};
 use fp4train::policy::{
@@ -859,6 +859,107 @@ fn prop_fabric_bytes_match_cost_model_for_every_format_granularity() {
                 }
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Survivor renormalization: after `drop:` faults evict k workers, the
+// reduced mean must be bit-identical to a fresh fault-free fabric on the
+// compacted survivor topology — and, for an exact f32 wire with integer
+// gradients, bit-exact to `flat_reference_mean` over the survivors (the
+// 1/(W-k) renormalization contract) — for every topology x wire format.
+// ---------------------------------------------------------------------------
+
+/// Wire formats spanning the exact, 8-bit and 4-bit regimes.
+const WIRE_FORMATS: [&str; 3] = ["f32", "fp8:e4m3", "fp4:e2m1/row"];
+
+/// (full topology, drop plan, compacted survivor topology, survivors).
+/// Flat keeps its per-term `1/W` weighting, so its case leaves a
+/// power-of-two survivor count; the hier case kills node 1 entirely so
+/// the masked path reduces over two full nodes like a fresh 2x4.
+const SURVIVOR_CASES: &[(&str, &str, &str, &[usize])] = &[
+    ("flat:8", "drop:w2@3,drop:w5@3,drop:w6@3,drop:w7@3", "flat:4", &[0, 1, 3, 4]),
+    ("ring:7", "drop:w2@3", "ring:6", &[0, 1, 3, 4, 5, 6]),
+    ("tree:9@2", "drop:w2@3", "tree:8@2", &[0, 1, 3, 4, 5, 6, 7, 8]),
+    (
+        "hier:3x4",
+        "drop:w4@3,drop:w5@3,drop:w6@3,drop:w7@3",
+        "hier:2x4",
+        &[0, 1, 2, 3, 8, 9, 10, 11],
+    ),
+];
+
+#[test]
+fn prop_survivor_mean_bit_identical_to_compacted_fault_free_fabric() {
+    for seed in cases(30) {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.below(97) as usize; // includes n < alive (empty shards)
+        for &(full, plan_s, compact, alive) in SURVIVOR_CASES {
+            let full_t = Topology::parse(full).unwrap();
+            let compact_t = Topology::parse(compact).unwrap();
+            let grads = random_int_grads(&mut rng, full_t.workers(), n);
+            let alive_grads: Vec<Vec<f32>> = alive.iter().map(|&w| grads[w].clone()).collect();
+            for fmt in WIRE_FORMATS {
+                let specs = [QuantSpec::parse(fmt).unwrap(); 4];
+                let plan = FaultPlan::parse(plan_s).unwrap();
+                let mut fabric = Fabric::with_faults(full_t, plan).unwrap();
+                fabric.begin_step(3); // the drop step: evictions land here
+                let src = SliceSource { grads: &grads };
+                let mut got = Vec::new();
+                fabric.all_reduce_mean(&src, 1, n, &specs, &mut got).unwrap();
+                let killed = (full_t.workers() - alive.len()) as u64;
+                assert_eq!(fabric.stats.evicted, killed, "seed {seed} {full} {fmt}");
+                // oracle: a fault-free fabric on the compacted topology fed
+                // only the survivors' gradients, in original worker order
+                let mut oracle = Fabric::new(compact_t).unwrap();
+                let csrc = SliceSource { grads: &alive_grads };
+                let mut want = Vec::new();
+                oracle.all_reduce_mean(&csrc, 1, n, &specs, &mut want).unwrap();
+                assert_eq!(
+                    bits_of(&got),
+                    bits_of(&want),
+                    "seed {seed} {full} -> {compact} {fmt} n={n}"
+                );
+                // exact wire: also bit-exact to the flat f32 reference over
+                // the survivors (integer grads sum exactly in any order)
+                if fmt == "f32" {
+                    let mut reference = Vec::new();
+                    flat_reference_mean(&csrc, &mut reference);
+                    assert_eq!(
+                        bits_of(&got),
+                        bits_of(&reference),
+                        "seed {seed} {full} f32 vs flat reference n={n}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_hier_partial_node_survivors_match_flat_reference_f32() {
+    // one member of one node dies: the masked hier path reduces uneven
+    // groups (4 and 3 members) and must still renormalize bit-exactly —
+    // integer gradients make every partial sum exact, so any summation
+    // association agrees with the flat reference
+    for seed in cases(40) {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.below(97) as usize;
+        let grads = random_int_grads(&mut rng, 8, n);
+        let plan = FaultPlan::parse("drop:w5@2").unwrap();
+        let mut fabric =
+            Fabric::with_faults(Topology::Hier { nodes: 2, per_node: 4 }, plan).unwrap();
+        fabric.begin_step(2);
+        let f32s = [QuantSpec::parse("f32").unwrap(); 4];
+        let src = SliceSource { grads: &grads };
+        let mut got = Vec::new();
+        fabric.all_reduce_mean(&src, 1, n, &f32s, &mut got).unwrap();
+        assert_eq!(fabric.stats.evicted, 1, "seed {seed}");
+        let alive_grads: Vec<Vec<f32>> =
+            [0usize, 1, 2, 3, 4, 6, 7].iter().map(|&w| grads[w].clone()).collect();
+        let mut want = Vec::new();
+        flat_reference_mean(&SliceSource { grads: &alive_grads }, &mut want);
+        assert_eq!(bits_of(&got), bits_of(&want), "seed {seed} n={n}");
     }
 }
 
