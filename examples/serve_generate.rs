@@ -3,26 +3,50 @@
 //! Rust — the artifact returns last-position logits).
 //!
 //! ```bash
-//! cargo run --release --example serve_generate -- [ckpt] [prompt-len] [gen-len]
+//! cargo run --release --example serve_generate -- [ckpt] [-o policy=fp4]
+//!     [-o gen=96]
 //! ```
-//! Without a checkpoint argument it trains nano/fp4 briefly first so the
+//!
+//! `-o policy=<arm>` picks the lowered manifest arm (`fp4`, `bf16`,
+//! `w4a8_dge_k5`, ...) instead of the old hardcoded "fp4" string, and the
+//! arm is resolved through [`fp4train::policy::arms::for_manifest_arm`]
+//! so the canonical [`PrecisionPolicy`] it corresponds to is printed —
+//! the serve path speaks the same policy grammar as everything else.
+//! For the full serving engine (continuous batching, quantized KV cache,
+//! rate limiting) see `fp4train serve` and [`fp4train::serve`].
+//!
+//! Without a checkpoint argument it trains the arm briefly first so the
 //! sample shows learned statistics rather than uniform noise.
+//!
+//! [`PrecisionPolicy`]: fp4train::policy::PrecisionPolicy
 
 use std::sync::Arc;
 
+use fp4train::cli::Args;
 use fp4train::coordinator::{checkpoint, Trainer};
 use fp4train::data::corpus::{Corpus, CorpusKind};
 use fp4train::data::loader::{BatchLoader, LoaderConfig};
+use fp4train::policy::arms::for_manifest_arm;
 use fp4train::runtime::Engine;
 use fp4train::util::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let ckpt = args.first().cloned();
-    let gen_len: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(96);
+    // Args::parse treats the first item as the command name, so feed it
+    // a synthetic one ahead of the real example arguments.
+    let args = Args::parse(
+        std::iter::once("serve_generate".to_string()).chain(std::env::args().skip(1)),
+    )?;
+    let ckpt = args.positional.first().cloned();
+    let arm = args.get("policy").unwrap_or("fp4").to_string();
+    let gen_len = args.get_usize("gen", 96)?;
+
+    match for_manifest_arm(&arm) {
+        Some(p) => println!("manifest arm {arm:?} resolves to precision policy: {p}"),
+        None => println!("manifest arm {arm:?} has no policy-level description"),
+    }
 
     let engine = Arc::new(Engine::load("artifacts")?);
-    let mut trainer = Trainer::new(engine.clone(), "nano", "fp4", 0)?;
+    let mut trainer = Trainer::new(engine.clone(), "nano", &arm, 0)?;
     let corpus = Corpus::generate(CorpusKind::Code, 1234, 2_000_000, 64 * 1024);
 
     match ckpt {
@@ -33,7 +57,7 @@ fn main() -> anyhow::Result<()> {
             println!("restored {path} (step {})", ck.step);
         }
         None => {
-            println!("no checkpoint given; training nano/fp4 for 128 steps on `code`...");
+            println!("no checkpoint given; training nano/{arm} for 128 steps on `code`...");
             let model = trainer.entry.model.clone();
             let loader = BatchLoader::new(
                 &corpus,

@@ -1,0 +1,13 @@
+//! Fuzz the serve `Workload` grammar: parse must never panic, accepted
+//! workloads must satisfy `validate()`, round-trip through `Display`,
+//! and materialize identical request traces from equal values — the
+//! determinism contract of the serving scheduler. See
+//! `fp4train::fuzzing`.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    fp4train::fuzzing::check_workload_parse(data);
+});

@@ -18,6 +18,7 @@ use crate::data::corpus::CorpusKind;
 use crate::formats::QuantSpec;
 use crate::policy::{ClassSpec, PrecisionPolicy, TensorClass};
 use crate::resilience::FaultPlan;
+use crate::serve::Workload;
 
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -46,6 +47,10 @@ pub struct RunConfig {
     /// Arm the numeric sentinel on the dp sim (`-o sentinel=true`):
     /// loss/grad guardrails, snapshot rollback, precision escalation.
     pub sentinel: bool,
+    /// Synthetic serving workload for the `serve` command
+    /// (`-o workload=arrive:poisson@8/s,prompt:32..256,gen:64..512,seed:7`;
+    /// see [`crate::serve::workload`] for the grammar).
+    pub workload: Workload,
 }
 
 impl Default for RunConfig {
@@ -64,6 +69,7 @@ impl Default for RunConfig {
             precision: PrecisionPolicy::default(),
             fault_plan: FaultPlan::none(),
             sentinel: false,
+            workload: Workload::default(),
         }
     }
 }
@@ -91,6 +97,7 @@ impl RunConfig {
             "comm" => self.set_class(TensorClass::Wire, value)?,
             "ckpt_format" => self.set_class(TensorClass::Checkpoint, value)?,
             "faults" => self.fault_plan = FaultPlan::parse(value)?,
+            "workload" => self.workload = Workload::parse(value)?,
             "sentinel" => {
                 self.sentinel = match value {
                     "true" | "1" | "on" => true,
@@ -210,5 +217,17 @@ mod tests {
         // `faults=none` is the explicit fault-free plan
         c.set("faults", "none").unwrap();
         assert!(c.fault_plan.is_none());
+    }
+
+    #[test]
+    fn workload_key_parses_through_the_serve_grammar() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.workload, Workload::default());
+        c.set("workload", "arrive:uniform@4/s,prompt:8..16,gen:8..16,n:5").unwrap();
+        assert_eq!(c.workload.n, 5);
+        assert_eq!(c.workload.rate, 4.0);
+        // malformed workloads are hard errors, not silent defaults
+        assert!(c.set("workload", "arrive:poisson@0/s,prompt:8..16,gen:8..16").is_err());
+        assert!(c.set("workload", "prompt:8..16").is_err());
     }
 }

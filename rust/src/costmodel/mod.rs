@@ -15,7 +15,7 @@
 
 use crate::fabric::Topology;
 use crate::formats::QuantSpec;
-use crate::policy::{LinkClass, PrecisionPolicy};
+use crate::policy::{LinkClass, PrecisionPolicy, TensorClass};
 use crate::resilience::{FaultPlan, MAX_ATTEMPTS};
 
 /// One row of Table 5.
@@ -106,12 +106,11 @@ pub fn occ_overhead_share(h: f64, s: f64, alpha: f64) -> f64 {
 /// Wire cost of one transmission of a `(1, cols)` payload under `spec`:
 /// bit-packed codes plus 4 bytes per f32 scale — except raw f32, which
 /// travels scale-free (`4*cols`), mirroring the fabric's transmit path.
+/// Wire specs are clamp-free by policy validation, so this is exactly
+/// [`QuantSpec::stored_bytes`] (one shared byte model for wire and KV
+/// storage).
 fn transmission_bytes(spec: &QuantSpec, cols: usize) -> u64 {
-    if spec.is_raw() {
-        4 * cols as u64
-    } else {
-        spec.wire_bytes(1, cols)
-    }
+    spec.stored_bytes(1, cols)
 }
 
 /// Exact per-link-class wire bytes one fabric mean all-reduce of a single
@@ -239,6 +238,55 @@ pub fn step_time_us(sends: &[u64; 4], bytes: &[u64; 4], params: &[LinkParams; 4]
                 + bytes[i] as f64 / (params[i].gbps * 1e3)
         })
         .sum()
+}
+
+// ---------------------------------------------------------------------------
+// Serving-side model: KV-cache bytes + decode step time
+
+/// Exact KV-cache bytes one token appends under `policy`'s `kv` class:
+/// a K row and a V row of `dim` elements per layer, each stored at
+/// [`QuantSpec::stored_bytes`]`(1, dim)` (bit-packed codes + 4 bytes per
+/// scale; raw f32 rows are scale-free). Mirrors
+/// [`crate::serve::kvcache::RequestKv`] row for row, so `repro serve`
+/// hard-asserts simulated packed bytes == `tokens * kv_bytes_per_token`
+/// for every arm. The OCC residual side channel of clamped specs is
+/// data-dependent and accounted separately (`RequestKv::residual_bytes`),
+/// like the fabric's retry bytes.
+pub fn kv_bytes_per_token(policy: &PrecisionPolicy, layers: usize, dim: usize) -> u64 {
+    let spec = policy.class(TensorClass::KvCache).spec;
+    2 * layers as u64 * spec.stored_bytes(1, dim)
+}
+
+/// Alpha-beta parameters of the decode loop: per-step launch overhead,
+/// per-active-request compute, and the cache-read bandwidth every
+/// resident KV byte streams through each step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KvParams {
+    pub alpha_us: f64,
+    /// Per-request compute cost of one decoded token, microseconds.
+    pub compute_us_per_token: f64,
+    /// Sustained cache-read gigabytes per second.
+    pub gbps: f64,
+}
+
+impl KvParams {
+    /// HBM-class defaults for the simulated accelerator.
+    pub const DEFAULT: KvParams =
+        KvParams { alpha_us: 50.0, compute_us_per_token: 1.0, gbps: 800.0 };
+}
+
+/// One continuous-batching decode step, microseconds: fixed launch
+/// overhead + per-active-request compute + every resident KV byte
+/// streamed at cache-read bandwidth. Quantized caches hold fewer resident
+/// bytes, so FP8/FP4 `kv` arms take measurably faster steps — the
+/// serving-side analogue of the wire-compression speedup, and the clock
+/// the [`crate::serve`] scheduler advances by. Deliberately serialized
+/// (no overlap), like [`step_time_us`]: its value is ranking policy arms,
+/// and its byte input is exact.
+pub fn decode_step_time_us(batch: usize, resident_kv_bytes: u64, params: &KvParams) -> f64 {
+    params.alpha_us
+        + batch as f64 * params.compute_us_per_token
+        + resident_kv_bytes as f64 / (params.gbps * 1e3)
 }
 
 // ---------------------------------------------------------------------------
@@ -470,5 +518,42 @@ mod tests {
         let all = expected_retry_bytes(&p, n, topo, 0, &any);
         assert!(all[LinkClass::IntraNode.index()] > 0.0);
         assert!(all[LinkClass::InterNode.index()] > 0.0);
+    }
+
+    // -- serving-side model --
+
+    #[test]
+    fn kv_bytes_per_token_follows_the_kv_class() {
+        let (layers, dim) = (2, 32);
+        // raw f32 cache: K + V rows per layer at 4*dim bytes, scale-free
+        let f32p = PrecisionPolicy::parse("kv=f32").unwrap();
+        assert_eq!(kv_bytes_per_token(&f32p, layers, dim), 2 * 2 * 4 * 32);
+        // fp8 row-wise: dim code bytes + one 4-byte scale per row
+        let fp8 = PrecisionPolicy::parse("kv=fp8:e4m3/row").unwrap();
+        assert_eq!(kv_bytes_per_token(&fp8, layers, dim), 2 * 2 * (32 + 4));
+        // fp4 row-wise: dim/2 code bytes + one scale; the clamp adds no
+        // packed bytes (the residual is a separate side channel)
+        let fp4 = PrecisionPolicy::parse("kv=fp4:e2m1/row/clamp@0.999+comp").unwrap();
+        assert_eq!(kv_bytes_per_token(&fp4, layers, dim), 2 * 2 * (16 + 4));
+        assert!(
+            kv_bytes_per_token(&fp4, layers, dim) < kv_bytes_per_token(&fp8, layers, dim)
+        );
+    }
+
+    #[test]
+    fn decode_step_time_rewards_quantized_caches() {
+        let p = KvParams::DEFAULT;
+        // empty batch: pure launch overhead
+        assert_eq!(decode_step_time_us(0, 0, &p), p.alpha_us);
+        // monotone in resident bytes and in batch size
+        assert!(decode_step_time_us(8, 1 << 20, &p) > decode_step_time_us(8, 1 << 18, &p));
+        assert!(decode_step_time_us(16, 1 << 20, &p) > decode_step_time_us(8, 1 << 20, &p));
+        // the same resident tokens cost less wall clock under an fp4 cache
+        let f32b = kv_bytes_per_token(&PrecisionPolicy::parse("kv=f32").unwrap(), 2, 4096);
+        let fp4b =
+            kv_bytes_per_token(&PrecisionPolicy::parse("kv=fp4:e2m1/row").unwrap(), 2, 4096);
+        assert!(
+            decode_step_time_us(8, fp4b * 1000, &p) < decode_step_time_us(8, f32b * 1000, &p)
+        );
     }
 }

@@ -10,6 +10,7 @@ pub mod fabric;
 pub mod figs;
 pub mod perf;
 pub mod resilience;
+pub mod serve;
 pub mod tabs;
 
 use std::collections::HashMap;
@@ -191,6 +192,7 @@ pub fn run(id: &str, ctx: &mut Ctx, quick: bool) -> Result<()> {
             if quick { &[0.0, 0.02] } else { &[0.0, 0.01, 0.05] },
             &ctx.results,
         ),
+        "serve" => serve::run_sweep(quick, &ctx.results),
         "all" => {
             for id in [
                 "tab4", "tab5", "fig3", "fig1", "fig6a", "fig6b", "fig6c", "fig6d",
@@ -203,7 +205,7 @@ pub fn run(id: &str, ctx: &mut Ctx, quick: bool) -> Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment {other:?}; ids: fig1 fig3 fig4 fig5 fig6a-d \
-             tab1-5 fig7 dists perf fabric resilience all"
+             tab1-5 fig7 dists perf fabric resilience serve all"
         ),
     }
 }

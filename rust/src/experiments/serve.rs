@@ -1,0 +1,225 @@
+//! `repro serve` — load-test sweep of the serving subsystem
+//! ([`crate::serve`]): policy arm × batch size × arrival rate.
+//!
+//! For every arm configuration this driver runs one deterministic
+//! continuous-batching simulation ([`run_serve`]) over a seeded Poisson
+//! workload, then:
+//!
+//!  * hard-asserts the simulated packed KV bytes of every arm against
+//!    `kv_tokens * `[`costmodel::kv_bytes_per_token`] — *exactly*,
+//!    erroring on any mismatch (the same acceptance-gate pattern as the
+//!    `repro fabric` byte gate);
+//!  * checks that every request completed (the sweep's budgets are
+//!    sized to exercise queueing, not starvation) and that the raw-f32
+//!    arm's logit RMSE is exactly `0.0`;
+//!  * reports p50/p99 latency, generated tokens/sec, peak resident KV
+//!    bytes, OCC-residual bytes, and per-arm logit RMSE vs the f32
+//!    reference cache.
+//!
+//! Swept arms: `f32` (raw cache), `fp8` (`kv=fp8:e4m3/row`), `fp4-occ`
+//! (`kv=fp4:e2m1/row/clamp@0.999+comp`) each served alone, plus a
+//! `mixed` configuration serving all three round-robin in one engine —
+//! × arrival rates 4/16 req/s (8/32 under `--quick`) × max batch 4/16
+//! (4 under `--quick`).
+//!
+//! Outputs the summary table on stdout and
+//! `results/perf/BENCH_serve.json` (same line-oriented dialect as
+//! `BENCH_fabric.json`; the simulation is deterministic, so any drift
+//! is a real behavior change). Knobs: `-o results=<dir>`, `--quick`.
+//!
+//! Engine-free: needs no AOT artifacts, so CI runs it as-is
+//! (the `serve-smoke` job).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Result};
+
+use crate::cli::Args;
+use crate::costmodel::{self, KvParams};
+use crate::policy::PrecisionPolicy;
+use crate::report::{f2, Table};
+use crate::serve::{
+    run_serve, Arrival, BucketConfig, LenRange, ModelConfig, ServeArm, ServeConfig, Workload,
+};
+
+/// The swept KV-cache policy arms: name -> policy string.
+const ARMS: &[(&str, &str)] = &[
+    ("f32", "kv=f32"),
+    ("fp8", "kv=fp8:e4m3/row"),
+    ("fp4-occ", "kv=fp4:e2m1/row/clamp@0.999+comp"),
+];
+
+/// CLI entry point (see `cmd_repro`): parses knobs and runs the sweep.
+pub fn serve_cmd(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let results = PathBuf::from(args.get("results").unwrap_or("results"));
+    run_sweep(quick, &results)
+}
+
+fn arm(name: &str, policy: &str) -> Result<ServeArm> {
+    Ok(ServeArm { name: name.into(), policy: PrecisionPolicy::parse(policy)? })
+}
+
+pub fn run_sweep(quick: bool, results: &Path) -> Result<()> {
+    let rates: &[usize] = if quick { &[8, 32] } else { &[4, 16] };
+    let batches: &[usize] = if quick { &[4] } else { &[4, 16] };
+    let (prompt, gen, n) = if quick {
+        (LenRange { lo: 8, hi: 32 }, LenRange { lo: 8, hi: 32 }, 12)
+    } else {
+        (LenRange { lo: 32, hi: 128 }, LenRange { lo: 64, hi: 256 }, 32)
+    };
+    let model = if quick {
+        ModelConfig { dim: 16, ..ModelConfig::default() }
+    } else {
+        ModelConfig::default()
+    };
+
+    // each arm alone, plus all three round-robin in one engine
+    let mut arm_sets: Vec<(String, Vec<ServeArm>)> = Vec::new();
+    for (name, pol) in ARMS {
+        arm_sets.push((name.to_string(), vec![arm(name, pol)?]));
+    }
+    arm_sets.push((
+        "mixed".to_string(),
+        ARMS.iter().map(|(name, pol)| arm(name, pol)).collect::<Result<_>>()?,
+    ));
+
+    let mut t = Table::new(&[
+        "arm", "req/s", "batch", "done", "rej", "p50 ms", "p99 ms", "tok/s", "peak KB",
+        "resid B", "rmse",
+    ]);
+    let mut json_rows: Vec<(String, f64)> = Vec::new();
+    let mut runs = 0usize;
+
+    for &rate in rates {
+        for &batch in batches {
+            for (set_name, arms) in &arm_sets {
+                let cfg = ServeConfig {
+                    workload: Workload {
+                        arrival: Arrival::Poisson,
+                        rate: rate as f64,
+                        prompt,
+                        gen,
+                        n,
+                        seed: 7,
+                    },
+                    arms: arms.clone(),
+                    max_batch: batch,
+                    kv_budget_bytes: 64 << 20,
+                    bucket: BucketConfig { capacity: 4096.0, refill_per_s: 8192.0 },
+                    model,
+                    kv_params: KvParams::DEFAULT,
+                };
+                let report = run_serve(&cfg)?;
+
+                // acceptance gate: simulated packed KV bytes must match
+                // the analytical model exactly, for every arm
+                for (i, a) in cfg.arms.iter().enumerate() {
+                    let per_token = costmodel::kv_bytes_per_token(
+                        &a.policy,
+                        cfg.model.layers,
+                        cfg.model.dim,
+                    );
+                    ensure!(
+                        report.packed_bytes_by_arm[i]
+                            == report.kv_tokens_by_arm[i] * per_token,
+                        "cost-model KV byte mismatch for {set_name}/{}: simulated {} \
+                         vs {} tokens x {per_token} B/token",
+                        a.name,
+                        report.packed_bytes_by_arm[i],
+                        report.kv_tokens_by_arm[i],
+                    );
+                }
+                ensure!(
+                    report.completed == n && report.rejected == 0,
+                    "sweep budgets should complete all {n} requests, got {} + {} rejects",
+                    report.completed,
+                    report.rejected
+                );
+                for (i, a) in cfg.arms.iter().enumerate() {
+                    if a.policy.kv_spec_at(0).is_raw() {
+                        ensure!(
+                            report.rmse_by_arm[i] == 0.0,
+                            "raw-f32 cache arm {set_name}/{} must be exact, rmse {}",
+                            a.name,
+                            report.rmse_by_arm[i]
+                        );
+                    }
+                }
+
+                let rmse =
+                    report.rmse_by_arm.iter().cloned().fold(0.0f64, f64::max);
+                let resid: u64 = report.residual_bytes_by_arm.iter().sum();
+                t.row(&[
+                    set_name.clone(),
+                    rate.to_string(),
+                    batch.to_string(),
+                    report.completed.to_string(),
+                    report.rejected.to_string(),
+                    f2(report.p50_latency_us as f64 / 1e3),
+                    f2(report.p99_latency_us as f64 / 1e3),
+                    f2(report.tokens_per_s),
+                    f2(report.peak_kv_bytes as f64 / 1e3),
+                    resid.to_string(),
+                    format!("{rmse:.1e}"),
+                ]);
+                let key = |metric: &str| format!("{set_name} r{rate} b{batch} {metric}");
+                json_rows.push((key("p50_us"), report.p50_latency_us as f64));
+                json_rows.push((key("p99_us"), report.p99_latency_us as f64));
+                json_rows.push((key("tok_s"), report.tokens_per_s));
+                json_rows.push((key("peak_kv_b"), report.peak_kv_bytes as f64));
+                json_rows.push((key("rmse"), rmse));
+                runs += 1;
+            }
+        }
+    }
+
+    println!("{}", t.render());
+    println!(
+        "all {runs} runs passed the costmodel KV byte gate \
+         (packed bytes == tokens x kv_bytes_per_token, every arm)"
+    );
+    let json_path = results.join("perf").join("BENCH_serve.json");
+    write_bench_json(&json_path, n, &json_rows)?;
+    println!("wrote {}", json_path.display());
+    Ok(())
+}
+
+/// Same hand-built dialect as `BENCH_fabric.json` (no serde offline):
+/// names are plain ASCII, so `{:?}` escaping yields valid JSON strings.
+fn write_bench_json(path: &Path, n_requests: usize, rows: &[(String, f64)]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut s = String::from("{\n  \"bench\": \"serve\",\n");
+    s.push_str(&format!("  \"n_requests\": {n_requests},\n"));
+    s.push_str("  \"unit\": \"us, tokens/s, bytes or rmse\",\n");
+    s.push_str("  \"provenance\": \"computed\",\n");
+    s.push_str("  \"arms\": {\n");
+    for (i, (name, v)) in rows.iter().enumerate() {
+        let sep = if i + 1 == rows.len() { "" } else { "," };
+        s.push_str(&format!("    {:?}: {:.6}{}\n", name, v, sep));
+    }
+    s.push_str("  }\n}\n");
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_passes_gates_and_writes_json() {
+        // any KV-byte gate or completeness divergence fails inside
+        // run_sweep
+        let dir = std::env::temp_dir().join("fp4train_serve_sweep_test");
+        run_sweep(true, &dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("perf/BENCH_serve.json")).unwrap();
+        assert!(text.contains("\"bench\": \"serve\""));
+        assert!(text.contains("f32 r8 b4 p50_us"));
+        assert!(text.contains("fp4-occ r32 b4 rmse"));
+        assert!(text.contains("mixed r8 b4 tok_s"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -333,6 +333,22 @@ impl QuantSpec {
         payload + 4 * self.n_scales(rows, cols) as u64
     }
 
+    /// Exact *storage* cost of holding a (rows × cols) tensor under this
+    /// spec: raw f32 rows live as plain `Vec<f32>` (4 bytes per element,
+    /// scale-free — identity scales are never materialized), everything
+    /// else as [`QuantSpec::wire_bytes`] (bit-packed codes + 4 bytes per
+    /// scale). Shared by the costmodel's transmission accounting and the
+    /// serve KV cache, so model and simulation agree byte-for-byte. A
+    /// clamp does not change the packed footprint: the ΔY residual is a
+    /// separate, data-dependent side channel.
+    pub fn stored_bytes(&self, rows: usize, cols: usize) -> u64 {
+        if self.format == Format::F32 {
+            4 * (rows * cols) as u64
+        } else {
+            self.wire_bytes(rows, cols)
+        }
+    }
+
     /// Simulation-grade quantize-dequantize of the full recipe:
     /// clamp (if any) → absmax-scale per group → round through the codec
     /// → unscale → compensate (if requested).
@@ -349,47 +365,12 @@ impl QuantSpec {
             None => (self.qdq_unclamped(xs, rows, cols), 0.0),
             Some(_) if xs.is_empty() => (Vec::new(), 0.0),
             Some(c) => {
-                // The clamp path sorts (quantile) and re-adds ΔY, so
-                // non-finite inputs must be sanitized before clamping:
-                // NaN -> 0, ±Inf -> the tensor's finite extremes (they then
-                // clamp like any other outlier). Without this, a NaN panics
-                // the quantile sort and an Inf residual survives `+comp`.
-                let sanitized: Vec<f32>;
-                let src: &[f32] = if xs.iter().all(|x| x.is_finite()) {
-                    xs
-                } else {
-                    let mut lo = f32::INFINITY;
-                    let mut hi = f32::NEG_INFINITY;
-                    for &x in xs.iter().filter(|x| x.is_finite()) {
-                        lo = lo.min(x);
-                        hi = hi.max(x);
-                    }
-                    if !lo.is_finite() || !hi.is_finite() {
-                        lo = 0.0; // no finite values at all
-                        hi = 0.0;
-                    }
-                    sanitized = xs
-                        .iter()
-                        .map(|&x| {
-                            if x.is_nan() {
-                                0.0
-                            } else if x == f32::INFINITY {
-                                hi
-                            } else if x == f32::NEG_INFINITY {
-                                lo
-                            } else {
-                                x
-                            }
-                        })
-                        .collect();
-                    &sanitized
-                };
-                // fused O(n) clamp: bounds from one selection pass, then
-                // clamp+delta+nnz in a single loop (quant::occ)
-                let mut clamped = Vec::new();
-                let mut delta = Vec::new();
-                let nnz =
-                    crate::quant::occ::clamp_tensor_into(src, c.alpha, &mut clamped, &mut delta);
+                // sanitize + fused O(n) clamp, shared with the serve KV
+                // cache through `clamp_parts` so both reconstruct bit-
+                // identically
+                let (clamped, delta) =
+                    self.clamp_parts(xs).expect("clamp checked above");
+                let nnz = delta.iter().filter(|&&d| d != 0.0).count();
                 let mut q = self.qdq_unclamped(&clamped, rows, cols);
                 if c.compensate {
                     for (qi, di) in q.iter_mut().zip(&delta) {
@@ -399,6 +380,56 @@ impl QuantSpec {
                 (q, nnz as f64 / xs.len() as f64)
             }
         }
+    }
+
+    /// The sanitize-and-clamp decomposition of the OCC qdq path, exposed
+    /// so storage layers (the serve KV cache) run `apply`'s exact code:
+    /// `Some((clamped, delta))` with `sanitize(xs) == clamped + delta`
+    /// elementwise, or `None` when the spec carries no clamp. Non-finite
+    /// inputs are sanitized first — NaN → 0, ±Inf → the tensor's finite
+    /// extremes (they then clamp like any other outlier); without this, a
+    /// NaN panics the quantile sort and an Inf residual survives `+comp`.
+    pub fn clamp_parts(&self, xs: &[f32]) -> Option<(Vec<f32>, Vec<f32>)> {
+        let c = self.clamp?;
+        if xs.is_empty() {
+            return Some((Vec::new(), Vec::new()));
+        }
+        let sanitized: Vec<f32>;
+        let src: &[f32] = if xs.iter().all(|x| x.is_finite()) {
+            xs
+        } else {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &x in xs.iter().filter(|x| x.is_finite()) {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            if !lo.is_finite() || !hi.is_finite() {
+                lo = 0.0; // no finite values at all
+                hi = 0.0;
+            }
+            sanitized = xs
+                .iter()
+                .map(|&x| {
+                    if x.is_nan() {
+                        0.0
+                    } else if x == f32::INFINITY {
+                        hi
+                    } else if x == f32::NEG_INFINITY {
+                        lo
+                    } else {
+                        x
+                    }
+                })
+                .collect();
+            &sanitized
+        };
+        // fused O(n) clamp: bounds from one selection pass, then
+        // clamp+delta in a single loop (quant::occ)
+        let mut clamped = Vec::new();
+        let mut delta = Vec::new();
+        crate::quant::occ::clamp_tensor_into(src, c.alpha, &mut clamped, &mut delta);
+        Some((clamped, delta))
     }
 
     /// Pack into real storage. Clamping is a qdq-path transform (the
@@ -858,6 +889,45 @@ mod tests {
     fn pack_rejects_clamped_specs() {
         let spec = QuantSpec::parse("fp4:e2m1/clamp@0.99").unwrap();
         assert!(spec.pack(&[1.0, 2.0], 1, 2).is_err());
+    }
+
+    #[test]
+    fn stored_bytes_is_wire_bytes_except_scale_free_f32() {
+        let (rows, cols) = (3, 17);
+        for s in ["fp4:e2m1/row", "fp8:e4m3", "f16/col"] {
+            let spec = QuantSpec::parse(s).unwrap();
+            assert_eq!(spec.stored_bytes(rows, cols), spec.wire_bytes(rows, cols), "{s}");
+        }
+        // raw f32 rows are plain Vec<f32>: no scales materialized
+        let f32s = QuantSpec::parse("f32/row").unwrap();
+        assert_eq!(f32s.stored_bytes(rows, cols), 4 * (rows * cols) as u64);
+        // a clamp changes neither footprint (the residual is a side channel)
+        let clamped = QuantSpec::parse("fp4:e2m1/row/clamp@0.99+comp").unwrap();
+        let plain = QuantSpec::parse("fp4:e2m1/row").unwrap();
+        assert_eq!(clamped.stored_bytes(rows, cols), plain.stored_bytes(rows, cols));
+    }
+
+    #[test]
+    fn clamp_parts_decomposes_exactly_and_matches_apply() {
+        let mut rng = crate::util::Rng::new(31);
+        let xs = rng.normal_vec(384, 1.0);
+        let spec = QuantSpec::parse("fp4:e2m1/row/clamp@0.99+comp").unwrap();
+        let (clamped, delta) = spec.clamp_parts(&xs).unwrap();
+        // exact decomposition: x == clamped + delta elementwise
+        for i in 0..xs.len() {
+            assert_eq!(xs[i], clamped[i] + delta[i], "element {i}");
+        }
+        // reconstructing apply() from the parts is bit-identical
+        let mut want =
+            QuantSpec::parse("fp4:e2m1/row").unwrap().qdq(&clamped, 12, 32);
+        for (w, d) in want.iter_mut().zip(&delta) {
+            *w += d;
+        }
+        assert_eq!(spec.qdq(&xs, 12, 32), want);
+        // clamp-free specs have no parts; empty input yields empty parts
+        assert!(QuantSpec::parse("fp4:e2m1/row").unwrap().clamp_parts(&xs).is_none());
+        let (c, d) = spec.clamp_parts(&[]).unwrap();
+        assert!(c.is_empty() && d.is_empty());
     }
 
     #[test]

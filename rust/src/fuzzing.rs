@@ -6,7 +6,7 @@
 //! structured input from it, and panics on any invariant violation —
 //! panics are exactly what the fuzzer minimizes.
 //!
-//! The five surfaces are the ones where arbitrary input must uphold
+//! The six surfaces are the ones where arbitrary input must uphold
 //! structural invariants:
 //!
 //!  * the codec round-trip (`QuantSpec`/`PackedTensor`): storage decode
@@ -23,7 +23,10 @@
 //!    single-byte corruption of the CRC-framed body is rejected;
 //!  * the `FaultPlan` grammar: parse never panics, accepted plans are
 //!    valid, round-trip through `Display`, and two `FaultState`s built
-//!    from equal plans draw bit-identical fault verdicts.
+//!    from equal plans draw bit-identical fault verdicts;
+//!  * the serve `Workload` grammar: parse never panics, accepted
+//!    workloads satisfy `validate()`, round-trip through `Display`, and
+//!    materialize identical request traces from equal values.
 //!
 //! Doc-hidden: this is test infrastructure, not API.
 
@@ -31,6 +34,7 @@ use crate::coordinator::checkpoint;
 use crate::formats::{fp8, Format, Fp4Kind, Granularity, PackedTensor, QuantSpec};
 use crate::policy::{LinkClass, PrecisionPolicy};
 use crate::resilience::{FaultPlan, FaultState};
+use crate::serve::Workload;
 
 /// All storage formats, indexable by a fuzz byte.
 const FORMATS: [Format; 7] = [
@@ -253,4 +257,38 @@ pub fn check_fault_plan_parse(data: &[u8]) {
     }
     assert_eq!(a.trace, b.trace, "fault traces diverged");
     assert_eq!(a.seq(), b.seq(), "draw sequence counters diverged");
+}
+
+/// Serve `Workload` grammar oracle (PR-9): parse never panics; accepted
+/// workloads satisfy `validate()`, render canonically (`Display` is a
+/// fixed point), and — the scheduler-determinism contract — equal
+/// workload values materialize identical request traces.
+pub fn check_workload_parse(data: &[u8]) {
+    let s = String::from_utf8_lossy(data);
+    let Ok(w) = Workload::parse(&s) else {
+        return; // rejection is fine — we only require "no panic"
+    };
+    w.validate()
+        .unwrap_or_else(|e| panic!("parse accepted an invalid workload {s:?}: {e}"));
+    let canon = w.to_string();
+    let back = Workload::parse(&canon)
+        .unwrap_or_else(|e| panic!("canonical form {canon:?} rejected: {e}"));
+    assert_eq!(back, w, "round-trip through {canon:?}");
+    assert_eq!(back.to_string(), canon, "display must be a fixed point");
+
+    // same workload value => identical materialized trace, request for
+    // request (bound n so the fuzzer can't buy quadratic work)
+    let mut a = w;
+    a.n = a.n.min(64);
+    let b = a.clone();
+    let ra = a.requests();
+    assert_eq!(ra, b.requests(), "request trace diverged for {canon:?}");
+    assert_eq!(ra.len(), a.n);
+    for r in &ra {
+        assert!(
+            (a.prompt.lo..a.prompt.hi).contains(&r.prompt_len)
+                && (a.gen.lo..a.gen.hi).contains(&r.gen_len),
+            "request {r:?} escaped the ranges of {canon:?}"
+        );
+    }
 }

@@ -21,7 +21,8 @@
 //!   for simulation-grade qdq; `PackedTensor` for storage-grade payloads
 //!   with per-tensor/row/col scales (Eq. 1, §4.1, Appendix A).
 //! - [`policy`]   — the precision-policy layer: [`policy::TensorClass`]
-//!   (`Weight | Activation | Gradient | Wire | Checkpoint | Master`),
+//!   (`Weight | Activation | Gradient | Wire | Checkpoint | Master |
+//!   KvCache`),
 //!   [`policy::PrecisionPolicy`] mapping each class to a `QuantSpec` plus
 //!   estimator params (DGE `k`/clip, OCC quantile/compensation), and a
 //!   step-ranged [`policy::schedule::Schedule`] of overrides (warmup,
@@ -61,6 +62,15 @@
 //!   FP4 per `-o comm=<spec>`), running on a `fabric` topology
 //!   (`-o topology=hier:4x8`; flat reproduces the legacy path
 //!   bit-for-bit), raw or packed checkpoints, metric logs.
+//! - [`serve`]    — the serving subsystem: seeded workload grammar
+//!   (`arrive:poisson@8/s,prompt:32..256,gen:64..512,seed:7`), quantized
+//!   per-request KV cache (`PackedTensor` blocks under the `KvCache`
+//!   class, OCC residual side channel, exact byte accounting), and a
+//!   deterministic continuous-batching scheduler with admission control,
+//!   token-bucket rate limiting, per-request policy arms, and an f32
+//!   reference cache as the fidelity oracle. Layering: `serve` sits
+//!   beside `coordinator` on top of `formats`/`policy`/`costmodel` and
+//!   never touches `runtime` — `repro serve` is engine-free by design.
 //! - [`eval`]     — perplexity + zero-shot multiple-choice harness.
 //! - [`costmodel`] — Appendix B analytical FLOPs/speedup model (Table 5),
 //!   plus per-link byte predictions and alpha-beta step-time estimates
@@ -85,6 +95,7 @@ pub mod quant;
 pub mod report;
 pub mod resilience;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod util;
 

@@ -7,7 +7,9 @@
 //! fp4train dp     [-o workers=4 -o topology=hier:2x2 -o precision=<policy>
 //!                  | -o comm=<spec> -o faults=<plan> -o sentinel=true]
 //! fp4train repro  <fig1|fig3|fig4|fig5|fig6a..d|tab1..tab5|fig7|dists|perf|
-//!                  fabric|resilience|all>
+//!                  fabric|resilience|serve|all>
+//! fp4train serve  [-o workload=<grammar> -o precision=<policy> -o batch=..
+//!                  -o kv_mb=.. -o bucket=.. -o bucket_rate=..]
 //! fp4train formats                                  print FP4 tables
 //! fp4train info                                     manifest inventory
 //! ```
@@ -39,6 +41,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "dp" => cmd_dp(&args),
+        "serve" => cmd_serve(&args),
         "repro" => cmd_repro(&args),
         "formats" => fp4train::experiments::tabs::tab4(),
         "info" => cmd_info(&args),
@@ -65,19 +68,26 @@ commands:
            drop:w<I>@<S>,flip:<link|any>@<RATE>,straggle:<link|any>@<F>x,
            nan:w<I>@<S>,seed:<U64>); -o sentinel=true arms the numeric
            guardrails (rollback + temporary precision escalation)
+  serve    continuous-batching serving sim: one precision arm over a
+           seeded workload; -o workload='arrive:poisson@8/s,prompt:32..256,
+           gen:64..512,seed:7' -o precision=<policy> (kv=<spec> picks the
+           KV-cache encoding) -o batch=8 -o kv_mb=64 -o bucket=4096
+           -o bucket_rate=8192
   repro    regenerate a paper table/figure: fig1 fig3 fig4 fig5 fig6a-d
-           tab1 tab2 tab3 tab4 tab5 fig7 dists perf fabric resilience all
-           [--quick]
+           tab1 tab2 tab3 tab4 tab5 fig7 dists perf fabric resilience
+           serve all [--quick]
            (fabric = engine-free topology x wire-policy comm sweep;
            -o n=.. -o seed=..; writes results/perf/BENCH_fabric.json)
            (resilience = engine-free fault-rate x topology recovery drill;
            -o steps=.. -o dim=.. -o seed=..;
            writes results/perf/BENCH_resilience.json)
+           (serve = engine-free KV-policy x rate x batch load test;
+           writes results/perf/BENCH_serve.json)
   formats  print the FP4 value tables (Appendix A, Table 4)
   info     list artifacts in the manifest
 
 precision policy: -o precision=<class>=<spec>[+dge@k<K>[c<CLIP>]],...[;<range>:<override>]
-  classes  w a g wire ckpt master; ranges LO..HI, LO.. or warmup=N
+  classes  w a g wire ckpt master kv; ranges LO..HI, LO.. or warmup=N
   per-link wire: wire.<intra|inter|up|down>=<spec> quantizes one fabric
   link class, e.g. -o precision='wire=fp8:e4m3,wire.inter=fp4:e2m1/row'
   e.g. -o precision='wire=fp4:e2m1/row;0..100:wire=fp8:e4m3'
@@ -92,7 +102,12 @@ run `make artifacts` (and `make artifacts-repro` for repro) first.";
 fn run_config(args: &Args) -> Result<RunConfig> {
     let mut cfg = RunConfig::default();
     for (k, v) in &args.overrides {
-        if !matches!(k.as_str(), "workers" | "quick" | "topology") {
+        // command-local knobs (dp worker/topology, serve limits) are
+        // read straight off `args`, not RunConfig
+        if !matches!(
+            k.as_str(),
+            "workers" | "quick" | "topology" | "batch" | "kv_mb" | "bucket" | "bucket_rate"
+        ) {
             cfg.set(k, v)?;
         }
     }
@@ -288,6 +303,64 @@ fn cmd_dp(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One serving simulation under one precision arm: the single-run
+/// counterpart of the `repro serve` sweep. Engine-free.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use fp4train::costmodel::{kv_bytes_per_token, KvParams};
+    use fp4train::serve::{run_serve, BucketConfig, ModelConfig, ServeArm, ServeConfig};
+
+    let cfg = run_config(args)?;
+    let batch = args.get_usize("batch", 8)?;
+    let kv_mb = args.get_usize("kv_mb", 64)?;
+    let bucket: f64 = args.get("bucket").unwrap_or("4096").parse()?;
+    let bucket_rate: f64 = args.get("bucket_rate").unwrap_or("8192").parse()?;
+    let model = ModelConfig::default();
+    let scfg = ServeConfig {
+        workload: cfg.workload.clone(),
+        arms: vec![ServeArm { name: "policy".into(), policy: cfg.precision.clone() }],
+        max_batch: batch,
+        kv_budget_bytes: (kv_mb as u64) << 20,
+        bucket: BucketConfig { capacity: bucket, refill_per_s: bucket_rate },
+        model,
+        kv_params: KvParams::DEFAULT,
+    };
+    let per_token = kv_bytes_per_token(&cfg.precision, model.layers, model.dim);
+    println!("workload: {}", scfg.workload);
+    println!("precision policy: {}", cfg.precision);
+    println!(
+        "kv cache: {} ({per_token} B/token at {} layers x dim {})",
+        cfg.precision.kv_spec_at(0),
+        model.layers,
+        model.dim
+    );
+    let report = run_serve(&scfg)?;
+    // same hard gate as `repro serve`: simulation and costmodel agree
+    anyhow::ensure!(
+        report.packed_bytes_by_arm[0] == report.kv_tokens_by_arm[0] * per_token,
+        "cost-model KV byte mismatch: simulated {} vs {} tokens x {per_token} B/token",
+        report.packed_bytes_by_arm[0],
+        report.kv_tokens_by_arm[0],
+    );
+    println!(
+        "completed {}  rejected {}  in {:.1} ms simulated ({} decode steps)",
+        report.completed,
+        report.rejected,
+        report.final_clock_us as f64 / 1e3,
+        report.steps
+    );
+    println!(
+        "p50 {:.1} ms  p99 {:.1} ms  {:.0} tok/s  peak KV {:.1} KB \
+         (+{} B OCC residual)  logit rmse vs f32 cache {:.2e}",
+        report.p50_latency_us as f64 / 1e3,
+        report.p99_latency_us as f64 / 1e3,
+        report.tokens_per_s,
+        report.peak_kv_bytes as f64 / 1e3,
+        report.residual_bytes_by_arm[0],
+        report.rmse_by_arm[0],
+    );
+    Ok(())
+}
+
 fn cmd_repro(args: &Args) -> Result<()> {
     let id = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
     // `repro perf` handles its own context so it can degrade to the
@@ -305,6 +378,11 @@ fn cmd_repro(args: &Args) -> Result<()> {
     // fabric with real checkpoints): the CI resilience-smoke job runs it.
     if id == "resilience" {
         return experiments::resilience::resilience_cmd(args);
+    }
+    // `repro serve` is engine-free as well (toy decode model over the
+    // quantized KV cache): the CI serve-smoke job runs it.
+    if id == "serve" {
+        return experiments::serve::serve_cmd(args);
     }
     let artifacts = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let mut ctx = experiments::Ctx::new(&artifacts)?;

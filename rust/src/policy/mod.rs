@@ -13,8 +13,9 @@
 //!
 //! Three pieces:
 //!
-//!  * [`TensorClass`] — the six tensor roles the scheme distinguishes:
-//!    `Weight | Activation | Gradient | Wire | Checkpoint | Master`.
+//!  * [`TensorClass`] — the seven tensor roles the scheme distinguishes:
+//!    `Weight | Activation | Gradient | Wire | Checkpoint | Master |
+//!    KvCache` (the serving-side KV cache added with [`crate::serve`]).
 //!  * [`ClassSpec`] — what one class runs at: a [`QuantSpec`] (format,
 //!    granularity, optional OCC clamp/compensation) plus optional
 //!    estimator parameters ([`DgeParams`]: the surrogate's `k` and
@@ -33,9 +34,10 @@
 //!            | phase (";" phase)*       -- schedule-only: defaults + phases
 //! targets   := target "=" classspec ("," target "=" classspec)*
 //! target    := class | "wire." link
-//! class     := "w" | "a" | "g" | "wire" | "ckpt" | "master"
+//! class     := "w" | "a" | "g" | "wire" | "ckpt" | "master" | "kv"
 //!              -- long aliases accepted on parse: weight, activation,
-//!              -- act, gradient, grad, comm, checkpoint, opt
+//!              -- act, gradient, grad, comm, checkpoint, opt, kvcache,
+//!              -- kv_cache
 //! link      := "intra" | "inter" | "up" | "down"
 //!              -- long aliases: intra_node, inter_node, tree_up, tree_down
 //! classspec := quantspec [ "+dge@k" K [ "c" CLIP ] ]
@@ -93,6 +95,10 @@
 //!    transmitted) — formerly a bare check inside `DpSim::new`;
 //!  * the `Checkpoint` class must be clamp-free (the residual is not
 //!    stored) — mirrored by `checkpoint::save_packed`;
+//!  * the `KvCache` class MAY carry a clamp: unlike the transport
+//!    classes, [`crate::serve::kvcache`] stores the OCC ΔY residual as a
+//!    sparse side channel next to the packed blocks, so clamped cache
+//!    reads reconstruct `qdq` exactly;
 //!  * schedule ranges must be non-empty and pairwise disjoint;
 //!  * DGE parameters must be positive.
 
@@ -106,7 +112,8 @@ use anyhow::{bail, ensure, Result};
 use crate::formats::{fp8, Format, Fp4Kind, Granularity, QuantSpec};
 use schedule::{Override, Schedule};
 
-/// The six tensor roles the mixed-precision scheme distinguishes (§4.3).
+/// The seven tensor roles the mixed-precision scheme distinguishes:
+/// the six training-side classes of §4.3 plus the serving-side KV cache.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TensorClass {
     /// GEMM weight operands (the paper's W4 side, quantized through DGE).
@@ -121,17 +128,21 @@ pub enum TensorClass {
     Checkpoint,
     /// Master weights + optimizer moments held between steps.
     Master,
+    /// Serving-side KV-cache block encoding ([`crate::serve::kvcache`]).
+    /// May carry an OCC clamp: the cache stores the ΔY residual.
+    KvCache,
 }
 
 impl TensorClass {
     /// All classes, in canonical display order.
-    pub const ALL: [TensorClass; 6] = [
+    pub const ALL: [TensorClass; 7] = [
         TensorClass::Weight,
         TensorClass::Activation,
         TensorClass::Gradient,
         TensorClass::Wire,
         TensorClass::Checkpoint,
         TensorClass::Master,
+        TensorClass::KvCache,
     ];
 
     /// Canonical short name (the one `Display` renders).
@@ -143,6 +154,7 @@ impl TensorClass {
             TensorClass::Wire => "wire",
             TensorClass::Checkpoint => "ckpt",
             TensorClass::Master => "master",
+            TensorClass::KvCache => "kv",
         }
     }
 
@@ -156,8 +168,9 @@ impl TensorClass {
             "wire" | "comm" => TensorClass::Wire,
             "ckpt" | "checkpoint" => TensorClass::Checkpoint,
             "master" | "opt" => TensorClass::Master,
+            "kv" | "kvcache" | "kv_cache" => TensorClass::KvCache,
             other => bail!(
-                "unknown tensor class {other:?} (expected w, a, g, wire, ckpt or master)"
+                "unknown tensor class {other:?} (expected w, a, g, wire, ckpt, master or kv)"
             ),
         })
     }
@@ -170,6 +183,7 @@ impl TensorClass {
             TensorClass::Wire => 3,
             TensorClass::Checkpoint => 4,
             TensorClass::Master => 5,
+            TensorClass::KvCache => 6,
         }
     }
 }
@@ -245,7 +259,7 @@ impl fmt::Display for LinkClass {
     }
 }
 
-/// Anything a `target=spec` policy entry can address: one of the six
+/// Anything a `target=spec` policy entry can address: one of the seven
 /// tensor classes, or one fabric link class of the wire
 /// (`wire.inter=...`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -264,7 +278,7 @@ impl PolicyTarget {
         Ok(PolicyTarget::Class(TensorClass::from_name(s)?))
     }
 
-    /// Canonical sort key: the six classes first (in `TensorClass::ALL`
+    /// Canonical sort key: the tensor classes first (in `TensorClass::ALL`
     /// order), then the link classes (in `LinkClass::ALL` order).
     pub(crate) fn index(self) -> usize {
         match self {
@@ -379,7 +393,7 @@ impl fmt::Display for ClassSpec {
 /// path validates.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PrecisionPolicy {
-    classes: [ClassSpec; 6],
+    classes: [ClassSpec; 7],
     /// Per-link-class wire overrides (`wire.<link>=`), indexed by
     /// [`LinkClass::index`]; `None` = the link falls back to the `wire`
     /// class.
@@ -397,11 +411,13 @@ impl Default for PrecisionPolicy {
     ///   identical to the old `RunConfig.comm` default);
     /// * `ckpt` — f32, i.e. raw v1 checkpoints (the old
     ///   `ckpt_format: None` default);
-    /// * `master` — f32 master state.
+    /// * `master` — f32 master state;
+    /// * `kv` — f32, i.e. an uncompressed serving KV cache (quantized
+    ///   cache arms opt in explicitly via `kv=fp8:...` / `kv=fp4:...`).
     fn default() -> Self {
         let fp4 = Format::Fp4(Fp4Kind::E2M1);
         let mut p = PrecisionPolicy {
-            classes: [ClassSpec::raw(Format::F32); 6],
+            classes: [ClassSpec::raw(Format::F32); 7],
             wire_links: [None; 4],
             schedule: Schedule::empty(),
         };
@@ -586,6 +602,14 @@ impl PrecisionPolicy {
         }
     }
 
+    /// The KV-cache block encoding in effect at a step (serving uses
+    /// step 0 — decode has no training-step axis). May carry a clamp:
+    /// [`crate::serve::kvcache`] stores the ΔY residual alongside the
+    /// packed blocks.
+    pub fn kv_spec_at(&self, step: usize) -> QuantSpec {
+        self.class_at(TensorClass::KvCache, step).spec
+    }
+
     /// Label of the schedule phase covering `step` — `"base"` outside any
     /// phase, the canonical range string (`"0..100"`, `"100.."`) inside.
     /// Used by the dp-sim's per-phase wire accounting.
@@ -645,6 +669,9 @@ fn validate_class(class: TensorClass, cs: &ClassSpec) -> Result<()> {
             "checkpoint spec {} carries a clamp: the ΔY residual is not stored",
             cs.spec
         ),
+        // KvCache intentionally allows a clamp: unlike the transport
+        // classes the serving cache keeps the ΔY residual (a sparse side
+        // channel next to the packed blocks), so nothing is lost.
         _ => {}
     }
     if let Some(d) = &cs.dge {
@@ -701,7 +728,7 @@ pub(crate) fn parse_target_list(s: &str) -> Result<Vec<(PolicyTarget, ClassSpec)
 }
 
 impl fmt::Display for PrecisionPolicy {
-    /// Canonical long form: all six classes in [`TensorClass::ALL`] order,
+    /// Canonical long form: all seven classes in [`TensorClass::ALL`] order,
     /// then any set `wire.<link>` overrides in [`LinkClass::ALL`] order,
     /// then each schedule phase. `parse(display(p)) == p`.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -925,14 +952,35 @@ mod tests {
     #[test]
     fn display_lists_all_classes_canonically() {
         let s = PrecisionPolicy::default().to_string();
-        for prefix in ["w=", "a=", "g=", "wire=", "ckpt=", "master="] {
+        for prefix in ["w=", "a=", "g=", "wire=", "ckpt=", "master=", "kv="] {
             assert!(s.contains(prefix), "{s}");
         }
         assert_eq!(
             s,
             "w=fp4:e2m1/col+dge@k5,a=fp4:e2m1/row/clamp@0.999+comp,g=f32/tensor,\
-             wire=fp8:e4m3/tensor,ckpt=f32/tensor,master=f32/tensor"
+             wire=fp8:e4m3/tensor,ckpt=f32/tensor,master=f32/tensor,kv=f32/tensor"
         );
+    }
+
+    #[test]
+    fn kv_cache_class_parses_allows_clamp_and_round_trips() {
+        // quantized cache arms, including the clamp+comp the transport
+        // classes reject (the serve cache stores the ΔY residual)
+        let p = PrecisionPolicy::parse("kv=fp4:e2m1/row/clamp@0.999+comp").unwrap();
+        assert_eq!(
+            p.kv_spec_at(0),
+            QuantSpec::parse("fp4:e2m1/row/clamp@0.999+comp").unwrap()
+        );
+        assert_eq!(PrecisionPolicy::parse(&p.to_string()).unwrap(), p);
+        // long aliases
+        for alias in ["kvcache", "kv_cache"] {
+            let q = PrecisionPolicy::parse(&format!("{alias}=fp8:e4m3/row")).unwrap();
+            assert_eq!(q.kv_spec_at(0), QuantSpec::parse("fp8:e4m3/row").unwrap());
+        }
+        // default stays an uncompressed f32 cache
+        assert!(PrecisionPolicy::default().kv_spec_at(0).is_raw());
+        // wire/ckpt clamp rejection is unchanged by the new class
+        assert!(PrecisionPolicy::parse("wire=fp4:e2m1/clamp@0.99").is_err());
     }
 
     #[test]

@@ -1,4 +1,11 @@
 //! PJRT execution engine: compile-once cache + typed step execution.
+//!
+//! Serving concerns (request scheduling, KV-cache policy, rate
+//! limiting) live in [`crate::serve`], which is engine-free by design:
+//! it models decode over the costmodel and a toy attention stack so the
+//! `repro serve` harness runs without artifacts. This module stays the
+//! artifact-execution layer that an engine-backed decode path would
+//! plug into.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -1,0 +1,308 @@
+//! Quantized per-request KV cache: per-layer K/V rows stored as
+//! [`PackedTensor`] blocks under the [`TensorClass::KvCache`] policy
+//! class, with the paper's OCC clamp+compensation applied to cache
+//! values and exact byte accounting.
+//!
+//! # Storage semantics
+//!
+//! Each appended K (or V) row of length `dim` is encoded under the
+//! cache's [`QuantSpec`]:
+//!
+//! - **Raw f32** specs keep the row as a plain `Vec<f32>` (4 bytes per
+//!   element, no scales) — the reference-cache arm.
+//! - **Quantized** specs pack the row as a one-row [`PackedTensor`]
+//!   (per-row/col/tensor scaling per the spec's granularity).
+//! - **Clamped** specs first split the row via
+//!   [`QuantSpec::clamp_parts`] into a clamped body and the ΔY outlier
+//!   residual; the body is packed, and — when the clamp compensates —
+//!   the nonzero residual entries are kept as a sparse `(index, value)`
+//!   side channel (8 bytes each, tracked in
+//!   [`RequestKv::residual_bytes`] separately from the packed bytes,
+//!   the way the fabric gate tracks retry bytes apart from payload
+//!   bytes).
+//!
+//! # Read invariant (the property-test oracle)
+//!
+//! [`RequestKv::read_row`] decodes a stored row back to f32 and is
+//! pinned equal (under f32 `==`) to [`QuantSpec::qdq`] on the original
+//! row: unpack is bit-exact with unclamped qdq (codec tests pin this),
+//! and re-adding the sparse residual reconstructs the compensated
+//! values. (The only representational slack is `-0.0` vs `+0.0` where a
+//! residual entry is zero — indistinguishable under `==`.) Reads for
+//! attention go through a memoized dequantized matrix so decode cost
+//! stays linear, with `read_row` asserting the memo honest.
+//!
+//! # Byte accounting
+//!
+//! Every packed row contributes exactly
+//! [`QuantSpec::stored_bytes`]`(1, dim)` to [`RequestKv::packed_bytes`]
+//! — the same expression [`crate::costmodel::kv_bytes_per_token`] sums
+//! per layer, which is what lets `repro serve` hard-assert sim bytes ==
+//! costmodel for every arm.
+//!
+//! [`TensorClass::KvCache`]: crate::policy::TensorClass::KvCache
+
+use crate::formats::{Format, PackedTensor, QuantSpec};
+
+/// Which half of the cache a row belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvSide {
+    K,
+    V,
+}
+
+/// One stored row: raw f32 for `f32` specs, packed otherwise.
+#[derive(Clone, Debug)]
+enum RowStore {
+    Raw(Vec<f32>),
+    Packed(PackedTensor),
+}
+
+/// A stored row plus its sparse OCC residual (empty unless the spec
+/// clamps with compensation).
+#[derive(Clone, Debug)]
+struct KvRow {
+    store: RowStore,
+    /// Nonzero ΔY entries as `(column, value)` pairs.
+    residual: Vec<(u32, f32)>,
+}
+
+/// One side (K or V) of one layer: the rows plus a memoized
+/// dequantized `tokens x dim` matrix serving attention reads.
+#[derive(Clone, Debug, Default)]
+struct Side {
+    rows: Vec<KvRow>,
+    deq: Vec<f32>,
+}
+
+#[derive(Clone, Debug, Default)]
+struct Layer {
+    k: Side,
+    v: Side,
+}
+
+/// The KV cache of a single in-flight request.
+#[derive(Clone, Debug)]
+pub struct RequestKv {
+    /// The cache-class spec (may clamp).
+    spec: QuantSpec,
+    /// `spec` with the clamp stripped — what the packed body is encoded
+    /// under (clamping already happened via `clamp_parts`).
+    packed_spec: QuantSpec,
+    dim: usize,
+    layers: Vec<Layer>,
+    /// Exact bytes of the stored row bodies (packed data + scales, or
+    /// raw f32). Equals `tokens * layers * 2 * spec.stored_bytes(1, dim)`.
+    pub packed_bytes: u64,
+    /// Bytes of the sparse OCC residual side channel (8 per entry).
+    pub residual_bytes: u64,
+}
+
+impl RequestKv {
+    /// An empty cache for `layers` transformer layers of width `dim`.
+    pub fn new(spec: QuantSpec, layers: usize, dim: usize) -> Self {
+        assert!(layers >= 1 && dim >= 1, "degenerate cache shape");
+        RequestKv {
+            spec,
+            packed_spec: QuantSpec { clamp: None, ..spec },
+            dim,
+            layers: vec![Layer::default(); layers],
+            packed_bytes: 0,
+            residual_bytes: 0,
+        }
+    }
+
+    /// Number of cached token positions (rows per side per layer).
+    pub fn tokens(&self) -> usize {
+        self.layers[0].k.rows.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn spec(&self) -> QuantSpec {
+        self.spec
+    }
+
+    /// Encode one row under the cache spec.
+    fn encode(&mut self, xs: &[f32]) -> KvRow {
+        assert_eq!(xs.len(), self.dim, "row width mismatch");
+        let (values, residual): (Vec<f32>, Vec<(u32, f32)>) = match self.spec.clamp_parts(xs) {
+            None => (xs.to_vec(), Vec::new()),
+            Some((clamped, delta)) => {
+                let residual = if self.spec.clamp.expect("clamp_parts was Some").compensate {
+                    delta
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, d)| **d != 0.0)
+                        .map(|(i, d)| (i as u32, *d))
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                (clamped, residual)
+            }
+        };
+        let store = if self.spec.format == Format::F32 {
+            self.packed_bytes += 4 * self.dim as u64;
+            RowStore::Raw(values)
+        } else {
+            let block = PackedTensor::pack(
+                &values,
+                1,
+                self.dim,
+                self.packed_spec.format,
+                self.packed_spec.granularity,
+            );
+            self.packed_bytes += block.wire_bytes();
+            RowStore::Packed(block)
+        };
+        self.residual_bytes += 8 * residual.len() as u64;
+        KvRow { store, residual }
+    }
+
+    /// Decode a stored row back to f32 (storage is the source of truth;
+    /// the memoized matrix is derived from exactly this). Works
+    /// uniformly across formats: the body decodes to its unclamped qdq
+    /// (or itself, for raw f32), then re-adding the sparse residual
+    /// reconstructs the compensated values.
+    fn decode(row: &KvRow) -> Vec<f32> {
+        let mut out = match &row.store {
+            RowStore::Raw(v) => v.clone(),
+            RowStore::Packed(p) => p.unpack(),
+        };
+        for &(i, d) in &row.residual {
+            out[i as usize] += d;
+        }
+        out
+    }
+
+    /// Append one token position's K and V rows to a layer.
+    pub fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        let k_row = self.encode(k);
+        let v_row = self.encode(v);
+        let side_k = &mut self.layers[layer].k;
+        side_k.deq.extend_from_slice(&Self::decode(&k_row));
+        side_k.rows.push(k_row);
+        let side_v = &mut self.layers[layer].v;
+        side_v.deq.extend_from_slice(&Self::decode(&v_row));
+        side_v.rows.push(v_row);
+    }
+
+    /// The memoized dequantized K matrix of a layer, `tokens x dim`
+    /// row-major.
+    pub fn k(&self, layer: usize) -> &[f32] {
+        &self.layers[layer].k.deq
+    }
+
+    /// The memoized dequantized V matrix of a layer, `tokens x dim`
+    /// row-major.
+    pub fn v(&self, layer: usize) -> &[f32] {
+        &self.layers[layer].v.deq
+    }
+
+    /// Decode one stored row from storage (not the memo) — the
+    /// round-trip oracle: equals `spec.qdq(original_row, 1, dim)` under
+    /// f32 `==`.
+    pub fn read_row(&self, layer: usize, side: KvSide, pos: usize) -> Vec<f32> {
+        let side = match side {
+            KvSide::K => &self.layers[layer].k,
+            KvSide::V => &self.layers[layer].v,
+        };
+        let decoded = Self::decode(&side.rows[pos]);
+        debug_assert_eq!(
+            decoded,
+            side.deq[pos * self.dim..(pos + 1) * self.dim],
+            "memoized matrix diverged from storage"
+        );
+        decoded
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{Fp4Kind, Granularity};
+    use crate::util::Rng;
+
+    fn row(rng: &mut Rng, dim: usize) -> Vec<f32> {
+        rng.normal_vec(dim, 1.0)
+    }
+
+    #[test]
+    fn raw_f32_cache_is_lossless_with_exact_bytes() {
+        let spec = QuantSpec::parse("f32").unwrap();
+        let mut kv = RequestKv::new(spec, 2, 8);
+        let mut rng = Rng::new(41);
+        let (k0, v0) = (row(&mut rng, 8), row(&mut rng, 8));
+        kv.append(0, &k0, &v0);
+        kv.append(1, &k0, &v0);
+        assert_eq!(kv.tokens(), 1);
+        assert_eq!(kv.read_row(0, KvSide::K, 0), k0);
+        assert_eq!(kv.read_row(1, KvSide::V, 0), v0);
+        assert_eq!(kv.k(0), &k0[..]);
+        // 4 rows of 8 f32s, no scales, no residual
+        assert_eq!(kv.packed_bytes, 4 * 4 * 8);
+        assert_eq!(kv.residual_bytes, 0);
+    }
+
+    #[test]
+    fn quantized_rows_match_qdq_and_stored_bytes() {
+        let spec = QuantSpec::parse("fp8:e4m3/row").unwrap();
+        let mut kv = RequestKv::new(spec, 1, 16);
+        let mut rng = Rng::new(42);
+        let mut expect_bytes = 0;
+        for _ in 0..5 {
+            let (k, v) = (row(&mut rng, 16), row(&mut rng, 16));
+            kv.append(0, &k, &v);
+            expect_bytes += 2 * spec.stored_bytes(1, 16);
+            let pos = kv.tokens() - 1;
+            let qk = spec.qdq(&k, 1, 16);
+            let qv = spec.qdq(&v, 1, 16);
+            assert_eq!(kv.read_row(0, KvSide::K, pos), qk);
+            assert_eq!(kv.read_row(0, KvSide::V, pos), qv);
+        }
+        assert_eq!(kv.packed_bytes, expect_bytes);
+        assert_eq!(kv.residual_bytes, 0);
+    }
+
+    #[test]
+    fn clamped_fp4_cache_reconstructs_qdq_via_the_residual() {
+        let spec = QuantSpec::parse("fp4:e2m1/row/clamp@0.9+comp").unwrap();
+        assert_eq!(spec.format, Format::Fp4(Fp4Kind::E2M1));
+        assert_eq!(spec.granularity, Granularity::PerRow);
+        let mut kv = RequestKv::new(spec, 1, 64);
+        let mut rng = Rng::new(43);
+        let k = row(&mut rng, 64);
+        let v = row(&mut rng, 64);
+        kv.append(0, &k, &v);
+        let (qk, sparsity) = spec.apply(&k, 1, 64);
+        assert!(sparsity > 0.0, "alpha 0.9 on 64 gaussians must clamp something");
+        assert_eq!(kv.read_row(0, KvSide::K, 0), qk);
+        // packed body bytes ignore the clamp; residual tracked separately
+        assert_eq!(kv.packed_bytes, 2 * spec.stored_bytes(1, 64));
+        assert!(kv.residual_bytes > 0);
+        assert_eq!(kv.residual_bytes % 8, 0);
+    }
+
+    #[test]
+    fn uncompensated_clamp_stores_no_residual() {
+        let spec = QuantSpec::parse("fp4:e2m1/row/clamp@0.9").unwrap();
+        let mut kv = RequestKv::new(spec, 1, 64);
+        let mut rng = Rng::new(44);
+        let k = row(&mut rng, 64);
+        kv.append(0, &k, &k);
+        assert_eq!(kv.residual_bytes, 0);
+        let qk = spec.qdq(&k, 1, 64);
+        assert_eq!(kv.read_row(0, KvSide::K, 0), qk);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn append_rejects_wrong_width() {
+        let spec = QuantSpec::parse("f32").unwrap();
+        let mut kv = RequestKv::new(spec, 1, 8);
+        kv.append(0, &[0.0; 7], &[0.0; 7]);
+    }
+}

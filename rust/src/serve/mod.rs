@@ -1,0 +1,39 @@
+//! Production-serving subsystem: continuous batching over a quantized
+//! KV cache, promoted out of `examples/serve_generate.rs` into a
+//! first-class, fully deterministic simulation stack.
+//!
+//! Three layers, each documented in its own module:
+//!
+//! - [`workload`] — the seeded request-arrival grammar
+//!   (`arrive:poisson@8/s,prompt:32..256,gen:64..512,seed:7`), with
+//!   parse/Display round-trip, validation, and deterministic request
+//!   materialization.
+//! - [`kvcache`] — per-request, per-layer K/V rows stored as
+//!   [`PackedTensor`](crate::formats::PackedTensor) blocks under the
+//!   [`TensorClass::KvCache`](crate::policy::TensorClass::KvCache)
+//!   policy class, with the paper's OCC clamp+compensation kept as a
+//!   sparse residual side channel and exact byte accounting (pinned
+//!   equal to [`crate::costmodel::kv_bytes_per_token`]).
+//! - [`scheduler`] — the continuous-batching loop: mid-flight
+//!   admission, batch-size + KV-budget admission control, token-bucket
+//!   rate limiting, per-request [`PrecisionPolicy`] arms for
+//!   mixed-precision traffic, and an f32 reference cache as the
+//!   fidelity oracle (per-arm logit RMSE).
+//!
+//! The `repro serve` harness ([`crate::experiments::serve`]) sweeps
+//! policy arm × batch size × arrival rate over this stack and
+//! hard-asserts the simulation's KV bytes against the costmodel for
+//! every arm.
+//!
+//! [`PrecisionPolicy`]: crate::policy::PrecisionPolicy
+
+pub mod kvcache;
+pub mod scheduler;
+pub mod workload;
+
+pub use kvcache::{KvSide, RequestKv};
+pub use scheduler::{
+    run_serve, BucketConfig, ModelConfig, SchedEvent, ServeArm, ServeConfig, ServeReport,
+    TokenBucket,
+};
+pub use workload::{Arrival, LenRange, Request, Workload};

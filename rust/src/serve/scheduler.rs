@@ -1,0 +1,701 @@
+//! Deterministic continuous-batching scheduler: admits requests into a
+//! running decode batch mid-flight, with admission control (batch-size
+//! cap + predicted-KV-footprint budget) and token-budget rate limiting
+//! (a [`TokenBucket`]), driven by a seeded [`Workload`] trace.
+//!
+//! # Scheduler invariants
+//!
+//! - **Determinism.** The entire run — the [`SchedEvent`] trace, every
+//!   latency, every byte counter — is a pure function of the
+//!   [`ServeConfig`]. Same workload seed ⇒ identical admission and
+//!   completion trace (property-tested). Time is a simulated `u64`
+//!   microsecond clock advanced by
+//!   [`crate::costmodel::decode_step_time_us`]; no wall clock anywhere.
+//! - **FIFO admission.** Waiting requests are considered strictly in
+//!   arrival order. *Permanent* rejections (token cost above the
+//!   bucket's capacity, or predicted KV footprint above the budget —
+//!   conditions no amount of waiting cures) pop the request with a loud
+//!   [`SchedEvent::Reject`] carrying the reason. *Transient* blocks
+//!   (batch full, KV budget currently reserved, bucket short on
+//!   tokens) stop admission until capacity frees — no queue jumping.
+//! - **Exact byte accounting.** Admission reserves
+//!   `(prompt+gen) * kv_bytes_per_token(arm)` — the request's peak
+//!   packed footprint — against [`ServeConfig::kv_budget_bytes`], and
+//!   every completed request's actual [`RequestKv::packed_bytes`]
+//!   equals exactly `tokens * kv_bytes_per_token` (the `repro serve`
+//!   hard gate). The OCC residual side channel is data-dependent, so it
+//!   is reported ([`ServeReport::residual_bytes_by_arm`]) and counted
+//!   into resident/peak bytes, but not part of the predicted
+//!   reservation.
+//! - **Mixed-precision traffic.** Requests are assigned policy arms
+//!   round-robin (`id % arms.len()`), so one engine serves several
+//!   [`PrecisionPolicy`] arms in the same batch.
+//! - **Reference oracle.** Every slot carries *two* caches: the arm's
+//!   quantized cache and a raw-f32 reference cache fed identical
+//!   inputs. Sampling (greedy argmax, lowest-index tie-break) always
+//!   follows the *reference* logits, so the generated token sequence is
+//!   identical across arms and the per-arm logit RMSE
+//!   ([`ServeReport::rmse_by_arm`]) isolates cache-quantization error —
+//!   the f32 arm's RMSE is exactly `0.0`. The reference cache is
+//!   instrumentation: its bytes are excluded from budgets and
+//!   accounting.
+//!
+//! The decode model is a deliberately tiny seeded toy transformer
+//! (elementwise "projections", softmax attention over the cache,
+//! `tanh` residual): big enough that cache quantization error reaches
+//! the logits, small enough that load tests sweep thousands of steps.
+//! Prompt prefill appends per-layer K/V rows derived from token
+//! embeddings in one pass without attention — the *cache contents*,
+//! not prompt-phase compute, are the subject under test, and both
+//! caches see identical prefill inputs.
+
+use std::collections::VecDeque;
+
+use anyhow::{ensure, Result};
+
+use crate::costmodel::{self, KvParams};
+use crate::formats::{Format, Granularity, QuantSpec};
+use crate::policy::PrecisionPolicy;
+use crate::serve::kvcache::RequestKv;
+use crate::serve::workload::{Request, Workload};
+
+/// One named precision arm served by the engine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeArm {
+    pub name: String,
+    pub policy: PrecisionPolicy,
+}
+
+/// Token-bucket rate-limiter parameters. Admission charges a request's
+/// full token cost (`prompt + gen`) up front.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BucketConfig {
+    /// Maximum (and initial) token balance. Requests costing more than
+    /// this are permanently rejected.
+    pub capacity: f64,
+    /// Tokens restored per simulated second.
+    pub refill_per_s: f64,
+}
+
+impl Default for BucketConfig {
+    fn default() -> Self {
+        BucketConfig { capacity: 4096.0, refill_per_s: 4096.0 }
+    }
+}
+
+/// Shape and seed of the toy decode model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub layers: usize,
+    pub dim: usize,
+    pub vocab: usize,
+    /// Seeds the model weights and the synthetic prompt tokens
+    /// (independent of the workload seed).
+    pub seed: u64,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig { layers: 2, dim: 32, vocab: 16, seed: 11 }
+    }
+}
+
+/// Full configuration of one serving run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    pub workload: Workload,
+    /// Policy arms; requests take arm `id % arms.len()`.
+    pub arms: Vec<ServeArm>,
+    /// Maximum concurrent decode slots.
+    pub max_batch: usize,
+    /// Budget for predicted packed KV bytes across admitted requests.
+    pub kv_budget_bytes: u64,
+    pub bucket: BucketConfig,
+    pub model: ModelConfig,
+    pub kv_params: KvParams,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workload: Workload::default(),
+            arms: vec![ServeArm { name: "f32".into(), policy: PrecisionPolicy::default() }],
+            max_batch: 8,
+            kv_budget_bytes: 64 << 20,
+            bucket: BucketConfig::default(),
+            model: ModelConfig::default(),
+            kv_params: KvParams::DEFAULT,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        self.workload.validate()?;
+        ensure!(!self.arms.is_empty(), "serve config needs at least one policy arm");
+        for arm in &self.arms {
+            arm.policy
+                .validate()
+                .map_err(|e| anyhow::anyhow!("arm {:?}: {e}", arm.name))?;
+        }
+        ensure!(self.max_batch >= 1, "max_batch must be >= 1");
+        ensure!(
+            self.bucket.capacity.is_finite() && self.bucket.capacity >= 0.0,
+            "bucket capacity must be finite and non-negative"
+        );
+        ensure!(
+            self.bucket.refill_per_s.is_finite() && self.bucket.refill_per_s >= 0.0,
+            "bucket refill rate must be finite and non-negative"
+        );
+        ensure!(
+            self.model.layers >= 1 && self.model.dim >= 1 && self.model.vocab >= 2,
+            "toy model needs layers >= 1, dim >= 1, vocab >= 2"
+        );
+        Ok(())
+    }
+}
+
+/// Token-budget rate limiter. Public so boundary behavior is
+/// property-testable in isolation: a request whose cost exactly equals
+/// the available balance IS admitted (`>=`, not `>`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TokenBucket {
+    capacity: f64,
+    refill_per_s: f64,
+    available: f64,
+}
+
+impl TokenBucket {
+    /// A full bucket.
+    pub fn new(cfg: &BucketConfig) -> Self {
+        TokenBucket {
+            capacity: cfg.capacity,
+            refill_per_s: cfg.refill_per_s,
+            available: cfg.capacity,
+        }
+    }
+
+    pub fn available(&self) -> f64 {
+        self.available
+    }
+
+    /// Take `cost` tokens if the balance covers them (exact exhaustion
+    /// admits). Returns whether the take succeeded.
+    pub fn try_take(&mut self, cost: f64) -> bool {
+        if self.available >= cost {
+            self.available -= cost;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Restore tokens for `dt_us` of simulated time, capped at
+    /// capacity.
+    pub fn refill(&mut self, dt_us: u64) {
+        self.available =
+            (self.available + dt_us as f64 / 1e6 * self.refill_per_s).min(self.capacity);
+    }
+}
+
+/// One entry of the deterministic admission/completion trace.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SchedEvent {
+    Arrive { id: usize, at_us: u64 },
+    Admit { id: usize, at_us: u64, step: usize, arm: usize },
+    Reject { id: usize, at_us: u64, reason: String },
+    Complete { id: usize, at_us: u64, step: usize, latency_us: u64 },
+}
+
+/// Everything a serving run produced.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeReport {
+    pub trace: Vec<SchedEvent>,
+    pub completed: usize,
+    pub rejected: usize,
+    /// Decode steps executed.
+    pub steps: usize,
+    pub final_clock_us: u64,
+    pub p50_latency_us: u64,
+    pub p99_latency_us: u64,
+    /// Generated tokens per simulated second.
+    pub tokens_per_s: f64,
+    pub total_gen_tokens: u64,
+    /// Peak resident quantized-cache bytes (packed + residual) across
+    /// all active slots, sampled after every decode step.
+    pub peak_kv_bytes: u64,
+    /// Exact packed cache bytes of completed requests, per arm. Gated
+    /// against `kv_tokens_by_arm * costmodel::kv_bytes_per_token`.
+    pub packed_bytes_by_arm: Vec<u64>,
+    /// Cached token positions of completed requests, per arm.
+    pub kv_tokens_by_arm: Vec<u64>,
+    /// OCC residual side-channel bytes of completed requests, per arm.
+    pub residual_bytes_by_arm: Vec<u64>,
+    /// RMSE of each arm's decode logits vs the f32 reference cache
+    /// (0.0 for raw-f32 arms and arms that served no decode steps).
+    pub rmse_by_arm: Vec<f64>,
+}
+
+/// The seeded toy decode model (see the module docs).
+struct ToyModel {
+    layers: usize,
+    dim: usize,
+    vocab: usize,
+    seed: u64,
+    /// `vocab` embedding rows of `dim`.
+    embed: Vec<Vec<f32>>,
+    /// Per-layer elementwise projection weights, `layers x dim` each.
+    wq: Vec<Vec<f32>>,
+    wk: Vec<Vec<f32>>,
+    wv: Vec<Vec<f32>>,
+    /// `vocab` output rows of `dim`.
+    out: Vec<Vec<f32>>,
+}
+
+/// splitmix64 finisher over a combined `(seed, tag, i)` key — the
+/// stateless generator behind the toy model's weights and prompts.
+fn mix(seed: u64, tag: u64, i: u64) -> u64 {
+    let mut z = seed
+        ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ i.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A deterministic coefficient in `[-1, 1)`.
+fn coef(seed: u64, tag: u64, i: u64) -> f32 {
+    ((mix(seed, tag, i) >> 40) as f32 / (1u64 << 23) as f32) - 1.0
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Greedy argmax with lowest-index tie-break (strict `>`).
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+impl ToyModel {
+    fn new(cfg: &ModelConfig) -> Self {
+        let table = |tag_base: u64, count: usize| -> Vec<Vec<f32>> {
+            (0..count)
+                .map(|j| {
+                    (0..cfg.dim)
+                        .map(|i| coef(cfg.seed, tag_base + j as u64, i as u64))
+                        .collect()
+                })
+                .collect()
+        };
+        ToyModel {
+            layers: cfg.layers,
+            dim: cfg.dim,
+            vocab: cfg.vocab,
+            seed: cfg.seed,
+            embed: table(1_000, cfg.vocab),
+            wq: table(2_000, cfg.layers),
+            wk: table(3_000, cfg.layers),
+            wv: table(4_000, cfg.layers),
+            out: table(5_000, cfg.vocab),
+        }
+    }
+
+    /// The synthetic prompt token at position `p` of request `id`.
+    fn prompt_token(&self, id: usize, p: usize) -> usize {
+        (mix(self.seed, 6_000 + id as u64, p as u64) % self.vocab as u64) as usize
+    }
+
+    /// Prefill one prompt position into a cache: per-layer K/V rows
+    /// derived from the token embedding (no attention — see module
+    /// docs).
+    fn prefill(&self, cache: &mut RequestKv, token: usize) {
+        let x = &self.embed[token];
+        for l in 0..self.layers {
+            let k: Vec<f32> = x.iter().zip(&self.wk[l]).map(|(a, b)| a * b).collect();
+            let v: Vec<f32> = x.iter().zip(&self.wv[l]).map(|(a, b)| a * b).collect();
+            cache.append(l, &k, &v);
+        }
+    }
+
+    /// One decode step against a cache: append this position's K/V,
+    /// attend over the whole cache, return the logits.
+    fn forward(&self, cache: &mut RequestKv, last_token: usize) -> Vec<f32> {
+        let dim = self.dim;
+        let mut x = self.embed[last_token].clone();
+        for l in 0..self.layers {
+            let k: Vec<f32> = x.iter().zip(&self.wk[l]).map(|(a, b)| a * b).collect();
+            let v: Vec<f32> = x.iter().zip(&self.wv[l]).map(|(a, b)| a * b).collect();
+            let q: Vec<f32> = x.iter().zip(&self.wq[l]).map(|(a, b)| a * b).collect();
+            cache.append(l, &k, &v);
+            let tokens = cache.tokens();
+            let ks = cache.k(l);
+            let vs = cache.v(l);
+            let scale = 1.0 / (dim as f32).sqrt();
+            let mut scores: Vec<f32> = (0..tokens)
+                .map(|p| dot(&q, &ks[p * dim..(p + 1) * dim]) * scale)
+                .collect();
+            let max = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+            let mut total = 0.0;
+            for s in scores.iter_mut() {
+                *s = (*s - max).exp();
+                total += *s;
+            }
+            let mut ctx = vec![0.0f32; dim];
+            for (p, &a) in scores.iter().enumerate() {
+                let w = a / total;
+                for (c, vv) in ctx.iter_mut().zip(&vs[p * dim..(p + 1) * dim]) {
+                    *c += w * vv;
+                }
+            }
+            for (xi, ci) in x.iter_mut().zip(&ctx) {
+                *xi = (*xi + ci).tanh();
+            }
+        }
+        (0..self.vocab).map(|t| dot(&x, &self.out[t])).collect()
+    }
+}
+
+/// One in-flight request.
+struct Slot {
+    req: Request,
+    arm: usize,
+    last_token: usize,
+    generated: usize,
+    /// Predicted packed bytes reserved against the KV budget.
+    reserved: u64,
+    /// The arm's (possibly quantized) cache.
+    kv: RequestKv,
+    /// The raw-f32 reference cache (instrumentation only).
+    refkv: RequestKv,
+}
+
+const F32_SPEC: QuantSpec =
+    QuantSpec { format: Format::F32, granularity: Granularity::PerTensor, clamp: None };
+
+/// Run one serving simulation to completion. Deterministic in the
+/// config (see the module docs for the invariants).
+pub fn run_serve(cfg: &ServeConfig) -> Result<ServeReport> {
+    cfg.validate()?;
+    let model = ToyModel::new(&cfg.model);
+    let n_arms = cfg.arms.len();
+    let kv_per_token: Vec<u64> = cfg
+        .arms
+        .iter()
+        .map(|a| costmodel::kv_bytes_per_token(&a.policy, cfg.model.layers, cfg.model.dim))
+        .collect();
+
+    let mut pending: VecDeque<Request> = cfg.workload.requests().into();
+    let mut waiting: VecDeque<Request> = VecDeque::new();
+    let mut active: Vec<Slot> = Vec::new();
+    let mut bucket = TokenBucket::new(&cfg.bucket);
+
+    let mut clock: u64 = 0;
+    let mut steps: usize = 0;
+    let mut reserved: u64 = 0;
+    let mut peak_kv_bytes: u64 = 0;
+    let mut total_gen_tokens: u64 = 0;
+    let mut trace: Vec<SchedEvent> = Vec::new();
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut rejected = 0usize;
+    let mut packed_bytes_by_arm = vec![0u64; n_arms];
+    let mut kv_tokens_by_arm = vec![0u64; n_arms];
+    let mut residual_bytes_by_arm = vec![0u64; n_arms];
+    let mut sumsq_by_arm = vec![0f64; n_arms];
+    let mut count_by_arm = vec![0u64; n_arms];
+
+    loop {
+        // 1. Drain arrivals up to the clock.
+        while pending.front().is_some_and(|r| r.arrive_us <= clock) {
+            let r = pending.pop_front().unwrap();
+            trace.push(SchedEvent::Arrive { id: r.id, at_us: r.arrive_us });
+            waiting.push_back(r);
+        }
+
+        // 2. FIFO admission.
+        while let Some(r) = waiting.front().copied() {
+            let arm = r.id % n_arms;
+            let cost = (r.prompt_len + r.gen_len) as f64;
+            let need = (r.prompt_len + r.gen_len) as u64 * kv_per_token[arm];
+            if cost > cfg.bucket.capacity {
+                waiting.pop_front();
+                rejected += 1;
+                trace.push(SchedEvent::Reject {
+                    id: r.id,
+                    at_us: clock,
+                    reason: format!(
+                        "token cost {cost} exceeds bucket capacity {}",
+                        cfg.bucket.capacity
+                    ),
+                });
+                continue;
+            }
+            if need > cfg.kv_budget_bytes {
+                waiting.pop_front();
+                rejected += 1;
+                trace.push(SchedEvent::Reject {
+                    id: r.id,
+                    at_us: clock,
+                    reason: format!(
+                        "predicted KV footprint {need} B exceeds budget {} B",
+                        cfg.kv_budget_bytes
+                    ),
+                });
+                continue;
+            }
+            if active.len() >= cfg.max_batch
+                || reserved + need > cfg.kv_budget_bytes
+                || !bucket.try_take(cost)
+            {
+                break; // transient: capacity frees as the batch drains
+            }
+            waiting.pop_front();
+            reserved += need;
+            let spec = cfg.arms[arm].policy.kv_spec_at(0);
+            let mut kv = RequestKv::new(spec, cfg.model.layers, cfg.model.dim);
+            let mut refkv = RequestKv::new(F32_SPEC, cfg.model.layers, cfg.model.dim);
+            let mut last_token = 0;
+            for p in 0..r.prompt_len {
+                let tok = model.prompt_token(r.id, p);
+                model.prefill(&mut kv, tok);
+                model.prefill(&mut refkv, tok);
+                last_token = tok;
+            }
+            trace.push(SchedEvent::Admit { id: r.id, at_us: clock, step: steps, arm });
+            active.push(Slot { req: r, arm, last_token, generated: 0, reserved: need, kv, refkv });
+        }
+
+        if !active.is_empty() {
+            // 3a. One decode step over the whole batch.
+            steps += 1;
+            let batch = active.len();
+            let mut finished: Vec<usize> = Vec::new();
+            for (idx, slot) in active.iter_mut().enumerate() {
+                let logits = model.forward(&mut slot.kv, slot.last_token);
+                let ref_logits = model.forward(&mut slot.refkv, slot.last_token);
+                for (a, b) in logits.iter().zip(&ref_logits) {
+                    sumsq_by_arm[slot.arm] += (*a as f64 - *b as f64).powi(2);
+                    count_by_arm[slot.arm] += 1;
+                }
+                slot.last_token = argmax(&ref_logits);
+                slot.generated += 1;
+                total_gen_tokens += 1;
+                if slot.generated == slot.req.gen_len {
+                    finished.push(idx);
+                }
+            }
+            let resident: u64 =
+                active.iter().map(|s| s.kv.packed_bytes + s.kv.residual_bytes).sum();
+            peak_kv_bytes = peak_kv_bytes.max(resident);
+            let dt = costmodel::decode_step_time_us(batch, resident, &cfg.kv_params)
+                .round()
+                .max(1.0) as u64;
+            clock += dt;
+            bucket.refill(dt);
+            for &idx in &finished {
+                let slot = &active[idx];
+                let latency_us = clock - slot.req.arrive_us;
+                trace.push(SchedEvent::Complete {
+                    id: slot.req.id,
+                    at_us: clock,
+                    step: steps,
+                    latency_us,
+                });
+                latencies.push(latency_us);
+                packed_bytes_by_arm[slot.arm] += slot.kv.packed_bytes;
+                kv_tokens_by_arm[slot.arm] += slot.kv.tokens() as u64;
+                residual_bytes_by_arm[slot.arm] += slot.kv.residual_bytes;
+                reserved -= slot.reserved;
+            }
+            // Remove back-to-front so earlier indices stay valid.
+            for &idx in finished.iter().rev() {
+                active.swap_remove(idx);
+            }
+        } else if let Some(r) = waiting.front() {
+            // 3b. Idle but blocked: with an empty batch nothing is
+            // reserved, so the front can only be short on bucket tokens.
+            let cost = (r.prompt_len + r.gen_len) as f64;
+            let deficit = cost - bucket.available();
+            ensure!(
+                cfg.bucket.refill_per_s > 0.0,
+                "request {} needs {cost} tokens but the bucket holds {} and never refills",
+                r.id,
+                bucket.available()
+            );
+            let wait_us = (deficit / cfg.bucket.refill_per_s * 1e6).ceil() as u64 + 1;
+            clock += wait_us;
+            bucket.refill(wait_us);
+        } else if let Some(r) = pending.front() {
+            // 3c. Idle and empty queue: jump to the next arrival.
+            let dt = r.arrive_us - clock;
+            clock = r.arrive_us;
+            bucket.refill(dt);
+        } else {
+            break;
+        }
+    }
+
+    latencies.sort_unstable();
+    let percentile = |p: f64| -> u64 {
+        if latencies.is_empty() {
+            0
+        } else {
+            latencies[((latencies.len() - 1) as f64 * p).round() as usize]
+        }
+    };
+    let rmse_by_arm = sumsq_by_arm
+        .iter()
+        .zip(&count_by_arm)
+        .map(|(sq, &n)| if n == 0 { 0.0 } else { (sq / n as f64).sqrt() })
+        .collect();
+    Ok(ServeReport {
+        completed: latencies.len(),
+        rejected,
+        steps,
+        final_clock_us: clock,
+        p50_latency_us: percentile(0.5),
+        p99_latency_us: percentile(0.99),
+        tokens_per_s: if clock == 0 {
+            0.0
+        } else {
+            total_gen_tokens as f64 / (clock as f64 / 1e6)
+        },
+        total_gen_tokens,
+        peak_kv_bytes,
+        packed_bytes_by_arm,
+        kv_tokens_by_arm,
+        residual_bytes_by_arm,
+        rmse_by_arm,
+        trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::PrecisionPolicy;
+    use crate::serve::workload::Workload;
+
+    fn tiny_config(arms: Vec<ServeArm>) -> ServeConfig {
+        ServeConfig {
+            workload: Workload::parse("arrive:poisson@100/s,prompt:4..8,gen:4..8,n:10,seed:5")
+                .unwrap(),
+            arms,
+            max_batch: 4,
+            model: ModelConfig { layers: 2, dim: 16, vocab: 8, seed: 11 },
+            ..ServeConfig::default()
+        }
+    }
+
+    fn arm(name: &str, policy: &str) -> ServeArm {
+        ServeArm { name: name.into(), policy: PrecisionPolicy::parse(policy).unwrap() }
+    }
+
+    #[test]
+    fn runs_are_deterministic_in_the_config() {
+        let cfg = tiny_config(vec![
+            arm("f32", "kv=f32"),
+            arm("fp4-occ", "kv=fp4:e2m1/row/clamp@0.999+comp"),
+        ]);
+        let a = run_serve(&cfg).unwrap();
+        let b = run_serve(&cfg).unwrap();
+        assert_eq!(a, b);
+        assert!(a.completed > 0);
+    }
+
+    #[test]
+    fn generous_limits_complete_every_request_and_pass_the_byte_gate() {
+        let cfg = tiny_config(vec![
+            arm("f32", "kv=f32"),
+            arm("fp8", "kv=fp8:e4m3/row"),
+            arm("fp4-occ", "kv=fp4:e2m1/row/clamp@0.999+comp"),
+        ]);
+        let report = run_serve(&cfg).unwrap();
+        assert_eq!(report.completed, 10);
+        assert_eq!(report.rejected, 0);
+        for (i, a) in cfg.arms.iter().enumerate() {
+            let per_token = costmodel::kv_bytes_per_token(
+                &a.policy,
+                cfg.model.layers,
+                cfg.model.dim,
+            );
+            assert_eq!(
+                report.packed_bytes_by_arm[i],
+                report.kv_tokens_by_arm[i] * per_token,
+                "arm {:?} failed the costmodel byte gate",
+                a.name
+            );
+        }
+        // sampling follows the reference, so the f32 arm is exact
+        assert_eq!(report.rmse_by_arm[0], 0.0);
+        // quantized arms actually perturb logits
+        assert!(report.rmse_by_arm[1] > 0.0);
+        assert!(report.rmse_by_arm[2] > 0.0);
+        assert!(report.peak_kv_bytes > 0);
+        assert!(report.tokens_per_s > 0.0);
+    }
+
+    #[test]
+    fn quantized_cache_shrinks_peak_resident_bytes() {
+        let f32_run = run_serve(&tiny_config(vec![arm("f32", "kv=f32")])).unwrap();
+        let fp4_run = run_serve(&tiny_config(vec![arm(
+            "fp4-occ",
+            "kv=fp4:e2m1/row/clamp@0.999+comp",
+        )]))
+        .unwrap();
+        assert!(
+            fp4_run.peak_kv_bytes < f32_run.peak_kv_bytes,
+            "fp4 {} vs f32 {}",
+            fp4_run.peak_kv_bytes,
+            f32_run.peak_kv_bytes
+        );
+        // identical greedy traces: same tokens generated either way
+        assert_eq!(fp4_run.total_gen_tokens, f32_run.total_gen_tokens);
+    }
+
+    #[test]
+    fn zero_capacity_bucket_rejects_everything_loudly() {
+        let mut cfg = tiny_config(vec![arm("f32", "kv=f32")]);
+        cfg.bucket = BucketConfig { capacity: 0.0, refill_per_s: 1.0 };
+        let report = run_serve(&cfg).unwrap();
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.rejected, 10);
+        let loud = report.trace.iter().any(|e| {
+            matches!(e, SchedEvent::Reject { reason, .. } if reason.contains("capacity"))
+        });
+        assert!(loud, "rejects must carry a reason");
+    }
+
+    #[test]
+    fn token_bucket_boundary_exact_exhaustion_admits() {
+        let mut b = TokenBucket::new(&BucketConfig { capacity: 10.0, refill_per_s: 5.0 });
+        assert!(b.try_take(10.0), "cost exactly equal to the balance admits");
+        assert_eq!(b.available(), 0.0);
+        assert!(!b.try_take(f64::MIN_POSITIVE), "empty bucket admits nothing");
+        b.refill(1_000_000);
+        assert_eq!(b.available(), 5.0);
+        b.refill(10_000_000);
+        assert_eq!(b.available(), 10.0, "refill caps at capacity");
+    }
+
+    #[test]
+    fn round_robin_spreads_requests_across_arms() {
+        let cfg = tiny_config(vec![
+            arm("f32", "kv=f32"),
+            arm("fp8", "kv=fp8:e4m3/row"),
+        ]);
+        let report = run_serve(&cfg).unwrap();
+        for e in &report.trace {
+            if let SchedEvent::Admit { id, arm, .. } = e {
+                assert_eq!(*arm, id % 2);
+            }
+        }
+        assert!(report.kv_tokens_by_arm.iter().all(|&t| t > 0));
+    }
+}

@@ -1,0 +1,362 @@
+//! Synthetic serving workloads: a seeded request-arrival grammar in the
+//! [`FaultPlan`](crate::resilience::FaultPlan) style — parse/Display
+//! round-trip exactly, validation on every path, and the same workload
+//! value always materializes the identical request trace (the anchor of
+//! the scheduler-determinism property).
+//!
+//! # Workload grammar
+//!
+//! ```text
+//! workload := term ("," term)*
+//! term     := "arrive:" process "@" RATE "/s"   -- required
+//!           | "prompt:" LO ".." HI              -- required
+//!           | "gen:" LO ".." HI                 -- required
+//!           | "n:" COUNT                        -- optional, default 64
+//!           | "seed:" U64                       -- optional, default 0
+//! process  := "poisson" | "uniform"
+//! ```
+//!
+//! Example: `arrive:poisson@8/s,prompt:32..256,gen:64..512,seed:7`.
+//!
+//! `LO..HI` ranges are half-open like Rust ranges: lengths are drawn
+//! uniformly from `[LO, HI)`, so `prompt:32..256` never yields 256.
+//! Canonical `Display` omits terms at their defaults (`n:64`, `seed:0`),
+//! and `parse(display(w)) == w` (fuzz-pinned by the `workload_parse`
+//! target). Validation bounds: `1e-3 <= RATE <= 1e6`, `1 <= LO < HI <=
+//! 1e6`, `1 <= COUNT <= 1e6` — duplicates and unknown terms are hard
+//! errors, never silent defaults.
+
+use std::fmt;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::Rng;
+
+/// Default request count when the `n:` term is omitted.
+pub const DEFAULT_N: usize = 64;
+
+/// The arrival process shaping interarrival gaps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arrival {
+    /// Poisson process: i.i.d. exponential gaps with mean `1/rate`.
+    Poisson,
+    /// Deterministic spacing of exactly `1/rate` seconds.
+    Uniform,
+}
+
+impl Arrival {
+    pub fn name(self) -> &'static str {
+        match self {
+            Arrival::Poisson => "poisson",
+            Arrival::Uniform => "uniform",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "poisson" => Arrival::Poisson,
+            "uniform" => Arrival::Uniform,
+            other => bail!("unknown arrival process {other:?} (expected poisson or uniform)"),
+        })
+    }
+}
+
+/// A half-open length range `LO..HI`: draws are uniform over `[LO, HI)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LenRange {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl LenRange {
+    fn parse(s: &str, what: &str) -> Result<Self> {
+        let (lo, hi) = s
+            .split_once("..")
+            .ok_or_else(|| anyhow::anyhow!("{what} range must be LO..HI, got {s:?}"))?;
+        let lo: usize =
+            lo.parse().map_err(|_| anyhow::anyhow!("bad {what} lower bound {lo:?}"))?;
+        let hi: usize =
+            hi.parse().map_err(|_| anyhow::anyhow!("bad {what} upper bound {hi:?}"))?;
+        Ok(LenRange { lo, hi })
+    }
+
+    fn validate(&self, what: &str) -> Result<()> {
+        ensure!(self.lo >= 1, "{what} range lower bound must be >= 1, got {}", self.lo);
+        ensure!(
+            self.hi > self.lo,
+            "{what} range {}..{} is empty (half-open [lo, hi) needs hi > lo)",
+            self.lo,
+            self.hi
+        );
+        ensure!(self.hi <= 1_000_000, "{what} range upper bound {} exceeds 1e6", self.hi);
+        Ok(())
+    }
+}
+
+impl fmt::Display for LenRange {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}..{}", self.lo, self.hi)
+    }
+}
+
+/// One synthetic request of the materialized trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Request {
+    /// Arrival-order index (also the round-robin policy-arm key).
+    pub id: usize,
+    /// Arrival time on the scheduler's simulated clock.
+    pub arrive_us: u64,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+}
+
+/// A complete synthetic workload (see the module docs for the grammar).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Workload {
+    pub arrival: Arrival,
+    /// Mean request arrivals per second.
+    pub rate: f64,
+    pub prompt: LenRange,
+    pub gen: LenRange,
+    /// Total request count.
+    pub n: usize,
+    pub seed: u64,
+}
+
+impl Default for Workload {
+    /// The module-doc example workload:
+    /// `arrive:poisson@8/s,prompt:32..256,gen:64..512,seed:7`.
+    fn default() -> Self {
+        Workload {
+            arrival: Arrival::Poisson,
+            rate: 8.0,
+            prompt: LenRange { lo: 32, hi: 256 },
+            gen: LenRange { lo: 64, hi: 512 },
+            n: DEFAULT_N,
+            seed: 7,
+        }
+    }
+}
+
+impl Workload {
+    /// Parse a workload string (see the module docs). Validates.
+    pub fn parse(s: &str) -> Result<Self> {
+        ensure!(!s.trim().is_empty(), "empty workload");
+        let mut arrive: Option<(Arrival, f64)> = None;
+        let mut prompt: Option<LenRange> = None;
+        let mut gen: Option<LenRange> = None;
+        let mut n: Option<usize> = None;
+        let mut seed: Option<u64> = None;
+        for term in s.split(',') {
+            let (kind, args) = term.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!("expected kind:args, got {term:?} in workload {s:?}")
+            })?;
+            match kind {
+                "arrive" => {
+                    ensure!(arrive.is_none(), "duplicate arrive term in {s:?}");
+                    let (proc_name, rate_str) = args.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("arrive term must be process@RATE/s, got {args:?}")
+                    })?;
+                    let rate_str = rate_str.strip_suffix("/s").ok_or_else(|| {
+                        anyhow::anyhow!("arrival rate must end in /s, got {args:?}")
+                    })?;
+                    let rate: f64 = rate_str
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad arrival rate {rate_str:?}"))?;
+                    arrive = Some((Arrival::from_name(proc_name)?, rate));
+                }
+                "prompt" => {
+                    ensure!(prompt.is_none(), "duplicate prompt term in {s:?}");
+                    prompt = Some(LenRange::parse(args, "prompt")?);
+                }
+                "gen" => {
+                    ensure!(gen.is_none(), "duplicate gen term in {s:?}");
+                    gen = Some(LenRange::parse(args, "gen")?);
+                }
+                "n" => {
+                    ensure!(n.is_none(), "duplicate n term in {s:?}");
+                    n = Some(
+                        args.parse()
+                            .map_err(|_| anyhow::anyhow!("bad request count {args:?}"))?,
+                    );
+                }
+                "seed" => {
+                    ensure!(seed.is_none(), "duplicate seed term in {s:?}");
+                    seed = Some(
+                        args.parse().map_err(|_| anyhow::anyhow!("bad seed {args:?}"))?,
+                    );
+                }
+                other => bail!(
+                    "unknown workload term {other:?} (expected arrive, prompt, gen, n or seed)"
+                ),
+            }
+        }
+        let (arrival, rate) =
+            arrive.ok_or_else(|| anyhow::anyhow!("workload {s:?} is missing its arrive term"))?;
+        let w = Workload {
+            arrival,
+            rate,
+            prompt: prompt
+                .ok_or_else(|| anyhow::anyhow!("workload {s:?} is missing its prompt term"))?,
+            gen: gen.ok_or_else(|| anyhow::anyhow!("workload {s:?} is missing its gen term"))?,
+            n: n.unwrap_or(DEFAULT_N),
+            seed: seed.unwrap_or(0),
+        };
+        w.validate()?;
+        Ok(w)
+    }
+
+    /// The centralized invariant checks (run automatically by `parse`).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.rate.is_finite() && self.rate >= 1e-3 && self.rate <= 1e6,
+            "arrival rate must lie in [1e-3, 1e6] requests/s, got {}",
+            self.rate
+        );
+        self.prompt.validate("prompt")?;
+        self.gen.validate("gen")?;
+        ensure!(self.n >= 1, "workload must contain at least one request");
+        ensure!(self.n <= 1_000_000, "request count {} exceeds 1e6", self.n);
+        Ok(())
+    }
+
+    /// Materialize the deterministic request trace: equal workload values
+    /// always produce identical requests (seeded splitmix64 draws — no
+    /// ambient randomness). Expects a validated workload.
+    pub fn requests(&self) -> Vec<Request> {
+        let mut rng = Rng::new(self.seed);
+        let mut t_us = 0u64;
+        (0..self.n)
+            .map(|id| {
+                let gap_s = match self.arrival {
+                    // inverse-CDF exponential gap; unit_f32 < 1 so the
+                    // log argument stays strictly positive
+                    Arrival::Poisson => -(1.0 - rng.unit_f32() as f64).ln() / self.rate,
+                    Arrival::Uniform => 1.0 / self.rate,
+                };
+                t_us += (gap_s * 1e6).round() as u64;
+                let prompt_len =
+                    self.prompt.lo + rng.below((self.prompt.hi - self.prompt.lo) as u64) as usize;
+                let gen_len =
+                    self.gen.lo + rng.below((self.gen.hi - self.gen.lo) as u64) as usize;
+                Request { id, arrive_us: t_us, prompt_len, gen_len }
+            })
+            .collect()
+    }
+}
+
+impl fmt::Display for Workload {
+    /// Canonical form: required terms in grammar order, optional terms
+    /// only when off their defaults. `parse(display(w)) == w`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "arrive:{}@{}/s,prompt:{},gen:{}",
+            self.arrival.name(),
+            self.rate,
+            self.prompt,
+            self.gen
+        )?;
+        if self.n != DEFAULT_N {
+            write!(f, ",n:{}", self.n)?;
+        }
+        if self.seed != 0 {
+            write!(f, ",seed:{}", self.seed)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_module_doc_example_and_round_trips() {
+        let s = "arrive:poisson@8/s,prompt:32..256,gen:64..512,seed:7";
+        let w = Workload::parse(s).unwrap();
+        assert_eq!(w, Workload::default());
+        assert_eq!(w.to_string(), s); // n:64 elided, seed kept
+        assert_eq!(Workload::parse(&w.to_string()).unwrap(), w);
+    }
+
+    #[test]
+    fn display_elides_defaults_and_stays_a_fixed_point() {
+        let w = Workload::parse("arrive:uniform@2.5/s,prompt:1..2,gen:1..2,n:64,seed:0")
+            .unwrap();
+        assert_eq!(w.to_string(), "arrive:uniform@2.5/s,prompt:1..2,gen:1..2");
+        let back = Workload::parse(&w.to_string()).unwrap();
+        assert_eq!(back, w);
+        assert_eq!(back.to_string(), w.to_string());
+        // non-default n survives the round trip
+        let w = Workload::parse("arrive:poisson@1/s,prompt:4..8,gen:4..8,n:3").unwrap();
+        assert_eq!(w.to_string(), "arrive:poisson@1/s,prompt:4..8,gen:4..8,n:3");
+    }
+
+    #[test]
+    fn rejects_malformed_and_out_of_range_workloads() {
+        for bad in [
+            "",
+            "prompt:32..256,gen:64..512",                         // missing arrive
+            "arrive:poisson@8/s,gen:64..512",                     // missing prompt
+            "arrive:poisson@8/s,prompt:32..256",                  // missing gen
+            "arrive:poisson@8,prompt:1..2,gen:1..2",              // rate without /s
+            "arrive:poisson@0/s,prompt:1..2,gen:1..2",            // zero rate
+            "arrive:poisson@-3/s,prompt:1..2,gen:1..2",           // negative rate
+            "arrive:poisson@nan/s,prompt:1..2,gen:1..2",          // non-finite
+            "arrive:poisson@1e7/s,prompt:1..2,gen:1..2",          // rate too high
+            "arrive:burst@8/s,prompt:1..2,gen:1..2",              // unknown process
+            "arrive:poisson@8/s,prompt:0..2,gen:1..2",            // lo < 1
+            "arrive:poisson@8/s,prompt:5..5,gen:1..2",            // empty range
+            "arrive:poisson@8/s,prompt:9..5,gen:1..2",            // inverted
+            "arrive:poisson@8/s,prompt:1..2,gen:1..2,n:0",        // empty workload
+            "arrive:poisson@8/s,prompt:1..2,gen:1..2,n:2000001",  // n too large
+            "arrive:poisson@8/s,prompt:1..2,gen:1..2,burst:3",    // unknown term
+            "arrive:poisson@8/s,prompt:1..2,gen:1..2,seed:x",     // bad seed
+            "arrive:poisson@8/s,arrive:uniform@1/s,prompt:1..2,gen:1..2", // dup
+            "prompt",                                             // no colon
+        ] {
+            assert!(Workload::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn requests_are_deterministic_in_the_seed_and_respect_ranges() {
+        let w = Workload::parse("arrive:poisson@50/s,prompt:8..32,gen:4..16,n:200,seed:9")
+            .unwrap();
+        let a = w.requests();
+        let b = w.requests();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 200);
+        let mut last = 0u64;
+        for r in &a {
+            assert!(r.arrive_us >= last, "arrivals must be non-decreasing");
+            last = r.arrive_us;
+            assert!((8..32).contains(&r.prompt_len), "{r:?}");
+            assert!((4..16).contains(&r.gen_len), "{r:?}");
+        }
+        // a different seed moves the trace
+        let mut w2 = w.clone();
+        w2.seed = 10;
+        assert_ne!(w2.requests(), a);
+    }
+
+    #[test]
+    fn uniform_arrivals_are_evenly_spaced() {
+        let w = Workload::parse("arrive:uniform@10/s,prompt:1..2,gen:1..2,n:5").unwrap();
+        let rs = w.requests();
+        for (i, r) in rs.iter().enumerate() {
+            assert_eq!(r.arrive_us, (i as u64 + 1) * 100_000);
+        }
+    }
+
+    #[test]
+    fn poisson_mean_gap_tracks_the_rate() {
+        let w = Workload::parse("arrive:poisson@100/s,prompt:1..2,gen:1..2,n:4000,seed:3")
+            .unwrap();
+        let rs = w.requests();
+        let mean_gap_us = rs.last().unwrap().arrive_us as f64 / rs.len() as f64;
+        // expected 10_000us; a 4000-sample mean sits within a few percent
+        assert!((mean_gap_us - 10_000.0).abs() < 1_000.0, "{mean_gap_us}");
+    }
+}

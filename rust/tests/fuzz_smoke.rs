@@ -74,6 +74,15 @@ const VALID_POLICIES: &[&str] = &[
     "wire=fp4:e2m1/row;0..100:wire=fp8:e4m3,wire.inter=fp4:e2m1/row",
 ];
 
+const VALID_WORKLOADS: &[&str] = &[
+    "arrive:poisson@8/s,prompt:32..256,gen:64..512,seed:7",
+    "arrive:uniform@0.5/s,prompt:1..2,gen:1..2",
+    "arrive:poisson@1000000/s,prompt:1..1000000,gen:1..1000000,n:1000000",
+    "arrive:uniform@100/s,prompt:4..8,gen:4..8,n:10,seed:5",
+    "arrive:poisson@2.5/s,prompt:8..16,gen:8..16,n:3,seed:18446744073709551615",
+    "arrive:poisson@0.001/s,prompt:1..2,gen:1..2,n:1",
+];
+
 const VALID_FAULT_PLANS: &[&str] = &[
     "none",
     "drop:w3@120,flip:inter@0.001,straggle:inter@2x",
@@ -168,6 +177,60 @@ fn smoke_fault_plan_parse_three_regimes() {
             "corpus plan {s:?} must parse"
         );
         fuzzing::check_fault_plan_parse(s.as_bytes());
+    }
+}
+
+#[test]
+fn smoke_workload_parse_three_regimes() {
+    // the grammar alphabet, extended with the serve workload keywords
+    const WORKLOAD_ALPHABET: &[u8] = b"arrivepoissonuniformpromptgenseedn:@/s..,0159 ";
+    let workload_soup = |rng: &mut Rng, max_len: usize| -> Vec<u8> {
+        let n = rng.below(max_len as u64 + 1) as usize;
+        (0..n)
+            .map(|_| WORKLOAD_ALPHABET[rng.below(WORKLOAD_ALPHABET.len() as u64) as usize])
+            .collect()
+    };
+    for seed in 0..600u64 {
+        let mut rng = Rng::new(0xFA11_5000 + seed);
+        fuzzing::check_workload_parse(&random_bytes(&mut rng, 96));
+        fuzzing::check_workload_parse(&workload_soup(&mut rng, 64));
+        let base = VALID_WORKLOADS[rng.below(VALID_WORKLOADS.len() as u64) as usize];
+        fuzzing::check_workload_parse(&mutate(&mut rng, base));
+    }
+    for s in VALID_WORKLOADS {
+        assert!(
+            fp4train::serve::Workload::parse(s).is_ok(),
+            "corpus workload {s:?} must parse"
+        );
+        fuzzing::check_workload_parse(s.as_bytes());
+    }
+}
+
+#[test]
+fn smoke_workload_rejects_known_invalids_without_panic() {
+    // zero/negative/non-finite rates, empty or inverted ranges,
+    // duplicate and unknown terms, missing required terms: must be
+    // *rejected* (not accepted, not panicked on)
+    for s in [
+        "arrive:poisson@0/s,prompt:1..2,gen:1..2",
+        "arrive:poisson@-1/s,prompt:1..2,gen:1..2",
+        "arrive:poisson@inf/s,prompt:1..2,gen:1..2",
+        "arrive:poisson@8,prompt:1..2,gen:1..2",
+        "arrive:drizzle@8/s,prompt:1..2,gen:1..2",
+        "arrive:poisson@8/s,prompt:5..5,gen:1..2",
+        "arrive:poisson@8/s,prompt:0..4,gen:1..2",
+        "arrive:poisson@8/s,prompt:1..2,gen:1..2,n:0",
+        "arrive:poisson@8/s,prompt:1..2,gen:1..2,n:3,n:4",
+        "arrive:poisson@8/s,gen:1..2",
+        "prompt:1..2,gen:1..2",
+        "arrive:poisson@8/s,prompt:1..2,gen:1..2,burst:9",
+        "",
+    ] {
+        fuzzing::check_workload_parse(s.as_bytes());
+        assert!(
+            fp4train::serve::Workload::parse(s).is_err(),
+            "must reject {s:?}"
+        );
     }
 }
 

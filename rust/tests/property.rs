@@ -10,6 +10,10 @@ use fp4train::policy::{
 };
 use fp4train::quant::{self, occ};
 use fp4train::runtime::Manifest;
+use fp4train::serve::{
+    run_serve, Arrival, BucketConfig, KvSide, LenRange, ModelConfig, RequestKv, SchedEvent,
+    ServeArm, ServeConfig, TokenBucket, Workload,
+};
 use fp4train::util::Rng;
 
 const FORMATS: [Fp4Kind; 3] = [Fp4Kind::E2M1, Fp4Kind::E1M2, Fp4Kind::E3M0];
@@ -1213,4 +1217,173 @@ fn prop_manifest_rejects_garbage_lines() {
         let text = format!("#BOGUS {junk}\n");
         assert!(Manifest::parse(&text).is_err(), "seed {seed}: accepted {text:?}");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Serving subsystem: KV-cache fidelity, scheduler determinism, rate limiter
+// ---------------------------------------------------------------------------
+
+/// Every stored KV row reads back exactly as `QuantSpec::qdq` of the
+/// original row — for every format x granularity, with and without the
+/// OCC clamp (compensated and not).
+#[test]
+fn prop_kv_cache_read_matches_qdq_every_format_and_granularity() {
+    let dim = 24;
+    let layers = 2;
+    for seed in cases(3) {
+        let mut rng = Rng::new(seed);
+        for fmt in ALL_FORMATS {
+            for gran in ALL_GRANS {
+                for clamp in [None, Some((0.99, false)), Some((0.99, true))] {
+                    let mut spec = QuantSpec::new(fmt, gran);
+                    if let Some((alpha, comp)) = clamp {
+                        spec = spec.with_clamp(alpha, comp);
+                    }
+                    let mut kv = RequestKv::new(spec, layers, dim);
+                    let mut originals: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+                    for _ in 0..4 {
+                        let k = rng.normal_vec(dim, 1.0);
+                        let v = rng.normal_vec(dim, 2.0);
+                        for l in 0..layers {
+                            kv.append(l, &k, &v);
+                        }
+                        originals.push((k, v));
+                    }
+                    for (pos, (k, v)) in originals.iter().enumerate() {
+                        let qk = spec.qdq(k, 1, dim);
+                        let qv = spec.qdq(v, 1, dim);
+                        for l in 0..layers {
+                            assert_eq!(
+                                kv.read_row(l, KvSide::K, pos),
+                                qk,
+                                "seed {seed} {spec} layer {l} pos {pos} (K)"
+                            );
+                            assert_eq!(
+                                kv.read_row(l, KvSide::V, pos),
+                                qv,
+                                "seed {seed} {spec} layer {l} pos {pos} (V)"
+                            );
+                        }
+                    }
+                    // byte accounting: packed bytes are exactly
+                    // stored_bytes per row, clamp or no clamp
+                    assert_eq!(
+                        kv.packed_bytes,
+                        2 * layers as u64 * kv.tokens() as u64 * spec.stored_bytes(1, dim),
+                        "seed {seed} {spec}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn serve_config_for(seed: u64) -> ServeConfig {
+    let mut rng = Rng::new(seed ^ 0x5EED_CAFE);
+    ServeConfig {
+        workload: Workload {
+            arrival: if rng.below(2) == 0 { Arrival::Poisson } else { Arrival::Uniform },
+            rate: 20.0 + rng.below(200) as f64,
+            prompt: LenRange { lo: 2, hi: 8 },
+            gen: LenRange { lo: 2, hi: 8 },
+            n: 8 + rng.below(8) as usize,
+            seed,
+        },
+        arms: vec![
+            ServeArm {
+                name: "f32".into(),
+                policy: PrecisionPolicy::parse("kv=f32").unwrap(),
+            },
+            ServeArm {
+                name: "fp4-occ".into(),
+                policy: PrecisionPolicy::parse("kv=fp4:e2m1/row/clamp@0.999+comp").unwrap(),
+            },
+        ],
+        max_batch: 1 + rng.below(4) as usize,
+        model: ModelConfig { layers: 2, dim: 8, vocab: 8, seed: 11 },
+        ..ServeConfig::default()
+    }
+}
+
+/// Same workload seed (same config) ⇒ identical admission/completion
+/// trace and identical metrics, across arrival processes, batch caps
+/// and mixed-precision arms.
+#[test]
+fn prop_scheduler_trace_deterministic_in_workload_seed() {
+    for seed in cases(10) {
+        let cfg = serve_config_for(seed);
+        let a = run_serve(&cfg).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let b = run_serve(&cfg).unwrap();
+        assert_eq!(a, b, "seed {seed}: non-deterministic serve run");
+        assert_eq!(a.completed, cfg.workload.n, "seed {seed}: lost requests");
+        assert!(
+            a.trace.iter().any(|e| matches!(e, SchedEvent::Complete { .. })),
+            "seed {seed}: empty trace"
+        );
+    }
+}
+
+/// Rate-limiter boundaries: a take of exactly the available balance
+/// succeeds, the balance never goes negative, and refill caps at
+/// capacity.
+#[test]
+fn prop_token_bucket_boundaries() {
+    for seed in cases(50) {
+        let mut rng = Rng::new(seed);
+        let capacity = 1.0 + rng.below(1000) as f64;
+        let mut bucket =
+            TokenBucket::new(&BucketConfig { capacity, refill_per_s: 10.0 });
+        for _ in 0..50 {
+            let before = bucket.available();
+            let cost = match rng.below(3) {
+                0 => before, // the exact-exhaustion boundary
+                1 => rng.below(1 + capacity as u64) as f64,
+                _ => before + 1.0,
+            };
+            let took = bucket.try_take(cost);
+            assert_eq!(took, cost <= before, "seed {seed}: admit iff affordable");
+            assert!(bucket.available() >= 0.0, "seed {seed}: negative balance");
+            assert_eq!(
+                bucket.available(),
+                if took { before - cost } else { before },
+                "seed {seed}"
+            );
+            bucket.refill(rng.below(200_000));
+            assert!(bucket.available() <= capacity, "seed {seed}: refill over cap");
+        }
+    }
+}
+
+/// Scheduler-level boundaries: a request whose token cost exactly
+/// equals the bucket capacity is admitted; with a zero-capacity bucket
+/// every request is rejected loudly (reasoned trace event); a bucket
+/// that can never cover the cost and never refills is a hard error,
+/// not a hang.
+#[test]
+fn prop_rate_limiter_scheduler_boundaries() {
+    // degenerate ranges pin cost exactly: prompt 3, gen 4 -> cost 7
+    let mut cfg = serve_config_for(0xB0DA);
+    cfg.workload.prompt = LenRange { lo: 3, hi: 4 };
+    cfg.workload.gen = LenRange { lo: 4, hi: 5 };
+    cfg.workload.n = 3;
+    cfg.bucket = BucketConfig { capacity: 7.0, refill_per_s: 100.0 };
+    let report = run_serve(&cfg).unwrap();
+    assert_eq!(report.completed, 3, "exact-cost requests must be admitted");
+    assert_eq!(report.rejected, 0);
+
+    cfg.bucket = BucketConfig { capacity: 0.0, refill_per_s: 100.0 };
+    let report = run_serve(&cfg).unwrap();
+    assert_eq!(report.completed, 0);
+    assert_eq!(report.rejected, 3, "zero-budget requests are rejected");
+    for e in &report.trace {
+        if let SchedEvent::Reject { reason, .. } = e {
+            assert!(reason.contains("capacity"), "loud reject, got {reason:?}");
+        }
+    }
+
+    cfg.bucket = BucketConfig { capacity: 7.0, refill_per_s: 0.0 };
+    // the first request drains the bucket; with no refill the second
+    // can never be served — the scheduler must error, not spin
+    let err = run_serve(&cfg).unwrap_err().to_string();
+    assert!(err.contains("never refills"), "{err}");
 }
