@@ -47,6 +47,11 @@ pub struct RunConfig {
     /// Arm the numeric sentinel on the dp sim (`-o sentinel=true`):
     /// loss/grad guardrails, snapshot rollback, precision escalation.
     pub sentinel: bool,
+    /// Gradient-bucket capacity in MiB for the dp sim's overlap pipeline
+    /// (`-o bucket_mb=4`). `None` defers to the policy's `bucket=` key;
+    /// with neither set the legacy unbucketed reduction runs
+    /// (bit-identical, pinned).
+    pub bucket_mb: Option<usize>,
     /// Synthetic serving workload for the `serve` command
     /// (`-o workload=arrive:poisson@8/s,prompt:32..256,gen:64..512,seed:7`;
     /// see [`crate::serve::workload`] for the grammar).
@@ -69,6 +74,7 @@ impl Default for RunConfig {
             precision: PrecisionPolicy::default(),
             fault_plan: FaultPlan::none(),
             sentinel: false,
+            bucket_mb: None,
             workload: Workload::default(),
         }
     }
@@ -98,6 +104,11 @@ impl RunConfig {
             "ckpt_format" => self.set_class(TensorClass::Checkpoint, value)?,
             "faults" => self.fault_plan = FaultPlan::parse(value)?,
             "workload" => self.workload = Workload::parse(value)?,
+            "bucket_mb" => {
+                let mb: usize = value.parse()?;
+                anyhow::ensure!(mb >= 1, "bucket_mb={mb} (need at least 1 MiB)");
+                self.bucket_mb = Some(mb);
+            }
             "sentinel" => {
                 self.sentinel = match value {
                     "true" | "1" | "on" => true,
@@ -128,6 +139,15 @@ impl RunConfig {
     /// `None` = raw f32 (v1).
     pub fn ckpt_format(&self, step: usize) -> Option<QuantSpec> {
         self.precision.ckpt_spec_at(step)
+    }
+
+    /// Effective gradient-bucket capacity in bytes for the dp sim's
+    /// overlap pipeline: the `-o bucket_mb=` knob beats the policy's
+    /// `bucket=` key; `None` = the legacy unbucketed reduction.
+    pub fn bucket_bytes(&self) -> Option<u64> {
+        self.bucket_mb
+            .map(|mb| (mb as u64) << 20)
+            .or_else(|| self.precision.bucket().map(|b| b.bytes))
     }
 }
 
@@ -217,6 +237,25 @@ mod tests {
         // `faults=none` is the explicit fault-free plan
         c.set("faults", "none").unwrap();
         assert!(c.fault_plan.is_none());
+    }
+
+    #[test]
+    fn bucket_mb_knob_and_policy_key_compose() {
+        let mut c = RunConfig::default();
+        // default: no bucketing from either source
+        assert_eq!(c.bucket_mb, None);
+        assert_eq!(c.bucket_bytes(), None);
+        // the policy `bucket=` key alone drives the pipeline
+        c.set("precision", "wire=fp8:e4m3,bucket=512kb").unwrap();
+        assert_eq!(c.bucket_bytes(), Some(512 << 10));
+        // the CLI knob beats the policy key
+        c.set("bucket_mb", "4").unwrap();
+        assert_eq!(c.bucket_mb, Some(4));
+        assert_eq!(c.bucket_bytes(), Some(4 << 20));
+        // malformed / degenerate values are hard errors
+        assert!(c.set("bucket_mb", "0").is_err());
+        assert!(c.set("bucket_mb", "xyz").is_err());
+        assert!(c.set("bucket_mb", "-1").is_err());
     }
 
     #[test]

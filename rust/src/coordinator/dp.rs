@@ -39,6 +39,16 @@
 //! and wire precision is temporarily escalated while training
 //! restabilizes (see [`crate::resilience`]).
 //!
+//! Overlap: [`DpSim::with_bucket_bytes`] (from `-o bucket_mb=` or the
+//! policy's `bucket=` key via [`crate::config::RunConfig::bucket_bytes`])
+//! switches the reduction to the bucketed pipeline — whole-tensor buckets
+//! in reverse production order, one collective per bucket, bit-exact with
+//! the per-tensor loop. Each step then records per-bucket
+//! [`FabricStats`] deltas ([`DpSim::bucket_reports`]) and models the
+//! two-resource compute/comm timeline ([`DpSim::last_overlap`],
+//! [`DpSim::overlap_summary`]) with straggler factors from the fault
+//! plan.
+//!
 //! §Perf: the comm path reuses persistent buffers per step — the fabric
 //! owns one wire [`PackedTensor`](crate::formats::PackedTensor) scratch
 //! (`pack_into` reuses its capacity and re-stamps the format on a wire
@@ -54,11 +64,14 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 use xla::Literal;
 
+use crate::costmodel::{self, OverlapTimeline};
 use crate::data::corpus::Corpus;
 use crate::data::loader::{LoaderConfig, Sampler};
-use crate::fabric::{Fabric, FabricStats, FaultPlan, SliceSource, Topology};
+use crate::fabric::{
+    BucketReport, BucketSpec, Fabric, FabricStats, FaultPlan, GradSource, SliceSource, Topology,
+};
 use crate::formats::{shape2d, QuantSpec};
-use crate::policy::PrecisionPolicy;
+use crate::policy::{LinkClass, PrecisionPolicy};
 use crate::resilience::{Sentinel, SentinelConfig};
 use crate::runtime::{ConfigEntry, Engine, StepSpec};
 
@@ -137,6 +150,16 @@ pub struct DpSim {
     /// The active fault plan (mirrors the fabric's; kept for the
     /// compute-side `nan:` faults the wire path cannot see).
     plan: FaultPlan,
+    /// Bucket capacity in f32 payload bytes for the overlap pipeline
+    /// (`-o bucket_mb=` / policy `bucket=`); `None` (the default) runs
+    /// the legacy unbucketed per-tensor reduction bit-for-bit.
+    bucket_bytes: Option<u64>,
+    /// Per-bucket fabric ledger for the most recent bucketed step
+    /// (empty while unbucketed).
+    pub bucket_reports: Vec<BucketReport>,
+    /// Two-resource compute/comm timeline modeled from the most recent
+    /// bucketed step's per-bucket ledger (`None` while unbucketed).
+    pub last_overlap: Option<OverlapTimeline>,
     /// Numeric guardrails; `None` (the default) observes nothing.
     sentinel: Option<Sentinel>,
     /// Last known-good optimizer state `(step, 3n host tensors)`,
@@ -202,6 +225,9 @@ impl DpSim {
             acc,
             fabric,
             plan: FaultPlan::none(),
+            bucket_bytes: None,
+            bucket_reports: Vec::new(),
+            last_overlap: None,
             sentinel: None,
             snapshot: None,
         })
@@ -229,6 +255,19 @@ impl DpSim {
     pub fn with_fault_plan(mut self, plan: FaultPlan) -> Result<Self> {
         self.fabric = Fabric::with_faults(self.fabric.topology, plan.clone())?;
         self.plan = plan;
+        Ok(self)
+    }
+
+    /// Arm the bucketed overlap pipeline: gradients are partitioned into
+    /// `bytes`-capacity buckets (whole tensors, reverse production
+    /// order — see [`crate::fabric::bucket`]) and each bucket reduces as
+    /// the simulated backward "produces" it. Bit-exact with the
+    /// unbucketed path (pinned by property test); what changes is the
+    /// per-bucket ledger ([`DpSim::bucket_reports`]) and the modeled
+    /// overlap timeline ([`DpSim::last_overlap`]).
+    pub fn with_bucket_bytes(mut self, bytes: u64) -> Result<Self> {
+        BucketSpec::from_bytes(bytes)?;
+        self.bucket_bytes = Some(bytes);
         Ok(self)
     }
 
@@ -343,12 +382,33 @@ impl DpSim {
 
         let bytes_before = self.fabric.stats.total_bytes();
         let equiv_before = self.fabric.stats.total_f32_equiv();
-        for (gi, per_worker) in grads.iter().enumerate() {
-            let len = per_worker[0].len();
-            let (rows, cols) = shape2d(&self.grad_spec.outputs[gi].shape, len);
-            let src = SliceSource { grads: per_worker };
-            self.fabric
-                .all_reduce_mean(&src, rows, cols, &specs, &mut self.acc[gi])?;
+        if let Some(cap) = self.bucket_bytes {
+            // bucketed path: one collective per bucket in reverse
+            // production order, per-bucket ledger feeding the overlap
+            // timeline. Bit-exact with the loop below (whole-tensor
+            // buckets run the identical per-tensor collectives).
+            let shapes: Vec<(usize, usize)> = grads
+                .iter()
+                .enumerate()
+                .map(|(gi, pw)| shape2d(&self.grad_spec.outputs[gi].shape, pw[0].len()))
+                .collect();
+            let sources: Vec<SliceSource> =
+                grads.iter().map(|pw| SliceSource { grads: pw }).collect();
+            let srcs: Vec<&dyn GradSource> =
+                sources.iter().map(|s| s as &dyn GradSource).collect();
+            let reports = self
+                .fabric
+                .all_reduce_mean_bucketed(&srcs, &shapes, &specs, cap, &mut self.acc)?;
+            self.last_overlap = Some(self.model_overlap(&reports));
+            self.bucket_reports = reports;
+        } else {
+            for (gi, per_worker) in grads.iter().enumerate() {
+                let len = per_worker[0].len();
+                let (rows, cols) = shape2d(&self.grad_spec.outputs[gi].shape, len);
+                let src = SliceSource { grads: per_worker };
+                self.fabric
+                    .all_reduce_mean(&src, rows, cols, &specs, &mut self.acc[gi])?;
+            }
         }
         let step_bytes = self.fabric.stats.total_bytes() - bytes_before;
         let step_equiv = self.fabric.stats.total_f32_equiv() - equiv_before;
@@ -388,6 +448,51 @@ impl DpSim {
         let loss = (loss_sum / workers as f64) as f32;
         self.losses.push(loss);
         Ok(loss)
+    }
+
+    /// Model one bucketed step's two-resource timeline from its
+    /// per-bucket fabric ledger: each bucket's alpha-beta comm cost
+    /// (exact sends/bytes from the ledger, straggled per the fault plan)
+    /// pipelined against backward compute apportioned by payload — the
+    /// backward pass "produces" bucket `i` after spending compute
+    /// proportional to its share of the gradient bytes.
+    fn model_overlap(&self, reports: &[BucketReport]) -> OverlapTimeline {
+        let params = costmodel::LinkParams::defaults();
+        let straggle = costmodel::straggle_factors(&self.plan);
+        let tokens = (self.entry.model.batch * self.entry.model.seq_len) as u64;
+        let n_elems: usize = self.acc.iter().map(Vec::len).sum();
+        let compute_total =
+            costmodel::backward_compute_us(n_elems, tokens, costmodel::DEFAULT_FLOPS_PER_US);
+        let payload_total: u64 = reports.iter().map(|r| r.payload_bytes).sum::<u64>().max(1);
+        let compute: Vec<f64> = reports
+            .iter()
+            .map(|r| compute_total * r.payload_bytes as f64 / payload_total as f64)
+            .collect();
+        let comm: Vec<f64> = reports
+            .iter()
+            .map(|r| {
+                let sends = LinkClass::ALL.map(|l| r.stats.link(l).sends);
+                let bytes = LinkClass::ALL.map(|l| r.stats.link(l).bytes);
+                costmodel::step_time_us_straggled(&sends, &bytes, &params, &straggle)
+            })
+            .collect();
+        costmodel::overlap_timeline(&compute, &comm)
+    }
+
+    /// One-line summary of the most recent bucketed step's timeline
+    /// (`None` while the sim runs unbucketed).
+    pub fn overlap_summary(&self) -> Option<String> {
+        let t = self.last_overlap.as_ref()?;
+        Some(format!(
+            "overlap: {} buckets, compute {:.0} us + comm {:.0} us -> step {:.0} us \
+             (exposed {:.0} us, {:.0}% overlapped)",
+            self.bucket_reports.len(),
+            t.compute_us,
+            t.comm_us,
+            t.step_time_us_overlapped,
+            t.exposed_comm_us,
+            t.overlap_efficiency() * 100.0,
+        ))
     }
 
     /// Run the sentinel's guards over this step's local gradients:
@@ -463,6 +568,9 @@ impl DpSim {
         );
         if !matches!(self.fabric.topology, Topology::Flat { .. }) {
             s.push_str(&format!(" topology={}", self.fabric.topology));
+        }
+        if let Some(bytes) = self.bucket_bytes {
+            s.push_str(&format!(" bucket={}", BucketSpec { bytes }));
         }
         if !self.precision.schedule.is_empty() {
             s.push_str(&format!(

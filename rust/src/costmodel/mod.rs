@@ -12,6 +12,25 @@
 //! accounting *exactly* (asserted per arm by `repro fabric`), and
 //! [`step_time_us`] turns byte/send counts into a serialized alpha-beta
 //! step-time estimate with per-link-class latency/bandwidth parameters.
+//!
+//! # Two-resource overlap timeline
+//!
+//! [`step_time_us`] deliberately serializes compute then comm — it is
+//! retained as the **no-overlap baseline**. The bucketed pipeline
+//! ([`crate::fabric::bucket`]) instead pipelines the backward pass's
+//! compute against per-bucket collectives on a two-resource timeline:
+//! bucket `i` becomes available at the cumulative compute time
+//! `C_i = Σ compute[0..=i]`, and the (serial, in-order) comm resource
+//! starts it at `max(C_i, comm_end[i-1])`. [`overlap_timeline`] returns
+//! `step_time_us_overlapped` (the comm resource's finish time) and the
+//! `exposed_comm_us` breakdown — the comm that could *not* hide behind
+//! compute. Two invariants are property-pinned: `exposed_comm_us <=`
+//! the serialized comm estimate, and `step_time_us_overlapped <=
+//! compute + step_time_us(..)` (overlap never loses to the serialized
+//! baseline). [`step_time_us_straggled`] stretches each link's
+//! alpha-beta term by the [`FaultPlan`] `straggle:` factor — the
+//! lagging worker's link sets the pace — closing the straggler model
+//! into the timeline instead of only counting delayed transmissions.
 
 use crate::fabric::Topology;
 use crate::formats::QuantSpec;
@@ -228,16 +247,116 @@ impl LinkParams {
 
 /// Serialized alpha-beta step-time estimate in microseconds: every
 /// transmission pays its link's launch latency, bytes drain at the
-/// link's bandwidth, no compute/comm overlap. A deliberate lower-fidelity
-/// model — its value is ranking (topology, policy) arms, and its inputs
-/// (`sends`, `bytes` per link class) are exact.
+/// link's bandwidth, no compute/comm overlap and no faults. This model
+/// is **retained deliberately as the no-overlap, fault-free baseline**
+/// the bucketed pipeline is measured against: [`overlap_timeline`]'s
+/// `step_time_us_overlapped` is property-pinned `<= compute +
+/// step_time_us(..)` for every topology × params, and its
+/// `exposed_comm_us <= step_time_us(..)`. Its inputs (`sends`, `bytes`
+/// per link class) are exact.
 pub fn step_time_us(sends: &[u64; 4], bytes: &[u64; 4], params: &[LinkParams; 4]) -> f64 {
+    step_time_us_straggled(sends, bytes, params, &[1.0; 4])
+}
+
+/// [`step_time_us`] with each link's alpha-beta term stretched by a
+/// `straggle:` slowdown factor ([`straggle_factors`] resolves them from
+/// a [`FaultPlan`]): a collective cannot finish before its slowest
+/// link, so the lagging worker's factor multiplies both the launch
+/// latency and the drain time of everything that crosses its link.
+/// All-ones factors reduce exactly to the fault-free baseline.
+pub fn step_time_us_straggled(
+    sends: &[u64; 4],
+    bytes: &[u64; 4],
+    params: &[LinkParams; 4],
+    straggle: &[f64; 4],
+) -> f64 {
     (0..4)
         .map(|i| {
-            sends[i] as f64 * params[i].alpha_us
-                + bytes[i] as f64 / (params[i].gbps * 1e3)
+            straggle[i]
+                * (sends[i] as f64 * params[i].alpha_us
+                    + bytes[i] as f64 / (params[i].gbps * 1e3))
         })
         .sum()
+}
+
+/// Per-link `straggle:` slowdown factors of `plan`, indexed by
+/// [`LinkClass::index`] (1.0 = nominal) — the shape
+/// [`step_time_us_straggled`] consumes.
+pub fn straggle_factors(plan: &FaultPlan) -> [f64; 4] {
+    LinkClass::ALL.map(|l| plan.straggle_factor(l))
+}
+
+// ---------------------------------------------------------------------------
+// Two-resource overlap timeline (see module docs)
+
+/// Simulated accelerator throughput backing the compute side of the
+/// overlap timeline: FLOPs per microsecond (1e8 ≡ 100 TFLOP/s sustained).
+pub const DEFAULT_FLOPS_PER_US: f64 = 1e8;
+
+/// Backward-pass compute microseconds for `n_params` parameters over
+/// `tokens` tokens. Grounded in Table 5: the per-layer forward GEMM
+/// total `24bsh²` over `12h²` GEMM parameters per layer gives forward =
+/// `2 · tokens · params` FLOPs, and the backward pass costs twice the
+/// forward (one GEMM each for input grads and weight grads) — so
+/// `4 · tokens · n_params / flops_per_us`.
+pub fn backward_compute_us(n_params: usize, tokens: u64, flops_per_us: f64) -> f64 {
+    4.0 * tokens as f64 * n_params as f64 / flops_per_us
+}
+
+/// What [`overlap_timeline`] returns: both resource totals plus the
+/// critical-path results.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OverlapTimeline {
+    /// Total backward compute across all buckets, microseconds.
+    pub compute_us: f64,
+    /// Total comm across all buckets (the serialized comm time).
+    pub comm_us: f64,
+    /// Critical-path step time: when the last bucket's collective
+    /// drains. Always within `[max(compute, comm), compute + comm]`.
+    pub step_time_us_overlapped: f64,
+    /// Comm that could not hide behind compute:
+    /// `step_time_us_overlapped - compute_us` (>= 0).
+    pub exposed_comm_us: f64,
+}
+
+impl OverlapTimeline {
+    /// Fraction of comm hidden behind compute:
+    /// `(comm - exposed) / comm`, 1.0 when there is no comm at all.
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.comm_us <= 0.0 {
+            return 1.0;
+        }
+        (self.comm_us - self.exposed_comm_us) / self.comm_us
+    }
+}
+
+/// Run the two-resource schedule: backward produces bucket `i` at
+/// `C_i = Σ compute[0..=i]`; the comm resource is serial and in-order
+/// (one collective in flight, DDP-style), so bucket `i`'s collective
+/// starts at `max(C_i, comm_end[i-1])` and the step ends when the last
+/// one drains. The slices are parallel per-bucket arrays in production
+/// (launch) order and must have equal lengths.
+pub fn overlap_timeline(bucket_compute_us: &[f64], bucket_comm_us: &[f64]) -> OverlapTimeline {
+    assert_eq!(
+        bucket_compute_us.len(),
+        bucket_comm_us.len(),
+        "per-bucket compute/comm arrays must be parallel"
+    );
+    let mut produced = 0.0f64;
+    let mut comm_end = 0.0f64;
+    for (&c, &m) in bucket_compute_us.iter().zip(bucket_comm_us) {
+        produced += c;
+        comm_end = produced.max(comm_end) + m;
+    }
+    let compute_us = produced;
+    let comm_us: f64 = bucket_comm_us.iter().sum();
+    let step = comm_end.max(compute_us);
+    OverlapTimeline {
+        compute_us,
+        comm_us,
+        step_time_us_overlapped: step,
+        exposed_comm_us: step - compute_us,
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -482,6 +601,70 @@ mod tests {
             &params,
         );
         assert!(hier4 < hier, "fp4-inter {hier4} vs fp8 {hier}");
+    }
+
+    // -- overlap timeline --
+
+    #[test]
+    fn overlap_timeline_hides_comm_behind_remaining_compute() {
+        // 3 buckets, 10us compute each; 8us comm each: bucket 0's comm
+        // runs during buckets 1-2's compute, only the tail is exposed
+        let t = overlap_timeline(&[10.0, 10.0, 10.0], &[8.0, 8.0, 8.0]);
+        assert_eq!(t.compute_us, 30.0);
+        assert_eq!(t.comm_us, 24.0);
+        // comm: starts at 10, ends 18; b1 at max(20,18)=20 -> 28; b2 at
+        // max(30,28)=30 -> 38
+        assert_eq!(t.step_time_us_overlapped, 38.0);
+        assert_eq!(t.exposed_comm_us, 8.0);
+        assert!((t.overlap_efficiency() - 16.0 / 24.0).abs() < 1e-12);
+        // bounds: max(compute, comm) <= overlapped <= compute + comm
+        assert!(t.step_time_us_overlapped >= t.compute_us.max(t.comm_us));
+        assert!(t.step_time_us_overlapped <= t.compute_us + t.comm_us);
+    }
+
+    #[test]
+    fn overlap_timeline_single_bucket_has_no_overlap() {
+        // one bucket = the serialized model: all comm is exposed
+        let t = overlap_timeline(&[30.0], &[24.0]);
+        assert_eq!(t.step_time_us_overlapped, 54.0);
+        assert_eq!(t.exposed_comm_us, 24.0);
+        assert_eq!(t.overlap_efficiency(), 0.0);
+        // and the degenerate empty timeline is all zeros
+        let z = overlap_timeline(&[], &[]);
+        assert_eq!(z.step_time_us_overlapped, 0.0);
+        assert_eq!(z.exposed_comm_us, 0.0);
+        assert_eq!(z.overlap_efficiency(), 1.0);
+    }
+
+    #[test]
+    fn straggled_time_reduces_to_baseline_at_factor_one() {
+        let sends = [6u64, 56, 0, 12];
+        let bytes = [1000u64, 50_000, 0, 9000];
+        let params = LinkParams::defaults();
+        let base = step_time_us(&sends, &bytes, &params);
+        let same = step_time_us_straggled(&sends, &bytes, &params, &[1.0; 4]);
+        assert!((base - same).abs() < 1e-12);
+        // a 2x inter straggler stretches exactly the inter term
+        let plan = FaultPlan::parse("straggle:inter@2x").unwrap();
+        let f = straggle_factors(&plan);
+        assert_eq!(f, [1.0, 2.0, 1.0, 1.0]);
+        let slow = step_time_us_straggled(&sends, &bytes, &params, &f);
+        let inter = LinkClass::InterNode.index();
+        let inter_term = sends[inter] as f64 * params[inter].alpha_us
+            + bytes[inter] as f64 / (params[inter].gbps * 1e3);
+        assert!((slow - base - inter_term).abs() < 1e-9, "{slow} vs {base}");
+        assert!(slow > base);
+    }
+
+    #[test]
+    fn backward_compute_scales_with_tokens_and_params() {
+        let us = backward_compute_us(1 << 20, 1 << 20, DEFAULT_FLOPS_PER_US);
+        // 4 * 2^40 / 1e8 ≈ 43980.4 us
+        assert!((us - 4.0 * (1u64 << 40) as f64 / 1e8).abs() < 1e-6);
+        assert!(
+            backward_compute_us(1 << 20, 2 << 20, DEFAULT_FLOPS_PER_US) > us
+        );
+        assert_eq!(backward_compute_us(0, 1 << 20, DEFAULT_FLOPS_PER_US), 0.0);
     }
 
     // -- resilience overhead model --

@@ -23,23 +23,47 @@
 //! cross-node link class (`wire.inter`/`wire.up`/`wire.down`) — the
 //! FP4-All-the-Way-style arm that compresses the scarce links hardest.
 //!
-//! Outputs the summary table on stdout and a machine-readable trajectory
+//! A second, *bucketed overlap* sweep then splits the same gradient
+//! budget into [`LAYERS`] per-layer tensors, reduces them bucket by
+//! bucket ([`Fabric::all_reduce_mean_bucketed`], reverse production
+//! order), checks every bucket's ledger exactly against the costmodel
+//! sums of its tensors, and folds the per-bucket compute/comm costs
+//! through [`costmodel::overlap_timeline`] — reporting per arm the
+//! bucket-size sweep, `exposed_comm_us`, exposed-comm %, and overlap
+//! efficiency. The compute budget is pinned to [`KAPPA`] × the f32 arm's
+//! serialized comm per (workers, topology) via the Appendix-B FLOP terms,
+//! so every policy overlaps against the *same* backward pass and arms
+//! differ only in wire bytes.
+//!
+//! Outputs the summary tables on stdout and a machine-readable trajectory
 //! to `results/perf/BENCH_fabric.json` (same line-oriented dialect as
 //! `BENCH_codec.json`; byte counts are deterministic, so any drift is a
 //! real behavior change, not timer noise). Knobs: `-o n=<elems>`
 //! (gradient size, default 32768; 4096 under `--quick`), `-o seed=<u64>`,
-//! `-o results=<dir>`.
+//! `-o results=<dir>`. Gates (mirroring `repro perf`):
+//!
+//!  * `--gate` — fail with a nonzero exit when the `hier:4x8` +
+//!    `fp4-xnode` finest-bucket arm's overlap efficiency drops below the
+//!    recorded floor ([`OVERLAP_EFF_FLOOR`]), or when its exposed comm is
+//!    not strictly below the f32 arm's (the cross-node compression must
+//!    buy critical-path time, not just bytes);
+//!  * `--baseline=<path>` — additionally compare `ovl_eff` rows against a
+//!    committed `BENCH_fabric.json` (seed-floor baselines are absolute
+//!    floors; computed baselines tolerate −20%).
 //!
 //! Engine-free: like the codec half of `repro perf`, this driver needs no
 //! AOT artifacts, so CI can run it as-is.
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{ensure, Result};
 
 use crate::cli::Args;
 use crate::costmodel::{self, LinkParams};
-use crate::fabric::{flat_reference_mean, Fabric, LinkClass, SyntheticSource, Topology};
+use crate::fabric::{
+    flat_reference_mean, BucketSpec, Fabric, GradSource, LinkClass, SyntheticSource, Topology,
+};
 use crate::policy::PrecisionPolicy;
 use crate::report::{f2, Table};
 
@@ -54,6 +78,45 @@ const POLICIES: &[(&str, &str)] = &[
     ),
 ];
 
+/// Per-layer tensor count for the overlap sweep (a transformer-ish
+/// gradient list; the bucket partition regroups these, never splits one).
+const LAYERS: usize = 12;
+
+/// Compute budget multiplier: the modeled backward pass costs `KAPPA` ×
+/// the f32 arm's serialized comm — comfortably compute-bound, the regime
+/// where DDP bucketing pays (a single bucket still exposes everything).
+const KAPPA: f64 = 2.0;
+
+/// Recorded floor for the gate arm's overlap efficiency (`hier:4x8`,
+/// `fp4-xnode`, finest bucket). The modeled value sits near
+/// `1 - 1/buckets` ≈ 0.83; 0.60 flags a structural regression (lost
+/// pipelining) without pinning the exact LinkParams.
+const OVERLAP_EFF_FLOOR: f64 = 0.60;
+
+/// Bucket-capacity arms, labeled by target bucket count (`x6` = capacity
+/// sized for ~6 buckets … `x1` = everything in one bucket, the
+/// zero-overlap baseline). Labels — not byte sizes — key the JSON rows,
+/// so committed baselines stay comparable across `-o n=`.
+const BUCKET_ARMS: &[(&str, u64)] = &[("x6", 6), ("x2", 2), ("x1", 1)];
+
+/// Gate/baseline options for [`run_gated`] (mirrors `perf::PerfOpts`).
+pub struct FabricOpts {
+    /// Turn gate violations into a nonzero exit.
+    pub gate: bool,
+    /// Committed `BENCH_fabric.json` to compare `ovl_eff` rows against.
+    pub baseline: Option<PathBuf>,
+    /// Worker scales for the bucketed overlap sweep; every default
+    /// includes 32 so the `hier:4x8` gate arm exists (also under
+    /// `--quick`).
+    pub overlap_scales: Vec<usize>,
+}
+
+impl Default for FabricOpts {
+    fn default() -> Self {
+        Self { gate: false, baseline: None, overlap_scales: vec![8, 32, 64] }
+    }
+}
+
 /// CLI entry point (see `cmd_repro`): parses knobs and runs the sweep.
 pub fn fabric_cmd(args: &Args) -> Result<()> {
     let quick = args.flag("quick");
@@ -61,7 +124,12 @@ pub fn fabric_cmd(args: &Args) -> Result<()> {
     let seed = args.get_usize("seed", 7)? as u64;
     let results = PathBuf::from(args.get("results").unwrap_or("results"));
     let scales: &[usize] = if quick { &[8, 64] } else { &[8, 64, 256, 1024] };
-    run_sweep(n, seed, scales, &results)
+    let opts = FabricOpts {
+        gate: args.flag("gate"),
+        baseline: args.get("baseline").map(PathBuf::from),
+        overlap_scales: if quick { vec![8, 32] } else { vec![8, 32, 64] },
+    };
+    run_gated(n, seed, scales, &results, &opts)
 }
 
 /// The topology arms at one worker scale.
@@ -75,7 +143,19 @@ fn topologies(workers: usize) -> [Topology; 4] {
     ]
 }
 
+/// Default entry (no gating) — keeps programmatic `experiments::run`
+/// calls and older callers working unchanged.
 pub fn run_sweep(n: usize, seed: u64, scales: &[usize], results: &Path) -> Result<()> {
+    run_gated(n, seed, scales, results, &FabricOpts::default())
+}
+
+pub fn run_gated(
+    n: usize,
+    seed: u64,
+    scales: &[usize],
+    results: &Path,
+    opts: &FabricOpts,
+) -> Result<()> {
     let mut t = Table::new(&[
         "workers", "topology", "policy", "KB/step", "intra KB", "inter KB", "tree KB",
         "x wire", "rmse", "est us",
@@ -138,10 +218,233 @@ pub fn run_sweep(n: usize, seed: u64, scales: &[usize], results: &Path) -> Resul
 
     println!("{}", t.render());
     println!("all {arms} arms matched costmodel::bytes_per_step / sends_per_step exactly");
+
+    let mut violations = overlap_sweep(n, seed, opts, &mut json_rows)?;
+
     let json_path = results.join("perf").join("BENCH_fabric.json");
     write_bench_json(&json_path, n, &json_rows)?;
     println!("wrote {}", json_path.display());
+    if let Some(bp) = &opts.baseline {
+        violations.extend(compare_baseline(bp, &json_rows)?);
+    }
+    finish_gates(violations, opts)
+}
+
+/// The bucketed overlap sweep (see the module docs): per-layer gradients
+/// reduce bucket by bucket, every bucket's ledger is checked exactly
+/// against the costmodel sums of its tensors, and the per-bucket costs
+/// fold through the two-resource timeline. Returns the gate violations
+/// (empty = all green).
+fn overlap_sweep(
+    n: usize,
+    seed: u64,
+    opts: &FabricOpts,
+    json_rows: &mut Vec<(String, f64)>,
+) -> Result<Vec<String>> {
+    let params = LinkParams::defaults();
+    let f32_policy = PrecisionPolicy::parse("wire=f32")?;
+    let mut t = Table::new(&[
+        "workers", "topology", "policy", "bucket", "buckets", "compute us", "comm us",
+        "exposed us", "exposed %", "ovl eff",
+    ]);
+    let mut violations = Vec::new();
+    // balanced per-layer split of the n-element gradient budget
+    let sizes: Vec<usize> =
+        (0..LAYERS).map(|l| n / LAYERS + usize::from(l < n % LAYERS)).collect();
+    let shapes: Vec<(usize, usize)> = sizes.iter().map(|&len| (1, len)).collect();
+    let total_bytes = 4 * n as u64;
+    let mut outs: Vec<Vec<f32>> = vec![Vec::new(); LAYERS];
+    // the gate arm's numbers, captured as the sweep passes hier:4x8
+    let mut gate_eff: Option<f64> = None;
+    let mut exposed_f32: Option<f64> = None;
+    let mut exposed_fp4: Option<f64> = None;
+
+    for &workers in &opts.overlap_scales {
+        let sources: Vec<SyntheticSource> = (0..LAYERS)
+            .map(|l| SyntheticSource { workers, len: sizes[l], seed: seed ^ l as u64 })
+            .collect();
+        let srcs: Vec<&dyn GradSource> =
+            sources.iter().map(|s| s as &dyn GradSource).collect();
+        for topology in topologies(workers) {
+            // pin the compute budget to KAPPA x the f32 serialized comm,
+            // recovered through the Appendix-B FLOP terms so the knob is
+            // an honest token count, not a free-floating microsecond
+            let f32_comm: f64 = sizes
+                .iter()
+                .map(|&len| {
+                    let bytes = costmodel::bytes_per_step(&f32_policy, len, topology);
+                    let sends = costmodel::sends_per_step(len, topology);
+                    costmodel::step_time_us(&sends, &bytes, &params)
+                })
+                .sum();
+            let tokens = ((KAPPA * f32_comm * costmodel::DEFAULT_FLOPS_PER_US)
+                / (4.0 * n as f64))
+                .ceil() as u64;
+            let compute_total =
+                costmodel::backward_compute_us(n, tokens, costmodel::DEFAULT_FLOPS_PER_US);
+            for (name, pol) in POLICIES {
+                let policy = PrecisionPolicy::parse(pol)?;
+                let (_, specs) = policy.link_resolution_at(0);
+                for (blabel, parts) in BUCKET_ARMS {
+                    let cap = (total_bytes / parts).max(4);
+                    let mut fabric = Fabric::new(topology)?;
+                    let reports =
+                        fabric.all_reduce_mean_bucketed(&srcs, &shapes, &specs, cap, &mut outs)?;
+
+                    // acceptance gate: every bucket's simulated ledger
+                    // must equal the costmodel sums of its tensors
+                    let mut compute = Vec::with_capacity(reports.len());
+                    let mut comm = Vec::with_capacity(reports.len());
+                    for r in &reports {
+                        let mut pb = [0u64; 4];
+                        let mut ps = [0u64; 4];
+                        for &gi in &r.tensors {
+                            let b = costmodel::bytes_per_step(&policy, sizes[gi], topology);
+                            let s = costmodel::sends_per_step(sizes[gi], topology);
+                            for k in 0..4 {
+                                pb[k] += b[k];
+                                ps[k] += s[k];
+                            }
+                        }
+                        let bytes = r.stats.bytes_by_link();
+                        let sends = r.stats.links.map(|l| l.sends);
+                        ensure!(
+                            bytes == pb,
+                            "per-bucket byte mismatch for {topology} {name} {blabel}: \
+                             simulated {bytes:?} vs predicted {pb:?}"
+                        );
+                        ensure!(
+                            sends == ps,
+                            "per-bucket send mismatch for {topology} {name} {blabel}: \
+                             simulated {sends:?} vs predicted {ps:?}"
+                        );
+                        compute.push(compute_total * r.payload_bytes as f64 / total_bytes as f64);
+                        comm.push(costmodel::step_time_us(&sends, &bytes, &params));
+                    }
+
+                    let tl = costmodel::overlap_timeline(&compute, &comm);
+                    let eff = tl.overlap_efficiency();
+                    let exposed_pct = if tl.comm_us > 0.0 {
+                        100.0 * tl.exposed_comm_us / tl.comm_us
+                    } else {
+                        0.0
+                    };
+                    t.row(&[
+                        workers.to_string(),
+                        topology.to_string(),
+                        name.to_string(),
+                        BucketSpec { bytes: cap }.to_string(),
+                        reports.len().to_string(),
+                        f2(tl.compute_us),
+                        f2(tl.comm_us),
+                        f2(tl.exposed_comm_us),
+                        f2(exposed_pct),
+                        f2(eff),
+                    ]);
+                    json_rows.push((format!("{topology} {name} {blabel} ovl_eff"), eff));
+                    json_rows
+                        .push((format!("{topology} {name} {blabel} exposed_us"), tl.exposed_comm_us));
+                    if topology.to_string() == "hier:4x8" && *blabel == "x6" {
+                        match *name {
+                            "f32" => exposed_f32 = Some(tl.exposed_comm_us),
+                            "fp4-xnode" => {
+                                gate_eff = Some(eff);
+                                exposed_fp4 = Some(tl.exposed_comm_us);
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    println!("{}", t.render());
+    match gate_eff {
+        Some(e) if e < OVERLAP_EFF_FLOOR => violations.push(format!(
+            "hier:4x8 fp4-xnode x6 overlap efficiency {e:.3} below recorded floor \
+             {OVERLAP_EFF_FLOOR}"
+        )),
+        None => violations
+            .push("overlap sweep never ran the hier:4x8 fp4-xnode gate arm".to_string()),
+        _ => {}
+    }
+    if let (Some(f), Some(q)) = (exposed_f32, exposed_fp4) {
+        if q >= f {
+            violations.push(format!(
+                "hier:4x8 x6 exposed comm: fp4-xnode {q:.1} us not strictly below f32 {f:.1} us"
+            ));
+        }
+    }
+    Ok(violations)
+}
+
+/// Print violations; under `--gate` they become a nonzero exit
+/// (mirrors `perf::finish_gates`).
+fn finish_gates(violations: Vec<String>, opts: &FabricOpts) -> Result<()> {
+    if violations.is_empty() {
+        return Ok(());
+    }
+    for v in &violations {
+        println!("GATE FAIL: {v}");
+    }
+    if opts.gate {
+        anyhow::bail!("{} fabric gate(s) failed", violations.len());
+    }
+    println!("(run with --gate to turn these into a nonzero exit)");
     Ok(())
+}
+
+/// Compare this run's `ovl_eff` rows against a committed
+/// `BENCH_fabric.json`. Only efficiency rows gate: higher is better,
+/// byte rows are already pinned exactly against the costmodel above, and
+/// the microsecond rows move with [`LinkParams`] rather than behavior.
+fn compare_baseline(path: &Path, current: &[(String, f64)]) -> Result<Vec<String>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading baseline {}: {e}", path.display()))?;
+    let (provenance, rows) = parse_bench_json(&text);
+    let cur: BTreeMap<&str, f64> = current.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let mut violations = Vec::new();
+    for (name, base) in &rows {
+        if !name.ends_with("ovl_eff") {
+            continue;
+        }
+        match cur.get(name.as_str()) {
+            None => violations.push(format!(
+                "arm {name:?} present in baseline but missing from this run"
+            )),
+            Some(&now) => {
+                let floor =
+                    if provenance == "seed-floor" { *base } else { base * 0.8 };
+                if now < floor {
+                    violations.push(format!(
+                        "{name:?}: overlap efficiency {now:.3} below baseline floor {floor:.3}"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(violations)
+}
+
+/// Line-based parser for the `BENCH_fabric.json` dialect (no serde
+/// offline). Arm names contain colons (`hier:4x8 …`), so the *last*
+/// colon splits key from value — unlike the codec parser.
+fn parse_bench_json(text: &str) -> (String, Vec<(String, f64)>) {
+    let mut provenance = "computed".to_string();
+    let mut rows = Vec::new();
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        let Some((k, v)) = line.rsplit_once(':') else { continue };
+        let key = k.trim().trim_matches('"');
+        let val = v.trim();
+        if key == "provenance" {
+            provenance = val.trim_matches('"').to_string();
+        } else if let Ok(x) = val.parse::<f64>() {
+            rows.push((key.to_string(), x));
+        }
+    }
+    (provenance, rows)
 }
 
 fn rmse(a: &[f32], b: &[f32]) -> f64 {
@@ -169,7 +472,9 @@ fn write_bench_json(path: &Path, n_params: usize, rows: &[(String, f64)]) -> Res
     s.push_str("  \"arms\": {\n");
     for (i, (name, v)) in rows.iter().enumerate() {
         let sep = if i + 1 == rows.len() { "" } else { "," };
-        s.push_str(&format!("    {:?}: {:.1}{}\n", name, v, sep));
+        // 4 decimals: enough for the [0,1] efficiency rows; byte rows
+        // are integral anyway
+        s.push_str(&format!("    {:?}: {:.4}{}\n", name, v, sep));
     }
     s.push_str("  }\n}\n");
     std::fs::write(path, s)?;
@@ -182,14 +487,74 @@ mod tests {
 
     #[test]
     fn sweep_validates_costmodel_and_writes_json() {
-        // tiny sweep; odd n exercises non-dividing ring shards. Any
-        // prediction/simulation divergence fails inside run_sweep.
+        // tiny sweep; odd n exercises non-dividing ring shards (both in
+        // the whole-tensor arms and in the overlap sweep's uneven
+        // per-layer split). Any prediction/simulation divergence fails
+        // inside run_gated — including the per-bucket ledger checks.
         let dir = std::env::temp_dir().join("fp4train_fabric_sweep_test");
-        run_sweep(257, 3, &[5, 8], &dir).unwrap();
+        let opts =
+            FabricOpts { gate: true, baseline: None, overlap_scales: vec![8, 32] };
+        run_gated(257, 3, &[5, 8], &dir, &opts).unwrap();
         let text = std::fs::read_to_string(dir.join("perf/BENCH_fabric.json")).unwrap();
         assert!(text.contains("\"bench\": \"fabric\""));
         assert!(text.contains("hier:1x5 fp4-xnode bytes"));
         assert!(text.contains("tree:8@2 fp8 est_us"));
+        // overlap rows, including the gate arm (which just passed with
+        // gate: true — the acceptance criterion is pinned here)
+        assert!(text.contains("hier:4x8 fp4-xnode x6 ovl_eff"));
+        assert!(text.contains("hier:4x8 f32 x6 exposed_us"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fabric_bench_json_round_trips_through_last_colon_parser() {
+        let rows = vec![
+            ("hier:4x8 fp4-xnode x6 ovl_eff".to_string(), 0.8333),
+            ("tree:8@2 fp8 est_us".to_string(), 42.5),
+        ];
+        let dir = std::env::temp_dir().join("fp4train_fabric_json_test");
+        let path = dir.join("BENCH_fabric.json");
+        write_bench_json(&path, 257, &rows).unwrap();
+        let (prov, back) = parse_bench_json(&std::fs::read_to_string(&path).unwrap());
+        assert_eq!(prov, "computed");
+        // n_params rides along as a numeric row; the named arms must
+        // survive the colon-containing keys exactly
+        assert!(back.contains(&("n_params".to_string(), 257.0)));
+        assert!(back.contains(&("hier:4x8 fp4-xnode x6 ovl_eff".to_string(), 0.8333)));
+        assert!(back.contains(&("tree:8@2 fp8 est_us".to_string(), 42.5)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn baseline_compare_gates_only_efficiency_rows() {
+        let dir = std::env::temp_dir().join("fp4train_fabric_baseline_test");
+        let path = dir.join("BENCH_fabric.json");
+        write_bench_json(
+            &path,
+            64,
+            &[
+                ("hier:4x8 fp4-xnode x6 ovl_eff".to_string(), 0.8),
+                ("hier:4x8 fp4-xnode x6 exposed_us".to_string(), 10.0),
+            ],
+        )
+        .unwrap();
+        // regressed eff (below -20% of 0.8) violates; exposed_us rows
+        // and missing non-eff rows never do
+        let current = vec![
+            ("hier:4x8 fp4-xnode x6 ovl_eff".to_string(), 0.5),
+            ("hier:4x8 fp4-xnode x6 exposed_us".to_string(), 99.0),
+        ];
+        let v = compare_baseline(&path, &current).unwrap();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("ovl_eff"), "{v:?}");
+        // healthy eff passes
+        let current = vec![("hier:4x8 fp4-xnode x6 ovl_eff".to_string(), 0.79)];
+        assert!(compare_baseline(&path, &current).unwrap().is_empty());
+        // an eff arm present in the baseline but missing from the run is
+        // itself a violation
+        let v = compare_baseline(&path, &[]).unwrap();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("missing"), "{v:?}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,234 @@
+//! Gradient bucketing for overlap-aware collectives.
+//!
+//! DDP-style trainers (FP8-LM is the blueprint, PAPERS.md) do not wait
+//! for the full backward pass before reducing: gradients are grouped
+//! into fixed-byte *buckets* in **reverse production order** (backward
+//! produces the last layer's gradient first), and each bucket's
+//! all-reduce launches as soon as the backward pass has produced every
+//! tensor in it — overlapping communication with the remaining compute.
+//!
+//! This module owns the two pure pieces of that pipeline:
+//!
+//!  * [`BucketSpec`] — the bucket-capacity grammar (`<N>b | <N>kb |
+//!    <N>mb`, e.g. `bucket=4mb` in the policy grammar, `-o bucket_mb=4`
+//!    on the CLI). Parse and `Display` round-trip; `Display` is
+//!    canonical (largest unit that divides exactly) and a fixed point
+//!    under re-parsing — fuzz-pinned through the `policy_parse` oracle.
+//!  * [`partition`] — split a per-tensor size list into [`Bucket`]s.
+//!    Buckets group **whole tensors**; a tensor is never split across
+//!    buckets. This is the property that makes the bucketed reduction
+//!    bit-exact with the unbucketed one: every tensor still runs the
+//!    exact same per-tensor collective (same shape, same scale groups,
+//!    same ring shard boundaries), bucketing only changes *when* it
+//!    launches and how the bytes are attributed. Capacity is measured
+//!    in **f32 payload bytes** (`4 * len`), independent of the wire
+//!    spec — so a sentinel escalation (FP4 → FP8 wire) re-derives
+//!    byte-identical bucket boundaries (pinned by test).
+//!
+//! The impure half — actually running one collective per bucket and
+//! snapshotting per-bucket [`FabricStats`](super::FabricStats) — is
+//! [`Fabric::all_reduce_mean_bucketed`](super::Fabric::all_reduce_mean_bucketed);
+//! the two-resource compute/comm timeline that consumes the per-bucket
+//! ledger lives in [`crate::costmodel`].
+
+use std::fmt;
+
+use anyhow::{ensure, Result};
+
+/// Bucket capacity in bytes, with the `<N>b | <N>kb | <N>mb` grammar
+/// (`kb` = 1024, `mb` = 1024²; bare numbers are rejected so a policy
+/// string is never ambiguous about units).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BucketSpec {
+    pub bytes: u64,
+}
+
+impl BucketSpec {
+    /// `bytes` interpreted directly (the `-o bucket_mb=` path constructs
+    /// this without going through the grammar).
+    pub fn from_bytes(bytes: u64) -> Result<Self> {
+        let s = BucketSpec { bytes };
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Parse `<N>b`, `<N>kb` or `<N>mb` (case-sensitive, no spaces).
+    pub fn parse(s: &str) -> Result<Self> {
+        ensure!(!s.is_empty(), "empty bucket size");
+        let (digits, unit) = if let Some(d) = s.strip_suffix("kb") {
+            (d, 1u64 << 10)
+        } else if let Some(d) = s.strip_suffix("mb") {
+            (d, 1u64 << 20)
+        } else if let Some(d) = s.strip_suffix('b') {
+            (d, 1u64)
+        } else {
+            anyhow::bail!("bad bucket size {s:?} (expected <N>b, <N>kb or <N>mb)");
+        };
+        ensure!(
+            !digits.is_empty() && digits.bytes().all(|b| b.is_ascii_digit()),
+            "bad bucket count {digits:?} in {s:?}"
+        );
+        let n: u64 = digits
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bucket count {digits:?} overflows in {s:?}"))?;
+        let bytes = n
+            .checked_mul(unit)
+            .ok_or_else(|| anyhow::anyhow!("bucket size {s:?} overflows u64"))?;
+        let spec = BucketSpec { bytes };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// A bucket must hold at least one f32 gradient element — 1-byte
+    /// (and zero) buckets are rejected here, not silently rounded up.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.bytes >= 4,
+            "bucket size {}b cannot hold one f32 element (minimum 4b)",
+            self.bytes
+        );
+        Ok(())
+    }
+}
+
+impl fmt::Display for BucketSpec {
+    /// Canonical form: the largest unit that divides exactly, so
+    /// `parse(display(x)) == x` and `display` is a fixed point
+    /// (`4194304b` renders `4mb`, `1536b` stays `1536b`).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.bytes % (1 << 20) == 0 {
+            write!(f, "{}mb", self.bytes >> 20)
+        } else if self.bytes % (1 << 10) == 0 {
+            write!(f, "{}kb", self.bytes >> 10)
+        } else {
+            write!(f, "{}b", self.bytes)
+        }
+    }
+}
+
+/// One bucket of whole tensors, in the order the backward pass produces
+/// them (reverse tensor-index order within and across buckets).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    /// Indices into the caller's tensor list.
+    pub tensors: Vec<usize>,
+    /// Total f32 payload bytes (`4 * Σ len`) — the capacity measure.
+    pub bytes: u64,
+}
+
+/// Partition tensors (given as per-tensor element counts, in production
+/// order: `sizes[0]` is the *first* tensor the forward pass touches, so
+/// the *last* the backward produces) into buckets of at most
+/// `bucket_bytes` f32 payload bytes each.
+///
+/// Greedy, in reverse production order: walk tensors from the back,
+/// close the open bucket when the next tensor would not fit. A single
+/// tensor larger than the capacity gets a bucket of its own (it cannot
+/// be split — see the module docs). Zero-length tensors ride along in
+/// whatever bucket is open. The result covers every tensor exactly once;
+/// `bucket_bytes` must satisfy [`BucketSpec::validate`].
+pub fn partition(sizes: &[usize], bucket_bytes: u64) -> Result<Vec<Bucket>> {
+    BucketSpec { bytes: bucket_bytes }.validate()?;
+    let mut buckets: Vec<Bucket> = Vec::new();
+    let mut open = Bucket { tensors: Vec::new(), bytes: 0 };
+    for gi in (0..sizes.len()).rev() {
+        let tensor_bytes = 4 * sizes[gi] as u64;
+        if !open.tensors.is_empty() && open.bytes + tensor_bytes > bucket_bytes {
+            buckets.push(std::mem::replace(&mut open, Bucket { tensors: Vec::new(), bytes: 0 }));
+        }
+        open.tensors.push(gi);
+        open.bytes += tensor_bytes;
+    }
+    if !open.tensors.is_empty() {
+        buckets.push(open);
+    }
+    Ok(buckets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_display_round_trip_canonical() {
+        for (s, bytes, canon) in [
+            ("4mb", 4u64 << 20, "4mb"),
+            ("25mb", 25 << 20, "25mb"),
+            ("512kb", 512 << 10, "512kb"),
+            ("1024kb", 1 << 20, "1mb"),
+            ("4b", 4, "4b"),
+            ("1536b", 1536, "1536b"),
+            ("4096b", 4096, "4kb"),
+        ] {
+            let spec = BucketSpec::parse(s).unwrap();
+            assert_eq!(spec.bytes, bytes, "{s}");
+            assert_eq!(spec.to_string(), canon, "{s}");
+            // canonical form is a fixed point
+            let back = BucketSpec::parse(&spec.to_string()).unwrap();
+            assert_eq!(back, spec, "{s}");
+            assert_eq!(back.to_string(), canon, "{s}");
+        }
+    }
+
+    #[test]
+    fn spec_rejects_malformed_and_tiny() {
+        for bad in [
+            "", "4", "mb", "4MB", "4 mb", "-4mb", "4.5mb", "1b", "3b", "0b", "0kb", "b",
+            "4gb", "99999999999999999999mb",
+        ] {
+            assert!(BucketSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+        assert!(BucketSpec::from_bytes(3).is_err());
+        assert!(BucketSpec::from_bytes(4).is_ok());
+    }
+
+    #[test]
+    fn partition_reverse_production_order_and_capacity() {
+        // sizes in elements; capacity 40 bytes = 10 elements
+        let buckets = partition(&[3, 4, 5, 6], 40).unwrap();
+        // reverse order: 24b | 20b + 16b | 12b
+        assert_eq!(buckets.len(), 3);
+        assert_eq!(buckets[0].tensors, vec![3]);
+        assert_eq!(buckets[0].bytes, 24);
+        assert_eq!(buckets[1].tensors, vec![2, 1]);
+        assert_eq!(buckets[1].bytes, 36);
+        assert_eq!(buckets[2].tensors, vec![0]);
+        assert_eq!(buckets[2].bytes, 12);
+        let covered: Vec<usize> = buckets.iter().flat_map(|b| b.tensors.clone()).collect();
+        assert_eq!(covered, vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn partition_oversized_tensor_gets_own_bucket() {
+        let buckets = partition(&[100, 2, 200], 40).unwrap();
+        assert_eq!(buckets.len(), 3);
+        assert_eq!(buckets[0].tensors, vec![2]);
+        assert_eq!(buckets[0].bytes, 800);
+        assert_eq!(buckets[1].tensors, vec![1]);
+        assert_eq!(buckets[2].tensors, vec![0]);
+        assert_eq!(buckets[2].bytes, 400);
+    }
+
+    #[test]
+    fn partition_bucket_larger_than_total_is_one_bucket() {
+        let buckets = partition(&[3, 4, 5], 1 << 20).unwrap();
+        assert_eq!(buckets.len(), 1);
+        assert_eq!(buckets[0].tensors, vec![2, 1, 0]);
+        assert_eq!(buckets[0].bytes, 48);
+    }
+
+    #[test]
+    fn partition_empty_and_zero_len_tensors() {
+        assert!(partition(&[], 1024).unwrap().is_empty());
+        let buckets = partition(&[0, 5, 0], 1024).unwrap();
+        assert_eq!(buckets.len(), 1);
+        assert_eq!(buckets[0].tensors, vec![2, 1, 0]);
+        assert_eq!(buckets[0].bytes, 20);
+    }
+
+    #[test]
+    fn partition_rejects_sub_element_capacity() {
+        assert!(partition(&[1, 2], 1).is_err());
+        assert!(partition(&[1, 2], 0).is_err());
+    }
+}

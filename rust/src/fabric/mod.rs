@@ -79,7 +79,28 @@
 //! regression test. Retry/corruption/eviction counters accumulate in
 //! [`FabricStats`]; `costmodel::expected_retry_bytes` predicts the
 //! retry overhead in expectation.
+//!
+//! # Bucketed overlap pipeline
+//!
+//! [`Fabric::all_reduce_mean_bucketed`] is the DDP-style overlap path:
+//! [`bucket::partition`] groups the step's per-tensor gradients into
+//! fixed-byte buckets of **whole tensors** in reverse production order
+//! (backward produces the last tensor first), and one collective
+//! launches per bucket as the simulated backward "produces" it. Because
+//! a tensor is never split, every tensor runs the exact same per-tensor
+//! collective as the unbucketed path — same shapes, scale groups and
+//! ring shard boundaries — so the bucketed reduction is **bit-exact**
+//! with [`Fabric::all_reduce_mean`] called per tensor (property-pinned
+//! per topology × wire format, including survivor-renormalized faulty
+//! runs). Each bucket's [`FabricStats`] delta feeds
+//! [`crate::costmodel::overlap_timeline`], the two-resource
+//! compute/comm schedule that turns per-bucket byte ledgers into
+//! `step_time_us_overlapped` and an `exposed_comm_us` breakdown.
+//! Bucket capacity is measured in f32 payload bytes, independent of the
+//! wire spec, so a sentinel escalation (FP4 → FP8) re-derives
+//! byte-identical bucket boundaries.
 
+pub mod bucket;
 pub mod collectives;
 
 use std::fmt;
@@ -90,6 +111,8 @@ use anyhow::{bail, ensure, Result};
 use crate::formats::{PackedTensor, QuantSpec};
 pub use crate::policy::LinkClass;
 pub use crate::resilience::{FaultEvent, FaultPlan, FaultState};
+
+pub use bucket::{partition, Bucket, BucketSpec};
 
 /// Worker arrangement of the simulated fabric.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -243,6 +266,41 @@ impl FabricStats {
         }
         self.total_f32_equiv() as f64 / sent as f64
     }
+
+    /// Field-wise `self - earlier`: the accounting accumulated between
+    /// two snapshots of one fabric's monotone counters — how the
+    /// bucketed path attributes a step's traffic to individual buckets.
+    pub fn delta_since(&self, earlier: &FabricStats) -> FabricStats {
+        let mut links = [LinkStats::default(); 4];
+        for (i, l) in links.iter_mut().enumerate() {
+            l.sends = self.links[i].sends - earlier.links[i].sends;
+            l.bytes = self.links[i].bytes - earlier.links[i].bytes;
+            l.bytes_f32_equiv = self.links[i].bytes_f32_equiv - earlier.links[i].bytes_f32_equiv;
+        }
+        FabricStats {
+            links,
+            reduces: self.reduces - earlier.reduces,
+            corruptions: self.corruptions - earlier.corruptions,
+            retries: self.retries - earlier.retries,
+            retry_bytes: self.retry_bytes - earlier.retry_bytes,
+            backoff_us: self.backoff_us - earlier.backoff_us,
+            straggled: self.straggled - earlier.straggled,
+            evicted: self.evicted - earlier.evicted,
+        }
+    }
+}
+
+/// One bucket's slice of a bucketed reduction: which tensors it carried,
+/// its f32 payload size (the capacity measure), and the exact
+/// [`FabricStats`] delta its collectives accumulated.
+#[derive(Clone, Debug)]
+pub struct BucketReport {
+    /// Indices into the caller's tensor list (reverse production order).
+    pub tensors: Vec<usize>,
+    /// Total f32 payload bytes (`4 * Σ len`) across its tensors.
+    pub payload_bytes: u64,
+    /// Per-link sends/bytes (plus fault counters) for this bucket alone.
+    pub stats: FabricStats,
 }
 
 /// Random-access gradient provider: the fabric pulls any worker's values
@@ -527,6 +585,52 @@ impl Fabric {
         Ok(())
     }
 
+    /// Bucketed mean all-reduce (the module docs' overlap pipeline):
+    /// partition the tensors into buckets of at most `bucket_bytes` f32
+    /// payload bytes ([`bucket::partition`] — whole tensors, reverse
+    /// production order) and run one collective per tensor, bucket by
+    /// bucket, in the order the simulated backward produces them.
+    ///
+    /// `srcs`, `shapes` and `outs` are parallel per-tensor arrays;
+    /// every tensor is reduced with the exact [`Fabric::all_reduce_mean`]
+    /// op sequence, so the outputs are bit-identical to calling that
+    /// method per tensor in any order (property-pinned). The returned
+    /// reports carry each bucket's [`FabricStats`] delta for the
+    /// overlap timeline; cumulative [`Fabric::stats`] accounting is
+    /// unchanged in total.
+    pub fn all_reduce_mean_bucketed(
+        &mut self,
+        srcs: &[&dyn GradSource],
+        shapes: &[(usize, usize)],
+        specs: &[QuantSpec; 4],
+        bucket_bytes: u64,
+        outs: &mut [Vec<f32>],
+    ) -> Result<Vec<BucketReport>> {
+        ensure!(
+            srcs.len() == shapes.len() && srcs.len() == outs.len(),
+            "bucketed reduce: {} sources, {} shapes, {} outputs",
+            srcs.len(),
+            shapes.len(),
+            outs.len()
+        );
+        let sizes: Vec<usize> = srcs.iter().map(|s| s.len()).collect();
+        let buckets = bucket::partition(&sizes, bucket_bytes)?;
+        let mut reports = Vec::with_capacity(buckets.len());
+        for b in buckets {
+            let before = self.stats.clone();
+            for &gi in &b.tensors {
+                let (rows, cols) = shapes[gi];
+                self.all_reduce_mean(srcs[gi], rows, cols, specs, &mut outs[gi])?;
+            }
+            reports.push(BucketReport {
+                stats: self.stats.delta_since(&before),
+                tensors: b.tensors,
+                payload_bytes: b.bytes,
+            });
+        }
+        Ok(reports)
+    }
+
     /// Internal transmission plumbing handed to the collectives.
     #[allow(clippy::type_complexity)]
     pub(crate) fn parts(
@@ -604,5 +708,54 @@ mod tests {
         let stats = FabricStats::default();
         assert_eq!(stats.compression(), 1.0);
         assert_eq!(stats.total_bytes(), 0);
+    }
+
+    #[test]
+    fn bucketed_reduce_matches_per_tensor_and_partitions_stats() {
+        let specs = [QuantSpec::parse("fp8:e4m3").unwrap(); 4];
+        let grads_a = vec![vec![1.0f32; 20], vec![2.0; 20], vec![3.0; 20], vec![4.0; 20]];
+        let grads_b = vec![vec![0.5f32; 30], vec![1.5; 30], vec![2.5; 30], vec![3.5; 30]];
+        let src_a = SliceSource { grads: &grads_a };
+        let src_b = SliceSource { grads: &grads_b };
+        let srcs: Vec<&dyn GradSource> = vec![&src_a, &src_b];
+        let shapes = [(4usize, 5usize), (1, 30)];
+        let topology = Topology::parse("hier:2x2").unwrap();
+
+        // oracle: the unbucketed per-tensor path
+        let mut plain = Fabric::new(topology).unwrap();
+        let mut want = vec![Vec::new(), Vec::new()];
+        for gi in 0..2 {
+            let (r, c) = shapes[gi];
+            plain.all_reduce_mean(srcs[gi], r, c, &specs, &mut want[gi]).unwrap();
+        }
+
+        // 80b capacity: tensor 1 (120b) overflows into its own bucket
+        let mut fabric = Fabric::new(topology).unwrap();
+        let mut outs = vec![Vec::new(), Vec::new()];
+        let reports =
+            fabric.all_reduce_mean_bucketed(&srcs, &shapes, &specs, 80, &mut outs).unwrap();
+        for gi in 0..2 {
+            let got: Vec<u32> = outs[gi].iter().map(|v| v.to_bits()).collect();
+            let exp: Vec<u32> = want[gi].iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got, exp, "tensor {gi}");
+        }
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].tensors, vec![1]);
+        assert_eq!(reports[0].payload_bytes, 120);
+        assert_eq!(reports[1].tensors, vec![0]);
+        assert_eq!(reports[1].payload_bytes, 80);
+        // per-bucket deltas partition the cumulative ledger exactly
+        let mut summed = FabricStats::default();
+        for r in &reports {
+            for i in 0..4 {
+                summed.links[i].sends += r.stats.links[i].sends;
+                summed.links[i].bytes += r.stats.links[i].bytes;
+                summed.links[i].bytes_f32_equiv += r.stats.links[i].bytes_f32_equiv;
+            }
+            summed.reduces += r.stats.reduces;
+        }
+        assert_eq!(summed.links, fabric.stats.links);
+        assert_eq!(summed.reduces, fabric.stats.reduces);
+        assert_eq!(fabric.stats.links, plain.stats.links);
     }
 }

@@ -16,8 +16,9 @@
 //!    specs round-trip through `Display`;
 //!  * the `PrecisionPolicy`/`Schedule` grammar: parse never panics,
 //!    accepted policies satisfy `validate()` (clamped wire/checkpoint
-//!    rejection, schedule-overlap rejection), round-trip through
-//!    `Display`, and resolve without panicking at arbitrary steps;
+//!    rejection, schedule-overlap rejection, `bucket=` size validation),
+//!    round-trip through `Display`, and resolve without panicking at
+//!    arbitrary steps;
 //!  * the checkpoint binary format: `read_from` never panics on
 //!    arbitrary bytes, a freshly written v3 file loads, and any
 //!    single-byte corruption of the CRC-framed body is rejected;
@@ -151,6 +152,19 @@ pub fn check_policy_parse(data: &[u8]) {
         .unwrap_or_else(|e| panic!("canonical form {canon:?} rejected: {e}"));
     assert_eq!(back, p, "round-trip through {canon:?}");
     assert_eq!(back.to_string(), canon, "display must be a fixed point");
+    // the `bucket=` key (PR-10) rides the same canonicalization: an
+    // accepted bucket validates, survives the round trip, and its own
+    // grammar is a Display fixed point
+    assert_eq!(back.bucket(), p.bucket(), "bucket key lost in {canon:?}");
+    if let Some(b) = p.bucket() {
+        b.validate()
+            .unwrap_or_else(|e| panic!("parse accepted an invalid bucket in {s:?}: {e}"));
+        let bs = b.to_string();
+        let bback = crate::fabric::BucketSpec::parse(&bs)
+            .unwrap_or_else(|e| panic!("canonical bucket {bs:?} rejected: {e}"));
+        assert_eq!(bback, b, "bucket round-trip through {bs:?}");
+        assert_eq!(bback.to_string(), bs, "bucket display must be a fixed point");
+    }
     for step in [0usize, 1, 7, 100, 10_000, 1 << 30] {
         let (idx, wire) = p.wire_resolution_at(step);
         assert_eq!(wire, p.wire_spec_at(step), "step {step}");

@@ -46,7 +46,12 @@
 //!   packed codecs with *per-hop requantization*, and a wire spec per
 //!   [`policy::LinkClass`] (`wire.inter=fp4:e2m1/row` quantizes only
 //!   inter-node links). `FabricStats` accounts every byte per link class,
-//!   exactly matching the `costmodel` predictions.
+//!   exactly matching the `costmodel` predictions. The bucketed overlap
+//!   pipeline ([`fabric::bucket`], `bucket=<N>mb` / `-o bucket_mb=`)
+//!   partitions whole tensors into fixed-byte buckets in reverse
+//!   production order and reduces one collective per bucket —
+//!   bit-exact with the unbucketed path — so per-bucket comm can be
+//!   pipelined against backward compute.
 //! - [`resilience`] — deterministic fault injection + recovery: a seeded
 //!   [`resilience::FaultPlan`] grammar
 //!   (`drop:w3@120,flip:inter@0.001,straggle:inter@2x,nan:w0@5,seed:7`)
@@ -73,8 +78,12 @@
 //!   never touches `runtime` — `repro serve` is engine-free by design.
 //! - [`eval`]     — perplexity + zero-shot multiple-choice harness.
 //! - [`costmodel`] — Appendix B analytical FLOPs/speedup model (Table 5),
-//!   plus per-link byte predictions and alpha-beta step-time estimates
-//!   for a `(Topology, PrecisionPolicy)` pair.
+//!   plus per-link byte predictions, alpha-beta step-time estimates for
+//!   a `(Topology, PrecisionPolicy)` pair (straggler-aware via
+//!   `FaultPlan` `straggle:` factors), and a two-resource overlapped
+//!   timeline (`overlap_timeline`) that pipelines per-bucket compute
+//!   against per-link comm, reporting `step_time_us_overlapped` and
+//!   `exposed_comm_us` against the serialized no-overlap baseline.
 //! - [`stats`]    — histograms / channel statistics for Figs. 4, 8-14.
 //! - [`report`]   — table renderers + CSV writers for every experiment.
 //! - [`experiments`] — `fp4train repro <id>` drivers (fig1..fig14, tab1-5).

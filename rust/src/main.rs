@@ -68,6 +68,9 @@ commands:
            drop:w<I>@<S>,flip:<link|any>@<RATE>,straggle:<link|any>@<F>x,
            nan:w<I>@<S>,seed:<U64>); -o sentinel=true arms the numeric
            guardrails (rollback + temporary precision escalation)
+           -o bucket_mb=4 (or policy bucket=<N>kb|<N>mb) arms the bucketed
+           overlap pipeline: per-bucket collectives in reverse production
+           order, bit-exact, plus a compute/comm overlap summary line
   serve    continuous-batching serving sim: one precision arm over a
            seeded workload; -o workload='arrive:poisson@8/s,prompt:32..256,
            gen:64..512,seed:7' -o precision=<policy> (kv=<spec> picks the
@@ -76,8 +79,12 @@ commands:
   repro    regenerate a paper table/figure: fig1 fig3 fig4 fig5 fig6a-d
            tab1 tab2 tab3 tab4 tab5 fig7 dists perf fabric resilience
            serve all [--quick]
-           (fabric = engine-free topology x wire-policy comm sweep;
-           -o n=.. -o seed=..; writes results/perf/BENCH_fabric.json)
+           (fabric = engine-free topology x wire-policy comm sweep plus
+           the bucketed overlap sweep; -o n=.. -o seed=..;
+           --gate fails when the hier:4x8 fp4 arm's overlap efficiency
+           drops below the recorded floor, --baseline=<path> compares a
+           committed BENCH_fabric.json;
+           writes results/perf/BENCH_fabric.json)
            (resilience = engine-free fault-rate x topology recovery drill;
            -o steps=.. -o dim=.. -o seed=..;
            writes results/perf/BENCH_resilience.json)
@@ -231,6 +238,9 @@ fn cmd_dp(args: &Args) -> Result<()> {
         sim = sim.with_sentinel(Default::default());
         println!("sentinel armed (rollback + precision escalation)");
     }
+    if let Some(bytes) = cfg.bucket_bytes() {
+        sim = sim.with_bucket_bytes(bytes)?;
+    }
     println!("dp-sim: {}", sim.context_label());
     println!("precision policy: {}", sim.precision);
     for step in 0..cfg.steps {
@@ -246,6 +256,10 @@ fn cmd_dp(args: &Args) -> Result<()> {
                 sim.compression(),
             );
         }
+    }
+    // overlap summary: only printed when the bucketed pipeline is armed
+    if let Some(line) = sim.overlap_summary() {
+        println!("{line}");
     }
     // per-phase wire accounting: one line per precision regime the
     // schedule passed through

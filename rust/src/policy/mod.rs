@@ -32,7 +32,12 @@
 //! ```text
 //! policy    := targets (";" phase)*
 //!            | phase (";" phase)*       -- schedule-only: defaults + phases
-//! targets   := target "=" classspec ("," target "=" classspec)*
+//! targets   := item ("," item)*
+//! item      := target "=" classspec
+//!            | "bucket=" bucketsize     -- gradient-bucket capacity for the
+//!                                       -- overlap pipeline (base only);
+//!                                       -- bucketsize := N ("b"|"kb"|"mb"),
+//!                                       -- see fabric::bucket::BucketSpec
 //! target    := class | "wire." link
 //! class     := "w" | "a" | "g" | "wire" | "ckpt" | "master" | "kv"
 //!              -- long aliases accepted on parse: weight, activation,
@@ -109,6 +114,7 @@ use std::fmt;
 
 use anyhow::{bail, ensure, Result};
 
+use crate::fabric::bucket::BucketSpec;
 use crate::formats::{fp8, Format, Fp4Kind, Granularity, QuantSpec};
 use schedule::{Override, Schedule};
 
@@ -398,6 +404,11 @@ pub struct PrecisionPolicy {
     /// [`LinkClass::index`]; `None` = the link falls back to the `wire`
     /// class.
     wire_links: [Option<ClassSpec>; 4],
+    /// Gradient-bucket capacity for the overlap pipeline (`bucket=`);
+    /// `None` = unbucketed legacy reduction. Base-only: bucketing is a
+    /// scheduling property of the whole run, not a per-step precision —
+    /// a `bucket=` inside a phase is a parse error.
+    bucket: Option<BucketSpec>,
     pub schedule: Schedule,
 }
 
@@ -419,6 +430,7 @@ impl Default for PrecisionPolicy {
         let mut p = PrecisionPolicy {
             classes: [ClassSpec::raw(Format::F32); 7],
             wire_links: [None; 4],
+            bucket: None,
             schedule: Schedule::empty(),
         };
         p.classes[TensorClass::Weight.index()] = ClassSpec {
@@ -451,11 +463,30 @@ impl PrecisionPolicy {
         });
         if !first_is_phase {
             let base = segments.next().unwrap_or("");
-            for (target, cs) in parse_target_list(base)? {
-                match target {
-                    PolicyTarget::Class(class) => p.classes[class.index()] = cs,
-                    PolicyTarget::WireLink(link) => {
-                        p.wire_links[link.index()] = Some(cs)
+            // `bucket=` entries are base-only and not class targets: strip
+            // them here, hand everything else to the target-list parser
+            // (which keeps rejecting empties, unknowns and duplicates).
+            let mut rest = String::new();
+            let mut saw_target = false;
+            for item in base.split(',') {
+                if let Some(b) = item.strip_prefix("bucket=") {
+                    ensure!(p.bucket.is_none(), "duplicate bucket= in {base:?}");
+                    p.bucket = Some(BucketSpec::parse(b)?);
+                } else {
+                    if saw_target {
+                        rest.push(',');
+                    }
+                    rest.push_str(item);
+                    saw_target = true;
+                }
+            }
+            if saw_target || p.bucket.is_none() {
+                for (target, cs) in parse_target_list(&rest)? {
+                    match target {
+                        PolicyTarget::Class(class) => p.classes[class.index()] = cs,
+                        PolicyTarget::WireLink(link) => {
+                            p.wire_links[link.index()] = Some(cs)
+                        }
                     }
                 }
             }
@@ -490,6 +521,19 @@ impl PrecisionPolicy {
     pub fn with_wire_link(mut self, link: LinkClass, cs: ClassSpec) -> Self {
         self.wire_links[link.index()] = Some(cs);
         self
+    }
+
+    /// Builder: set the gradient-bucket capacity (`bucket=`) for the
+    /// overlap pipeline. Does not validate.
+    pub fn with_bucket(mut self, bucket: BucketSpec) -> Self {
+        self.bucket = Some(bucket);
+        self
+    }
+
+    /// The gradient-bucket capacity, if the policy opts into the bucketed
+    /// overlap pipeline (`None` = unbucketed legacy reduction).
+    pub fn bucket(&self) -> Option<BucketSpec> {
+        self.bucket
     }
 
     /// The base (un-scheduled) spec of a class.
@@ -633,6 +677,9 @@ impl PrecisionPolicy {
                 validate_target(PolicyTarget::WireLink(*link), cs)?;
             }
         }
+        if let Some(b) = &self.bucket {
+            b.validate()?;
+        }
         self.schedule.validate()?;
         for phase in &self.schedule.phases {
             match &phase.over {
@@ -730,7 +777,8 @@ pub(crate) fn parse_target_list(s: &str) -> Result<Vec<(PolicyTarget, ClassSpec)
 impl fmt::Display for PrecisionPolicy {
     /// Canonical long form: all seven classes in [`TensorClass::ALL`] order,
     /// then any set `wire.<link>` overrides in [`LinkClass::ALL`] order,
-    /// then each schedule phase. `parse(display(p)) == p`.
+    /// then a set `bucket=`, then each schedule phase.
+    /// `parse(display(p)) == p`.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         for (i, class) in TensorClass::ALL.iter().enumerate() {
             if i > 0 {
@@ -742,6 +790,9 @@ impl fmt::Display for PrecisionPolicy {
             if let Some(cs) = &self.wire_links[link.index()] {
                 write!(f, ",wire.{link}={cs}")?;
             }
+        }
+        if let Some(b) = &self.bucket {
+            write!(f, ",bucket={b}")?;
         }
         for phase in &self.schedule.phases {
             write!(f, ";{phase}")?;
@@ -1090,6 +1141,59 @@ mod tests {
             LinkClass::TreeDown,
             ClassSpec::of(QuantSpec::parse("fp4:e2m1/clamp@0.99").unwrap()),
         );
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn bucket_key_parses_validates_and_round_trips() {
+        // bucket alongside targets, alone, and with a schedule
+        let p = PrecisionPolicy::parse("wire=fp8:e4m3,bucket=4mb").unwrap();
+        assert_eq!(p.bucket(), Some(BucketSpec { bytes: 4 << 20 }));
+        assert_eq!(p.wire_spec_at(0), QuantSpec::parse("fp8:e4m3").unwrap());
+        let s = p.to_string();
+        assert!(s.contains(",bucket=4mb"), "{s}");
+        let back = PrecisionPolicy::parse(&s).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.to_string(), s); // Display fixed point
+
+        let alone = PrecisionPolicy::parse("bucket=512kb").unwrap();
+        assert_eq!(alone.bucket(), Some(BucketSpec { bytes: 512 << 10 }));
+        // other classes keep their defaults
+        assert_eq!(
+            alone.class(TensorClass::Weight),
+            PrecisionPolicy::default().class(TensorClass::Weight)
+        );
+
+        let sched = PrecisionPolicy::parse("bucket=1mb;0..10:wire=f32").unwrap();
+        assert_eq!(sched.bucket(), Some(BucketSpec { bytes: 1 << 20 }));
+        assert!(sched.wire_spec_at(0).is_raw());
+        assert_eq!(PrecisionPolicy::parse(&sched.to_string()).unwrap(), sched);
+
+        // non-canonical spellings canonicalize (1024kb -> 1mb)
+        let canon = PrecisionPolicy::parse("bucket=1024kb").unwrap();
+        assert_eq!(canon, PrecisionPolicy::parse("bucket=1mb").unwrap());
+        assert!(canon.to_string().contains("bucket=1mb"));
+
+        // default policy has no bucket and renders none
+        assert_eq!(PrecisionPolicy::default().bucket(), None);
+        assert!(!PrecisionPolicy::default().to_string().contains("bucket="));
+    }
+
+    #[test]
+    fn bucket_key_rejections() {
+        // duplicate, garbage sizes, sub-element sizes
+        assert!(PrecisionPolicy::parse("bucket=4mb,bucket=2mb").is_err());
+        assert!(PrecisionPolicy::parse("bucket=").is_err());
+        assert!(PrecisionPolicy::parse("bucket=4").is_err());
+        assert!(PrecisionPolicy::parse("bucket=1b").is_err());
+        assert!(PrecisionPolicy::parse("bucket=0mb").is_err());
+        // base-only: a phase bucket is an unknown target, hard error
+        assert!(PrecisionPolicy::parse("wire=f32;0..10:bucket=4mb").is_err());
+        // trailing comma is still rejected around bucket entries
+        assert!(PrecisionPolicy::parse("bucket=4mb,").is_err());
+        assert!(PrecisionPolicy::parse(",bucket=4mb").is_err());
+        // hand-built invalid bucket fails through validate()
+        let p = PrecisionPolicy::default().with_bucket(BucketSpec { bytes: 2 });
         assert!(p.validate().is_err());
     }
 

@@ -72,6 +72,10 @@ const VALID_POLICIES: &[&str] = &[
     "wire=fp8:e4m3,wire.inter=fp4:e2m1/row,wire.up=fp4:e2m1/row",
     "wire.intra=f16,wire.down=fp8:e5m2/col;0..10:wire.up=f16",
     "wire=fp4:e2m1/row;0..100:wire=fp8:e4m3,wire.inter=fp4:e2m1/row",
+    // bucketed-overlap grammar (PR-10): base-only `bucket=` size key
+    "wire=fp8:e4m3,wire.inter=fp4:e2m1/row,bucket=4mb",
+    "bucket=512kb;0..100:wire=f32",
+    "w=fp4:e2m1/col,bucket=64b,wire=fp8:e4m3",
 ];
 
 const VALID_WORKLOADS: &[&str] = &[
@@ -289,6 +293,13 @@ fn smoke_policy_rejects_known_invalids_without_panic() {
         "a=f32;0..100:f16;50..150:f32",
         "w=fp4:e2m1/clamp@1.5",
         "w=fp4:e2m1/clamp@0.4",
+        // bucket key (PR-10): empty/unitless/sub-element sizes, phase
+        // placement, and duplicates must all be rejected
+        "bucket=",
+        "bucket=4",
+        "bucket=1b",
+        "wire=f32,bucket=4mb,bucket=4mb",
+        "wire=f32;0..100:bucket=4mb",
     ] {
         fuzzing::check_policy_parse(s.as_bytes());
         assert!(

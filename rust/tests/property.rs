@@ -2,7 +2,9 @@
 //! offline). Each property runs over hundreds of randomized cases; a
 //! failing case prints its seed for replay.
 
-use fp4train::fabric::{flat_reference_mean, Fabric, FaultPlan, SliceSource, Topology};
+use fp4train::fabric::{
+    flat_reference_mean, partition, Fabric, FaultPlan, GradSource, SliceSource, Topology,
+};
 use fp4train::formats::{self, fp16, fp8, Format, Fp4Kind, Granularity, QuantSpec};
 use fp4train::policy::schedule::{Override, Phase, Schedule, StepRange};
 use fp4train::policy::{
@@ -964,6 +966,310 @@ fn prop_hier_partial_node_survivors_match_flat_reference_f32() {
         let mut want = Vec::new();
         flat_reference_mean(&SliceSource { grads: &alive_grads }, &mut want);
         assert_eq!(bits_of(&got), bits_of(&want), "seed {seed} n={n}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bucketed overlap pipeline: grouping whole tensors into buckets must be
+// bit-exact with the per-tensor reduction for every wire format x
+// granularity and topology (including odd bucket boundaries), survive
+// fault plans unchanged, stay deterministic under a FaultPlan seed, and
+// keep its boundaries byte-identical under sentinel wire escalation.
+// The overlapped timeline must never lose to the serialized baseline.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_bucketed_reduce_bit_exact_with_unbucketed() {
+    for fmt in ALL_FORMATS {
+        for gran in ALL_GRANS {
+            let spec = QuantSpec::new(fmt, gran);
+            let specs = [spec; 4];
+            for seed in cases(3) {
+                let mut rng = Rng::new(seed);
+                let workers = 1 + rng.below(9) as usize;
+                let n_tensors = 1 + rng.below(5) as usize;
+                let sizes: Vec<usize> =
+                    (0..n_tensors).map(|_| 1 + rng.below(80) as usize).collect();
+                let grads: Vec<Vec<Vec<f32>>> = sizes
+                    .iter()
+                    .map(|&n| random_int_grads(&mut rng, workers, n))
+                    .collect();
+                let sources: Vec<SliceSource> =
+                    grads.iter().map(|g| SliceSource { grads: g }).collect();
+                let srcs: Vec<&dyn GradSource> =
+                    sources.iter().map(|s| s as &dyn GradSource).collect();
+                let shapes: Vec<(usize, usize)> = sizes.iter().map(|&n| (1, n)).collect();
+                let total: u64 = 4 * sizes.iter().sum::<usize>() as u64;
+                // odd capacities: sub-tensor (every tensor oversized, own
+                // bucket), a mid split with a partial last bucket, and a
+                // capacity beyond the total (single bucket)
+                for cap in [4u64, total / 2 + 2, total + 13] {
+                    for topology in random_topologies(&mut rng, workers) {
+                        // oracle: the per-tensor loop on a fresh fabric
+                        let mut plain = Fabric::new(topology).unwrap();
+                        let mut want: Vec<Vec<f32>> = vec![Vec::new(); sizes.len()];
+                        for (gi, src) in sources.iter().enumerate() {
+                            plain
+                                .all_reduce_mean(src, 1, sizes[gi], &specs, &mut want[gi])
+                                .unwrap();
+                        }
+                        let mut fabric = Fabric::new(topology).unwrap();
+                        let mut got: Vec<Vec<f32>> = vec![Vec::new(); sizes.len()];
+                        let reports = fabric
+                            .all_reduce_mean_bucketed(&srcs, &shapes, &specs, cap, &mut got)
+                            .unwrap();
+                        for gi in 0..sizes.len() {
+                            assert_eq!(
+                                bits_of(&got[gi]),
+                                bits_of(&want[gi]),
+                                "seed {seed} {spec} {topology} cap {cap} tensor {gi}"
+                            );
+                        }
+                        // reports cover every tensor exactly once, in
+                        // reverse production order
+                        let covered: Vec<usize> =
+                            reports.iter().flat_map(|r| r.tensors.clone()).collect();
+                        let mut expect: Vec<usize> = (0..sizes.len()).collect();
+                        expect.reverse();
+                        assert_eq!(covered, expect, "seed {seed} {topology} cap {cap}");
+                        // per-bucket ledger deltas sum to the oracle's total
+                        let bucketed: u64 =
+                            reports.iter().map(|r| r.stats.total_bytes()).sum();
+                        assert_eq!(
+                            bucketed,
+                            plain.stats.total_bytes(),
+                            "seed {seed} {spec} {topology} cap {cap}"
+                        );
+                    }
+                }
+                // 1-byte buckets are rejected by validation, not rounded up
+                let mut fabric = Fabric::new(Topology::Ring { workers }).unwrap();
+                let mut outs: Vec<Vec<f32>> = vec![Vec::new(); sizes.len()];
+                assert!(fabric
+                    .all_reduce_mean_bucketed(&srcs, &shapes, &specs, 1, &mut outs)
+                    .is_err());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_bucketed_reduce_bit_exact_under_faults_and_deterministic() {
+    for seed in cases(15) {
+        let mut rng = Rng::new(seed);
+        for &(full, plan_s, _, _) in SURVIVOR_CASES {
+            let topology = Topology::parse(full).unwrap();
+            let workers = topology.workers();
+            let n_tensors = 2 + rng.below(3) as usize;
+            let sizes: Vec<usize> =
+                (0..n_tensors).map(|_| 1 + rng.below(60) as usize).collect();
+            let grads: Vec<Vec<Vec<f32>>> = sizes
+                .iter()
+                .map(|&n| random_int_grads(&mut rng, workers, n))
+                .collect();
+            let sources: Vec<SliceSource> =
+                grads.iter().map(|g| SliceSource { grads: g }).collect();
+            let srcs: Vec<&dyn GradSource> =
+                sources.iter().map(|s| s as &dyn GradSource).collect();
+            let shapes: Vec<(usize, usize)> = sizes.iter().map(|&n| (1, n)).collect();
+            let total: u64 = 4 * sizes.iter().sum::<usize>() as u64;
+            let cap = (total / 3).max(4);
+            // a flip fault rides on the drop plan: corruptions are CRC-
+            // detected and retried until clean, so the RNG stream may
+            // diverge between the two tensor orders but values cannot
+            let plan =
+                FaultPlan::parse(&format!("{plan_s},flip:any@0.02,seed:{seed}")).unwrap();
+            for fmt in WIRE_FORMATS {
+                let specs = [QuantSpec::parse(fmt).unwrap(); 4];
+                let run = |bucketed: bool| {
+                    let mut fabric = Fabric::with_faults(topology, plan.clone()).unwrap();
+                    fabric.begin_step(3); // the drop step: evictions land here
+                    let mut outs: Vec<Vec<f32>> = vec![Vec::new(); sizes.len()];
+                    let reports = if bucketed {
+                        fabric
+                            .all_reduce_mean_bucketed(&srcs, &shapes, &specs, cap, &mut outs)
+                            .unwrap()
+                    } else {
+                        for (gi, src) in sources.iter().enumerate() {
+                            fabric
+                                .all_reduce_mean(src, 1, sizes[gi], &specs, &mut outs[gi])
+                                .unwrap();
+                        }
+                        Vec::new()
+                    };
+                    (outs, reports, fabric.stats.evicted)
+                };
+                let (want, _, ev_plain) = run(false);
+                let (got, reports, ev_bucketed) = run(true);
+                assert_eq!(ev_plain, ev_bucketed, "seed {seed} {full} {fmt}");
+                for gi in 0..sizes.len() {
+                    assert_eq!(
+                        bits_of(&got[gi]),
+                        bits_of(&want[gi]),
+                        "seed {seed} {full} {fmt} tensor {gi}"
+                    );
+                }
+                // determinism under the FaultPlan seed: a replay is
+                // identical down to the per-bucket ledger
+                let (got2, reports2, _) = run(true);
+                for gi in 0..sizes.len() {
+                    assert_eq!(
+                        bits_of(&got[gi]),
+                        bits_of(&got2[gi]),
+                        "seed {seed} {full} {fmt} replay tensor {gi}"
+                    );
+                }
+                assert_eq!(reports.len(), reports2.len(), "seed {seed} {full} {fmt}");
+                for (a, b) in reports.iter().zip(&reports2) {
+                    assert_eq!(a.tensors, b.tensors, "seed {seed} {full} {fmt}");
+                    assert_eq!(a.payload_bytes, b.payload_bytes, "seed {seed} {full} {fmt}");
+                    assert_eq!(a.stats, b.stats, "seed {seed} {full} {fmt} replay ledger");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_overlap_timeline_invariants_per_topology() {
+    use fp4train::costmodel as cm;
+    let params = cm::LinkParams::defaults();
+    for seed in cases(40) {
+        let mut rng = Rng::new(seed);
+        // algebraic invariants on random per-bucket cost vectors
+        let b = 1 + rng.below(8) as usize;
+        let compute: Vec<f64> = (0..b).map(|_| rng.unit_f32() as f64 * 50.0).collect();
+        let comm: Vec<f64> = (0..b).map(|_| rng.unit_f32() as f64 * 50.0).collect();
+        let tl = cm::overlap_timeline(&compute, &comm);
+        let (c, m) = (tl.compute_us, tl.comm_us);
+        assert!(tl.step_time_us_overlapped >= c.max(m) - 1e-9, "seed {seed}");
+        assert!(tl.step_time_us_overlapped <= c + m + 1e-9, "seed {seed}");
+        assert!(
+            tl.exposed_comm_us >= -1e-9 && tl.exposed_comm_us <= m + 1e-9,
+            "seed {seed}"
+        );
+        let eff = tl.overlap_efficiency();
+        assert!((-1e-9..=1.0 + 1e-9).contains(&eff), "seed {seed} eff {eff}");
+
+        // fabric-grounded: per-bucket comm from the costmodel.
+        // step_time_us is linear in (sends, bytes), so the per-bucket
+        // comm sums exactly to the serialized no-overlap baseline — the
+        // overlapped schedule can never lose to it
+        let workers = 2 + rng.below(12) as usize;
+        let sizes: Vec<usize> =
+            (0..(1 + rng.below(6) as usize)).map(|_| 1 + rng.below(200) as usize).collect();
+        let n: usize = sizes.iter().sum();
+        let policy =
+            PrecisionPolicy::parse("wire=fp8:e4m3,wire.inter=fp4:e2m1/row").unwrap();
+        let tokens = 1 + rng.below(1 << 16);
+        let compute_total = cm::backward_compute_us(n, tokens, cm::DEFAULT_FLOPS_PER_US);
+        for topology in random_topologies(&mut rng, workers) {
+            let buckets = partition(&sizes, (2 * n as u64).max(4)).unwrap();
+            let mut total_sends = [0u64; 4];
+            let mut total_bytes = [0u64; 4];
+            let mut compute = Vec::new();
+            let mut comm = Vec::new();
+            for bu in &buckets {
+                let mut sb = [0u64; 4];
+                let mut bb = [0u64; 4];
+                for &gi in &bu.tensors {
+                    let bytes = cm::bytes_per_step(&policy, sizes[gi], topology);
+                    let sends = cm::sends_per_step(sizes[gi], topology);
+                    for k in 0..4 {
+                        sb[k] += sends[k];
+                        bb[k] += bytes[k];
+                        total_sends[k] += sends[k];
+                        total_bytes[k] += bytes[k];
+                    }
+                }
+                comm.push(cm::step_time_us(&sb, &bb, &params));
+                compute.push(compute_total * bu.bytes as f64 / (4 * n as u64) as f64);
+            }
+            let serialized = cm::step_time_us(&total_sends, &total_bytes, &params);
+            let tl = cm::overlap_timeline(&compute, &comm);
+            assert!(
+                tl.exposed_comm_us <= serialized + 1e-6,
+                "seed {seed} {topology}: exposed {} vs serialized {serialized}",
+                tl.exposed_comm_us
+            );
+            assert!(
+                tl.step_time_us_overlapped <= compute_total + serialized + 1e-6,
+                "seed {seed} {topology}: overlapped {} vs serial {}",
+                tl.step_time_us_overlapped,
+                compute_total + serialized
+            );
+            // factor-1 straggle reduces exactly to the baseline; any
+            // armed straggle plan only stretches it
+            let ones = cm::step_time_us_straggled(
+                &total_sends,
+                &total_bytes,
+                &params,
+                &[1.0; 4],
+            );
+            assert!(
+                (ones - serialized).abs() <= 1e-9 * serialized.max(1.0),
+                "seed {seed} {topology}"
+            );
+            let plan = FaultPlan::parse("straggle:inter@3x,straggle:intra@2x").unwrap();
+            let f = cm::straggle_factors(&plan);
+            let slow = cm::step_time_us_straggled(&total_sends, &total_bytes, &params, &f);
+            assert!(slow >= serialized - 1e-9, "seed {seed} {topology}");
+        }
+    }
+}
+
+#[test]
+fn prop_sentinel_escalation_preserves_bucket_boundaries() {
+    use fp4train::resilience::{Sentinel, SentinelConfig};
+    for seed in cases(20) {
+        let mut rng = Rng::new(seed);
+        let workers = 2 + rng.below(7) as usize;
+        let sizes: Vec<usize> =
+            (0..(2 + rng.below(5) as usize)).map(|_| 1 + rng.below(90) as usize).collect();
+        let grads: Vec<Vec<Vec<f32>>> = sizes
+            .iter()
+            .map(|&n| random_int_grads(&mut rng, workers, n))
+            .collect();
+        let sources: Vec<SliceSource> =
+            grads.iter().map(|g| SliceSource { grads: g }).collect();
+        let srcs: Vec<&dyn GradSource> =
+            sources.iter().map(|s| s as &dyn GradSource).collect();
+        let shapes: Vec<(usize, usize)> = sizes.iter().map(|&n| (1, n)).collect();
+        let total: u64 = 4 * sizes.iter().sum::<usize>() as u64;
+        let cap = (total / 3).max(4);
+
+        // the FP4 wire and its sentinel-escalated replacement: capacity is
+        // measured in f32 payload bytes, so the wire swap must re-derive
+        // byte-identical bucket boundaries
+        let fp4 = [QuantSpec::parse("fp4:e2m1/row").unwrap(); 4];
+        let mut escalated = fp4;
+        let mut sentinel = Sentinel::new(SentinelConfig::default());
+        sentinel.note_rollback(5).unwrap();
+        assert!(sentinel.escalate_specs(6, &mut escalated), "seed {seed}");
+        assert_ne!(escalated, fp4, "seed {seed}: escalation must change the wire");
+
+        let topology = Topology::Ring { workers };
+        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); sizes.len()];
+        let mut a = Fabric::new(topology).unwrap();
+        let before = a
+            .all_reduce_mean_bucketed(&srcs, &shapes, &fp4, cap, &mut outs)
+            .unwrap();
+        let mut b = Fabric::new(topology).unwrap();
+        let after = b
+            .all_reduce_mean_bucketed(&srcs, &shapes, &escalated, cap, &mut outs)
+            .unwrap();
+        assert_eq!(before.len(), after.len(), "seed {seed}");
+        for (x, y) in before.iter().zip(&after) {
+            assert_eq!(x.tensors, y.tensors, "seed {seed}");
+            assert_eq!(x.payload_bytes, y.payload_bytes, "seed {seed}");
+        }
+        // ...and both agree with the pure partition of the size list
+        let parts = partition(&sizes, cap).unwrap();
+        assert_eq!(parts.len(), before.len(), "seed {seed}");
+        for (p, r) in parts.iter().zip(&before) {
+            assert_eq!(p.tensors, r.tensors, "seed {seed}");
+            assert_eq!(p.bytes, r.payload_bytes, "seed {seed}");
+        }
     }
 }
 
